@@ -1,0 +1,146 @@
+//! End-to-end serving driver — the full three-layer stack on a real
+//! workload.
+//!
+//! Spins up the coordinator with the **XLA engine** (AOT Pallas/JAX
+//! artifacts via PJRT; falls back to the pure-Rust engine with a warning
+//! if `artifacts/` is missing), serves a Poisson trace of sketch +
+//! near-neighbor-query requests over real TCP, and reports throughput,
+//! latency percentiles, batching efficiency, and estimation accuracy
+//! against exact Jaccard.  Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::data::{zipf_corpus, Workload, WorkloadSpec};
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::estimate;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> cminhash::Result<()> {
+    let (dim, k) = (4096usize, 256usize);
+    let artifacts = Path::new("artifacts");
+    let engine = if artifacts.join("manifest.json").exists() {
+        EngineKind::Xla
+    } else {
+        eprintln!("WARNING: artifacts/ missing, using the pure-Rust engine");
+        EngineKind::Rust
+    };
+    let cfg = ServeConfig {
+        engine,
+        artifacts_dir: artifacts.to_path_buf(),
+        dim,
+        num_hashes: k,
+        seed: 42,
+        batch: BatchConfig {
+            max_batch: 64,
+            max_delay_us: 2_000,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+    };
+    println!("== e2e serving driver (engine={engine:?}, D={dim}, K={k}) ==");
+    let svc = Coordinator::start(cfg)?;
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+    println!("server on {addr}");
+
+    // Workload: a zipf "documents" corpus, 80% sketch-and-insert / 20%
+    // similarity queries, Poisson arrivals.
+    let corpus = zipf_corpus("e2e", 512, dim as u32, 40, 120, 1.1, 7);
+    let trace = Workload::generate(
+        &corpus,
+        WorkloadSpec {
+            n_requests: 1500,
+            rate_per_sec: 100_000.0, // effectively closed-loop
+            query_fraction: 0.2,
+            seed: 3,
+        },
+    );
+
+    // Drive with 8 closed-loop connections partitioned over the trace.
+    let conns = 8usize;
+    let items = trace.items().to_vec();
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..conns {
+        let addr = addr.clone();
+        let my_items: Vec<_> = items
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % conns == c)
+            .map(|(_, it)| it.clone())
+            .collect();
+        joins.push(std::thread::spawn(move || -> cminhash::Result<Vec<f64>> {
+            let mut client = BlockingClient::connect(&addr)?;
+            let mut lats = Vec::with_capacity(my_items.len());
+            for item in my_items {
+                let t = Instant::now();
+                if item.is_query {
+                    let _ = client.query(item.vec.dim(), item.vec.indices().to_vec(), 5)?;
+                } else {
+                    let _ = client.insert(item.vec.dim(), item.vec.indices().to_vec())?;
+                }
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::new();
+    for j in joins {
+        lats.extend(j.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|x, y| x.total_cmp(y));
+    let q = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    println!(
+        "\n{} requests in {wall:.2}s  ->  {:.0} req/s",
+        lats.len(),
+        lats.len() as f64 / wall
+    );
+    println!(
+        "latency ms: p50={:.2}  p90={:.2}  p99={:.2}  max={:.2}",
+        q(0.5),
+        q(0.9),
+        q(0.99),
+        lats[lats.len() - 1]
+    );
+
+    let (snap, stored) = svc.stats();
+    println!(
+        "batches={}  mean fill={:.1}/{}  pad rows={}  stored sketches={stored}",
+        snap.batches, snap.mean_batch_fill, 64, snap.pad_rows
+    );
+    println!(
+        "batch exec latency: mean={:.2}ms p99<={:.2}ms",
+        snap.batch_latency.mean_us as f64 / 1e3,
+        snap.batch_latency.p99_us as f64 / 1e3
+    );
+
+    // Accuracy check through the served sketches: estimate J for 200
+    // random pairs via one connection and compare with exact values.
+    let mut client = BlockingClient::connect(&addr)?;
+    let mut err_sum = 0.0f64;
+    let mut n_pairs = 0usize;
+    let rows = corpus.rows();
+    for i in (0..200).step_by(2) {
+        let a = &rows[i % rows.len()];
+        let b = &rows[(i + 1) % rows.len()];
+        let sa = client.sketch(a.dim(), a.indices().to_vec())?;
+        let sb = client.sketch(b.dim(), b.indices().to_vec())?;
+        let j_hat = estimate(&sa, &sb);
+        err_sum += (j_hat - a.jaccard(b)).abs();
+        n_pairs += 1;
+    }
+    let mae = err_sum / n_pairs as f64;
+    println!("\nserved-sketch MAE over {n_pairs} pairs: {mae:.4} (K={k})");
+    // Loose sanity bound: sd ~ sqrt(J(1-J)/K) ~ 0.03 at J~0.2.
+    assert!(mae < 0.06, "MAE unexpectedly high: {mae}");
+    println!("e2e OK");
+    Ok(())
+}

@@ -1,0 +1,193 @@
+"""AOT compile path: lower every L2 pipeline variant to HLO text.
+
+Run once at build time (``make artifacts``); Rust loads the results via
+``HloModuleProto::from_text_file`` and never touches Python again.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Outputs (per variant) into --outdir:
+  * ``<name>.hlo.txt``   — the HLO module
+  * ``manifest.json``    — shapes/dtypes/arg order for every artifact, so
+    the Rust runtime can type-check requests against the executable.
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Variant table.  Kept small enough that `make artifacts` stays O(1 min) but
+# covering: the serving default, a small test variant, the (0,pi) ablation,
+# the classical baseline, the pairwise estimator, and the fused e2e graph.
+# The Rust config (`configs/*.toml`) refers to variants by `name`.
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variant_table():
+    """name -> (fn, example_args, metadata) for every artifact."""
+    table = {}
+
+    def add(name, fn, args, inputs, outputs):
+        table[name] = (fn, args, {"inputs": inputs, "outputs": outputs})
+
+    def sigma_pi(b, d, k):
+        add(
+            f"cminhash_b{b}_d{d}_k{k}",
+            partial(model.cminhash_sigma_pi, k=k),
+            (_spec((b, d)), _spec((d,)), _spec((2 * d,))),
+            [
+                {"name": "bits", "shape": [b, d], "dtype": "s32"},
+                {"name": "sigma", "shape": [d], "dtype": "s32"},
+                {"name": "pi2", "shape": [2 * d], "dtype": "s32"},
+            ],
+            [{"name": "hashes", "shape": [b, k], "dtype": "s32"}],
+        )
+
+    def sigma_pi_sparse(b, d, f, k):
+        add(
+            f"cminhashs_b{b}_d{d}_f{f}_k{k}",
+            partial(model.cminhash_sigma_pi_sparse, k=k),
+            (_spec((b, f)), _spec((d,)), _spec((3 * d,))),
+            [
+                {"name": "indices", "shape": [b, f], "dtype": "s32"},
+                {"name": "inv_sigma", "shape": [d], "dtype": "s32"},
+                {"name": "pi3", "shape": [3 * d], "dtype": "s32"},
+            ],
+            [{"name": "hashes", "shape": [b, k], "dtype": "s32"}],
+        )
+
+    def zero_pi(b, d, k):
+        add(
+            f"cminhash0_b{b}_d{d}_k{k}",
+            partial(model.cminhash_0_pi, k=k),
+            (_spec((b, d)), _spec((2 * d,))),
+            [
+                {"name": "bits", "shape": [b, d], "dtype": "s32"},
+                {"name": "pi2", "shape": [2 * d], "dtype": "s32"},
+            ],
+            [{"name": "hashes", "shape": [b, k], "dtype": "s32"}],
+        )
+
+    def classic(b, d, k):
+        add(
+            f"minhash_b{b}_d{d}_k{k}",
+            model.minhash_classic,
+            (_spec((b, d)), _spec((k, d))),
+            [
+                {"name": "bits", "shape": [b, d], "dtype": "s32"},
+                {"name": "perms", "shape": [k, d], "dtype": "s32"},
+            ],
+            [{"name": "hashes", "shape": [b, k], "dtype": "s32"}],
+        )
+
+    def estimator(n, m, k):
+        add(
+            f"estimate_n{n}_m{m}_k{k}",
+            model.estimate_pairwise,
+            (_spec((n, k)), _spec((m, k))),
+            [
+                {"name": "h1", "shape": [n, k], "dtype": "s32"},
+                {"name": "h2", "shape": [m, k], "dtype": "s32"},
+            ],
+            [{"name": "jhat", "shape": [n, m], "dtype": "f32"}],
+        )
+
+    def fused(b, d, k):
+        add(
+            f"sketchest_b{b}_d{d}_k{k}",
+            partial(model.sketch_and_estimate, k=k),
+            (_spec((b, d)), _spec((b, d)), _spec((d,)), _spec((2 * d,))),
+            [
+                {"name": "bits1", "shape": [b, d], "dtype": "s32"},
+                {"name": "bits2", "shape": [b, d], "dtype": "s32"},
+                {"name": "sigma", "shape": [d], "dtype": "s32"},
+                {"name": "pi2", "shape": [2 * d], "dtype": "s32"},
+            ],
+            [
+                {"name": "h1", "shape": [b, k], "dtype": "s32"},
+                {"name": "h2", "shape": [b, k], "dtype": "s32"},
+                {"name": "jhat", "shape": [b, b], "dtype": "f32"},
+            ],
+        )
+
+    # Serving defaults (used by `configs/serve.json` and the e2e example).
+    # The sparse (gather) variants are the optimized hot path (§Perf:
+    # ~10x over dense); a ladder of batch sizes lets the coordinator
+    # route partial batches to the smallest fitting executable instead
+    # of padding to 64.  The dense variant stays as the fallback for
+    # rows with more than F nonzeros.
+    for b in (8, 16, 32, 64):
+        sigma_pi_sparse(b, 4096, 512, 256)
+    sigma_pi(64, 4096, 256)
+    # Small variants for tests / quickstart.
+    sigma_pi_sparse(8, 1024, 128, 128)
+    sigma_pi(8, 1024, 128)
+    # Ablation and baseline at the small shape (Fig 6/7 cross-checks run in
+    # Rust; these artifacts let the server expose all three methods).
+    zero_pi(8, 1024, 128)
+    classic(8, 1024, 128)
+    # Pairwise estimator for the /estimate endpoint.
+    estimator(64, 64, 256)
+    estimator(8, 8, 128)
+    # Fused end-to-end graph.
+    fused(32, 2048, 256)
+    return table
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text-v1", "artifacts": {}}
+    for name, (fn, example_args, meta) in variant_table().items():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            **meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

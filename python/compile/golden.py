@@ -1,0 +1,63 @@
+"""Export golden hash vectors for the Rust test-suite.
+
+The pure-Rust hashers (`rust/src/sketch/`) must agree bit-for-bit with the
+Python oracles in `kernels/ref.py` (which the Pallas kernel is itself
+verified against).  This script materializes a few deterministic cases —
+explicit bits, sigma, pi, K — together with the oracle outputs, into a
+JSON file the Rust integration test `rust/tests/golden.rs` replays.
+
+Run via ``make artifacts`` (output: artifacts/golden.json).
+"""
+
+import argparse
+import json
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def cases():
+    out = []
+    rng = np.random.default_rng(20240717)
+    for (b, d, k, density) in [
+        (3, 16, 8, 0.4),
+        (4, 64, 64, 0.1),
+        (2, 128, 96, 0.03),
+        (5, 33, 17, 0.5),  # awkward non-power-of-two shapes
+    ]:
+        bits = (rng.random((b, d)) < density).astype(np.int32)
+        bits[0] = 0  # always include an empty row
+        sigma = rng.permutation(d).astype(np.int32)
+        pi = rng.permutation(d).astype(np.int32)
+        perms = np.stack([rng.permutation(d) for _ in range(k)]).astype(np.int32)
+        out.append(
+            {
+                "b": b,
+                "d": d,
+                "k": k,
+                "bits": bits.tolist(),
+                "sigma": sigma.tolist(),
+                "pi": pi.tolist(),
+                "perms": perms.tolist(),
+                "minhash": ref.minhash_ref(bits, perms).tolist(),
+                "cminhash_0pi": ref.cminhash_0pi_ref(bits, pi, k).tolist(),
+                "cminhash_sigma_pi": ref.cminhash_sigma_pi_ref(
+                    bits, sigma, pi, k
+                ).tolist(),
+            }
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.json")
+    args = ap.parse_args()
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases()}, f)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

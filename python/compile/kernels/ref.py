@@ -1,0 +1,95 @@
+"""Pure-numpy correctness oracles for every hashing variant.
+
+These are deliberately written as literal transcriptions of the paper's
+Algorithms 1-3 (loops, no vectorization tricks) so they can serve as the
+single source of truth for the Pallas kernel (pytest), the jnp pipelines
+(pytest) and the Rust implementations (golden vectors exported by
+``python/tests/test_golden_export.py``).
+
+Conventions (shared across the whole repo):
+  * permutations are 0-indexed value arrays: ``pi[i]`` is the slot that
+    position ``i`` is mapped to, values in ``0..D-1``;
+  * the k-th C-MinHash hash (k = 1..K) uses the right-circulant shift by
+    k units, i.e. ``pi_{->k}(i) = pi[(i - k) mod D]``;
+  * ``sigma`` is applied as a gather: ``v'[i] = v[sigma[i]]``;
+  * an all-zero row hashes to the sentinel ``D``.
+"""
+
+import numpy as np
+
+__all__ = [
+    "minhash_ref",
+    "cminhash_0pi_ref",
+    "cminhash_sigma_pi_ref",
+    "jaccard",
+    "estimate_ref",
+]
+
+
+def jaccard(v: np.ndarray, w: np.ndarray) -> float:
+    """Exact Jaccard similarity of two 0/1 vectors (eq. 1)."""
+    v = np.asarray(v).astype(bool)
+    w = np.asarray(w).astype(bool)
+    union = np.logical_or(v, w).sum()
+    if union == 0:
+        return 0.0
+    return float(np.logical_and(v, w).sum()) / float(union)
+
+
+def minhash_ref(bits: np.ndarray, perms: np.ndarray) -> np.ndarray:
+    """Classical MinHash (Algorithm 1) with K independent permutations.
+
+    bits: (B, D) 0/1; perms: (K, D) each row a permutation of 0..D-1.
+    Returns (B, K) int32.
+    """
+    bits = np.asarray(bits)
+    perms = np.asarray(perms)
+    b, d = bits.shape
+    k = perms.shape[0]
+    out = np.full((b, k), d, dtype=np.int32)
+    for bi in range(b):
+        nz = np.nonzero(bits[bi])[0]
+        if nz.size == 0:
+            continue
+        for ki in range(k):
+            out[bi, ki] = perms[ki, nz].min()
+    return out
+
+
+def cminhash_0pi_ref(bits: np.ndarray, pi: np.ndarray, k: int) -> np.ndarray:
+    """C-MinHash-(0, pi) (Algorithm 2): no initial permutation.
+
+    bits: (B, D) 0/1; pi: (D,) permutation of 0..D-1.  Returns (B, K).
+    """
+    bits = np.asarray(bits)
+    pi = np.asarray(pi)
+    b, d = bits.shape
+    out = np.full((b, k), d, dtype=np.int32)
+    for bi in range(b):
+        nz = np.nonzero(bits[bi])[0]
+        if nz.size == 0:
+            continue
+        for kk in range(1, k + 1):  # paper shifts by k = 1..K
+            out[bi, kk - 1] = pi[(nz - kk) % d].min()
+    return out
+
+
+def cminhash_sigma_pi_ref(
+    bits: np.ndarray, sigma: np.ndarray, pi: np.ndarray, k: int
+) -> np.ndarray:
+    """C-MinHash-(sigma, pi) (Algorithm 3): initial permutation sigma,
+    then circulant hashing with pi."""
+    bits = np.asarray(bits)
+    permuted = bits[:, np.asarray(sigma)]  # v'[i] = v[sigma[i]]
+    return cminhash_0pi_ref(permuted, pi, k)
+
+
+def estimate_ref(h1: np.ndarray, h2: np.ndarray) -> np.ndarray:
+    """Pairwise collision estimator J_hat (eqs. 2/4/7).
+
+    h1: (N, K), h2: (M, K) -> (N, M) float32 of mean collision rates.
+    """
+    h1 = np.asarray(h1)
+    h2 = np.asarray(h2)
+    eq = h1[:, None, :] == h2[None, :, :]
+    return eq.mean(axis=2).astype(np.float32)

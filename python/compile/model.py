@@ -1,0 +1,103 @@
+"""L2 — JAX sketch pipelines (build-time only; lowered to HLO by aot.py).
+
+Every function here is a pure jax function of concrete-shaped arrays so it
+can be ``jax.jit(...).lower(...)``-ed once and executed forever from the
+Rust runtime.  Permutations are *inputs* (int32 arrays), not constants:
+the Rust coordinator owns permutation generation (seeded Fisher-Yates in
+``rust/src/sketch/perm.rs``), which keeps the artifacts data-independent
+and lets one compiled executable serve any (sigma, pi) pair.
+
+Pipelines
+  * ``cminhash_sigma_pi``  — Algorithm 3, the paper's recommended method
+    (sigma-gather then the Pallas circulant kernel).
+  * ``cminhash_0_pi``      — Algorithm 2 ablation (no sigma).
+  * ``minhash_classic``    — Algorithm 1 baseline with a K x D
+    permutation matrix (the memory-hungry scheme C-MinHash replaces).
+  * ``estimate_pairwise``  — collision estimator J_hat over two sketch
+    batches (eq. 2/4/7), used by the server's /estimate endpoint.
+  * ``sketch_and_estimate``— fused end-to-end graph (sketch two batches,
+    return the pairwise estimates), used by the e2e example.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cminhash import cminhash_hashes, cminhash_sparse_hashes
+
+__all__ = [
+    "cminhash_sigma_pi",
+    "cminhash_sigma_pi_sparse",
+    "cminhash_0_pi",
+    "minhash_classic",
+    "estimate_pairwise",
+    "sketch_and_estimate",
+]
+
+
+def cminhash_sigma_pi(bits, sigma, pi2, *, k: int):
+    """C-MinHash-(sigma, pi) sketches (Algorithm 3).
+
+    bits: (B, D) int32 0/1; sigma: (D,) int32 permutation;
+    pi2: (2D,) int32 doubled permutation.  -> (B, K) int32.
+    """
+    permuted = jnp.take(bits, sigma, axis=1)  # v'[i] = v[sigma[i]]
+    return cminhash_hashes(permuted, pi2, k)
+
+
+def cminhash_sigma_pi_sparse(indices, inv_sigma, pi3, *, k: int):
+    """Sparse-input C-MinHash-(sigma, pi) — the optimized serving path.
+
+    indices: (B, F) int32 nonzero positions padded with 2*D;
+    inv_sigma: (D,) int32 inverse of sigma (so sigma-gather on sparse
+    rows is a plain lookup: position s of v lands at inv_sigma[s] of
+    v' = v[sigma]); pi3: (3D,) tripled permutation with sentinel tail.
+    -> (B, K) int32, identical to ``cminhash_sigma_pi`` on the dense
+    equivalent.
+    """
+    d = inv_sigma.shape[0]
+    pad = jnp.int32(2 * d)
+    mapped = jnp.where(
+        indices < d,
+        jnp.take(inv_sigma, jnp.clip(indices, 0, d - 1), axis=0),
+        pad,
+    )
+    return cminhash_sparse_hashes(mapped, pi3, k)
+
+
+def cminhash_0_pi(bits, pi2, *, k: int):
+    """C-MinHash-(0, pi) sketches (Algorithm 2): no initial permutation."""
+    return cminhash_hashes(bits, pi2, k)
+
+
+def minhash_classic(bits, perms):
+    """Classical MinHash (Algorithm 1) with K independent permutations.
+
+    bits: (B, D) int32 0/1; perms: (K, D) int32.  -> (B, K) int32.
+
+    Kept as a plain-jnp masked min: it is the *baseline*, and XLA already
+    emits the optimal reduce for it; the interesting kernel is circulant.
+    """
+    d = bits.shape[1]
+    masked = jnp.where(
+        (bits > 0)[:, None, :], perms[None, :, :], jnp.int32(d)
+    )  # (B, K, D)
+    return masked.min(axis=2)
+
+
+def estimate_pairwise(h1, h2):
+    """Pairwise Jaccard estimates from sketches.
+
+    h1: (N, K) int32; h2: (M, K) int32 -> (N, M) float32, the fraction of
+    colliding hash slots (eq. 2).
+    """
+    k = h1.shape[1]
+    eq = (h1[:, None, :] == h2[None, :, :]).astype(jnp.float32)
+    return eq.sum(axis=2) * (1.0 / k)
+
+
+def sketch_and_estimate(bits1, bits2, sigma, pi2, *, k: int):
+    """Fused: sketch two batches with C-MinHash-(sigma, pi) and return
+    (H1, H2, J_hat) — exercises the full L2 graph in one executable."""
+    h1 = cminhash_sigma_pi(bits1, sigma, pi2, k=k)
+    h2 = cminhash_sigma_pi(bits2, sigma, pi2, k=k)
+    return h1, h2, estimate_pairwise(h1, h2)

@@ -1,0 +1,161 @@
+# pytest: Pallas kernel vs pure-numpy ref — the CORE L1 correctness signal.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cminhash import cminhash_hashes, choose_tile
+
+
+def _rand_pair(rng, b, d, density):
+    bits = (rng.random((b, d)) < density).astype(np.int32)
+    pi = rng.permutation(d).astype(np.int32)
+    return bits, pi
+
+
+def _run_kernel(bits, pi, k, **kw):
+    pi2 = np.concatenate([pi, pi]).astype(np.int32)
+    return np.asarray(cminhash_hashes(jnp.array(bits), jnp.array(pi2), k, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(1)
+    bits, pi = _rand_pair(rng, 4, 64, 0.2)
+    got = _run_kernel(bits, pi, 32)
+    want = ref.cminhash_0pi_ref(bits, pi, 32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_row_sentinel():
+    rng = np.random.default_rng(2)
+    bits, pi = _rand_pair(rng, 3, 32, 0.3)
+    bits[1] = 0
+    got = _run_kernel(bits, pi, 16)
+    assert (got[1] == 32).all()
+    want = ref.cminhash_0pi_ref(bits, pi, 16)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_full_row_is_global_min_everywhere():
+    # A row of all ones sees every pi value under every shift: hash == 0.
+    rng = np.random.default_rng(3)
+    bits = np.ones((2, 48), dtype=np.int32)
+    pi = rng.permutation(48).astype(np.int32)
+    got = _run_kernel(bits, pi, 48)
+    assert (got == 0).all()
+
+
+def test_single_nonzero_traces_permutation():
+    # One nonzero at position j: h_k = pi[(j - k) mod D], a walk over pi.
+    d, k = 40, 40
+    rng = np.random.default_rng(4)
+    pi = rng.permutation(d).astype(np.int32)
+    for j in [0, 7, d - 1]:
+        bits = np.zeros((1, d), dtype=np.int32)
+        bits[0, j] = 1
+        got = _run_kernel(bits, pi, k)[0]
+        want = np.array([pi[(j - kk) % d] for kk in range(1, k + 1)])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_k_equals_one_and_k_equals_d():
+    rng = np.random.default_rng(5)
+    bits, pi = _rand_pair(rng, 2, 32, 0.25)
+    for k in (1, 32):
+        np.testing.assert_array_equal(
+            _run_kernel(bits, pi, k), ref.cminhash_0pi_ref(bits, pi, k)
+        )
+
+
+def test_identity_permutation():
+    # pi = identity: h_k = min_{i in S} (i - k) mod D.
+    d, k = 24, 24
+    pi = np.arange(d, dtype=np.int32)
+    bits = np.zeros((1, d), dtype=np.int32)
+    bits[0, [3, 10, 17]] = 1
+    got = _run_kernel(bits, pi, k)
+    want = ref.cminhash_0pi_ref(bits, pi, k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tiling_invariance():
+    # The same result regardless of block/chunk choices.
+    rng = np.random.default_rng(6)
+    bits, pi = _rand_pair(rng, 6, 96, 0.15)
+    base = _run_kernel(bits, pi, 48)
+    for bb, kb, dc in [(1, 1, 1), (2, 3, 8), (6, 48, 96), (3, 16, 32)]:
+        got = _run_kernel(bits, pi, 48, block_b=bb, block_k=kb, chunk_d=dc)
+        np.testing.assert_array_equal(got, base)
+
+
+def test_rejects_bad_args():
+    bits = jnp.zeros((2, 16), jnp.int32)
+    with pytest.raises(ValueError):
+        cminhash_hashes(bits, jnp.zeros((16,), jnp.int32), 8)  # pi not doubled
+    with pytest.raises(ValueError):
+        cminhash_hashes(bits, jnp.zeros((32,), jnp.int32), 17)  # K > D
+    with pytest.raises(ValueError):
+        cminhash_hashes(bits, jnp.zeros((32,), jnp.int32), 0)  # K < 1
+
+
+def test_choose_tile():
+    assert choose_tile(64, 8) == 8
+    assert choose_tile(6, 4) == 3
+    assert choose_tile(7, 4) == 1
+    assert choose_tile(5, 16) == 5
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, densities, seeds
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 7),
+    d=st.integers(2, 80),
+    kfrac=st.floats(0.05, 1.0),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_vs_ref_sweep(b, d, kfrac, density, seed):
+    k = max(1, int(d * kfrac))
+    rng = np.random.default_rng(seed)
+    bits, pi = _rand_pair(rng, b, d, density)
+    got = _run_kernel(bits, pi, k)
+    want = ref.cminhash_0pi_ref(bits, pi, k)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.integers(4, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hash_values_in_range(d, seed):
+    rng = np.random.default_rng(seed)
+    bits, pi = _rand_pair(rng, 3, d, 0.5)
+    got = _run_kernel(bits, pi, d)
+    assert ((got >= 0) & (got <= d)).all()
+    nonempty = bits.sum(axis=1) > 0
+    assert (got[nonempty] < d).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_shift_consistency(seed):
+    # Hash k of bits equals hash k+1 of bits rolled right by one position:
+    # rolling the data one step is the same as shifting pi one more unit.
+    d, k = 32, 16
+    rng = np.random.default_rng(seed)
+    bits, pi = _rand_pair(rng, 2, d, 0.3)
+    h = _run_kernel(bits, pi, k + 1)
+    rolled = np.roll(bits, 1, axis=1)
+    h_roll = _run_kernel(rolled, pi, k + 1)
+    np.testing.assert_array_equal(h_roll[:, 1:], h[:, :-1])

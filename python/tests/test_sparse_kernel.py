@@ -1,0 +1,102 @@
+# pytest: sparse (gather) kernel vs dense kernel vs oracle — the §Perf
+# hot path must stay bit-identical to the reference semantics.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.cminhash import cminhash_sparse_hashes, PAD
+
+
+def _pack(bits, f_max):
+    """Dense 0/1 rows -> padded index matrix."""
+    b, d = bits.shape
+    idx = np.full((b, f_max), PAD(d), dtype=np.int32)
+    for i in range(b):
+        nz = np.nonzero(bits[i])[0]
+        assert len(nz) <= f_max
+        idx[i, : len(nz)] = nz
+    return idx
+
+
+def _mk(rng, b, d, density):
+    bits = (rng.random((b, d)) < density).astype(np.int32)
+    pi = rng.permutation(d).astype(np.int32)
+    pi3 = np.concatenate([pi, pi, np.full(d, d, np.int32)])
+    return bits, pi, pi3
+
+
+def test_sparse_matches_ref_basic():
+    rng = np.random.default_rng(1)
+    bits, pi, pi3 = _mk(rng, 6, 128, 0.1)
+    idx = _pack(bits, 32)
+    got = np.asarray(cminhash_sparse_hashes(jnp.array(idx), jnp.array(pi3), 64))
+    want = ref.cminhash_0pi_ref(bits, pi, 64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_all_padding_row_gives_sentinel():
+    rng = np.random.default_rng(2)
+    _, _, pi3 = _mk(rng, 1, 64, 0.0)
+    idx = np.full((2, 16), PAD(64), dtype=np.int32)
+    got = np.asarray(cminhash_sparse_hashes(jnp.array(idx), jnp.array(pi3), 32))
+    assert (got == 64).all()
+
+
+def test_unsorted_indices_are_fine():
+    # The kernel takes min over contributions; order must not matter.
+    rng = np.random.default_rng(3)
+    bits, pi, pi3 = _mk(rng, 1, 64, 0.3)
+    idx = _pack(bits, 32)
+    shuffled = idx.copy()
+    rng.shuffle(shuffled[0])
+    a = np.asarray(cminhash_sparse_hashes(jnp.array(idx), jnp.array(pi3), 32))
+    b = np.asarray(cminhash_sparse_hashes(jnp.array(shuffled), jnp.array(pi3), 32))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_sparse_pipeline_with_sigma_matches_dense():
+    rng = np.random.default_rng(4)
+    b, d, k, f = 4, 256, 128, 64
+    bits, pi, pi3 = _mk(rng, b, d, 0.1)
+    sigma = rng.permutation(d).astype(np.int32)
+    inv_sigma = np.argsort(sigma).astype(np.int32)
+    idx = _pack(bits, f)
+    got = np.asarray(
+        model.cminhash_sigma_pi_sparse(
+            jnp.array(idx), jnp.array(inv_sigma), jnp.array(pi3), k=k
+        )
+    )
+    want = ref.cminhash_sigma_pi_ref(bits, sigma, pi, k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rejects_bad_args():
+    with pytest.raises(ValueError):
+        cminhash_sparse_hashes(
+            jnp.zeros((2, 4), jnp.int32), jnp.zeros((64,), jnp.int32), 8
+        )  # pi3 not a multiple of 3... 64 not divisible
+    with pytest.raises(ValueError):
+        cminhash_sparse_hashes(
+            jnp.zeros((2, 4), jnp.int32), jnp.zeros((3 * 16,), jnp.int32), 17
+        )  # K > D
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    d=st.integers(4, 96),
+    density=st.floats(0.0, 0.6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_vs_dense_sweep(b, d, density, seed):
+    rng = np.random.default_rng(seed)
+    bits, pi, pi3 = _mk(rng, b, d, density)
+    k = max(1, d // 2)
+    f_max = max(1, int(bits.sum(axis=1).max()))
+    idx = _pack(bits, f_max)
+    got = np.asarray(cminhash_sparse_hashes(jnp.array(idx), jnp.array(pi3), k))
+    want = ref.cminhash_0pi_ref(bits, pi, k)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,45 @@
+//! Figure 2 bench: regenerate Var[Ĵ_{σ,π}] / Var[Ĵ_MH] vs J
+//! (D=1000, f ∈ {200,500,800}, K ∈ {500,800}) and time the exact
+//! evaluator.  Prints the paper-comparison summary lines that
+//! EXPERIMENTS.md records.
+
+use cminhash::bench::Harness;
+use cminhash::theory::{var_minhash, var_sigma_pi};
+use std::path::Path;
+
+fn main() {
+    let mut h = Harness::new("fig2_variance_vs_j");
+
+    // Timing: one exact variance evaluation at the paper's scale.
+    h.bench("var_sigma_pi(D=1000,f=500,a=250,K=800)", || {
+        var_sigma_pi(1000, 500, 250, 800)
+    });
+    h.bench("var_sigma_pi(D=1000,f=800,a=400,K=500)", || {
+        var_sigma_pi(1000, 800, 400, 500)
+    });
+
+    // Regenerate the figure data.
+    let out = Path::new("results");
+    cminhash::figures::fig2(out).expect("fig2");
+    println!("wrote results/fig2_variance_vs_j.csv");
+
+    // Paper-shape checks (Figure 2's visual claims).
+    let d = 1000;
+    for &k in &[500usize, 800] {
+        for &f in &[200usize, 500, 800] {
+            // symmetric about J=1/2 and always below MinHash
+            let a_lo = f / 4;
+            let v_lo = var_sigma_pi(d, f, a_lo, k);
+            let v_hi = var_sigma_pi(d, f, f - a_lo, k);
+            assert!((v_lo - v_hi).abs() < 1e-6 * v_lo, "symmetry");
+            let peak = var_sigma_pi(d, f, f / 2, k);
+            let mh_peak = var_minhash(0.5, k);
+            println!(
+                "PAPER-CHECK fig2 K={k} f={f}: peak Var_C={peak:.3e} < Var_MH={mh_peak:.3e} (ratio {:.3})",
+                mh_peak / peak
+            );
+            assert!(peak < mh_peak);
+        }
+    }
+    h.write_csv().unwrap();
+}

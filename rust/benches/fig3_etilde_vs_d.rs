@@ -1,0 +1,37 @@
+//! Figure 3 bench: Ẽ versus D for f = 10 / f = 30 — regenerates the
+//! curves, checks Lemma 3.3's monotone increase and the J² asymptote,
+//! and times the three exact evaluation paths against each other
+//! (run-decomposition vs paper-style enumeration).
+
+use cminhash::bench::Harness;
+use cminhash::theory::{e_tilde, e_tilde_enum, e_tilde_mc};
+use std::path::Path;
+
+fn main() {
+    let mut h = Harness::new("fig3_etilde_vs_d");
+
+    // The production path (run decomposition) vs the paper's enumeration.
+    h.bench("e_tilde runs (D=500,f=30,a=15)", || e_tilde(500, 30, 15));
+    h.bench("e_tilde enum (D=500,f=30,a=15)", || e_tilde_enum(500, 30, 15));
+    h.bench("e_tilde runs (D=5000,f=30,a=15)", || e_tilde(5000, 30, 15));
+    h.bench("e_tilde mc 10k (D=500,f=30,a=15)", || {
+        e_tilde_mc(500, 30, 15, 10_000, 1)
+    });
+
+    let out = Path::new("results");
+    cminhash::figures::fig3(out).expect("fig3");
+    println!("wrote results/fig3_etilde_vs_d.csv");
+
+    // Paper-shape checks: strictly increasing in D, converging to J².
+    for &(f, a) in &[(10usize, 5usize), (30, 15)] {
+        let j2 = (a as f64 / f as f64).powi(2);
+        let e_small = e_tilde(f, f, a);
+        let e_mid = e_tilde(10 * f, f, a);
+        let e_big = e_tilde(200 * f, f, a);
+        assert!(e_small < e_mid && e_mid < e_big && e_big < j2);
+        println!(
+            "PAPER-CHECK fig3 f={f} a={a}: E(D=f)={e_small:.4} < E(10f)={e_mid:.4} < E(200f)={e_big:.4} < J^2={j2:.4}"
+        );
+    }
+    h.write_csv().unwrap();
+}

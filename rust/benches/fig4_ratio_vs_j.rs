@@ -1,0 +1,34 @@
+//! Figure 4 bench: variance ratio vs J at D=1000, K=800 — regenerates
+//! the series and verifies Proposition 3.5 (the ratio is *flat* in J).
+
+use cminhash::bench::Harness;
+use cminhash::theory::variance_ratio;
+use std::path::Path;
+
+fn main() {
+    let mut h = Harness::new("fig4_ratio_vs_j");
+    h.bench("variance_ratio(D=1000,f=500,K=800)", || {
+        variance_ratio(1000, 500, 250, 800).unwrap()
+    });
+
+    let out = Path::new("results");
+    cminhash::figures::fig4(out).expect("fig4");
+    println!("wrote results/fig4_ratio_vs_j.csv");
+
+    // Paper-shape check: constant across a (within float noise), > 1.
+    for &f in &[200usize, 500, 800] {
+        let base = variance_ratio(1000, f, 1, 800).unwrap();
+        let mut max_dev = 0.0f64;
+        for a in (1..f).step_by((f / 37).max(1)) {
+            let r = variance_ratio(1000, f, a, 800).unwrap();
+            max_dev = max_dev.max(((r - base) / base).abs());
+        }
+        println!(
+            "PAPER-CHECK fig4 f={f}: ratio={base:.4} (>1), max relative deviation over a = {max_dev:.2e}"
+        );
+        assert!(base > 1.0);
+        // ~1e-6 relative noise from exp(ln-choose) paths is expected
+        assert!(max_dev < 1e-5, "Prop 3.5 flatness violated: {max_dev}");
+    }
+    h.write_csv().unwrap();
+}

@@ -1,0 +1,47 @@
+//! Figure 5 bench: variance ratio vs f for D ∈ {500, 1000},
+//! K ∈ {100..800} — regenerates the series and checks the paper's two
+//! monotonicity claims (ratio grows with K and with f).
+
+use cminhash::bench::Harness;
+use cminhash::theory::variance_ratio;
+use std::path::Path;
+
+fn main() {
+    let mut h = Harness::new("fig5_ratio_vs_f");
+    h.bench("full fig5 sweep (2 D x 4 K x ~25 f)", || {
+        let mut acc = 0.0;
+        for &d in &[500usize, 1000] {
+            for &k in &[100usize, 200, 400, 800] {
+                if k > d {
+                    continue;
+                }
+                let mut f = 20;
+                while f <= d {
+                    acc += variance_ratio(d, f, f / 2, k).unwrap_or(1.0);
+                    f += d / 25;
+                }
+            }
+        }
+        acc
+    });
+
+    let out = Path::new("results");
+    cminhash::figures::fig5(out).expect("fig5");
+    println!("wrote results/fig5_ratio_vs_f.csv");
+
+    for &d in &[500usize, 1000] {
+        let k_max = 800.min(d - 100);
+        let r_lowk = variance_ratio(d, d / 2, d / 4, 100).unwrap();
+        let r_highk = variance_ratio(d, d / 2, d / 4, k_max).unwrap();
+        let r_lowf = variance_ratio(d, d / 10, d / 20, k_max).unwrap();
+        let r_highf = variance_ratio(d, (4 * d) / 5, (2 * d) / 5, k_max).unwrap();
+        println!(
+            "PAPER-CHECK fig5 D={d}: ratio(K=100)={r_lowk:.3} < ratio(K={k_max})={r_highk:.3}; \
+             ratio(f=D/10)={r_lowf:.3} < ratio(f=4D/5)={r_highf:.3}"
+        );
+        assert!(r_highk > r_lowk, "ratio must grow with K");
+        assert!(r_highf > r_lowf, "ratio must grow with f");
+        assert!(r_lowk > 1.0);
+    }
+    h.write_csv().unwrap();
+}

@@ -1,0 +1,63 @@
+//! Figure 6 bench: the §4.1 sanity-check simulation — empirical MSE of
+//! all three estimators on structured (D=128) pairs against the exact
+//! theory (Theorems 2.2 and 3.1), plus timing of the simulation loop.
+//!
+//! `CMINHASH_BENCH_FAST=1` (or default) runs a reduced rep count; the
+//! full figure regeneration uses `cminhash figures --fig 6`.
+
+use cminhash::bench::Harness;
+use cminhash::sketch::{estimate, CMinHasher, Perm, Sketcher};
+use cminhash::theory::{var_minhash, var_sigma_pi, var_zero_pi, LocationVector};
+use cminhash::util::rng::Rng;
+use std::path::Path;
+
+fn simulate_sigma_pi(x: &LocationVector, k: usize, reps: usize, seed: u64) -> f64 {
+    let d = x.d();
+    let (v, w) = x.realize();
+    let truth = x.jaccard();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut sq = 0.0;
+    for _ in 0..reps {
+        let sigma = Perm::from_values(rng.permutation(d)).unwrap();
+        let pi = Perm::from_values(rng.permutation(d)).unwrap();
+        let h = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+        let e = estimate(&h.sketch_sparse(v.indices()), &h.sketch_sparse(w.indices()));
+        sq += (e - truth) * (e - truth);
+    }
+    sq / reps as f64
+}
+
+fn main() {
+    let mut h = Harness::new("fig6_simulation");
+    let x = LocationVector::contiguous(128, 64, 32);
+
+    h.bench("one (sigma,pi) draw + sketch pair (D=128,K=64)", || {
+        simulate_sigma_pi(&x, 64, 1, 7)
+    });
+
+    // Regenerate the figure data (fast reps here; full via CLI).
+    let out = Path::new("results");
+    cminhash::figures::fig6(out, 600).expect("fig6");
+    println!("wrote results/fig6_simulation.csv");
+
+    // Paper-shape checks: empirical MSE tracks theoretical variance for
+    // each method, and Var_{σ,π} < Var_MH while Var_{0,π} is
+    // location-specific.
+    for &(f, a, k) in &[(64usize, 32usize, 32usize), (32, 8, 64), (96, 48, 128)] {
+        let x = LocationVector::contiguous(128, f, a);
+        let emp = simulate_sigma_pi(&x, k, 4000, 11);
+        let theo = var_sigma_pi(128, f, a, k);
+        let mh = var_minhash(x.jaccard(), k);
+        let zp = var_zero_pi(&x, k);
+        println!(
+            "PAPER-CHECK fig6 (f={f},a={a},K={k}): emp={emp:.5} vs theo={theo:.5} \
+             | MH={mh:.5} 0pi={zp:.5}"
+        );
+        assert!(
+            (emp - theo).abs() < 0.15 * theo.max(1e-5),
+            "simulation does not match Theorem 3.1"
+        );
+        assert!(theo < mh, "Theorem 3.4");
+    }
+    h.write_csv().unwrap();
+}

@@ -1,0 +1,43 @@
+//! Figure 7 bench: all-pairs Jaccard-estimation MAE on the four §4.2
+//! corpus stand-ins (text-like ×2, image-like ×2), all three methods —
+//! regenerates the series and asserts the paper's qualitative ordering:
+//! MAE(σ,π) < MAE(MinHash) everywhere on average, and (0,π) degrades
+//! hardest on image-structured data.
+
+use cminhash::bench::Harness;
+use cminhash::data::CorpusKind;
+use cminhash::figures::fig7_orderings;
+use cminhash::sketch::{CMinHasher, Sketcher};
+use std::path::Path;
+
+fn main() {
+    let mut h = Harness::new("fig7_real_data");
+
+    // Sketch throughput on each corpus kind (the pipeline hot loop).
+    for kind in CorpusKind::all() {
+        let corpus = kind.generate(24, 1);
+        let d = corpus.dim() as usize;
+        let hasher = CMinHasher::new(d, 256, 5);
+        h.bench(&format!("sketch 24 docs {} K=256", kind.name()), || {
+            corpus
+                .rows()
+                .iter()
+                .map(|r| hasher.sketch_sparse(r.indices()).len())
+                .sum::<usize>()
+        });
+    }
+
+    // Regenerate the figure (reduced size here; full via CLI --fig 7).
+    let out = Path::new("results");
+    cminhash::figures::fig7(out, 32, 3).expect("fig7");
+    println!("wrote results/fig7_real_data.csv");
+
+    // Paper-shape check on the image corpus (strong structure).
+    let (mh, zero_pi, sigma_pi) = fig7_orderings(24, 256, 5);
+    println!(
+        "PAPER-CHECK fig7 mnist-like K=256: MAE minhash={mh:.4}  (0,pi)={zero_pi:.4}  (sigma,pi)={sigma_pi:.4}"
+    );
+    assert!(sigma_pi < mh, "(sigma,pi) must beat MinHash");
+    assert!(zero_pi > sigma_pi, "(0,pi) must degrade on structured images");
+    h.write_csv().unwrap();
+}

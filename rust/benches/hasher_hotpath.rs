@@ -1,0 +1,141 @@
+//! Hot-path microbenchmarks: ns/sketch for the three pure-Rust hashers
+//! across (D, f, K), permutation-memory footprint, and the XLA artifact
+//! batch execution (when artifacts are present).  This is the §Perf
+//! baseline/after instrument.
+
+use cminhash::bench::{black_box, Harness};
+use cminhash::runtime::{HostTensor, XlaEngine};
+use cminhash::sketch::{
+    CMinHasher, ClassicMinHasher, Perm, Role, Sketcher, ZeroPiHasher,
+};
+use cminhash::util::rng::Rng;
+use std::path::Path;
+
+fn doc(rng: &mut Rng, d: u32, f: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..f).map(|_| rng.range_u32(0, d)).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
+fn main() {
+    let mut h = Harness::new("hasher_hotpath");
+    let mut rng = Rng::seed_from_u64(1);
+
+    for &(d, f, k) in &[
+        (4096usize, 64usize, 256usize),
+        (4096, 512, 256),
+        (65536, 400, 512),
+        (65536, 400, 2048),
+        (1 << 20, 1000, 1024),
+    ] {
+        let idx = doc(&mut rng, d as u32, f);
+        let cm = CMinHasher::new(d, k, 7);
+        let zp = ZeroPiHasher::new(d, k, 7);
+        h.bench(
+            &format!("cminhash-(s,p)  D={d} f={} K={k}", idx.len()),
+            || black_box(cm.sketch_sparse(&idx)),
+        );
+        h.bench(
+            &format!("cminhash-(0,p)  D={d} f={} K={k}", idx.len()),
+            || black_box(zp.sketch_sparse(&idx)),
+        );
+        // classic only at small K*D (its permutation matrix is O(K*D))
+        if k * d <= 4096 * 1024 {
+            let mh = ClassicMinHasher::new(d, k, 7);
+            h.bench(
+                &format!("classic minhash D={d} f={} K={k} ({} MB perms)",
+                    idx.len(), mh.perm_bytes() / (1 << 20)),
+                || black_box(mh.sketch_sparse(&idx)),
+            );
+        }
+    }
+
+    // Memory story (the paper's headline practical claim).
+    for &(d, k) in &[(1usize << 20, 1024usize)] {
+        let two_perm = 2 * 4 * d;
+        let classic = k * 4 * d;
+        println!(
+            "PAPER-CHECK memory D=2^20 K={k}: C-MinHash {:.1} MB vs classic {:.1} MB ({}x)",
+            two_perm as f64 / 1e6,
+            classic as f64 / 1e6,
+            classic / two_perm
+        );
+    }
+
+    // XLA artifact batch execution (L1+L2 through PJRT).
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = XlaEngine::load(dir).expect("engine");
+        for (variant, b, d) in [
+            ("cminhash_b8_d1024_k128", 8usize, 1024usize),
+            ("cminhash_b64_d4096_k256", 64, 4096),
+        ] {
+            let mut bits = vec![0i32; b * d];
+            let mut r = Rng::seed_from_u64(2);
+            for row in 0..b {
+                for _ in 0..d / 32 {
+                    bits[row * d + r.range_usize(0, d)] = 1;
+                }
+            }
+            let sigma = Perm::generate(d, 7, Role::Sigma).values_i32();
+            let pi2 = Perm::generate(d, 7, Role::Pi).doubled_i32();
+            let stats = h
+                .bench(&format!("XLA batch {variant}"), || {
+                    engine
+                        .execute(
+                            variant,
+                            &[
+                                HostTensor::I32(bits.clone()),
+                                HostTensor::I32(sigma.clone()),
+                                HostTensor::I32(pi2.clone()),
+                            ],
+                        )
+                        .unwrap()
+                })
+                .clone();
+            println!(
+                "  -> {:.1} µs/row through the XLA path",
+                stats.mean_ns / 1e3 / b as f64
+            );
+        }
+        // The sparse (gather) variants — the optimized serving path.
+        for (variant, b, d, f_max) in [
+            ("cminhashs_b8_d1024_f128_k128", 8usize, 1024usize, 128usize),
+            ("cminhashs_b64_d4096_f512_k256", 64, 4096, 512),
+        ] {
+            let mut r = Rng::seed_from_u64(2);
+            let pad = 2 * d as i32;
+            let mut idx = vec![pad; b * f_max];
+            for row in 0..b {
+                for j in 0..d / 32 {
+                    idx[row * f_max + j] = r.range_usize(0, d) as i32;
+                }
+            }
+            let sigma = Perm::generate(d, 7, Role::Sigma);
+            let inv_sigma = sigma.inverse().values_i32();
+            let pi3 = Perm::generate(d, 7, Role::Pi).tripled_sentinel_i32();
+            let stats = h
+                .bench(&format!("XLA sparse batch {variant}"), || {
+                    engine
+                        .execute(
+                            variant,
+                            &[
+                                HostTensor::I32(idx.clone()),
+                                HostTensor::I32(inv_sigma.clone()),
+                                HostTensor::I32(pi3.clone()),
+                            ],
+                        )
+                        .unwrap()
+                })
+                .clone();
+            println!(
+                "  -> {:.1} µs/row through the sparse XLA path",
+                stats.mean_ns / 1e3 / b as f64
+            );
+        }
+    } else {
+        println!("(artifacts missing; skipping XLA hot-path bench)");
+    }
+    h.write_csv().unwrap();
+}

@@ -1,0 +1,112 @@
+//! End-to-end serving throughput: the full coordinator + TCP + batcher
+//! stack under closed-loop load, for both engines.  The L3 overhead
+//! claim (coordinator ≪ hash compute) is quantified by comparing the
+//! rust-engine serving throughput against the bare hasher throughput.
+
+use cminhash::bench::Harness;
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{CMinHasher, Sketcher};
+use cminhash::util::rng::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+fn drive(addr: &str, dim: u32, nnz: usize, requests: usize, conns: usize) -> (f64, f64) {
+    let per_conn = requests / conns;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..conns {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut client = BlockingClient::connect(&addr).unwrap();
+            let mut rng = Rng::seed_from_u64(c as u64);
+            let mut lat = 0.0f64;
+            for _ in 0..per_conn {
+                let mut idx: Vec<u32> =
+                    (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+                idx.sort_unstable();
+                idx.dedup();
+                let t = Instant::now();
+                let _ = client.sketch(dim, idx).unwrap();
+                lat += t.elapsed().as_secs_f64();
+            }
+            lat / per_conn as f64
+        }));
+    }
+    let mean_lat: f64 =
+        joins.into_iter().map(|j| j.join().unwrap()).sum::<f64>() / conns as f64;
+    let wall = t0.elapsed().as_secs_f64();
+    ((requests as f64) / wall, mean_lat * 1e3)
+}
+
+fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) {
+    let cfg = ServeConfig {
+        engine,
+        artifacts_dir: Path::new("artifacts").to_path_buf(),
+        dim,
+        num_hashes: k,
+        seed: 42,
+        batch: BatchConfig {
+            max_batch: 64,
+            max_delay_us: 1_000,
+            policy,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+    };
+    let svc = match Coordinator::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("(skipping {engine:?} serving bench: {e})");
+            return;
+        }
+    };
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    // warmup
+    let _ = drive(&addr, dim as u32, 64, 64, 8);
+    let t0 = Instant::now();
+    let (rps, lat_ms) = drive(&addr, dim as u32, 64, 1024, 8);
+    h.report(
+        &format!("serve {engine:?}/{policy:?} D={dim} K={k} (8 conns)"),
+        t0.elapsed(),
+        1024,
+    );
+    let (snap, _) = svc.stats();
+    println!(
+        "  -> {rps:.0} req/s, {lat_ms:.2} ms mean latency, mean batch fill {:.1}, \
+         batch exec mean {:.2} ms",
+        snap.mean_batch_fill,
+        snap.batch_latency.mean_us as f64 / 1e3
+    );
+}
+
+fn main() {
+    let mut h = Harness::new("serving_throughput");
+    let (dim, k) = (4096usize, 256usize);
+
+    // Baseline: bare hasher throughput on one core.
+    let hasher = CMinHasher::new(dim, k, 42);
+    let mut rng = Rng::seed_from_u64(9);
+    let idx: Vec<u32> = (0..64).map(|_| rng.range_u32(0, dim as u32)).collect();
+    let bare = h.bench("bare hasher sketch D=4096 K=256", || {
+        hasher.sketch_sparse(&idx)
+    });
+    let bare_ns = bare.mean_ns;
+
+    // Policy ablation on the rust engine (DESIGN.md ablation item).
+    run_engine(&mut h, EngineKind::Rust, BatchPolicy::Eager, dim, k);
+    run_engine(&mut h, EngineKind::Rust, BatchPolicy::Deadline, dim, k);
+    run_engine(&mut h, EngineKind::Xla, BatchPolicy::Eager, dim, k);
+
+    println!(
+        "PAPER-CHECK L3 overhead: bare hash = {:.1} µs/sketch; serving adds \
+         protocol+batching on top (see serve lines above)",
+        bare_ns / 1e3
+    );
+    h.write_csv().unwrap();
+}

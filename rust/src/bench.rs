@@ -1,0 +1,183 @@
+//! Mini benchmark harness (criterion replacement for the offline
+//! build): adaptive iteration count, warmup, mean/median/stddev over
+//! timed batches, criterion-like one-line output, optional CSV dump.
+//!
+//! Used by every `rust/benches/*.rs` target (all `harness = false`).
+
+use std::hint::black_box as bb;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark's statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Benchmark id.
+    pub name: String,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub median_ns: f64,
+    /// Standard deviation ns/iter.
+    pub stddev_ns: f64,
+    /// Total iterations measured.
+    pub iters: u64,
+}
+
+impl Stats {
+    /// Human-readable time with units.
+    pub fn pretty(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    }
+}
+
+/// A collection of benchmark runs with shared config.
+pub struct Harness {
+    title: String,
+    target_time: Duration,
+    samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Harness {
+    /// New harness; honors `CMINHASH_BENCH_FAST=1` for quick smoke runs.
+    pub fn new(title: &str) -> Self {
+        let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
+        println!("== bench suite: {title} ==");
+        Harness {
+            title: title.to_string(),
+            target_time: if fast {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_millis(700)
+            },
+            samples: if fast { 8 } else { 20 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, printing a criterion-style line.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        // Warmup + calibration: how many iters fit in target_time/samples?
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < Duration::from_millis(50) {
+            bb(f());
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let batch = ((self.target_time.as_secs_f64() / self.samples as f64 / per_iter)
+            .ceil() as u64)
+            .max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                bb(f());
+            }
+            times.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        times.sort_by(|a, b| a.total_cmp(b));
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let median = times[times.len() / 2];
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            iters: total_iters,
+        };
+        println!(
+            "{:<48} time: [{} ± {}]  (median {}, {} iters)",
+            name,
+            Stats::pretty(stats.mean_ns),
+            Stats::pretty(stats.stddev_ns),
+            Stats::pretty(stats.median_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Report a pre-measured quantity (e.g. one long end-to-end run).
+    pub fn report(&mut self, name: &str, total: Duration, iters: u64) -> &Stats {
+        let ns = total.as_nanos() as f64 / iters.max(1) as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: ns,
+            median_ns: ns,
+            stddev_ns: 0.0,
+            iters,
+        };
+        println!(
+            "{:<48} time: [{} /iter over {} iters]",
+            name,
+            Stats::pretty(ns),
+            iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Append results as CSV under `results/bench/<suite>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<()> {
+        let dir = std::path::Path::new("results/bench");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.title.replace([' ', '/'], "_")));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "name,mean_ns,median_ns,stddev_ns,iters")?;
+        for s in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{}",
+                s.name, s.mean_ns, s.median_ns, s.stddev_ns, s.iters
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Results so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_reasonable() {
+        std::env::set_var("CMINHASH_BENCH_FAST", "1");
+        let mut h = Harness::new("selftest");
+        let s = h.bench("noop-ish", || bb(1u64 + 1)).clone();
+        assert!(s.mean_ns > 0.0 && s.mean_ns < 1e6);
+        let s2 = h
+            .bench("sleepless sum", || (0..1000u64).sum::<u64>())
+            .clone();
+        assert!(s2.iters > 0);
+        assert_eq!(h.results().len(), 2);
+    }
+
+    #[test]
+    fn pretty_units() {
+        assert!(Stats::pretty(5.0).contains("ns"));
+        assert!(Stats::pretty(5e3).contains("µs"));
+        assert!(Stats::pretty(5e6).contains("ms"));
+        assert!(Stats::pretty(5e9).contains(" s"));
+    }
+}

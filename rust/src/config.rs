@@ -1,0 +1,275 @@
+//! Serving configuration: JSON file + CLI overrides.
+//!
+//! (The offline build has no TOML parser; configs are JSON — see
+//! `configs/serve.json` for the annotated default.)
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Which engine computes sketches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT XLA artifacts via PJRT (the production path).
+    Xla,
+    /// Pure-Rust hashers (fallback / baseline).
+    Rust,
+}
+
+impl EngineKind {
+    /// Parse "xla" | "rust".
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "xla" => Ok(EngineKind::Xla),
+            "rust" => Ok(EngineKind::Rust),
+            other => Err(crate::Error::Invalid(format!(
+                "unknown engine {other:?} (xla|rust)"
+            ))),
+        }
+    }
+}
+
+/// When a partial batch is executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Continuous batching (vLLM-style): flush whatever is queued as
+    /// soon as the engine is free and no more requests are immediately
+    /// available.  Self-regulating: batch size ≈ arrivals per engine
+    /// execution.  The default.
+    Eager,
+    /// Wait up to `max_delay_us` for the batch to fill (classic
+    /// deadline batching).  Kept for the §Perf ablation.
+    Deadline,
+}
+
+impl BatchPolicy {
+    /// Parse "eager" | "deadline".
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "eager" => Ok(BatchPolicy::Eager),
+            "deadline" => Ok(BatchPolicy::Deadline),
+            other => Err(crate::Error::Invalid(format!(
+                "unknown batch policy {other:?} (eager|deadline)"
+            ))),
+        }
+    }
+}
+
+/// Dynamic batcher settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Flush when this many requests are queued (also the padding
+    /// target for the XLA artifact's fixed batch dimension).
+    pub max_batch: usize,
+    /// Flush a partial batch after this many microseconds
+    /// (only with [`BatchPolicy::Deadline`]).
+    pub max_delay_us: u64,
+    /// Partial-batch policy.
+    pub policy: BatchPolicy,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 64,
+            max_delay_us: 2_000,
+            policy: BatchPolicy::Eager,
+        }
+    }
+}
+
+/// LSH index settings.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexSettings {
+    /// Number of bands.
+    pub bands: usize,
+    /// Rows per band.
+    pub rows_per_band: usize,
+}
+
+impl Default for IndexSettings {
+    fn default() -> Self {
+        IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP listen address.
+    pub addr: String,
+    /// Directory containing `manifest.json` + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Data dimensionality D the service accepts.
+    pub dim: usize,
+    /// Sketch length K.
+    pub num_hashes: usize,
+    /// Seed for (σ, π) generation — the *only* hashing state.
+    pub seed: u64,
+    /// Batching.
+    pub batch: BatchConfig,
+    /// Index.
+    pub index: IndexSettings,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            engine: EngineKind::Xla,
+            dim: 4096,
+            num_hashes: 256,
+            seed: 42,
+            batch: BatchConfig::default(),
+            index: IndexSettings::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file; missing keys fall back to defaults.
+    pub fn from_file(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Build from parsed JSON (partial objects allowed).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = j.get_opt("addr") {
+            cfg.addr = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get_opt("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = j.get_opt("engine") {
+            cfg.engine = EngineKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get_opt("dim") {
+            cfg.dim = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("num_hashes") {
+            cfg.num_hashes = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("seed") {
+            cfg.seed = v.as_u64()?;
+        }
+        if let Some(b) = j.get_opt("batch") {
+            if let Some(v) = b.get_opt("max_batch") {
+                cfg.batch.max_batch = v.as_usize()?;
+            }
+            if let Some(v) = b.get_opt("max_delay_us") {
+                cfg.batch.max_delay_us = v.as_u64()?;
+            }
+            if let Some(v) = b.get_opt("policy") {
+                cfg.batch.policy = BatchPolicy::parse(v.as_str()?)?;
+            }
+        }
+        if let Some(ix) = j.get_opt("index") {
+            if let Some(v) = ix.get_opt("bands") {
+                cfg.index.bands = v.as_usize()?;
+            }
+            if let Some(v) = ix.get_opt("rows_per_band") {
+                cfg.index.rows_per_band = v.as_usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.num_hashes == 0 || self.num_hashes > self.dim {
+            return Err(crate::Error::Invalid(format!(
+                "need 1 <= K <= D, got K={}, D={}",
+                self.num_hashes, self.dim
+            )));
+        }
+        if self.index.bands * self.index.rows_per_band > self.num_hashes {
+            return Err(crate::Error::Invalid(format!(
+                "bands({}) * rows({}) > K({})",
+                self.index.bands, self.index.rows_per_band, self.num_hashes
+            )));
+        }
+        if self.batch.max_batch == 0 {
+            return Err(crate::Error::Invalid("max_batch must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    #[test]
+    fn defaults_validate() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_partial_config_merges_with_defaults() {
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("serve.json");
+        std::fs::write(
+            &p,
+            r#"{
+              "addr": "0.0.0.0:9000",
+              "engine": "rust",
+              "dim": 1024,
+              "num_hashes": 128,
+              "batch": {"max_batch": 8}
+            }"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_file(&p).unwrap();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.engine, EngineKind::Rust);
+        assert_eq!(c.dim, 1024);
+        assert_eq!(c.batch.max_batch, 8);
+        assert_eq!(c.batch.max_delay_us, 2_000, "default preserved");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_k_and_bands() {
+        let mut c = ServeConfig::default();
+        c.num_hashes = c.dim + 1;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.index.bands = 1000;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.batch.max_batch = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn batch_policy_parse_and_config() {
+        assert_eq!(BatchPolicy::parse("eager").unwrap(), BatchPolicy::Eager);
+        assert_eq!(
+            BatchPolicy::parse("deadline").unwrap(),
+            BatchPolicy::Deadline
+        );
+        assert!(BatchPolicy::parse("yolo").is_err());
+        let j = crate::util::json::Json::parse(
+            r#"{"batch": {"policy": "deadline", "max_delay_us": 77}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.batch.policy, BatchPolicy::Deadline);
+        assert_eq!(c.batch.max_delay_us, 77);
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert_eq!(EngineKind::parse("rust").unwrap(), EngineKind::Rust);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The dynamic batching state machine — pure, deterministic, and unit
+//! tested independently of tokio.
+//!
+//! Semantics (vLLM-router style):
+//! * requests accumulate in arrival order;
+//! * the batch flushes as soon as `max_batch` items are queued
+//!   ([`FlushReason::Full`]);
+//! * otherwise a deadline of `max_delay` from the *oldest* queued item
+//!   forces a partial flush ([`FlushReason::Deadline`]) — bounding the
+//!   queueing latency any request can pay;
+//! * `drain` flushes whatever is left (shutdown path).
+
+use std::time::{Duration, Instant};
+
+/// Why a batch was emitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// `max_batch` items were queued.
+    Full,
+    /// The oldest item hit the latency deadline.
+    Deadline,
+    /// Explicit drain (shutdown).
+    Drain,
+}
+
+/// Generic dynamic batcher over items of type `T`.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    max_batch: usize,
+    max_delay: Duration,
+    items: Vec<T>,
+    oldest_at: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    /// Create with a size bound and a latency bound.
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch > 0);
+        Batcher {
+            max_batch,
+            max_delay,
+            items: Vec::with_capacity(max_batch),
+            oldest_at: None,
+        }
+    }
+
+    /// Number of queued items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True iff nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Push an item at time `now`; returns a full batch if the size
+    /// bound was reached.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<(Vec<T>, FlushReason)> {
+        if self.items.is_empty() {
+            self.oldest_at = Some(now);
+        }
+        self.items.push(item);
+        if self.items.len() >= self.max_batch {
+            Some((self.take(), FlushReason::Full))
+        } else {
+            None
+        }
+    }
+
+    /// The instant at which the current partial batch must flush, if
+    /// any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.oldest_at.map(|t| t + self.max_delay)
+    }
+
+    /// Flush if `now` has passed the deadline.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<(Vec<T>, FlushReason)> {
+        match self.deadline() {
+            Some(d) if now >= d && !self.items.is_empty() => {
+                Some((self.take(), FlushReason::Deadline))
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditionally flush (shutdown).
+    pub fn drain(&mut self) -> Option<(Vec<T>, FlushReason)> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some((self.take(), FlushReason::Drain))
+        }
+    }
+
+    fn take(&mut self) -> Vec<T> {
+        self.oldest_at = None;
+        std::mem::replace(&mut self.items, Vec::with_capacity(self.max_batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(3, Duration::from_millis(10));
+        let now = t0();
+        assert!(b.push(1, now).is_none());
+        assert!(b.push(2, now).is_none());
+        let (batch, why) = b.push(3, now).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(why, FlushReason::Full);
+        assert!(b.is_empty());
+        assert!(b.deadline().is_none());
+    }
+
+    #[test]
+    fn deadline_from_oldest_item() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now + Duration::from_millis(3));
+        let d = b.deadline().unwrap();
+        assert_eq!(d, now + Duration::from_millis(5), "anchored to oldest");
+        assert!(b.poll_deadline(now + Duration::from_millis(4)).is_none());
+        let (batch, why) = b.poll_deadline(now + Duration::from_millis(5)).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(why, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn deadline_resets_after_flush() {
+        let mut b = Batcher::new(2, Duration::from_millis(5));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now); // flushed full
+        assert!(b.deadline().is_none());
+        b.push(3, now + Duration::from_millis(100));
+        assert_eq!(
+            b.deadline().unwrap(),
+            now + Duration::from_millis(105),
+            "new epoch anchored to new oldest"
+        );
+    }
+
+    #[test]
+    fn drain_returns_leftovers_once() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        assert!(b.drain().is_none());
+        b.push('a', t0());
+        let (batch, why) = b.drain().unwrap();
+        assert_eq!(batch, vec!['a']);
+        assert_eq!(why, FlushReason::Drain);
+        assert!(b.drain().is_none());
+    }
+
+    #[test]
+    fn preserves_arrival_order() {
+        let mut b = Batcher::new(100, Duration::from_millis(1));
+        let now = t0();
+        for i in 0..50 {
+            b.push(i, now);
+        }
+        let (batch, _) = b.poll_deadline(now + Duration::from_millis(2)).unwrap();
+        assert_eq!(batch, (0..50).collect::<Vec<_>>());
+    }
+}

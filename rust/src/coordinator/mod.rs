@@ -1,0 +1,26 @@
+//! L3 coordinator — the serving-system contribution.
+//!
+//! ```text
+//! clients ─▶ Coordinator::sketch/insert/estimate/query
+//!                 │ (sketch requests)
+//!                 ▼
+//!           dynamic batcher (max_batch | max_delay)
+//!                 │ padded fixed-shape batches
+//!                 ▼
+//!           EngineBackend: XLA artifacts (PJRT thread)  — or —
+//!                          pure-Rust hashers (fallback)
+//!                 │
+//!                 ▼
+//!           sketch store ─▶ LSH banding index
+//! ```
+//!
+//! The batcher state machine ([`batcher::Batcher`]) is pure and unit
+//! tested; [`service::Coordinator`] wires it to tokio.
+
+mod batcher;
+mod service;
+mod store;
+
+pub use batcher::{Batcher, FlushReason};
+pub use service::{Coordinator, EngineBackend};
+pub use store::SketchStore;

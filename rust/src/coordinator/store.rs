@@ -1,0 +1,57 @@
+//! Sketch store: id-keyed append-only storage of computed sketches.
+
+use std::collections::HashMap;
+
+/// Append-only sketch storage with monotonically increasing ids.
+#[derive(Debug, Default)]
+pub struct SketchStore {
+    next_id: u64,
+    sketches: HashMap<u64, Vec<u32>>,
+}
+
+impl SketchStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a sketch, returning its fresh id.
+    pub fn insert(&mut self, sketch: Vec<u32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sketches.insert(id, sketch);
+        id
+    }
+
+    /// Fetch a sketch by id.
+    pub fn get(&self, id: u64) -> Option<&[u32]> {
+        self.sketches.get(&id).map(|s| s.as_slice())
+    }
+
+    /// Number of stored sketches.
+    pub fn len(&self) -> usize {
+        self.sketches.len()
+    }
+
+    /// True iff empty.
+    pub fn is_empty(&self) -> bool {
+        self.sketches.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_monotone() {
+        let mut s = SketchStore::new();
+        let a = s.insert(vec![1]);
+        let b = s.insert(vec![2]);
+        assert!(b > a);
+        assert_eq!(s.get(a), Some([1u32].as_slice()));
+        assert_eq!(s.get(b), Some([2u32].as_slice()));
+        assert_eq!(s.get(999), None);
+        assert_eq!(s.len(), 2);
+    }
+}

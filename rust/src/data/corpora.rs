@@ -1,0 +1,228 @@
+//! Synthetic corpora standing in for the paper's §4.2 datasets.
+//!
+//! | paper dataset | stand-in | preserved property |
+//! |---|---|---|
+//! | NIPS full papers | [`zipf_corpus`] (D=8k vocab) | Zipf token marginals, mild structure |
+//! | BBC News | [`zipf_corpus`] (D=4k vocab, shorter docs) | same, sparser |
+//! | MNIST | [`image_corpus`] (28×28 strokes) | strong contiguous pixel structure |
+//! | CIFAR | [`image_corpus`] (32×32 blobs) | same, denser |
+//!
+//! The Figure 7 claim is qualitative: (σ,π) ≤ MH everywhere, and (0,π)
+//! degrades most on *structured* (image-like) data.  Both generators are
+//! deterministic given a seed.
+
+use super::dataset::BinaryDataset;
+use crate::sketch::SparseVec;
+use crate::util::rng::Rng;
+
+/// Which §4.2 stand-in to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// NIPS-like: large vocab, long documents.
+    TextNips,
+    /// BBC-like: smaller vocab, shorter documents.
+    TextBbc,
+    /// MNIST-like: 28×28 binary strokes.
+    ImageMnist,
+    /// CIFAR-like: 32×32 binary blobs.
+    ImageCifar,
+}
+
+impl CorpusKind {
+    /// Default corpus for this kind (sizes chosen so the all-pairs MAE
+    /// protocol stays fast while the (f, a) spread matches the regime).
+    pub fn generate(self, n_docs: usize, seed: u64) -> BinaryDataset {
+        match self {
+            CorpusKind::TextNips => zipf_corpus("nips-like", n_docs, 8192, 150, 400, 1.1, seed),
+            CorpusKind::TextBbc => zipf_corpus("bbc-like", n_docs, 4096, 60, 180, 1.2, seed),
+            CorpusKind::ImageMnist => image_corpus("mnist-like", n_docs, 28, 3, 6, seed),
+            CorpusKind::ImageCifar => image_corpus("cifar-like", n_docs, 32, 6, 10, seed),
+        }
+    }
+
+    /// All four kinds in the paper's Figure 7 order.
+    pub fn all() -> [CorpusKind; 4] {
+        [
+            CorpusKind::TextNips,
+            CorpusKind::TextBbc,
+            CorpusKind::ImageMnist,
+            CorpusKind::ImageCifar,
+        ]
+    }
+
+    /// Display name used in figures/CSV.
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusKind::TextNips => "nips-like",
+            CorpusKind::TextBbc => "bbc-like",
+            CorpusKind::ImageMnist => "mnist-like",
+            CorpusKind::ImageCifar => "cifar-like",
+        }
+    }
+}
+
+/// Text-like corpus: each document draws `len ~ U[min_len, max_len]`
+/// tokens from a Zipf(s) distribution over a `vocab`-sized vocabulary
+/// (binary bag-of-words).  Shared head tokens create realistic overlap.
+pub fn zipf_corpus(
+    name: &str,
+    n_docs: usize,
+    vocab: u32,
+    min_len: usize,
+    max_len: usize,
+    s: f64,
+    seed: u64,
+) -> BinaryDataset {
+    assert!(min_len <= max_len && max_len as u64 <= vocab as u64);
+    let mut rng = Rng::seed_from_u64(seed);
+    // Inverse-CDF table for the Zipf marginal.
+    let weights: Vec<f64> = (1..=vocab as usize).map(|r| 1.0 / (r as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(vocab as usize);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut rows = Vec::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let len = rng.range_usize(min_len, max_len + 1);
+        let mut tokens = Vec::with_capacity(len * 2);
+        while tokens.len() < len {
+            let u: f64 = rng.next_f64();
+            let tok = cdf.partition_point(|&c| c < u) as u32;
+            tokens.push(tok.min(vocab - 1));
+            tokens.sort_unstable();
+            tokens.dedup();
+        }
+        rows.push(SparseVec::new(vocab, tokens).expect("tokens in range"));
+    }
+    BinaryDataset::new(name, vocab, rows)
+}
+
+/// Image-like corpus: `side × side` binary images made of a few
+/// axis-aligned strokes/blobs — heavily *contiguous* nonzero structure
+/// in the flattened vector, the regime where C-MinHash-(0, π) suffers.
+pub fn image_corpus(
+    name: &str,
+    n_images: usize,
+    side: u32,
+    min_strokes: usize,
+    max_strokes: usize,
+    seed: u64,
+) -> BinaryDataset {
+    let d = side * side;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut rows = Vec::with_capacity(n_images);
+    for _ in 0..n_images {
+        let mut pix = Vec::new();
+        let strokes = rng.range_usize(min_strokes, max_strokes + 1);
+        for _ in 0..strokes {
+            // a rectangle blob
+            let w = rng.range_u32(2, side.max(3) / 2 + 1);
+            let h = rng.range_u32(2, side.max(3) / 2 + 1);
+            let x0 = rng.range_u32(0, side - w + 1);
+            let y0 = rng.range_u32(0, side - h + 1);
+            for y in y0..y0 + h {
+                for x in x0..x0 + w {
+                    pix.push(y * side + x);
+                }
+            }
+        }
+        rows.push(SparseVec::new(d, pix).expect("pixels in range"));
+    }
+    BinaryDataset::new(name, d, rows)
+}
+
+/// Corpus of near-duplicate families: `families` seed documents, each
+/// with `copies` mutated near-duplicates (used by the ANN example and
+/// index recall tests, mirroring MinHash's dedup application).
+pub fn near_duplicate_corpus(
+    n_families: usize,
+    copies: usize,
+    dim: u32,
+    doc_len: usize,
+    mutate: usize,
+    seed: u64,
+) -> BinaryDataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut rows = Vec::with_capacity(n_families * copies);
+    for _ in 0..n_families {
+        let mut base = Vec::with_capacity(doc_len);
+        while base.len() < doc_len {
+            base.push(rng.range_u32(0, dim));
+            base.sort_unstable();
+            base.dedup();
+        }
+        for _ in 0..copies {
+            let mut doc = base.clone();
+            for _ in 0..mutate {
+                let pos = rng.range_usize(0, doc.len());
+                doc[pos] = rng.range_u32(0, dim);
+            }
+            rows.push(SparseVec::new(dim, doc).expect("in range"));
+        }
+    }
+    BinaryDataset::new("near-dup", dim, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_corpus_shapes_and_determinism() {
+        let c1 = zipf_corpus("t", 20, 512, 20, 60, 1.1, 5);
+        let c2 = zipf_corpus("t", 20, 512, 20, 60, 1.1, 5);
+        assert_eq!(c1.rows().len(), 20);
+        assert_eq!(c1.dim(), 512);
+        for (a, b) in c1.rows().iter().zip(c2.rows()) {
+            assert_eq!(a, b);
+        }
+        for r in c1.rows() {
+            assert!(r.nnz() >= 20 && r.nnz() <= 60);
+        }
+    }
+
+    #[test]
+    fn zipf_head_tokens_are_common() {
+        let c = zipf_corpus("t", 50, 1024, 40, 80, 1.3, 1);
+        let head_hits = c.rows().iter().filter(|r| r.indices().contains(&0)).count();
+        let tail_hits = c
+            .rows()
+            .iter()
+            .filter(|r| r.indices().contains(&1000))
+            .count();
+        assert!(head_hits > tail_hits, "head {head_hits} vs tail {tail_hits}");
+    }
+
+    #[test]
+    fn image_corpus_is_contiguous_ish() {
+        let c = image_corpus("i", 30, 28, 3, 6, 2);
+        assert_eq!(c.dim(), 784);
+        // Contiguity proxy: mean gap between consecutive nonzeros is far
+        // below the unstructured expectation D/f.
+        let mut mean_gap = 0.0;
+        let mut n = 0usize;
+        for r in c.rows() {
+            let idx = r.indices();
+            for w in idx.windows(2) {
+                mean_gap += (w[1] - w[0]) as f64;
+                n += 1;
+            }
+        }
+        mean_gap /= n as f64;
+        assert!(mean_gap < 8.0, "images not contiguous: mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn near_duplicates_are_similar_within_family() {
+        let c = near_duplicate_corpus(3, 4, 4096, 100, 5, 7);
+        assert_eq!(c.rows().len(), 12);
+        let fam0 = &c.rows()[0..4];
+        let cross = c.rows()[0].jaccard(&c.rows()[8]);
+        let within = fam0[0].jaccard(&fam0[1]);
+        assert!(within > 0.7, "within-family J = {within}");
+        assert!(cross < 0.2, "cross-family J = {cross}");
+    }
+}

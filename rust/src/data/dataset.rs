@@ -1,0 +1,192 @@
+//! `BinaryDataset`: a named collection of sparse binary rows with
+//! save/load (JSON) and summary statistics.
+
+use crate::sketch::SparseVec;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A binary dataset: n rows of dimension D.
+#[derive(Clone, Debug)]
+pub struct BinaryDataset {
+    name: String,
+    dim: u32,
+    rows: Vec<SparseVec>,
+}
+
+/// Summary statistics used by `cminhash dataset --stats` and DESIGN.md.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetStats {
+    /// Number of rows.
+    pub n: usize,
+    /// Dimensionality.
+    pub dim: u32,
+    /// Mean nonzeros per row.
+    pub mean_nnz: f64,
+    /// Min nonzeros.
+    pub min_nnz: usize,
+    /// Max nonzeros.
+    pub max_nnz: usize,
+    /// Mean pairwise Jaccard over a bounded sample of pairs.
+    pub mean_jaccard: f64,
+}
+
+impl BinaryDataset {
+    /// Assemble a dataset (all rows must share `dim`).
+    pub fn new(name: &str, dim: u32, rows: Vec<SparseVec>) -> Self {
+        for r in &rows {
+            assert_eq!(r.dim(), dim, "row dim mismatch in dataset {name}");
+        }
+        BinaryDataset {
+            name: name.to_string(),
+            dim,
+            rows,
+        }
+    }
+
+    /// Dataset name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Dimensionality D.
+    pub fn dim(&self) -> u32 {
+        self.dim
+    }
+
+    /// Rows view.
+    pub fn rows(&self) -> &[SparseVec] {
+        &self.rows
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True iff there are no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// JSON form: `{"name": ..., "dim": D, "rows": [[idx...], ...]}`
+    /// (rows store indices only; `dim` is shared).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("dim", Json::Num(f64::from(self.dim))),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::from_u32s(r.indices()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the JSON form (validates every row).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let dim = j.get("dim")?.as_u32()?;
+        let rows = j
+            .get("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| SparseVec::new(dim, r.as_u32_vec()?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(BinaryDataset { name, dim, rows })
+    }
+
+    /// Save as JSON.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load from JSON.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Summary statistics (pairwise Jaccard sampled on ≤ `max_pairs`).
+    pub fn stats(&self, max_pairs: usize) -> DatasetStats {
+        let n = self.rows.len();
+        let nnzs: Vec<usize> = self.rows.iter().map(|r| r.nnz()).collect();
+        let mean_nnz = nnzs.iter().sum::<usize>() as f64 / n.max(1) as f64;
+        let mut mean_j = 0.0;
+        let mut pairs = 0usize;
+        'outer: for i in 0..n {
+            for jx in (i + 1)..n {
+                mean_j += self.rows[i].jaccard(&self.rows[jx]);
+                pairs += 1;
+                if pairs >= max_pairs {
+                    break 'outer;
+                }
+            }
+        }
+        DatasetStats {
+            n,
+            dim: self.dim,
+            mean_nnz,
+            min_nnz: nnzs.iter().copied().min().unwrap_or(0),
+            max_nnz: nnzs.iter().copied().max().unwrap_or(0),
+            mean_jaccard: if pairs == 0 { 0.0 } else { mean_j / pairs as f64 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    fn tiny() -> BinaryDataset {
+        BinaryDataset::new(
+            "tiny",
+            8,
+            vec![
+                SparseVec::new(8, vec![0, 1]).unwrap(),
+                SparseVec::new(8, vec![1, 2]).unwrap(),
+                SparseVec::new(8, vec![5]).unwrap(),
+            ],
+        )
+    }
+
+    #[test]
+    fn stats_are_sane() {
+        let s = tiny().stats(100);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.dim, 8);
+        assert!((s.mean_nnz - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min_nnz, 1);
+        assert_eq!(s.max_nnz, 2);
+        assert!(s.mean_jaccard > 0.0 && s.mean_jaccard < 1.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("ds.json");
+        let ds = tiny();
+        ds.save(&p).unwrap();
+        let back = BinaryDataset::load(&p).unwrap();
+        assert_eq!(back.name(), "tiny");
+        assert_eq!(back.rows(), ds.rows());
+        assert_eq!(back.dim(), 8);
+    }
+
+    #[test]
+    fn from_json_validates_rows() {
+        let bad = Json::parse(r#"{"name":"x","dim":4,"rows":[[9]]}"#).unwrap();
+        assert!(BinaryDataset::from_json(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "row dim mismatch")]
+    fn mismatched_rows_panic() {
+        BinaryDataset::new("bad", 8, vec![SparseVec::new(9, vec![0]).unwrap()]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Serving workload traces for the e2e benchmarks: Poisson arrivals of
+//! sketch/query requests over a corpus, mirroring how a dedup or ANN
+//! service would be driven in production.
+
+use super::dataset::BinaryDataset;
+use crate::sketch::SparseVec;
+use crate::util::rng::Rng;
+
+/// Parameters of a synthetic request trace.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// Total number of requests.
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second) for the Poisson process.
+    pub rate_per_sec: f64,
+    /// Fraction of requests that are similarity queries (the rest are
+    /// sketch-and-insert).
+    pub query_fraction: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_requests: 1000,
+            rate_per_sec: 2000.0,
+            query_fraction: 0.2,
+            seed: 0,
+        }
+    }
+}
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// Arrival offset from trace start, in microseconds.
+    pub at_us: u64,
+    /// The vector to sketch / query with.
+    pub vec: SparseVec,
+    /// True for a similarity query, false for sketch-and-insert.
+    pub is_query: bool,
+}
+
+/// A generated trace.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    items: Vec<TraceItem>,
+}
+
+impl Workload {
+    /// Draw a trace over the rows of `corpus` (cycled, with queries
+    /// drawn uniformly among previously inserted rows).
+    pub fn generate(corpus: &BinaryDataset, spec: WorkloadSpec) -> Self {
+        assert!(!corpus.is_empty(), "empty corpus");
+        assert!(spec.rate_per_sec > 0.0);
+        let mut rng = Rng::seed_from_u64(spec.seed);
+        let mut t_us = 0f64;
+        let mean_gap_us = 1e6 / spec.rate_per_sec;
+        let mut items = Vec::with_capacity(spec.n_requests);
+        for i in 0..spec.n_requests {
+            // Exponential inter-arrival.
+            let u: f64 = rng.next_f64().max(1e-12);
+            t_us += -u.ln() * mean_gap_us;
+            let is_query = rng.bool_with(spec.query_fraction.clamp(0.0, 1.0));
+            let row = corpus.rows()[i % corpus.len()].clone();
+            items.push(TraceItem {
+                at_us: t_us as u64,
+                vec: row,
+                is_query,
+            });
+        }
+        Workload { items }
+    }
+
+    /// Trace items, ordered by arrival time.
+    pub fn items(&self) -> &[TraceItem] {
+        &self.items
+    }
+
+    /// Total trace duration in microseconds.
+    pub fn duration_us(&self) -> u64 {
+        self.items.last().map(|i| i.at_us).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf_corpus;
+
+    #[test]
+    fn trace_is_ordered_and_rate_is_close() {
+        let corpus = zipf_corpus("t", 16, 256, 10, 20, 1.1, 0);
+        let spec = WorkloadSpec {
+            n_requests: 2000,
+            rate_per_sec: 1000.0,
+            query_fraction: 0.25,
+            seed: 1,
+        };
+        let w = Workload::generate(&corpus, spec);
+        assert_eq!(w.items().len(), 2000);
+        assert!(w.items().windows(2).all(|p| p[0].at_us <= p[1].at_us));
+        // Expected duration ~ 2 seconds; allow generous slack.
+        let dur_s = w.duration_us() as f64 / 1e6;
+        assert!(dur_s > 1.0 && dur_s < 4.0, "duration {dur_s}s");
+        let queries = w.items().iter().filter(|i| i.is_query).count();
+        assert!(queries > 300 && queries < 700, "queries {queries}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let corpus = zipf_corpus("t", 4, 128, 5, 10, 1.1, 0);
+        let spec = WorkloadSpec::default();
+        let a = Workload::generate(&corpus, spec);
+        let b = Workload::generate(&corpus, spec);
+        assert_eq!(a.items().len(), b.items().len());
+        assert!(a
+            .items()
+            .iter()
+            .zip(b.items())
+            .all(|(x, y)| x.at_us == y.at_us && x.is_query == y.is_query));
+    }
+}

@@ -1,0 +1,101 @@
+//! Crate-wide error type.
+//!
+//! A small hand-rolled enum (no `thiserror` to keep the dependency
+//! surface minimal); everything converts into it with `?`.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// Request shape does not match any loaded artifact variant.
+    ShapeMismatch {
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// Named artifact missing from the manifest / registry.
+    UnknownArtifact(String),
+    /// Invalid argument (dimension bounds, K > D, …).
+    Invalid(String),
+    /// Artifact manifest parse / consistency failure.
+    Manifest(String),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// Server protocol violation (bad JSON, unknown op, …).
+    Protocol(String),
+    /// Coordinator shut down / channel closed.
+    Shutdown,
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ShapeMismatch {
+                what,
+                expected,
+                got,
+            } => write!(f, "shape mismatch for {what}: expected {expected}, got {got}"),
+            Error::UnknownArtifact(name) => write!(f, "unknown artifact variant: {name}"),
+            Error::Invalid(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            Error::Shutdown => write!(f, "coordinator is shut down"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::ShapeMismatch {
+            what: "bits",
+            expected: 1024,
+            got: 17,
+        };
+        assert!(e.to_string().contains("bits"));
+        assert!(e.to_string().contains("1024"));
+        let e = Error::UnknownArtifact("nope".into());
+        assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,357 @@
+//! Regeneration of every figure in the paper's evaluation (§3–§4).
+//!
+//! Each `figN` function writes one CSV with the exact series the paper
+//! plots; `cargo run --release -- figures --all` regenerates the full
+//! evaluation, and the criterion benches time the underlying kernels.
+//! EXPERIMENTS.md records paper-vs-measured for each.
+
+use crate::data::CorpusKind;
+use crate::sketch::{
+    estimate, CMinHasher, ClassicMinHasher, Perm, Sketcher, ZeroPiHasher,
+};
+use crate::theory::{
+    e_tilde, var_minhash, var_sigma_pi, var_zero_pi, variance_ratio, LocationVector,
+};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::path::Path;
+
+fn write_csv(path: &Path, header: &str, rows: &[String]) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+/// Figure 2: Var[Ĵ_{σ,π}] and Var[Ĵ_MH] versus J, D = 1000,
+/// f ∈ {200, 500, 800}, K ∈ {500, 800}.
+pub fn fig2(out_dir: &Path) -> crate::Result<()> {
+    let d = 1000;
+    let mut rows = Vec::new();
+    for &k in &[500usize, 800] {
+        for &f in &[200usize, 500, 800] {
+            for a in (1..f).step_by((f / 50).max(1)) {
+                let j = a as f64 / f as f64;
+                rows.push(format!(
+                    "{k},{f},{a},{j},{},{}",
+                    var_sigma_pi(d, f, a, k),
+                    var_minhash(j, k)
+                ));
+            }
+        }
+    }
+    write_csv(
+        &out_dir.join("fig2_variance_vs_j.csv"),
+        "K,f,a,J,var_sigma_pi,var_minhash",
+        &rows,
+    )
+}
+
+/// Figure 3: Ẽ versus D for f = 10 and f = 30 (several a per panel),
+/// with the J² asymptote.
+pub fn fig3(out_dir: &Path) -> crate::Result<()> {
+    let mut rows = Vec::new();
+    for &(f, aa) in &[(10usize, [2usize, 5, 8]), (30, [5, 15, 25])] {
+        for &a in &aa {
+            let j2 = (a as f64 / f as f64).powi(2);
+            let mut dd = f;
+            while dd <= 5000 {
+                rows.push(format!("{f},{a},{dd},{},{j2}", e_tilde(dd, f, a)));
+                dd = (dd as f64 * 1.3).ceil() as usize;
+            }
+        }
+    }
+    write_csv(
+        &out_dir.join("fig3_etilde_vs_d.csv"),
+        "f,a,D,e_tilde,j_squared",
+        &rows,
+    )
+}
+
+/// Figure 4: variance ratio Var[Ĵ_MH]/Var[Ĵ_{σ,π}] versus J for
+/// D = 1000, K = 800 — constant in a (Proposition 3.5).
+pub fn fig4(out_dir: &Path) -> crate::Result<()> {
+    let (d, k) = (1000usize, 800usize);
+    let mut rows = Vec::new();
+    for &f in &[200usize, 500, 800] {
+        for a in (1..f).step_by((f / 40).max(1)) {
+            let j = a as f64 / f as f64;
+            if let Some(r) = variance_ratio(d, f, a, k) {
+                rows.push(format!("{f},{a},{j},{r}"));
+            }
+        }
+    }
+    write_csv(&out_dir.join("fig4_ratio_vs_j.csv"), "f,a,J,ratio", &rows)
+}
+
+/// Figure 5: variance ratio versus f for D ∈ {500, 1000} and
+/// K ∈ {100, 200, 400, 800} (a = f/2; Prop 3.5 makes the choice moot).
+pub fn fig5(out_dir: &Path) -> crate::Result<()> {
+    let mut rows = Vec::new();
+    for &d in &[500usize, 1000] {
+        for &k in &[100usize, 200, 400, 800] {
+            if k > d {
+                continue;
+            }
+            let mut f = 20usize;
+            while f <= d {
+                let a = (f / 2).max(1);
+                if let Some(r) = variance_ratio(d, f, a, k) {
+                    rows.push(format!("{d},{k},{f},{r}"));
+                }
+                f += (d / 25).max(10);
+            }
+        }
+    }
+    write_csv(&out_dir.join("fig5_ratio_vs_f.csv"), "D,K,f,ratio", &rows)
+}
+
+/// One empirical MSE measurement: `reps` draws of fresh (σ, π) (and, for
+/// MinHash, K fresh permutations), estimating J of the fixed pair.
+fn empirical_mse(
+    method: &str,
+    x: &LocationVector,
+    k: usize,
+    reps: usize,
+    seed: u64,
+) -> f64 {
+    let d = x.d();
+    let (v, w) = x.realize();
+    let truth = x.jaccard();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut sq = 0.0f64;
+    let mut perm_vals: Vec<u32> = (0..d as u32).collect();
+    for _ in 0..reps {
+        let est = match method {
+            "minhash" => {
+                let rows: Vec<Perm> = (0..k)
+                    .map(|_| {
+                        rng.shuffle(&mut perm_vals);
+                        Perm::from_values(perm_vals.clone()).unwrap()
+                    })
+                    .collect();
+                let h = ClassicMinHasher::from_perms(&rows).unwrap();
+                estimate(&h.sketch_sparse(v.indices()), &h.sketch_sparse(w.indices()))
+            }
+            "cminhash_0pi" => {
+                rng.shuffle(&mut perm_vals);
+                let pi = Perm::from_values(perm_vals.clone()).unwrap();
+                let h = ZeroPiHasher::from_perm(k, &pi).unwrap();
+                estimate(&h.sketch_sparse(v.indices()), &h.sketch_sparse(w.indices()))
+            }
+            "cminhash_sigma_pi" => {
+                rng.shuffle(&mut perm_vals);
+                let sigma = Perm::from_values(perm_vals.clone()).unwrap();
+                rng.shuffle(&mut perm_vals);
+                let pi = Perm::from_values(perm_vals.clone()).unwrap();
+                let h = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+                estimate(&h.sketch_sparse(v.indices()), &h.sketch_sparse(w.indices()))
+            }
+            other => panic!("unknown method {other}"),
+        };
+        sq += (est - truth) * (est - truth);
+    }
+    sq / reps as f64
+}
+
+/// Figure 6: empirical vs theoretical MSE on §4.1's structured pairs,
+/// D = 128, several (f, a), K sweep, all three methods.
+pub fn fig6(out_dir: &Path, reps: usize) -> crate::Result<()> {
+    let d = 128usize;
+    let mut rows = Vec::new();
+    for &(f, a) in &[(32usize, 8usize), (32, 16), (64, 16), (64, 32), (96, 48)] {
+        let x = LocationVector::contiguous(d, f, a);
+        let j = x.jaccard();
+        for &k in &[8usize, 16, 32, 64, 128] {
+            let theo = [
+                ("minhash", var_minhash(j, k)),
+                ("cminhash_0pi", var_zero_pi(&x, k)),
+                ("cminhash_sigma_pi", var_sigma_pi(d, f, a, k)),
+            ];
+            for (method, tvar) in theo {
+                let emp = empirical_mse(method, &x, k, reps, 1234 + k as u64);
+                rows.push(format!("{f},{a},{k},{method},{emp},{tvar}"));
+            }
+        }
+    }
+    write_csv(
+        &out_dir.join("fig6_simulation.csv"),
+        "f,a,K,method,empirical_mse,theoretical_var",
+        &rows,
+    )
+}
+
+/// Figure 7: all-pairs MAE versus K on the four §4.2 corpus stand-ins,
+/// all three methods, `reps` independent repetitions.
+pub fn fig7(out_dir: &Path, n_docs: usize, reps: usize) -> crate::Result<()> {
+    let mut rows = Vec::new();
+    for kind in CorpusKind::all() {
+        let corpus = kind.generate(n_docs, 99);
+        let d = corpus.dim() as usize;
+        // Exact Jaccard ground truth once per corpus.
+        let docs = corpus.rows();
+        let mut truths = Vec::new();
+        for i in 0..docs.len() {
+            for j in (i + 1)..docs.len() {
+                truths.push(docs[i].jaccard(&docs[j]));
+            }
+        }
+        for &k in &[64usize, 128, 256, 512] {
+            if k > d {
+                continue;
+            }
+            for method in ["minhash", "cminhash_0pi", "cminhash_sigma_pi"] {
+                let mut mae_acc = 0.0f64;
+                for rep in 0..reps {
+                    let seed = 1000 * rep as u64 + k as u64;
+                    let sketcher: Box<dyn Sketcher> = match method {
+                        "minhash" => Box::new(ClassicMinHasher::new(d, k, seed)),
+                        "cminhash_0pi" => Box::new(ZeroPiHasher::new(d, k, seed)),
+                        _ => Box::new(CMinHasher::new(d, k, seed)),
+                    };
+                    let sketches: Vec<Vec<u32>> = docs
+                        .iter()
+                        .map(|r| sketcher.sketch_sparse(r.indices()))
+                        .collect();
+                    let mut err = 0.0;
+                    let mut t = 0usize;
+                    for i in 0..docs.len() {
+                        for j in (i + 1)..docs.len() {
+                            err += (estimate(&sketches[i], &sketches[j]) - truths[t]).abs();
+                            t += 1;
+                        }
+                    }
+                    mae_acc += err / truths.len() as f64;
+                }
+                rows.push(format!(
+                    "{},{d},{k},{method},{}",
+                    kind.name(),
+                    mae_acc / reps as f64
+                ));
+            }
+        }
+    }
+    write_csv(
+        &out_dir.join("fig7_real_data.csv"),
+        "dataset,D,K,method,mae",
+        &rows,
+    )
+}
+
+/// Run one figure (2–7) or all of them.
+pub fn run(fig: Option<u32>, out_dir: &Path, fast: bool) -> crate::Result<()> {
+    let (reps6, docs7, reps7) = if fast { (300, 24, 2) } else { (2000, 48, 10) };
+    let all = fig.is_none();
+    let want = |n: u32| all || fig == Some(n);
+    if want(2) {
+        fig2(out_dir)?;
+        println!("fig2 -> {}", out_dir.join("fig2_variance_vs_j.csv").display());
+    }
+    if want(3) {
+        fig3(out_dir)?;
+        println!("fig3 -> {}", out_dir.join("fig3_etilde_vs_d.csv").display());
+    }
+    if want(4) {
+        fig4(out_dir)?;
+        println!("fig4 -> {}", out_dir.join("fig4_ratio_vs_j.csv").display());
+    }
+    if want(5) {
+        fig5(out_dir)?;
+        println!("fig5 -> {}", out_dir.join("fig5_ratio_vs_f.csv").display());
+    }
+    if want(6) {
+        fig6(out_dir, reps6)?;
+        println!("fig6 -> {}", out_dir.join("fig6_simulation.csv").display());
+    }
+    if want(7) {
+        fig7(out_dir, docs7, reps7)?;
+        println!("fig7 -> {}", out_dir.join("fig7_real_data.csv").display());
+    }
+    Ok(())
+}
+
+/// Deterministic mini-workload used by tests: checks the qualitative
+/// Figure 7 ordering (σ,π beats MinHash on average; 0,π hurts on
+/// image-structured data) on a small corpus.
+pub fn fig7_orderings(n_docs: usize, k: usize, reps: usize) -> (f64, f64, f64) {
+    let corpus = CorpusKind::ImageMnist.generate(n_docs, 5);
+    let d = corpus.dim() as usize;
+    let docs = corpus.rows();
+    let mut maes = [0.0f64; 3];
+    for rep in 0..reps {
+        let seed = rep as u64 * 31 + 1;
+        let sketchers: [Box<dyn Sketcher>; 3] = [
+            Box::new(ClassicMinHasher::new(d, k, seed)),
+            Box::new(ZeroPiHasher::new(d, k, seed)),
+            Box::new(CMinHasher::new(d, k, seed)),
+        ];
+        for (m, sk) in sketchers.iter().enumerate() {
+            let sketches: Vec<Vec<u32>> =
+                docs.iter().map(|r| sk.sketch_sparse(r.indices())).collect();
+            let mut err = 0.0;
+            let mut n = 0usize;
+            for i in 0..docs.len() {
+                for j in (i + 1)..docs.len() {
+                    err += (estimate(&sketches[i], &sketches[j]) - docs[i].jaccard(&docs[j])).abs();
+                    n += 1;
+                }
+            }
+            maes[m] += err / n as f64;
+        }
+    }
+    (
+        maes[0] / reps as f64, // minhash
+        maes[1] / reps as f64, // 0,pi
+        maes[2] / reps as f64, // sigma,pi
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    #[test]
+    fn fig2_csv_has_expected_series() {
+        let dir = TempDir::new().unwrap();
+        fig2(dir.path()).unwrap();
+        let text = std::fs::read_to_string(dir.path().join("fig2_variance_vs_j.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() > 100);
+        assert_eq!(lines[0], "K,f,a,J,var_sigma_pi,var_minhash");
+        // every data row: var_sigma_pi < var_minhash (Thm 3.4)
+        for l in &lines[1..] {
+            let cols: Vec<f64> = l.split(',').map(|c| c.parse().unwrap()).collect();
+            assert!(cols[4] < cols[5], "{l}");
+        }
+    }
+
+    #[test]
+    fn fig3_curves_increase_and_stay_below_j2() {
+        let dir = TempDir::new().unwrap();
+        fig3(dir.path()).unwrap();
+        let text = std::fs::read_to_string(dir.path().join("fig3_etilde_vs_d.csv")).unwrap();
+        for l in text.lines().skip(1) {
+            let c: Vec<f64> = l.split(',').map(|x| x.parse().unwrap()).collect();
+            assert!(c[3] < c[4] + 1e-12, "e_tilde >= J^2: {l}");
+        }
+    }
+
+    #[test]
+    fn fig7_qualitative_ordering() {
+        let (mh, zero_pi, sigma_pi) = fig7_orderings(16, 128, 3);
+        assert!(
+            sigma_pi < mh,
+            "C-MinHash-(σ,π) must beat MinHash: {sigma_pi} vs {mh}"
+        );
+        assert!(
+            zero_pi > sigma_pi,
+            "(0,π) must be worse than (σ,π) on structured images: {zero_pi} vs {sigma_pi}"
+        );
+    }
+}

@@ -1,0 +1,252 @@
+//! Banding LSH over MinHash-style sketches.
+//!
+//! A sketch of K values is split into `bands` bands of `rows_per_band`
+//! values; each band is hashed into a table.  Two items collide in a
+//! band with probability J^r, and in at least one band with probability
+//! 1 − (1 − J^r)^b — the classic S-curve.  Candidates are re-ranked by
+//! the full-sketch collision estimate.
+
+use crate::sketch::estimate;
+use std::collections::HashMap;
+
+/// Band configuration.  `bands * rows_per_band` must be ≤ K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexConfig {
+    /// Number of bands b.
+    pub bands: usize,
+    /// Rows per band r.
+    pub rows_per_band: usize,
+}
+
+impl IndexConfig {
+    /// The probability that a pair with Jaccard `j` becomes a candidate:
+    /// 1 − (1 − j^r)^b.
+    pub fn candidate_probability(&self, j: f64) -> f64 {
+        1.0 - (1.0 - j.powi(self.rows_per_band as i32)).powi(self.bands as i32)
+    }
+
+    /// The similarity threshold where the S-curve is steepest,
+    /// ≈ (1/b)^(1/r).
+    pub fn threshold(&self) -> f64 {
+        (1.0 / self.bands as f64).powf(1.0 / self.rows_per_band as f64)
+    }
+}
+
+/// A scored neighbor returned by queries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    /// Item id (as assigned at insert time).
+    pub id: u64,
+    /// Full-sketch collision estimate Ĵ.
+    pub score: f64,
+}
+
+/// The banding index: b hash tables over band signatures, plus the
+/// stored sketches for re-ranking.
+#[derive(Debug)]
+pub struct BandingIndex {
+    cfg: IndexConfig,
+    k: usize,
+    tables: Vec<HashMap<u64, Vec<u64>>>,
+    sketches: HashMap<u64, Vec<u32>>,
+}
+
+/// FNV-1a over a band's u32 values — cheap, deterministic, dependency
+/// free.
+#[inline]
+fn band_hash(values: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in values {
+        for b in v.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl BandingIndex {
+    /// Create an index over sketches of length `k`.
+    pub fn new(k: usize, cfg: IndexConfig) -> crate::Result<Self> {
+        if cfg.bands == 0 || cfg.rows_per_band == 0 {
+            return Err(crate::Error::Invalid("bands and rows must be > 0".into()));
+        }
+        if cfg.bands * cfg.rows_per_band > k {
+            return Err(crate::Error::Invalid(format!(
+                "bands({}) * rows({}) > K({k})",
+                cfg.bands, cfg.rows_per_band
+            )));
+        }
+        Ok(BandingIndex {
+            cfg,
+            k,
+            tables: vec![HashMap::new(); cfg.bands],
+            sketches: HashMap::new(),
+        })
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> IndexConfig {
+        self.cfg
+    }
+
+    /// Number of indexed items.
+    pub fn len(&self) -> usize {
+        self.sketches.len()
+    }
+
+    /// True iff no items are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.sketches.is_empty()
+    }
+
+    /// Insert an item's sketch under `id` (overwrites an existing id's
+    /// sketch store entry but not its stale table entries — ids are
+    /// expected unique, enforced here).
+    pub fn insert(&mut self, id: u64, sketch: &[u32]) -> crate::Result<()> {
+        if sketch.len() != self.k {
+            return Err(crate::Error::ShapeMismatch {
+                what: "sketch",
+                expected: self.k,
+                got: sketch.len(),
+            });
+        }
+        if self.sketches.contains_key(&id) {
+            return Err(crate::Error::Invalid(format!("duplicate id {id}")));
+        }
+        let r = self.cfg.rows_per_band;
+        for (b, table) in self.tables.iter_mut().enumerate() {
+            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
+            table.entry(sig).or_default().push(id);
+        }
+        self.sketches.insert(id, sketch.to_vec());
+        Ok(())
+    }
+
+    /// Raw candidate set for a query sketch (ids colliding in ≥1 band).
+    pub fn candidates(&self, sketch: &[u32]) -> Vec<u64> {
+        let r = self.cfg.rows_per_band;
+        let mut out: Vec<u64> = Vec::new();
+        for (b, table) in self.tables.iter().enumerate() {
+            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
+            if let Some(ids) = table.get(&sig) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Top-k neighbors by full-sketch estimate among the candidates.
+    pub fn query(&self, sketch: &[u32], topk: usize) -> Vec<Neighbor> {
+        let mut scored: Vec<Neighbor> = self
+            .candidates(sketch)
+            .into_iter()
+            .map(|id| Neighbor {
+                id,
+                score: estimate(sketch, &self.sketches[&id]),
+            })
+            .collect();
+        scored.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+        scored.truncate(topk);
+        scored
+    }
+
+    /// All neighbors with estimate ≥ `threshold`.
+    pub fn query_above(&self, sketch: &[u32], threshold: f64) -> Vec<Neighbor> {
+        let mut out: Vec<Neighbor> = self
+            .candidates(sketch)
+            .into_iter()
+            .map(|id| Neighbor {
+                id,
+                score: estimate(sketch, &self.sketches[&id]),
+            })
+            .filter(|n| n.score >= threshold)
+            .collect();
+        out.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+        out
+    }
+
+    /// Stored sketch for an id.
+    pub fn sketch(&self, id: u64) -> Option<&[u32]> {
+        self.sketches.get(&id).map(|s| s.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{CMinHasher, Sketcher};
+
+    fn cfg() -> IndexConfig {
+        IndexConfig {
+            bands: 16,
+            rows_per_band: 4,
+        }
+    }
+
+    #[test]
+    fn s_curve_shape() {
+        let c = cfg();
+        assert!(c.candidate_probability(0.9) > 0.99);
+        assert!(c.candidate_probability(0.1) < 0.01 + 0.01);
+        let t = c.threshold();
+        assert!(t > 0.3 && t < 0.7, "threshold {t}");
+    }
+
+    #[test]
+    fn insert_validates() {
+        let mut idx = BandingIndex::new(64, cfg()).unwrap();
+        assert!(idx.insert(1, &vec![0u32; 63]).is_err());
+        assert!(idx.insert(1, &vec![0u32; 64]).is_ok());
+        assert!(idx.insert(1, &vec![0u32; 64]).is_err(), "duplicate id");
+        assert!(BandingIndex::new(8, cfg()).is_err(), "b*r > K");
+    }
+
+    #[test]
+    fn identical_items_always_found() {
+        let h = CMinHasher::new(1024, 64, 5);
+        let mut idx = BandingIndex::new(64, cfg()).unwrap();
+        let doc: Vec<u32> = (100..200).collect();
+        let sk = h.sketch_sparse(&doc);
+        idx.insert(42, &sk).unwrap();
+        let hits = idx.query(&sk, 3);
+        assert_eq!(hits[0].id, 42);
+        assert_eq!(hits[0].score, 1.0);
+    }
+
+    #[test]
+    fn similar_found_dissimilar_not() {
+        let h = CMinHasher::new(4096, 128, 9);
+        let mut idx = BandingIndex::new(
+            128,
+            IndexConfig {
+                bands: 32,
+                rows_per_band: 4,
+            },
+        )
+        .unwrap();
+        let base: Vec<u32> = (0..300).map(|i| i * 10).collect();
+        let mut near = base.clone();
+        near[0] = 7;
+        near[1] = 13; // J ~ 298/302
+        let far: Vec<u32> = (0..300).map(|i| i * 10 + 5).collect();
+        idx.insert(1, &h.sketch_sparse(&near)).unwrap();
+        idx.insert(2, &h.sketch_sparse(&far)).unwrap();
+        let hits = idx.query(&h.sketch_sparse(&base), 10);
+        assert_eq!(hits[0].id, 1, "near duplicate must rank first");
+        assert!(hits[0].score > 0.8);
+        let above = idx.query_above(&h.sketch_sparse(&base), 0.5);
+        assert!(above.iter().all(|n| n.id == 1));
+    }
+
+    #[test]
+    fn candidates_dedup() {
+        let mut idx = BandingIndex::new(8, IndexConfig { bands: 4, rows_per_band: 2 }).unwrap();
+        let sk = vec![1u32; 8];
+        idx.insert(7, &sk).unwrap();
+        // identical sketch collides in all 4 bands but appears once
+        assert_eq!(idx.candidates(&sk), vec![7]);
+    }
+}

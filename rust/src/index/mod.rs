@@ -1,0 +1,9 @@
+//! Approximate near-neighbor search over sketches — the banding LSH
+//! index that motivates MinHash in the first place (Indyk–Motwani
+//! style hash tables; the paper's intro cites ANN as the regime where
+//! K must grow beyond 1024, which is exactly where C-MinHash's
+//! two-permutation memory story matters).
+
+mod lsh;
+
+pub use lsh::{BandingIndex, IndexConfig, Neighbor};

@@ -1,0 +1,46 @@
+//! # cminhash — a production C-MinHash sketching & similarity-search stack
+//!
+//! Reproduction of *“C-MinHash: Rigorously Reducing K Permutations to
+//! Two”* (Xiaoyun Li & Ping Li, 2021) as a three-layer system:
+//!
+//! * **L1** — a Pallas kernel (Python, build time) computing all K
+//!   circulant hashes of a batch; lowered to HLO text in `artifacts/`.
+//! * **L2** — JAX sketch pipelines (Algorithm 1/2/3 + estimator graphs),
+//!   also AOT-lowered.
+//! * **L3** — this crate: a tokio coordinator that loads the artifacts
+//!   via PJRT ([`runtime`]), batches client requests ([`coordinator`]),
+//!   serves sketches / estimates / near-neighbor queries ([`server`],
+//!   [`index`]), and ships pure-Rust hashers ([`sketch`]), exact paper
+//!   theory ([`theory`]), and dataset generators ([`data`]).
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, and the binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cminhash::sketch::{CMinHasher, Sketcher};
+//! let hasher = CMinHasher::new(1024, 128, 42); // D, K, seed
+//! let v: Vec<u32> = vec![3, 17, 900];          // sparse nonzero indices
+//! let w: Vec<u32> = vec![3, 17, 901];
+//! let hv = hasher.sketch_sparse(&v);
+//! let hw = hasher.sketch_sparse(&w);
+//! let j = cminhash::sketch::estimate(&hv, &hw);
+//! assert!(j > 0.0 && j <= 1.0);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod data;
+pub mod error;
+pub mod index;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sketch;
+pub mod theory;
+pub mod util;
+
+pub use error::{Error, Result};

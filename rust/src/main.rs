@@ -1,0 +1,298 @@
+//! `cminhash` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`    — run the sketching/similarity server (XLA or Rust engine)
+//! * `figures`  — regenerate the paper's Figures 2–7 as CSV
+//! * `dataset`  — generate the §4.2 corpus stand-ins
+//! * `sketch`   — offline batch sketching of a dataset file
+//! * `loadgen`  — drive a running server and report latency/throughput
+//! * `info`     — list compiled artifact variants
+//!
+//! Flags are parsed by the in-tree [`Args`] helper (no clap in the
+//! offline build).
+
+use anyhow::{bail, Context};
+use cminhash::config::{EngineKind, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::data::{BinaryDataset, CorpusKind};
+use cminhash::runtime::Manifest;
+use cminhash::server::protocol::Request;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
+use cminhash::util::rng::Rng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+const USAGE: &str = "\
+cminhash — C-MinHash sketching & similarity-search service
+
+USAGE:
+  cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
+                   [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
+  cminhash figures (--all | --fig N) [--out DIR] [--fast]
+  cminhash dataset --kind nips|bbc|mnist|cifar --out FILE.json
+                   [--n N] [--seed S] [--stats]
+  cminhash sketch  --input FILE.json --out FILE.json
+                   [--num-hashes K] [--seed S]
+  cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
+  cminhash info    [--artifacts DIR]
+  cminhash theory  --d D --f F [--a A] [--k K]
+";
+
+/// Tiny `--flag value` / `--flag` parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let is_bool = matches!(name, "stats" | "fast" | "all");
+                if is_bool {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("bad --{name} {v:?}: {e}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "figures" => cmd_figures(&args),
+        "dataset" => cmd_dataset(&args),
+        "sketch" => cmd_sketch(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "info" => cmd_info(&args),
+        "theory" => cmd_theory(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(a) = args.get("addr") {
+        cfg.addr = a.to_string();
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    if let Some(d) = args.get_parsed::<usize>("dim")? {
+        cfg.dim = d;
+    }
+    if let Some(k) = args.get_parsed::<usize>("num-hashes")? {
+        cfg.num_hashes = k;
+    }
+    if let Some(p) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(p);
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    cfg.validate()?;
+    let svc = Coordinator::start(cfg.clone())?;
+    let server = Server::spawn(svc, &cfg.addr)?;
+    println!(
+        "serving on {} (engine={:?}, D={}, K={})",
+        server.addr(),
+        cfg.engine,
+        cfg.dim,
+        cfg.num_hashes
+    );
+    server.join_forever();
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let all = args.has("all");
+    let fig = args.get_parsed::<u32>("fig")?;
+    if fig.is_none() && !all {
+        bail!("pass --fig N or --all");
+    }
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let t = Instant::now();
+    cminhash::figures::run(if all { None } else { fig }, &out, args.has("fast"))?;
+    println!("figures done in {:.1}s", t.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> anyhow::Result<()> {
+    let kind = match args.get("kind").context("--kind required")? {
+        "nips" => CorpusKind::TextNips,
+        "bbc" => CorpusKind::TextBbc,
+        "mnist" => CorpusKind::ImageMnist,
+        "cifar" => CorpusKind::ImageCifar,
+        other => bail!("unknown kind {other} (nips|bbc|mnist|cifar)"),
+    };
+    let n = args.get_parsed::<usize>("n")?.unwrap_or(100);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0);
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let ds = kind.generate(n, seed);
+    ds.save(&out)?;
+    println!("wrote {} rows (D={}) to {}", ds.len(), ds.dim(), out.display());
+    if args.has("stats") {
+        println!("{:#?}", ds.stats(2000));
+    }
+    Ok(())
+}
+
+fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
+    let input = PathBuf::from(args.get("input").context("--input required")?);
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let num_hashes = args.get_parsed::<usize>("num-hashes")?.unwrap_or(256);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let ds = BinaryDataset::load(&input)?;
+    let k = num_hashes.min(ds.dim() as usize);
+    let hasher = CMinHasher::new(ds.dim() as usize, k, seed);
+    let t = Instant::now();
+    let sketches: Vec<Vec<u32>> = ds
+        .rows()
+        .iter()
+        .map(|r| hasher.sketch_sparse(r.indices()))
+        .collect();
+    let dt = t.elapsed();
+    let json = cminhash::util::json::Json::Arr(
+        sketches
+            .iter()
+            .map(|s| cminhash::util::json::Json::from_u32s(s))
+            .collect(),
+    );
+    std::fs::write(&out, json.to_string())?;
+    println!(
+        "sketched {} rows (K={k}) in {:.1}ms ({:.0} rows/s) -> {}",
+        ds.len(),
+        dt.as_secs_f64() * 1e3,
+        ds.len() as f64 / dt.as_secs_f64(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
+    let requests = args.get_parsed::<usize>("requests")?.unwrap_or(1000);
+    let dim = args.get_parsed::<u32>("dim")?.unwrap_or(4096);
+    let nnz = args.get_parsed::<u32>("nnz")?.unwrap_or(64);
+    let conns = args.get_parsed::<usize>("conns")?.unwrap_or(4);
+    let per_conn = requests / conns.max(1);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut client = BlockingClient::connect(&addr)?;
+            let mut rng = Rng::seed_from_u64(c as u64);
+            let mut lats = Vec::with_capacity(per_conn);
+            for _ in 0..per_conn {
+                let idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+                let vec = SparseVec::new(dim, idx)?;
+                let t = Instant::now();
+                let _ = client.call(&Request::Sketch { vec })?;
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().expect("loadgen thread panicked")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let q = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    println!(
+        "{} requests over {conns} conns in {wall:.2}s -> {:.0} req/s; \
+         latency ms p50={:.2} p90={:.2} p99={:.2} max={:.2}",
+        lats.len(),
+        lats.len() as f64 / wall,
+        q(0.50),
+        q(0.90),
+        q(0.99),
+        lats[lats.len() - 1],
+    );
+    Ok(())
+}
+
+/// Print the paper's exact variance theory for a (D, f, a, K) point —
+/// a quick calculator for capacity planning ("how big must K be?").
+fn cmd_theory(args: &Args) -> anyhow::Result<()> {
+    use cminhash::theory::{var_minhash, var_sigma_pi, variance_ratio};
+    let d = args.get_parsed::<usize>("d")?.context("--d required")?;
+    let f = args.get_parsed::<usize>("f")?.context("--f required")?;
+    let a = args.get_parsed::<usize>("a")?.unwrap_or(f / 2);
+    let k = args.get_parsed::<usize>("k")?.unwrap_or(256.min(d));
+    anyhow::ensure!(f <= d && a <= f && k >= 1 && k <= d, "need a <= f <= D, 1 <= K <= D");
+    let j = a as f64 / f as f64;
+    println!("D={d} f={f} a={a} K={k}  (J = {j:.4})");
+    println!("  Var[J_MH]        = {:.6e}   (sd {:.4})", var_minhash(j, k), var_minhash(j, k).sqrt());
+    let v = var_sigma_pi(d, f, a, k);
+    println!("  Var[J_C-MinHash] = {v:.6e}   (sd {:.4})", v.sqrt());
+    if let Some(r) = variance_ratio(d, f, a, k) {
+        println!("  ratio            = {r:.4}x  (Theorem 3.4: always > 1)");
+    }
+    println!("  permutation memory: C-MinHash {} B vs classic {} B", 2 * 4 * d, k * 4 * d);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let m = Manifest::load(&artifacts)?;
+    println!("{} artifacts in {}:", m.artifacts.len(), artifacts.display());
+    for (name, meta) in &m.artifacts {
+        let ins: Vec<String> = meta
+            .inputs
+            .iter()
+            .map(|t| format!("{}:{:?}{}", t.name, t.shape, t.dtype))
+            .collect();
+        println!("  {name}  [{}]", ins.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Lightweight serving metrics: atomic counters and a log-bucketed
+//! latency histogram, snapshotted to JSON by the `/stats` endpoint.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 latency buckets (1us … ~17min).
+const BUCKETS: usize = 30;
+
+/// A log2-bucketed histogram of microsecond latencies.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Record one observation in microseconds.
+    pub fn record(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds (0 if empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Maximum observed latency.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+}
+
+/// Snapshot of one histogram for JSON export.
+#[derive(Clone, Debug)]
+pub struct LatencySnapshot {
+    /// Observation count.
+    pub count: u64,
+    /// Mean microseconds.
+    pub mean_us: f64,
+    /// ~p50 upper bound.
+    pub p50_us: u64,
+    /// ~p99 upper bound.
+    pub p99_us: u64,
+    /// Max microseconds.
+    pub max_us: u64,
+}
+
+impl From<&LatencyHistogram> for LatencySnapshot {
+    fn from(h: &LatencyHistogram) -> Self {
+        LatencySnapshot {
+            count: h.count(),
+            mean_us: h.mean_us(),
+            p50_us: h.quantile_us(0.5),
+            p99_us: h.quantile_us(0.99),
+            max_us: h.max_us(),
+        }
+    }
+}
+
+/// All serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// End-to-end sketch request latency.
+    pub sketch_latency: LatencyHistogram,
+    /// Engine execute latency (per batch).
+    pub batch_latency: LatencyHistogram,
+    /// Query latency.
+    pub query_latency: LatencyHistogram,
+    /// Total sketch requests served.
+    pub sketches: AtomicU64,
+    /// Total batches executed.
+    pub batches: AtomicU64,
+    /// Batches routed to the sparse (gather) artifact.
+    pub sparse_batches: AtomicU64,
+    /// Total rows padded into partial batches.
+    pub pad_rows: AtomicU64,
+    /// Total queries served.
+    pub queries: AtomicU64,
+    /// Total estimates served.
+    pub estimates: AtomicU64,
+    /// Requests rejected with an error.
+    pub errors: AtomicU64,
+}
+
+/// JSON-serializable snapshot of [`Metrics`].
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Sketch latency stats.
+    pub sketch_latency: LatencySnapshot,
+    /// Batch execute latency stats.
+    pub batch_latency: LatencySnapshot,
+    /// Query latency stats.
+    pub query_latency: LatencySnapshot,
+    /// Counter values.
+    pub sketches: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batches routed to the sparse artifact.
+    pub sparse_batches: u64,
+    /// Padding rows.
+    pub pad_rows: u64,
+    /// Queries served.
+    pub queries: u64,
+    /// Estimates served.
+    pub estimates: u64,
+    /// Errors returned.
+    pub errors: u64,
+    /// Mean rows per executed batch.
+    pub mean_batch_fill: f64,
+}
+
+impl LatencySnapshot {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            ("max_us", Json::Num(self.max_us as f64)),
+        ])
+    }
+}
+
+impl MetricsSnapshot {
+    /// JSON form (the `/stats` payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sketch_latency", self.sketch_latency.to_json()),
+            ("batch_latency", self.batch_latency.to_json()),
+            ("query_latency", self.query_latency.to_json()),
+            ("sketches", Json::Num(self.sketches as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("sparse_batches", Json::Num(self.sparse_batches as f64)),
+            ("pad_rows", Json::Num(self.pad_rows as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("estimates", Json::Num(self.estimates as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+        ])
+    }
+}
+
+impl Metrics {
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let sketches = self.sketches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            sketch_latency: (&self.sketch_latency).into(),
+            batch_latency: (&self.batch_latency).into(),
+            query_latency: (&self.query_latency).into(),
+            sketches,
+            batches,
+            sparse_batches: self.sparse_batches.load(Ordering::Relaxed),
+            pad_rows: self.pad_rows.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            estimates: self.estimates.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch_fill: if batches == 0 {
+                0.0
+            } else {
+                sketches as f64 / batches as f64
+            },
+        }
+    }
+
+    /// Bump a counter by one.
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            for _ in 0..10 {
+                h.record(us);
+            }
+        }
+        assert_eq!(h.count(), 60);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_computes_fill() {
+        let m = Metrics::default();
+        m.sketches.store(100, Ordering::Relaxed);
+        m.batches.store(25, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.mean_batch_fill - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_to_json_parses_back() {
+        let m = Metrics::default();
+        m.sketch_latency.record(123);
+        let j = m.snapshot().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed
+                .get("sketch_latency")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            1
+        );
+    }
+}

@@ -1,0 +1,273 @@
+//! `artifacts/manifest.json` parsing and shape bookkeeping.
+//!
+//! The manifest is written by `python/compile/aot.py` alongside the HLO
+//! text files; it is the single source of truth for what the compiled
+//! executables accept and return, and the runtime type-checks every
+//! request against it.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor's shape/dtype as recorded by the AOT pipeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Logical name ("bits", "sigma", "pi2", …).
+    pub name: String,
+    /// Dimensions, row-major.
+    pub shape: Vec<usize>,
+    /// "s32" or "f32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Dims as i64 (the `Literal::reshape` argument type).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// HLO text file name, relative to the artifacts dir.
+    pub file: String,
+    /// Input tensors, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensors, in tuple order.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Format tag; this crate understands "hlo-text-v1".
+    pub format: String,
+    /// Artifact name → metadata.
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn tensor_from_json(j: &Json) -> crate::Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.as_usize_vec()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            crate::Error::Manifest(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| crate::Error::Manifest(format!("bad manifest: {e}")))?;
+        let format = j.get("format")?.as_str()?.to_string();
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(map) = j.get("artifacts")? {
+            for (name, meta) in map {
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        file: meta.get("file")?.as_str()?.to_string(),
+                        inputs: meta
+                            .get("inputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(tensor_from_json)
+                            .collect::<crate::Result<_>>()?,
+                        outputs: meta
+                            .get("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(tensor_from_json)
+                            .collect::<crate::Result<_>>()?,
+                    },
+                );
+            }
+        } else {
+            return Err(crate::Error::Manifest("artifacts must be an object".into()));
+        }
+        let m = Manifest {
+            format,
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        if m.format != "hlo-text-v1" {
+            return Err(crate::Error::Manifest(format!(
+                "unsupported manifest format {:?}",
+                m.format
+            )));
+        }
+        for (name, meta) in &m.artifacts {
+            if !dir.join(&meta.file).exists() {
+                return Err(crate::Error::Manifest(format!(
+                    "artifact file missing for {name}: {}",
+                    meta.file
+                )));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Metadata for `name`.
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| crate::Error::UnknownArtifact(name.to_string()))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> crate::Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Find a σ,π sketch variant matching (D, K); returns
+    /// `(name, batch_size)`.  Matches `cminhash_*` artifacts whose
+    /// `bits` input is `[B, D]` and whose output is `[B, K]`.
+    pub fn sketch_variant_for(&self, d: usize, k: usize) -> Option<(String, usize)> {
+        for (name, meta) in &self.artifacts {
+            if !name.starts_with("cminhash_") {
+                continue;
+            }
+            let bits = meta.inputs.iter().find(|t| t.name == "bits")?;
+            let out = meta.outputs.first()?;
+            if bits.shape.len() == 2
+                && bits.shape[1] == d
+                && out.shape.len() == 2
+                && out.shape[1] == k
+            {
+                return Some((name.clone(), bits.shape[0]));
+            }
+        }
+        None
+    }
+
+    /// All *sparse* σ,π sketch variants matching (D, K), sorted by
+    /// ascending batch size: `(name, batch_size, f_max)` each.  Matches
+    /// `cminhashs_*` artifacts whose `indices` input is `[B, F]` and
+    /// `inv_sigma` is `[D]`.  The ladder of batch sizes lets the
+    /// coordinator route a partial batch to the smallest fitting
+    /// executable instead of padding to the largest.
+    pub fn sparse_sketch_variants_for(&self, d: usize, k: usize) -> Vec<(String, usize, usize)> {
+        let mut out = Vec::new();
+        for (name, meta) in &self.artifacts {
+            if !name.starts_with("cminhashs_") {
+                continue;
+            }
+            let (Some(idx), Some(inv), Some(o)) = (
+                meta.inputs.iter().find(|t| t.name == "indices"),
+                meta.inputs.iter().find(|t| t.name == "inv_sigma"),
+                meta.outputs.first(),
+            ) else {
+                continue;
+            };
+            if idx.shape.len() == 2 && inv.shape == vec![d] && o.shape.len() == 2 && o.shape[1] == k
+            {
+                out.push((name.clone(), idx.shape[0], idx.shape[1]));
+            }
+        }
+        out.sort_by_key(|(_, b, _)| *b);
+        out
+    }
+
+    /// Find a pairwise estimator variant for sketches of length K:
+    /// `(name, n, m)`.
+    pub fn estimator_variant_for(&self, k: usize) -> Option<(String, usize, usize)> {
+        for (name, meta) in &self.artifacts {
+            if !name.starts_with("estimate_") {
+                continue;
+            }
+            let h1 = meta.inputs.iter().find(|t| t.name == "h1")?;
+            let h2 = meta.inputs.iter().find(|t| t.name == "h2")?;
+            if h1.shape.len() == 2 && h1.shape[1] == k && h2.shape[1] == k {
+                return Some((name.clone(), h1.shape[0], h2.shape[0]));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "artifacts": {
+        "cminhash_b8_d1024_k128": {
+          "file": "cminhash_b8_d1024_k128.hlo.txt",
+          "inputs": [
+            {"name": "bits", "shape": [8, 1024], "dtype": "s32"},
+            {"name": "sigma", "shape": [1024], "dtype": "s32"},
+            {"name": "pi2", "shape": [2048], "dtype": "s32"}
+          ],
+          "outputs": [{"name": "hashes", "shape": [8, 128], "dtype": "s32"}]
+        },
+        "estimate_n8_m8_k128": {
+          "file": "estimate_n8_m8_k128.hlo.txt",
+          "inputs": [
+            {"name": "h1", "shape": [8, 128], "dtype": "s32"},
+            {"name": "h2", "shape": [8, 128], "dtype": "s32"}
+          ],
+          "outputs": [{"name": "jhat", "shape": [8, 8], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SAMPLE);
+        std::fs::write(dir.path().join("cminhash_b8_d1024_k128.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.path().join("estimate_n8_m8_k128.hlo.txt"), "x").unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        let meta = m.get("cminhash_b8_d1024_k128").unwrap();
+        assert_eq!(meta.inputs[0].elements(), 8 * 1024);
+        assert_eq!(meta.inputs[0].dims_i64(), vec![8, 1024]);
+        assert_eq!(
+            m.sketch_variant_for(1024, 128),
+            Some(("cminhash_b8_d1024_k128".into(), 8))
+        );
+        assert_eq!(m.sketch_variant_for(999, 128), None);
+        assert_eq!(
+            m.estimator_variant_for(128),
+            Some(("estimate_n8_m8_k128".into(), 8, 8))
+        );
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SAMPLE);
+        // no .hlo.txt files created
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(
+            dir.path(),
+            r#"{"format": "v999", "artifacts": {}}"#,
+        );
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! The XLA execution engine and its thread-safe handle.
+//!
+//! [`XlaEngine`] owns the PJRT CPU client and one compiled executable
+//! per artifact (compiled eagerly at startup so the serving path never
+//! pays compile latency).  [`EngineHandle::spawn`] moves the engine onto
+//! a dedicated thread and exposes a `Send + Clone` request API over
+//! channels, with [`HostTensor`] as the plain-data interchange type.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc as std_mpsc;
+
+/// A host-side tensor crossing the engine-thread boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    /// Signed 32-bit tensor (bits, permutations, hashes).
+    I32(Vec<i32>),
+    /// 32-bit float tensor (estimates).
+    F32(Vec<f32>),
+}
+
+impl HostTensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::I32(v) => v.len(),
+            HostTensor::F32(v) => v.len(),
+        }
+    }
+
+    /// True iff no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unwrap as i32 data.
+    pub fn as_i32(&self) -> crate::Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            HostTensor::F32(_) => Err(crate::Error::Invalid("expected i32 tensor".into())),
+        }
+    }
+
+    /// Unwrap as f32 data.
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => Err(crate::Error::Invalid("expected f32 tensor".into())),
+        }
+    }
+}
+
+/// The engine proper — **not** `Send`; lives on one thread.
+pub struct XlaEngine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaEngine {
+    /// Load the manifest and compile every artifact on the CPU PJRT
+    /// client.
+    pub fn load(artifacts_dir: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for name in manifest.artifacts.keys() {
+            let path = manifest.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| crate::Error::Manifest("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(XlaEngine {
+            manifest,
+            client,
+            executables,
+        })
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn check_inputs(meta: &ArtifactMeta, inputs: &[HostTensor]) -> crate::Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            return Err(crate::Error::ShapeMismatch {
+                what: "input count",
+                expected: meta.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        for (spec, t) in meta.inputs.iter().zip(inputs) {
+            if t.len() != spec.elements() {
+                return Err(crate::Error::ShapeMismatch {
+                    what: "input elements",
+                    expected: spec.elements(),
+                    got: t.len(),
+                });
+            }
+            let ok = matches!(
+                (spec.dtype.as_str(), t),
+                ("s32", HostTensor::I32(_)) | ("f32", HostTensor::F32(_))
+            );
+            if !ok {
+                return Err(crate::Error::Invalid(format!(
+                    "dtype mismatch for {}: manifest says {}",
+                    spec.name, spec.dtype
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `variant` with the given inputs; returns one tensor per
+    /// manifest output.
+    pub fn execute(&self, variant: &str, inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let meta = self.manifest.get(variant)?;
+        Self::check_inputs(meta, inputs)?;
+        let exe = self
+            .executables
+            .get(variant)
+            .ok_or_else(|| crate::Error::UnknownArtifact(variant.to_string()))?;
+        let literals: Vec<xla::Literal> = meta
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, t)| {
+                let lit = match t {
+                    HostTensor::I32(v) => xla::Literal::vec1(v),
+                    HostTensor::F32(v) => xla::Literal::vec1(v),
+                };
+                lit.reshape(&spec.dims_i64()).map_err(crate::Error::from)
+            })
+            .collect::<crate::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(crate::Error::Xla(format!(
+                "expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            )));
+        }
+        meta.outputs
+            .iter()
+            .zip(parts)
+            .map(|(spec, lit)| {
+                let out = match spec.dtype.as_str() {
+                    "s32" => HostTensor::I32(lit.to_vec::<i32>()?),
+                    "f32" => HostTensor::F32(lit.to_vec::<f32>()?),
+                    other => {
+                        return Err(crate::Error::Manifest(format!(
+                            "unsupported output dtype {other}"
+                        )))
+                    }
+                };
+                if out.len() != spec.elements() {
+                    return Err(crate::Error::Xla(format!(
+                        "output {} has {} elements, expected {}",
+                        spec.name,
+                        out.len(),
+                        spec.elements()
+                    )));
+                }
+                Ok(out)
+            })
+            .collect()
+    }
+}
+
+enum EngineMsg {
+    Execute {
+        variant: String,
+        inputs: Vec<HostTensor>,
+        resp: std_mpsc::SyncSender<crate::Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to an [`XlaEngine`] running on its own thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: std_mpsc::Sender<EngineMsg>,
+    manifest: std::sync::Arc<Manifest>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread; fails fast if artifacts cannot be
+    /// loaded/compiled.
+    pub fn spawn(artifacts_dir: &Path) -> crate::Result<Self> {
+        let (tx, rx) = std_mpsc::channel::<EngineMsg>();
+        let (ready_tx, ready_rx) = std_mpsc::channel::<crate::Result<Manifest>>();
+        let dir = artifacts_dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || {
+                let engine = match XlaEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.manifest().clone()));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = ready_tx.send(Err(err));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EngineMsg::Execute {
+                            variant,
+                            inputs,
+                            resp,
+                        } => {
+                            let _ = resp.send(engine.execute(&variant, &inputs));
+                        }
+                        EngineMsg::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(crate::Error::Io)?;
+        let manifest = ready_rx
+            .recv()
+            .map_err(|_| crate::Error::Shutdown)??;
+        Ok(EngineHandle {
+            tx,
+            manifest: std::sync::Arc::new(manifest),
+        })
+    }
+
+    /// Manifest of the spawned engine.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute on the engine thread and wait for the result.
+    pub fn execute(
+        &self,
+        variant: &str,
+        inputs: Vec<HostTensor>,
+    ) -> crate::Result<Vec<HostTensor>> {
+        let (resp, rx) = std_mpsc::sync_channel(1);
+        self.tx
+            .send(EngineMsg::Execute {
+                variant: variant.to_string(),
+                inputs,
+                resp,
+            })
+            .map_err(|_| crate::Error::Shutdown)?;
+        rx.recv().map_err(|_| crate::Error::Shutdown)?
+    }
+
+    /// Ask the engine thread to exit once queued work drains.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::I32(vec![1, 2, 3]);
+        assert_eq!(t.len(), 3);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+        let t = HostTensor::F32(vec![]);
+        assert!(t.is_empty());
+        assert!(t.as_f32().is_ok());
+    }
+    // Engine execution is covered by rust/tests/runtime_roundtrip.rs,
+    // which needs real artifacts (`make artifacts`).
+}

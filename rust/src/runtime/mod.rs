@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`) and
+//! `Literal` wraps raw XLA pointers, so the engine lives on a dedicated
+//! OS thread ([`EngineHandle::spawn`]) and speaks a plain-data protocol
+//! ([`HostTensor`]) over channels; everything else in the process stays
+//! `Send + Sync`.  This also gives the batcher a natural serialization
+//! point: XLA CPU already parallelizes *inside* an execution.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use engine::{EngineHandle, HostTensor, XlaEngine};

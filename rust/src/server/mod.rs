@@ -1,0 +1,222 @@
+//! TCP server speaking the JSON-line protocol (thread-per-connection),
+//! plus a small blocking client used by examples, benches and tests.
+
+pub mod protocol;
+
+use crate::coordinator::Coordinator;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+use protocol::{Request, Response, WireNeighbor};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// A running server (listener thread + per-connection threads).
+pub struct Server {
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (may be port 0) and start accepting in background
+    /// threads.  Returns once the listener is live.
+    pub fn spawn(svc: Arc<Coordinator>, addr: &str) -> crate::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        std::thread::Builder::new()
+            .name("accept-loop".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    match conn {
+                        Ok(socket) => {
+                            let svc = svc.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(svc, socket);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(crate::Error::Io)?;
+        Ok(Server { addr: local })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block this thread forever (the accept loop runs in background).
+    pub fn join_forever(&self) -> ! {
+        loop {
+            std::thread::park();
+        }
+    }
+}
+
+fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
+    socket.set_nodelay(true)?;
+    let mut writer = socket.try_clone()?;
+    let reader = BufReader::new(socket);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(j) => match Request::from_json(&j) {
+                Ok(req) => dispatch(&svc, req),
+                Err(e) => {
+                    Metrics::inc(&svc.metrics().errors);
+                    Response::err(&e)
+                }
+            },
+            Err(e) => {
+                Metrics::inc(&svc.metrics().errors);
+                Response::err(&crate::Error::Protocol(e.to_string()))
+            }
+        };
+        let mut out = resp.to_json().to_string();
+        out.push('\n');
+        writer.write_all(out.as_bytes())?;
+    }
+    Ok(())
+}
+
+fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
+    let result: crate::Result<Response> = (|| {
+        Ok(match req {
+            Request::Ping => Response::Pong,
+            Request::Sketch { vec } => Response::Sketch {
+                sketch: svc.sketch(vec)?,
+            },
+            Request::Insert { vec } => {
+                let (id, sketch) = svc.insert(vec)?;
+                Response::Insert { id, sketch }
+            }
+            Request::Estimate { a, b } => Response::Estimate {
+                jhat: svc.estimate_ids(a, b)?,
+            },
+            Request::EstimateVecs { v, w } => Response::Estimate {
+                jhat: svc.estimate_vecs(v, w)?,
+            },
+            Request::Query { vec, topk } => Response::Query {
+                neighbors: svc
+                    .query(vec, topk)?
+                    .into_iter()
+                    .map(|n| WireNeighbor {
+                        id: n.id,
+                        score: n.score,
+                    })
+                    .collect(),
+            },
+            Request::QueryAbove { vec, threshold } => Response::Query {
+                neighbors: svc
+                    .query_above(vec, threshold)?
+                    .into_iter()
+                    .map(|n| WireNeighbor {
+                        id: n.id,
+                        score: n.score,
+                    })
+                    .collect(),
+            },
+            Request::Stats => {
+                let (metrics, stored) = svc.stats();
+                Response::Stats { metrics, stored }
+            }
+        })
+    })();
+    match result {
+        Ok(r) => r,
+        Err(e) => {
+            Metrics::inc(&svc.metrics().errors);
+            Response::err(&e)
+        }
+    }
+}
+
+/// A minimal blocking client for examples/benches/tests.
+pub struct BlockingClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl BlockingClient {
+    /// Connect to a running server.
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(BlockingClient {
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// Send one request and read one response.
+    pub fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        Response::from_json(&Json::parse(&resp)?)
+    }
+
+    /// Send one request and return the raw JSON response line
+    /// (used for `stats`).
+    pub fn call_raw(&mut self, req: &Request) -> crate::Result<Json> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        Ok(Json::parse(&resp)?)
+    }
+
+    /// Convenience: sketch a sparse vector.
+    pub fn sketch(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<Vec<u32>> {
+        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        match self.call(&Request::Sketch { vec })? {
+            Response::Sketch { sketch } => Ok(sketch),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
+    /// Convenience: insert a sparse vector.
+    pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
+        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        match self.call(&Request::Insert { vec })? {
+            Response::Insert { id, .. } => Ok(id),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
+    /// Convenience: top-k query.
+    pub fn query(
+        &mut self,
+        dim: u32,
+        indices: Vec<u32>,
+        topk: usize,
+    ) -> crate::Result<Vec<WireNeighbor>> {
+        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        match self.call(&Request::Query { vec, topk })? {
+            Response::Query { neighbors } => Ok(neighbors),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! JSON-line wire protocol.
+//!
+//! One JSON object per line in each direction.  Requests are tagged by
+//! `"op"`; responses carry `"ok": true` plus op-specific fields, or
+//! `"ok": false` with `"error"`.
+//!
+//! ```text
+//! → {"op":"sketch","vec":{"dim":1024,"indices":[3,17,900]}}
+//! ← {"ok":true,"sketch":[...]}
+//! → {"op":"insert","vec":{...}}
+//! ← {"ok":true,"id":7,"sketch":[...]}
+//! → {"op":"estimate","a":7,"b":9}
+//! ← {"ok":true,"jhat":0.4921875}
+//! → {"op":"query","vec":{...},"topk":5}
+//! ← {"ok":true,"neighbors":[{"id":7,"score":0.98}, ...]}
+//! → {"op":"stats"}      → {"op":"ping"}
+//! ```
+
+use crate::metrics::MetricsSnapshot;
+use crate::sketch::SparseVec;
+use crate::util::json::Json;
+
+/// Client → server requests.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Liveness check.
+    Ping,
+    /// Sketch a vector (stateless).
+    Sketch {
+        /// The vector.
+        vec: SparseVec,
+    },
+    /// Sketch + store + index; returns the new id.
+    Insert {
+        /// The vector.
+        vec: SparseVec,
+    },
+    /// Estimate J between two stored ids.
+    Estimate {
+        /// First id.
+        a: u64,
+        /// Second id.
+        b: u64,
+    },
+    /// Estimate J between two inline vectors.
+    EstimateVecs {
+        /// First vector.
+        v: SparseVec,
+        /// Second vector.
+        w: SparseVec,
+    },
+    /// Top-k near neighbors among inserted items.
+    Query {
+        /// The query vector.
+        vec: SparseVec,
+        /// Result bound.
+        topk: usize,
+    },
+    /// All neighbors with Ĵ ≥ threshold.
+    QueryAbove {
+        /// The query vector.
+        vec: SparseVec,
+        /// Similarity threshold.
+        threshold: f64,
+    },
+    /// Metrics snapshot.
+    Stats,
+}
+
+impl Request {
+    /// Parse a request line.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let op = j.get("op")?.as_str()?;
+        Ok(match op {
+            "ping" => Request::Ping,
+            "sketch" => Request::Sketch {
+                vec: SparseVec::from_json(j.get("vec")?)?,
+            },
+            "insert" => Request::Insert {
+                vec: SparseVec::from_json(j.get("vec")?)?,
+            },
+            "estimate" => Request::Estimate {
+                a: j.get("a")?.as_u64()?,
+                b: j.get("b")?.as_u64()?,
+            },
+            "estimate_vecs" => Request::EstimateVecs {
+                v: SparseVec::from_json(j.get("v")?)?,
+                w: SparseVec::from_json(j.get("w")?)?,
+            },
+            "query" => Request::Query {
+                vec: SparseVec::from_json(j.get("vec")?)?,
+                topk: j.get("topk")?.as_usize()?,
+            },
+            "query_above" => Request::QueryAbove {
+                vec: SparseVec::from_json(j.get("vec")?)?,
+                threshold: j.get("threshold")?.as_f64()?,
+            },
+            "stats" => Request::Stats,
+            other => {
+                return Err(crate::Error::Protocol(format!("unknown op {other:?}")))
+            }
+        })
+    }
+
+    /// Serialize (used by the client side).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
+            Request::Sketch { vec } => Json::obj(vec![
+                ("op", Json::str("sketch")),
+                ("vec", vec.to_json()),
+            ]),
+            Request::Insert { vec } => Json::obj(vec![
+                ("op", Json::str("insert")),
+                ("vec", vec.to_json()),
+            ]),
+            Request::Estimate { a, b } => Json::obj(vec![
+                ("op", Json::str("estimate")),
+                ("a", Json::Num(*a as f64)),
+                ("b", Json::Num(*b as f64)),
+            ]),
+            Request::EstimateVecs { v, w } => Json::obj(vec![
+                ("op", Json::str("estimate_vecs")),
+                ("v", v.to_json()),
+                ("w", w.to_json()),
+            ]),
+            Request::Query { vec, topk } => Json::obj(vec![
+                ("op", Json::str("query")),
+                ("vec", vec.to_json()),
+                ("topk", Json::Num(*topk as f64)),
+            ]),
+            Request::QueryAbove { vec, threshold } => Json::obj(vec![
+                ("op", Json::str("query_above")),
+                ("vec", vec.to_json()),
+                ("threshold", Json::Num(*threshold)),
+            ]),
+            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+        }
+    }
+}
+
+/// One scored neighbor on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireNeighbor {
+    /// Item id.
+    pub id: u64,
+    /// Estimated Jaccard.
+    pub score: f64,
+}
+
+/// Server → client responses.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Failure.
+    Err {
+        /// Human-readable error.
+        error: String,
+    },
+    /// Ping reply.
+    Pong,
+    /// Sketch result.
+    Sketch {
+        /// K hash values.
+        sketch: Vec<u32>,
+    },
+    /// Insert result.
+    Insert {
+        /// Assigned id.
+        id: u64,
+        /// K hash values.
+        sketch: Vec<u32>,
+    },
+    /// Estimate result.
+    Estimate {
+        /// Ĵ.
+        jhat: f64,
+    },
+    /// Query result.
+    Query {
+        /// Scored neighbors, best first.
+        neighbors: Vec<WireNeighbor>,
+    },
+    /// Stats result.
+    Stats {
+        /// Metrics snapshot.
+        metrics: MetricsSnapshot,
+        /// Stored sketch count.
+        stored: usize,
+    },
+}
+
+impl Response {
+    /// Build an error response.
+    pub fn err(e: &crate::Error) -> Self {
+        Response::Err {
+            error: e.to_string(),
+        }
+    }
+
+    /// Serialize one response line.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Err { error } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(error)),
+            ]),
+            Response::Pong => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+            ]),
+            Response::Sketch { sketch } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("sketch", Json::from_u32s(sketch)),
+            ]),
+            Response::Insert { id, sketch } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(*id as f64)),
+                ("sketch", Json::from_u32s(sketch)),
+            ]),
+            Response::Estimate { jhat } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("jhat", Json::Num(*jhat)),
+            ]),
+            Response::Query { neighbors } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "neighbors",
+                    Json::Arr(
+                        neighbors
+                            .iter()
+                            .map(|n| {
+                                Json::obj(vec![
+                                    ("id", Json::Num(n.id as f64)),
+                                    ("score", Json::Num(n.score)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Stats { metrics, stored } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", metrics.to_json()),
+                ("stored", Json::Num(*stored as f64)),
+            ]),
+        }
+    }
+
+    /// Parse a response line (client side).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        if !j.get("ok")?.as_bool()? {
+            return Ok(Response::Err {
+                error: j.get("error")?.as_str()?.to_string(),
+            });
+        }
+        if j.get_opt("pong").is_some() {
+            return Ok(Response::Pong);
+        }
+        if let Some(id) = j.get_opt("id") {
+            return Ok(Response::Insert {
+                id: id.as_u64()?,
+                sketch: j.get("sketch")?.as_u32_vec()?,
+            });
+        }
+        if let Some(s) = j.get_opt("sketch") {
+            return Ok(Response::Sketch {
+                sketch: s.as_u32_vec()?,
+            });
+        }
+        if let Some(v) = j.get_opt("jhat") {
+            return Ok(Response::Estimate {
+                jhat: v.as_f64()?,
+            });
+        }
+        if let Some(ns) = j.get_opt("neighbors") {
+            return Ok(Response::Query {
+                neighbors: ns
+                    .as_arr()?
+                    .iter()
+                    .map(|n| {
+                        Ok(WireNeighbor {
+                            id: n.get("id")?.as_u64()?,
+                            score: n.get("score")?.as_f64()?,
+                        })
+                    })
+                    .collect::<crate::Result<_>>()?,
+            });
+        }
+        if j.get_opt("metrics").is_some() {
+            // Clients mostly print stats verbatim; re-parsing the full
+            // snapshot is not needed, so surface a protocol error if a
+            // client tries to decode it structurally.
+            return Err(crate::Error::Protocol(
+                "stats responses are consumed as raw JSON".into(),
+            ));
+        }
+        Err(crate::Error::Protocol("unrecognized response".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let line = r#"{"op":"sketch","vec":{"dim":16,"indices":[1,5]}}"#;
+        let req = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+        match &req {
+            Request::Sketch { vec } => {
+                assert_eq!(vec.dim(), 16);
+                assert_eq!(vec.indices(), &[1, 5]);
+            }
+            _ => panic!("wrong op"),
+        }
+        let back = req.to_json().to_string();
+        assert!(back.contains(r#""op":"sketch""#));
+        // parse what we serialized
+        Request::from_json(&Json::parse(&back).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn all_ops_parse() {
+        for line in [
+            r#"{"op":"ping"}"#,
+            r#"{"op":"insert","vec":{"dim":4,"indices":[]}}"#,
+            r#"{"op":"estimate","a":1,"b":2}"#,
+            r#"{"op":"estimate_vecs","v":{"dim":4,"indices":[0]},"w":{"dim":4,"indices":[1]}}"#,
+            r#"{"op":"query","vec":{"dim":4,"indices":[0]},"topk":3}"#,
+            r#"{"op":"query_above","vec":{"dim":4,"indices":[0]},"threshold":0.5}"#,
+            r#"{"op":"stats"}"#,
+        ] {
+            Request::from_json(&Json::parse(line).unwrap())
+                .unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let j = Json::parse(r#"{"op":"drop_tables"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let r = Response::Estimate { jhat: 0.5 };
+        let s = r.to_json().to_string();
+        assert!(s.contains(r#""ok":true"#));
+        match Response::from_json(&Json::parse(&s).unwrap()).unwrap() {
+            Response::Estimate { jhat } => assert_eq!(jhat, 0.5),
+            other => panic!("{other:?}"),
+        }
+        let e = Response::err(&crate::Error::Shutdown).to_json().to_string();
+        assert!(e.contains(r#""ok":false"#));
+        match Response::from_json(&Json::parse(&e).unwrap()).unwrap() {
+            Response::Err { error } => assert!(error.contains("shut down")),
+            other => panic!("{other:?}"),
+        }
+        let q = Response::Query {
+            neighbors: vec![WireNeighbor { id: 3, score: 0.75 }],
+        };
+        let s = q.to_json().to_string();
+        match Response::from_json(&Json::parse(&s).unwrap()).unwrap() {
+            Response::Query { neighbors } => {
+                assert_eq!(neighbors, vec![WireNeighbor { id: 3, score: 0.75 }])
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! C-MinHash hashers (Algorithms 2 and 3) — the paper's contribution.
+//!
+//! The hot loop exploits the circulant structure: with the doubled array
+//! `pi2 = π ‖ π`, the k-th hash (k = 1..K) of a sparse vector with
+//! nonzero set S is
+//!
+//! ```text
+//! h_k = min_{s ∈ S} π[(s - k) mod D] = min_{s ∈ S} pi2[s + D - k]
+//! ```
+//!
+//! so for each nonzero `s` the K values live in the *contiguous,
+//! reversed* slice `pi2[s + D - K .. s + D]` — one streaming pass per
+//! nonzero, O(f·K) time, O(D) memory, zero modular arithmetic.  This is
+//! the CPU mirror of the Pallas kernel's window trick (DESIGN.md
+//! §Hardware-Adaptation).
+
+use super::perm::{Perm, Role};
+use super::Sketcher;
+
+/// C-MinHash-(σ, π) — Algorithm 3, the paper's recommended scheme.
+///
+/// Stores exactly two permutations regardless of K (the paper's memory
+/// pitch): σ as its *inverse* (so sparse gathers are O(f)) and π doubled.
+#[derive(Clone, Debug)]
+pub struct CMinHasher {
+    d: usize,
+    k: usize,
+    /// inv_sigma[s] = i such that sigma[i] = s; v'[i] = v[sigma[i]]
+    /// means nonzero s of v lands at position inv_sigma[s] of v'.
+    inv_sigma: Vec<u32>,
+    /// π ‖ π.
+    pi2: Vec<u32>,
+}
+
+impl CMinHasher {
+    /// Seeded constructor (σ and π drawn on independent streams).
+    pub fn new(d: usize, k: usize, seed: u64) -> Self {
+        let sigma = Perm::generate(d, seed, Role::Sigma);
+        let pi = Perm::generate(d, seed, Role::Pi);
+        Self::from_perms(k, &sigma, &pi).expect("generated perms are valid")
+    }
+
+    /// Explicit permutations (must both be length D; requires K ≤ D).
+    pub fn from_perms(k: usize, sigma: &Perm, pi: &Perm) -> crate::Result<Self> {
+        let d = sigma.len();
+        if pi.len() != d {
+            return Err(crate::Error::Invalid(format!(
+                "sigma has D={d} but pi has D={}",
+                pi.len()
+            )));
+        }
+        if k == 0 || k > d {
+            return Err(crate::Error::Invalid(format!(
+                "need 1 <= K <= D, got K={k}, D={d}"
+            )));
+        }
+        Ok(CMinHasher {
+            d,
+            k,
+            inv_sigma: sigma.inverse().values().to_vec(),
+            pi2: pi.doubled(),
+        })
+    }
+
+    /// The σ-permuted nonzero set of a sparse vector.
+    fn permuted(&self, nonzeros: &[u32]) -> Vec<u32> {
+        nonzeros
+            .iter()
+            .map(|&s| self.inv_sigma[s as usize])
+            .collect()
+    }
+}
+
+impl Sketcher for CMinHasher {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32> {
+        let permuted = self.permuted(nonzeros);
+        circulant_min(&self.pi2, self.d, self.k, &permuted)
+    }
+}
+
+/// C-MinHash-(0, π) — Algorithm 2, the no-σ ablation.  Kept as a public
+/// type because Figure 6/7 compare it directly and downstream users may
+/// want it when their data is already "structureless".
+#[derive(Clone, Debug)]
+pub struct ZeroPiHasher {
+    d: usize,
+    k: usize,
+    pi2: Vec<u32>,
+}
+
+impl ZeroPiHasher {
+    /// Seeded constructor (same π stream as [`CMinHasher`] for the same
+    /// seed, so ablations are paired).
+    pub fn new(d: usize, k: usize, seed: u64) -> Self {
+        let pi = Perm::generate(d, seed, Role::Pi);
+        Self::from_perm(k, &pi).expect("generated perm is valid")
+    }
+
+    /// Explicit π (requires K ≤ D).
+    pub fn from_perm(k: usize, pi: &Perm) -> crate::Result<Self> {
+        let d = pi.len();
+        if k == 0 || k > d {
+            return Err(crate::Error::Invalid(format!(
+                "need 1 <= K <= D, got K={k}, D={d}"
+            )));
+        }
+        Ok(ZeroPiHasher {
+            d,
+            k,
+            pi2: pi.doubled(),
+        })
+    }
+}
+
+impl Sketcher for ZeroPiHasher {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32> {
+        circulant_min(&self.pi2, self.d, self.k, nonzeros)
+    }
+}
+
+/// Shared hot loop: `out[k-1] = min_{s ∈ S} pi2[s + D - k]`, k = 1..K.
+///
+/// Per nonzero `s` the needed permutation entries are the contiguous
+/// window `pi2[s + d - k .. s + d]`.  The accumulator is kept in
+/// *window order* (i.e. reversed hash order) so the inner loop is a
+/// straight elementwise `min` over two forward slices — which LLVM
+/// autovectorizes to packed `pminud`-style SIMD — and reversed once at
+/// the end.  (§Perf: 2.6× over the reverse-zip formulation.)
+#[inline]
+pub(crate) fn circulant_min(pi2: &[u32], d: usize, k: usize, nonzeros: &[u32]) -> Vec<u32> {
+    // acc[j] accumulates out[k - 1 - j].
+    let mut acc = vec![d as u32; k];
+    for &s in nonzeros {
+        let s = s as usize;
+        debug_assert!(s < d);
+        let window = &pi2[s + d - k..s + d];
+        for (o, &w) in acc.iter_mut().zip(window.iter()) {
+            *o = (*o).min(w);
+        }
+    }
+    acc.reverse();
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Literal transcription of Algorithm 2 used as a local oracle.
+    fn naive_0pi(pi: &Perm, d: usize, k: usize, nz: &[u32]) -> Vec<u32> {
+        (1..=k as i64)
+            .map(|kk| {
+                nz.iter()
+                    .map(|&s| {
+                        let idx = ((s as i64 - kk) % d as i64 + d as i64) % d as i64;
+                        pi.at(idx as usize)
+                    })
+                    .min()
+                    .unwrap_or(d as u32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_modular_version() {
+        let d = 37;
+        let pi = Perm::generate(d, 5, Role::Pi);
+        let h = ZeroPiHasher::from_perm(17, &pi).unwrap();
+        for nz in [vec![], vec![0], vec![36], vec![1, 5, 8, 30, 36]] {
+            assert_eq!(h.sketch_sparse(&nz), naive_0pi(&pi, d, 17, &nz));
+        }
+    }
+
+    #[test]
+    fn sigma_pi_equals_zero_pi_on_permuted_input() {
+        let d = 64;
+        let sigma = Perm::generate(d, 11, Role::Sigma);
+        let pi = Perm::generate(d, 11, Role::Pi);
+        let cm = CMinHasher::from_perms(32, &sigma, &pi).unwrap();
+        let zp = ZeroPiHasher::from_perm(32, &pi).unwrap();
+        let nz = vec![2u32, 17, 40, 63];
+        // v'[i] = v[sigma[i]] -> nonzeros map through inv_sigma.
+        let inv = sigma.inverse();
+        let mut permuted: Vec<u32> = nz.iter().map(|&s| inv.at(s as usize)).collect();
+        permuted.sort_unstable();
+        assert_eq!(cm.sketch_sparse(&nz), zp.sketch_sparse(&permuted));
+    }
+
+    #[test]
+    fn identity_sigma_is_noop() {
+        let d = 48;
+        let pi = Perm::generate(d, 3, Role::Pi);
+        let cm = CMinHasher::from_perms(24, &Perm::identity(d), &pi).unwrap();
+        let zp = ZeroPiHasher::from_perm(24, &pi).unwrap();
+        let nz = vec![0u32, 9, 30];
+        assert_eq!(cm.sketch_sparse(&nz), zp.sketch_sparse(&nz));
+    }
+
+    #[test]
+    fn k_bounds_enforced() {
+        let pi = Perm::generate(8, 0, Role::Pi);
+        assert!(ZeroPiHasher::from_perm(0, &pi).is_err());
+        assert!(ZeroPiHasher::from_perm(9, &pi).is_err());
+        assert!(ZeroPiHasher::from_perm(8, &pi).is_ok());
+    }
+
+    #[test]
+    fn full_vector_hashes_to_zero() {
+        let d = 40;
+        let h = CMinHasher::new(d, 40, 2);
+        let all: Vec<u32> = (0..d as u32).collect();
+        assert!(h.sketch_sparse(&all).iter().all(|&v| v == 0));
+    }
+}

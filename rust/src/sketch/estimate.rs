@@ -1,0 +1,126 @@
+//! Jaccard estimation from sketches (eqs. 2/4/7) and the error metrics
+//! the paper's evaluation reports (MAE for Fig. 7, MSE for Fig. 6).
+
+use super::{SparseVec, Sketcher};
+
+/// Collision-fraction estimator Ĵ = (1/K) Σ 1{h_k(v) = h_k(w)}.
+///
+/// Both sketches must come from the *same* hasher (same permutations).
+#[inline]
+pub fn estimate(hv: &[u32], hw: &[u32]) -> f64 {
+    assert_eq!(hv.len(), hw.len(), "sketch lengths differ");
+    assert!(!hv.is_empty(), "empty sketches");
+    let collisions = hv.iter().zip(hw).filter(|(a, b)| a == b).count();
+    collisions as f64 / hv.len() as f64
+}
+
+/// Mean absolute error of estimates against exact Jaccard over
+/// explicit pairs.
+pub fn mean_absolute_error(estimates: &[f64], truths: &[f64]) -> f64 {
+    assert_eq!(estimates.len(), truths.len());
+    assert!(!estimates.is_empty());
+    estimates
+        .iter()
+        .zip(truths)
+        .map(|(e, t)| (e - t).abs())
+        .sum::<f64>()
+        / estimates.len() as f64
+}
+
+/// Mean squared error (variance + bias², the Fig. 6 metric).
+pub fn mean_squared_error(estimates: &[f64], truth: f64) -> f64 {
+    assert!(!estimates.is_empty());
+    estimates
+        .iter()
+        .map(|e| (e - truth) * (e - truth))
+        .sum::<f64>()
+        / estimates.len() as f64
+}
+
+/// All-pairs MAE of a sketcher over a dataset — the exact protocol of
+/// the paper's §4.2: estimate J for all n(n−1)/2 pairs and average the
+/// absolute errors against exact Jaccard.
+pub fn estimate_batch_mae(sketcher: &dyn Sketcher, rows: &[SparseVec]) -> f64 {
+    let sketches: Vec<Vec<u32>> = rows
+        .iter()
+        .map(|r| sketcher.sketch_sparse(r.indices()))
+        .collect();
+    let mut err = 0.0f64;
+    let mut pairs = 0usize;
+    for i in 0..rows.len() {
+        for j in (i + 1)..rows.len() {
+            let est = estimate(&sketches[i], &sketches[j]);
+            let truth = rows[i].jaccard(&rows[j]);
+            err += (est - truth).abs();
+            pairs += 1;
+        }
+    }
+    if pairs == 0 {
+        0.0
+    } else {
+        err / pairs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::CMinHasher;
+
+    #[test]
+    fn identical_sketches_estimate_one() {
+        let h = vec![1u32, 5, 9];
+        assert_eq!(estimate(&h, &h), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sketches_estimate_zero() {
+        assert_eq!(estimate(&[1, 2, 3], &[4, 5, 6]), 0.0);
+    }
+
+    #[test]
+    fn partial_collision_fraction() {
+        assert!((estimate(&[1, 2, 3, 4], &[1, 2, 9, 9]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "lengths differ")]
+    fn mismatched_lengths_panic() {
+        estimate(&[1], &[1, 2]);
+    }
+
+    #[test]
+    fn mae_and_mse_basics() {
+        assert!((mean_absolute_error(&[0.5, 0.7], &[0.4, 0.9]) - 0.15).abs() < 1e-12);
+        assert!((mean_squared_error(&[0.4, 0.6], 0.5) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_mae_is_small_for_large_k() {
+        // With K = D the circulant sketch is highly informative; the MAE
+        // over a few structured pairs must be far below a coin flip.
+        let d = 256;
+        let h = CMinHasher::new(d, 256, 7);
+        let rows: Vec<SparseVec> = (0..6u32)
+            .map(|i| {
+                SparseVec::new(d as u32, (i * 10..i * 10 + 40).collect()).unwrap()
+            })
+            .collect();
+        let mae = estimate_batch_mae(&h, &rows);
+        assert!(mae < 0.1, "mae={mae}");
+    }
+
+    #[test]
+    fn estimator_tracks_true_jaccard() {
+        let d = 512;
+        let h = CMinHasher::new(d, 512, 3);
+        let v = SparseVec::new(d as u32, (0..64).collect()).unwrap();
+        let w = SparseVec::new(d as u32, (32..96).collect()).unwrap();
+        let est = estimate(
+            &h.sketch_sparse(v.indices()),
+            &h.sketch_sparse(w.indices()),
+        );
+        let truth = v.jaccard(&w); // 32/96 = 1/3
+        assert!((est - truth).abs() < 0.12, "est={est} truth={truth}");
+    }
+}

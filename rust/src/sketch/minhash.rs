@@ -1,0 +1,117 @@
+//! Classical MinHash (Algorithm 1) — the K-independent-permutation
+//! baseline C-MinHash replaces.
+//!
+//! Deliberately stores the full K × D permutation matrix: the O(K·D)
+//! memory footprint *is* the paper's motivation, and the benchmarks
+//! report it (`hasher_hotpath` prints bytes/hasher alongside ns/sketch).
+
+use super::perm::{Perm, Role};
+use super::Sketcher;
+
+/// Classical MinHash with K independent permutations.
+#[derive(Clone, Debug)]
+pub struct ClassicMinHasher {
+    d: usize,
+    k: usize,
+    /// Row-major K × D permutation matrix.
+    perms: Vec<u32>,
+}
+
+impl ClassicMinHasher {
+    /// Seeded constructor: K independent Fisher–Yates permutations.
+    pub fn new(d: usize, k: usize, seed: u64) -> Self {
+        let perms = (0..k as u32)
+            .flat_map(|i| Perm::generate(d, seed, Role::Classic(i)).values().to_vec())
+            .collect();
+        ClassicMinHasher { d, k, perms }
+    }
+
+    /// Explicit permutation rows (each validated, all length D).
+    pub fn from_perms(rows: &[Perm]) -> crate::Result<Self> {
+        let k = rows.len();
+        if k == 0 {
+            return Err(crate::Error::Invalid("need at least one permutation".into()));
+        }
+        let d = rows[0].len();
+        let mut perms = Vec::with_capacity(k * d);
+        for row in rows {
+            if row.len() != d {
+                return Err(crate::Error::Invalid(
+                    "permutation rows have inconsistent lengths".into(),
+                ));
+            }
+            perms.extend_from_slice(row.values());
+        }
+        Ok(ClassicMinHasher { d, k, perms })
+    }
+
+    /// Memory held by the permutation matrix, in bytes — the quantity
+    /// the paper's "2 permutations" pitch eliminates.
+    pub fn perm_bytes(&self) -> usize {
+        self.perms.len() * std::mem::size_of::<u32>()
+    }
+}
+
+impl Sketcher for ClassicMinHasher {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32> {
+        let mut out = vec![self.d as u32; self.k];
+        for (ki, o) in out.iter_mut().enumerate() {
+            let row = &self.perms[ki * self.d..(ki + 1) * self.d];
+            for &s in nonzeros {
+                let v = row[s as usize];
+                if v < *o {
+                    *o = v;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_permutation_first_nonzero_semantics() {
+        // With one permutation the hash is min over nonzeros of pi[s].
+        let pi = Perm::from_values(vec![4, 0, 3, 1, 2]).unwrap();
+        let h = ClassicMinHasher::from_perms(&[pi]).unwrap();
+        assert_eq!(h.sketch_sparse(&[0, 2]), vec![3]);
+        assert_eq!(h.sketch_sparse(&[1]), vec![0]);
+        assert_eq!(h.sketch_sparse(&[]), vec![5]);
+    }
+
+    #[test]
+    fn hashes_are_within_range_and_deterministic() {
+        let h = ClassicMinHasher::new(100, 20, 9);
+        let a = h.sketch_sparse(&[1, 50, 99]);
+        let b = h.sketch_sparse(&[1, 50, 99]);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v < 100));
+    }
+
+    #[test]
+    fn memory_footprint_scales_with_k() {
+        let h1 = ClassicMinHasher::new(256, 4, 0);
+        let h2 = ClassicMinHasher::new(256, 8, 0);
+        assert_eq!(h2.perm_bytes(), 2 * h1.perm_bytes());
+    }
+
+    #[test]
+    fn from_perms_validates() {
+        let a = Perm::identity(4);
+        let b = Perm::identity(5);
+        assert!(ClassicMinHasher::from_perms(&[a.clone(), b]).is_err());
+        assert!(ClassicMinHasher::from_perms(&[]).is_err());
+        assert!(ClassicMinHasher::from_perms(&[a]).is_ok());
+    }
+}

@@ -1,0 +1,84 @@
+//! Pure-Rust sketching: the paper's three hashing schemes plus
+//! estimators.
+//!
+//! These implementations are the CPU fallback engine of the server, the
+//! baseline for every benchmark, and the oracle for property tests.
+//! They follow the exact conventions of `python/compile/kernels/ref.py`
+//! (verified bit-for-bit by `rust/tests/golden.rs` against oracle
+//! vectors exported at `make artifacts` time):
+//!
+//! * permutations are 0-indexed value arrays (`pi[i]` ∈ `0..D`);
+//! * the k-th C-MinHash hash (k = 1..K) uses `pi[(i - k) mod D]`
+//!   (right-circulant shift by k, Algorithm 2/3);
+//! * `sigma` is applied as a gather `v'[i] = v[sigma[i]]`;
+//! * an all-zero vector hashes to the sentinel `D` in every slot.
+
+mod bbit;
+mod cminhash;
+mod estimate;
+mod minhash;
+mod perm;
+mod sparse;
+
+pub use bbit::{BBitSketch, BBitSketcher};
+pub use cminhash::{CMinHasher, ZeroPiHasher};
+pub use estimate::{estimate, estimate_batch_mae, mean_absolute_error, mean_squared_error};
+pub use minhash::ClassicMinHasher;
+pub use perm::{Perm, Role};
+pub use sparse::SparseVec;
+
+/// Common interface for all sketchers: D-dimensional binary vectors in,
+/// K hash values out.
+pub trait Sketcher: Send + Sync {
+    /// Data dimensionality D.
+    fn dim(&self) -> usize;
+    /// Number of hashes K.
+    fn num_hashes(&self) -> usize;
+    /// Sketch a sparse vector given its sorted nonzero indices.
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32>;
+
+    /// Sketch a dense 0/1 row.
+    fn sketch_dense(&self, bits: &[u8]) -> Vec<u32> {
+        debug_assert_eq!(bits.len(), self.dim());
+        let nz: Vec<u32> = bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        self.sketch_sparse(&nz)
+    }
+
+    /// Sketch a batch of sparse vectors.
+    fn sketch_batch(&self, rows: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        rows.iter().map(|r| self.sketch_sparse(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let h = CMinHasher::new(64, 32, 7);
+        let mut bits = vec![0u8; 64];
+        for i in [3usize, 17, 40, 63] {
+            bits[i] = 1;
+        }
+        let nz: Vec<u32> = vec![3, 17, 40, 63];
+        assert_eq!(h.sketch_dense(&bits), h.sketch_sparse(&nz));
+    }
+
+    #[test]
+    fn empty_vector_gets_sentinel() {
+        for sk in [
+            Box::new(CMinHasher::new(32, 16, 1)) as Box<dyn Sketcher>,
+            Box::new(ZeroPiHasher::new(32, 16, 1)),
+            Box::new(ClassicMinHasher::new(32, 16, 1)),
+        ] {
+            let h = sk.sketch_sparse(&[]);
+            assert!(h.iter().all(|&v| v == 32), "sentinel expected");
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Seeded random permutations.
+//!
+//! The paper's practical pitch is that **two** permutations (σ, π) are
+//! all you ever store — even at D = 2³⁰, two u32 arrays fit in GPU/host
+//! memory where K = 1024 of them would not.  This module is the single
+//! place permutations are created so that Rust, the artifacts, and the
+//! tests all agree: a `Perm` is a value array `p[i] ∈ 0..D` produced by
+//! Fisher–Yates under a Xoshiro256++ stream seeded from `(seed, role)`.
+
+use crate::util::rng::Rng;
+
+/// Role tags keep σ, π and the classic-MinHash rows on independent
+/// streams derived from one user seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Initial permutation σ (Algorithm 3).
+    Sigma,
+    /// Circulant permutation π (Algorithms 2 and 3).
+    Pi,
+    /// The i-th independent permutation of classical MinHash.
+    Classic(u32),
+}
+
+impl Role {
+    fn stream(self) -> u64 {
+        match self {
+            Role::Sigma => 0x5157_a5a5_0000_0001,
+            Role::Pi => 0x5157_a5a5_0000_0002,
+            Role::Classic(i) => 0x5157_a5a5_1000_0000 ^ u64::from(i),
+        }
+    }
+}
+
+/// A permutation of `0..d` stored as a value array.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Perm {
+    values: Vec<u32>,
+}
+
+impl Perm {
+    /// Deterministic Fisher–Yates permutation of `0..d` for `(seed, role)`.
+    pub fn generate(d: usize, seed: u64, role: Role) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ role.stream());
+        let mut values: Vec<u32> = (0..d as u32).collect();
+        // Explicit Fisher–Yates over the in-tree Xoshiro256++ stream, so
+        // the byte-exact permutation sequence is pinned by this crate.
+        for i in (1..d).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            values.swap(i, j);
+        }
+        Perm { values }
+    }
+
+    /// Wrap an explicit value array (validated to be a bijection).
+    pub fn from_values(values: Vec<u32>) -> crate::Result<Self> {
+        let d = values.len();
+        let mut seen = vec![false; d];
+        for &v in &values {
+            if (v as usize) >= d || seen[v as usize] {
+                return Err(crate::Error::Invalid(format!(
+                    "not a permutation of 0..{d}"
+                )));
+            }
+            seen[v as usize] = true;
+        }
+        Ok(Perm { values })
+    }
+
+    /// Identity permutation.
+    pub fn identity(d: usize) -> Self {
+        Perm {
+            values: (0..d as u32).collect(),
+        }
+    }
+
+    /// Dimensionality D.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True iff D == 0.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Value array view.
+    pub fn values(&self) -> &[u32] {
+        &self.values
+    }
+
+    /// `p[i]`.
+    #[inline]
+    pub fn at(&self, i: usize) -> u32 {
+        self.values[i]
+    }
+
+    /// Inverse permutation: `inv[p[i]] = i`.
+    pub fn inverse(&self) -> Perm {
+        let mut inv = vec![0u32; self.values.len()];
+        for (i, &v) in self.values.iter().enumerate() {
+            inv[v as usize] = i as u32;
+        }
+        Perm { values: inv }
+    }
+
+    /// The doubled array `p ‖ p` used by the circulant hot loop
+    /// (`pi[(i - k) mod D] == doubled[i - k + D]`, no modular math).
+    pub fn doubled(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(2 * self.values.len());
+        out.extend_from_slice(&self.values);
+        out.extend_from_slice(&self.values);
+        out
+    }
+
+    /// Doubled array as i32 (the artifact input dtype).
+    pub fn doubled_i32(&self) -> Vec<i32> {
+        self.doubled().into_iter().map(|v| v as i32).collect()
+    }
+
+    /// The tripled array `p ‖ p ‖ [D]*D` used by the *sparse* kernel:
+    /// padding indices `2D` land in the sentinel tail and contribute
+    /// the empty-hash value D.
+    pub fn tripled_sentinel_i32(&self) -> Vec<i32> {
+        let d = self.values.len();
+        let mut out = Vec::with_capacity(3 * d);
+        out.extend(self.values.iter().map(|&v| v as i32));
+        out.extend(self.values.iter().map(|&v| v as i32));
+        out.extend(std::iter::repeat(d as i32).take(d));
+        out
+    }
+
+    /// Values as i32 (the artifact input dtype).
+    pub fn values_i32(&self) -> Vec<i32> {
+        self.values.iter().map(|&v| v as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_bijection() {
+        for d in [1usize, 2, 17, 256, 1000] {
+            let p = Perm::generate(d, 42, Role::Pi);
+            let mut seen = vec![false; d];
+            for &v in p.values() {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_role_separated() {
+        let a = Perm::generate(100, 7, Role::Sigma);
+        let b = Perm::generate(100, 7, Role::Sigma);
+        let c = Perm::generate(100, 7, Role::Pi);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(
+            Perm::generate(100, 7, Role::Classic(0)),
+            Perm::generate(100, 7, Role::Classic(1))
+        );
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let p = Perm::generate(50, 3, Role::Pi);
+        let inv = p.inverse();
+        for i in 0..50 {
+            assert_eq!(inv.at(p.at(i) as usize), i as u32);
+        }
+    }
+
+    #[test]
+    fn from_values_rejects_non_bijections() {
+        assert!(Perm::from_values(vec![0, 0, 1]).is_err());
+        assert!(Perm::from_values(vec![0, 3]).is_err());
+        assert!(Perm::from_values(vec![2, 0, 1]).is_ok());
+    }
+
+    #[test]
+    fn doubled_indexing_identity() {
+        let p = Perm::generate(31, 9, Role::Pi);
+        let d2 = p.doubled();
+        let d = 31i64;
+        for i in 0..31i64 {
+            for k in 1..=31i64 {
+                let m = ((i - k) % d + d) % d;
+                assert_eq!(d2[(i - k + d) as usize], p.at(m as usize));
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Sparse binary vector type shared by the data layer and the hashers.
+
+use crate::util::json::Json;
+
+/// A D-dimensional binary vector stored as sorted unique nonzero
+/// indices — the natural representation for the massive sparse data
+/// MinHash targets (bag-of-words, shingles, pixels…).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SparseVec {
+    dim: u32,
+    indices: Vec<u32>,
+}
+
+impl SparseVec {
+    /// Build from arbitrary indices (sorted + deduped; out-of-range
+    /// rejected).
+    pub fn new(dim: u32, mut indices: Vec<u32>) -> crate::Result<Self> {
+        indices.sort_unstable();
+        indices.dedup();
+        if let Some(&last) = indices.last() {
+            if last >= dim {
+                return Err(crate::Error::Invalid(format!(
+                    "index {last} out of range for dim {dim}"
+                )));
+            }
+        }
+        Ok(SparseVec { dim, indices })
+    }
+
+    /// Build from a dense 0/1 slice.
+    pub fn from_dense(bits: &[u8]) -> Self {
+        let indices = bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        SparseVec {
+            dim: bits.len() as u32,
+            indices,
+        }
+    }
+
+    /// Dense 0/1 expansion.
+    pub fn to_dense(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.dim as usize];
+        for &i in &self.indices {
+            out[i as usize] = 1;
+        }
+        out
+    }
+
+    /// Dense expansion as i32 (artifact input dtype).
+    pub fn to_dense_i32(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.dim as usize];
+        for &i in &self.indices {
+            out[i as usize] = 1;
+        }
+        out
+    }
+
+    /// Dimensionality D.
+    pub fn dim(&self) -> u32 {
+        self.dim
+    }
+
+    /// Number of nonzeros f.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sorted nonzero indices.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Exact Jaccard similarity with another vector (eq. 1) via sorted
+    /// merge — the ground truth every estimator is scored against.
+    pub fn jaccard(&self, other: &SparseVec) -> f64 {
+        let (mut i, mut j) = (0usize, 0usize);
+        let (a, b) = (&self.indices, &other.indices);
+        let mut inter = 0usize;
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    inter += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        let union = a.len() + b.len() - inter;
+        if union == 0 {
+            0.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+
+    /// JSON form: `{"dim": D, "indices": [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::Num(f64::from(self.dim))),
+            ("indices", Json::from_u32s(&self.indices)),
+        ])
+    }
+
+    /// Parse the JSON form (validates ranges).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        SparseVec::new(j.get("dim")?.as_u32()?, j.get("indices")?.as_u32_vec()?)
+    }
+
+    /// Intersection size a and union size f with another vector.
+    pub fn overlap(&self, other: &SparseVec) -> (usize, usize) {
+        let (mut i, mut j) = (0usize, 0usize);
+        let (a, b) = (&self.indices, &other.indices);
+        let mut inter = 0usize;
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    inter += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        (inter, a.len() + b.len() - inter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_dedups_and_validates() {
+        let v = SparseVec::new(10, vec![5, 1, 5, 3]).unwrap();
+        assert_eq!(v.indices(), &[1, 3, 5]);
+        assert!(SparseVec::new(4, vec![4]).is_err());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let bits = [0u8, 1, 0, 0, 1, 1];
+        let v = SparseVec::from_dense(&bits);
+        assert_eq!(v.to_dense(), bits.to_vec());
+        assert_eq!(v.nnz(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = SparseVec::new(100, vec![3, 50, 99]).unwrap();
+        let j = v.to_json();
+        let back = SparseVec::from_json(&j).unwrap();
+        assert_eq!(back, v);
+        // malformed rejected
+        let bad = crate::util::json::Json::parse(r#"{"dim":4,"indices":[9]}"#).unwrap();
+        assert!(SparseVec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn jaccard_matches_definition() {
+        let v = SparseVec::new(16, vec![0, 1, 2, 3]).unwrap();
+        let w = SparseVec::new(16, vec![2, 3, 4, 5]).unwrap();
+        assert!((v.jaccard(&w) - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(v.overlap(&w), (2, 6));
+        let empty = SparseVec::new(16, vec![]).unwrap();
+        assert_eq!(empty.jaccard(&empty), 0.0);
+        assert!((v.jaccard(&v) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,92 @@
+//! Log-domain combinatorics for the exact variance formulas.
+//!
+//! Everything runs through ln-factorials so that D ~ 10³–10⁶ (the paper
+//! plots up to D = 1000; the API tolerates far more) never overflows.
+//! `ln_factorial` uses an exact cached table for small n and the
+//! Stirling series for large n (abs error < 1e-12 for n ≥ 256).
+
+use std::sync::OnceLock;
+
+const TABLE_N: usize = 4096;
+
+fn table() -> &'static [f64; TABLE_N] {
+    static T: OnceLock<[f64; TABLE_N]> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = [0.0f64; TABLE_N];
+        for n in 2..TABLE_N {
+            t[n] = t[n - 1] + (n as f64).ln();
+        }
+        t
+    })
+}
+
+/// ln(n!) — exact (cumulative-sum table) for n < 4096, Stirling series
+/// beyond.
+pub fn ln_factorial(n: usize) -> f64 {
+    if n < TABLE_N {
+        return table()[n];
+    }
+    // Stirling: ln n! = n ln n − n + ½ln(2πn) + 1/(12n) − 1/(360n³) + …
+    let x = n as f64;
+    x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+/// ln C(n, k); `f64::NEG_INFINITY` when the coefficient is zero
+/// (k > n), matching how vanishing terms drop out of the sums.
+pub fn ln_choose(n: usize, k: usize) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// C(n, k) as f64 (may be +inf for astronomically large values; callers
+/// only ever use *ratios*, which stay finite through the log domain).
+pub fn choose(n: usize, k: usize) -> f64 {
+    ln_choose(n, k).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorial_small_exact() {
+        assert_eq!(ln_factorial(0), 0.0);
+        assert_eq!(ln_factorial(1), 0.0);
+        assert!((ln_factorial(5) - 120f64.ln()).abs() < 1e-12);
+        assert!((ln_factorial(10) - 3628800f64.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn stirling_matches_table_at_boundary() {
+        // Compare the Stirling branch against the exact recurrence just
+        // past the table edge.
+        let exact = ln_factorial(TABLE_N - 1) + (TABLE_N as f64).ln();
+        let stirling = ln_factorial(TABLE_N);
+        assert!(
+            (exact - stirling).abs() < 1e-9,
+            "boundary mismatch: {exact} vs {stirling}"
+        );
+    }
+
+    #[test]
+    fn choose_basics() {
+        assert!((choose(5, 2) - 10.0).abs() < 1e-9);
+        assert!((choose(10, 0) - 1.0).abs() < 1e-12);
+        assert!((choose(10, 10) - 1.0).abs() < 1e-12);
+        assert_eq!(choose(3, 4), 0.0);
+    }
+
+    #[test]
+    fn pascal_identity_holds() {
+        for n in 1..60usize {
+            for k in 1..n {
+                let lhs = choose(n, k);
+                let rhs = choose(n - 1, k - 1) + choose(n - 1, k);
+                assert!((lhs - rhs).abs() < 1e-6 * lhs.max(1.0), "n={n} k={k}");
+            }
+        }
+    }
+}

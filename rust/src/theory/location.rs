@@ -1,0 +1,241 @@
+//! Location vectors (Definition 2.1) and lag-Δ pair counts
+//! (Definition 2.2) — the combinatorial skeleton of both variance
+//! theorems.
+
+use crate::sketch::SparseVec;
+
+/// One entry of the location vector **x** (Definition 2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Symbol {
+    /// “O”: v_i = w_i = 1 (intersection).
+    Both,
+    /// “×”: v_i + w_i = 1 (symmetric difference).
+    One,
+    /// “−”: v_i = w_i = 0.
+    Neither,
+}
+
+/// Lag-Δ pair counts |𝓛₀|, |𝓛₁|, |𝓛₂|, |𝓖₀|, |𝓖₁| of Definition 2.2
+/// (the ones Lemma 2.1 needs; the rest follow from the intrinsic
+/// constraints, eq. 6).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LagCounts {
+    /// (O, O) pairs at lag Δ.
+    pub l0: usize,
+    /// (O, ×) pairs.
+    pub l1: usize,
+    /// (O, −) pairs.
+    pub l2: usize,
+    /// (−, O) pairs.
+    pub g0: usize,
+    /// (−, ×) pairs.
+    pub g1: usize,
+}
+
+/// The location vector of a data pair, with cached (a, f).
+#[derive(Clone, Debug)]
+pub struct LocationVector {
+    symbols: Vec<Symbol>,
+    a: usize,
+    f: usize,
+}
+
+impl LocationVector {
+    /// Build from two binary vectors of equal dimension.
+    pub fn from_pair(v: &SparseVec, w: &SparseVec) -> crate::Result<Self> {
+        if v.dim() != w.dim() {
+            return Err(crate::Error::Invalid(format!(
+                "dim mismatch {} vs {}",
+                v.dim(),
+                w.dim()
+            )));
+        }
+        let d = v.dim() as usize;
+        let mut symbols = vec![Symbol::Neither; d];
+        for &i in v.indices() {
+            symbols[i as usize] = Symbol::One;
+        }
+        for &i in w.indices() {
+            symbols[i as usize] = match symbols[i as usize] {
+                Symbol::One => Symbol::Both,
+                _ => Symbol::One,
+            };
+        }
+        Ok(Self::from_symbols(symbols))
+    }
+
+    /// Build directly from a symbol array.
+    pub fn from_symbols(symbols: Vec<Symbol>) -> Self {
+        let a = symbols.iter().filter(|s| **s == Symbol::Both).count();
+        let f = a + symbols.iter().filter(|s| **s == Symbol::One).count();
+        LocationVector { symbols, a, f }
+    }
+
+    /// The §4.1 synthetic pattern: a “O”s, then (f−a) “×”s, then
+    /// (D−f) “−”s, sequentially.
+    pub fn contiguous(d: usize, f: usize, a: usize) -> Self {
+        assert!(a <= f && f <= d);
+        let mut symbols = Vec::with_capacity(d);
+        symbols.extend(std::iter::repeat(Symbol::Both).take(a));
+        symbols.extend(std::iter::repeat(Symbol::One).take(f - a));
+        symbols.extend(std::iter::repeat(Symbol::Neither).take(d - f));
+        LocationVector { symbols, a, f }
+    }
+
+    /// An evenly-interleaved pattern (low-structure counterpart used by
+    /// Fig. 6 to show the location-dependence of C-MinHash-(0, π)).
+    pub fn interleaved(d: usize, f: usize, a: usize) -> Self {
+        assert!(a <= f && f <= d);
+        let mut symbols = vec![Symbol::Neither; d];
+        // spread the f occupied slots uniformly, first a of them "Both"
+        let mut placed = 0usize;
+        for t in 0..f {
+            let pos = (t * d) / f;
+            let sym = if placed < a { Symbol::Both } else { Symbol::One };
+            symbols[pos] = sym;
+            placed += 1;
+        }
+        LocationVector::from_symbols(symbols)
+    }
+
+    /// Intersection size a.
+    pub fn a(&self) -> usize {
+        self.a
+    }
+
+    /// Union size f.
+    pub fn f(&self) -> usize {
+        self.f
+    }
+
+    /// Dimension D.
+    pub fn d(&self) -> usize {
+        self.symbols.len()
+    }
+
+    /// Jaccard similarity J = a/f (0 when f = 0).
+    pub fn jaccard(&self) -> f64 {
+        if self.f == 0 {
+            0.0
+        } else {
+            self.a as f64 / self.f as f64
+        }
+    }
+
+    /// Symbols view.
+    pub fn symbols(&self) -> &[Symbol] {
+        &self.symbols
+    }
+
+    /// Materialize a concrete (v, w) pair with this location vector.
+    /// “×” positions alternate between v-only and w-only (the split does
+    /// not affect any collision statistic — only x drives collisions).
+    pub fn realize(&self) -> (SparseVec, SparseVec) {
+        let d = self.d() as u32;
+        let mut v = Vec::new();
+        let mut w = Vec::new();
+        let mut flip = false;
+        for (i, s) in self.symbols.iter().enumerate() {
+            match s {
+                Symbol::Both => {
+                    v.push(i as u32);
+                    w.push(i as u32);
+                }
+                Symbol::One => {
+                    if flip {
+                        w.push(i as u32);
+                    } else {
+                        v.push(i as u32);
+                    }
+                    flip = !flip;
+                }
+                Symbol::Neither => {}
+            }
+        }
+        (
+            SparseVec::new(d, v).expect("indices in range"),
+            SparseVec::new(d, w).expect("indices in range"),
+        )
+    }
+
+    /// Lag-Δ pair counts over the circularly-wrapped vector
+    /// (Definition 2.2 with Remark 2.1's wrap-around).
+    pub fn counts_at_lag(&self, delta: usize) -> LagCounts {
+        let d = self.symbols.len();
+        debug_assert!(delta >= 1 && delta < d);
+        let mut c = LagCounts::default();
+        for i in 0..d {
+            let j = if i + delta >= d { i + delta - d } else { i + delta };
+            match (self.symbols[i], self.symbols[j]) {
+                (Symbol::Both, Symbol::Both) => c.l0 += 1,
+                (Symbol::Both, Symbol::One) => c.l1 += 1,
+                (Symbol::Both, Symbol::Neither) => c.l2 += 1,
+                (Symbol::Neither, Symbol::Both) => c.g0 += 1,
+                (Symbol::Neither, Symbol::One) => c.g1 += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pair_classifies_symbols() {
+        let v = SparseVec::new(6, vec![0, 1, 2]).unwrap();
+        let w = SparseVec::new(6, vec![1, 2, 3]).unwrap();
+        let x = LocationVector::from_pair(&v, &w).unwrap();
+        assert_eq!(x.a(), 2);
+        assert_eq!(x.f(), 4);
+        assert_eq!(x.symbols()[0], Symbol::One);
+        assert_eq!(x.symbols()[1], Symbol::Both);
+        assert_eq!(x.symbols()[4], Symbol::Neither);
+    }
+
+    #[test]
+    fn intrinsic_constraints_hold_at_every_lag() {
+        // eq. (6): the row/column sums of the pair-count matrix.
+        let x = LocationVector::contiguous(40, 17, 6);
+        let (a, f, d) = (x.a(), x.f(), x.d());
+        for delta in 1..d.min(20) {
+            let c = x.counts_at_lag(delta);
+            assert_eq!(c.l0 + c.l1 + c.l2, a, "L row sum at delta={delta}");
+            // |G0|+|G1|+|G2| = D−f  =>  G2 = D−f−g0−g1 must be >= 0
+            assert!(c.g0 + c.g1 <= d - f);
+            // |L0|+|G0|+|H0| = a  =>  h0 = a − l0 − g0 >= 0
+            assert!(c.l0 + c.g0 <= a);
+        }
+    }
+
+    #[test]
+    fn realize_roundtrips_counts() {
+        let x = LocationVector::contiguous(32, 10, 4);
+        let (v, w) = x.realize();
+        let (inter, union) = v.overlap(&w);
+        assert_eq!(inter, 4);
+        assert_eq!(union, 10);
+        let x2 = LocationVector::from_pair(&v, &w).unwrap();
+        assert_eq!(x2.symbols(), x.symbols());
+    }
+
+    #[test]
+    fn contiguous_lag1_counts() {
+        // O O O x x x - - - -  (D=10, f=6, a=3), circular.
+        let x = LocationVector::contiguous(10, 6, 3);
+        let c = x.counts_at_lag(1);
+        assert_eq!(
+            (c.l0, c.l1, c.l2, c.g0, c.g1),
+            (2, 1, 0, 1, 0),
+            "wrap-around pair is (−, O)"
+        );
+    }
+
+    #[test]
+    fn interleaved_has_requested_a_f() {
+        let x = LocationVector::interleaved(50, 20, 7);
+        assert_eq!((x.a(), x.f(), x.d()), (7, 20, 50));
+    }
+}

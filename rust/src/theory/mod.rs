@@ -1,0 +1,151 @@
+//! Exact theory from the paper, used to regenerate Figures 2–6 and to
+//! property-test the samplers.
+//!
+//! * [`var_minhash`] — classical MinHash variance J(1−J)/K (eq. 3).
+//! * [`theta_delta`] / [`var_zero_pi`] — Lemma 2.1 + Theorem 2.2:
+//!   the *location-dependent* variance of C-MinHash-(0, π).
+//! * [`e_tilde`] / [`var_sigma_pi`] — Theorem 3.1: the variance of
+//!   C-MinHash-(σ, π), evaluated **exactly in O(min(f, D−f)) for any
+//!   D** via a run-count decomposition (below), instead of the paper's
+//!   5-fold combinatorial sum.  Cross-checked against a literal
+//!   enumeration ([`e_tilde_enum`]), a brute-force over all labeled
+//!   arrangements ([`e_tilde_brute`]) and Monte Carlo
+//!   ([`e_tilde_mc`]) in the test-suite.
+//!
+//! ## The run-count decomposition of Ẽ (Theorem 3.1)
+//!
+//! Ẽ = E_σ[g(ℓ₀, ℓ₂, g₀, g₁)] with
+//! g = ℓ₀/(f+g₀+g₁) + a·(g₀+ℓ₂)/((f+g₀+g₁)·f) (Lemma 2.1 at Δ=1),
+//! where the counts are lag-1 pair counts of a uniformly random circular
+//! arrangement of a “O”s, (f−a) “×”s and (D−f) “−”s.  Observe:
+//!
+//! 1. g₀+g₁ = R, the number of maximal runs of “−” (each run's last “−”
+//!    is followed by exactly one non-“−”), so the denominator only
+//!    depends on R.
+//! 2. Conditional on R = r, by exchangeability of the f non-“−” symbols
+//!    over their positions: E[g₀|r] = E[ℓ₂|r] = r·a/f (a gap starts/ends
+//!    with “O” w.p. a/f), and E[ℓ₀|r] = (f−r)·a(a−1)/(f(f−1)) (there are
+//!    f−r intra-gap adjacencies, each “OO” w.p. a(a−1)/(f(f−1))).
+//! 3. P(R=r) = (D/r)·C(D−f−1, r−1)·C(f−1, r−1) / C(D, D−f) — the classic
+//!    labeled-circle run-count distribution.
+//!
+//! Hence Ẽ = Σ_r P(R=r)·[(f−r)·a(a−1)/(f(f−1)) + 2r·a²/f²] / (f+r),
+//! which matches the paper's Theorem 3.1 expression term-for-term on
+//! every case the enumeration can reach (see `rust/tests/theory_cross.rs`)
+//! and reproduces the limits the paper proves: Ẽ_{D=f} = J·(a−1)/(f−1)
+//! and Ẽ_D ↑ J² as D → ∞ (Lemma 3.3 / Theorem 3.4).
+
+mod combinat;
+mod location;
+mod sigma_pi;
+mod zero_pi;
+
+pub use combinat::{choose, ln_choose, ln_factorial};
+pub use location::{LagCounts, LocationVector, Symbol};
+pub use sigma_pi::{e_tilde, e_tilde_brute, e_tilde_enum, e_tilde_mc, var_sigma_pi};
+pub use zero_pi::{theta_delta, var_zero_pi};
+
+/// Classical MinHash variance, eq. (3): Var[Ĵ_MH] = J(1−J)/K.
+pub fn var_minhash(j: f64, k: usize) -> f64 {
+    assert!(k >= 1);
+    assert!((0.0..=1.0).contains(&j));
+    j * (1.0 - j) / k as f64
+}
+
+/// Variance ratio Var[Ĵ_MH] / Var[Ĵ_{σ,π}] — the Figure 4/5 quantity.
+/// Returns `None` when J ∈ {0, 1} (both variances are 0).
+pub fn variance_ratio(d: usize, f: usize, a: usize, k: usize) -> Option<f64> {
+    if a == 0 || a == f {
+        return None;
+    }
+    let j = a as f64 / f as f64;
+    Some(var_minhash(j, k) / var_sigma_pi(d, f, a, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minhash_variance_basics() {
+        assert_eq!(var_minhash(0.0, 10), 0.0);
+        assert_eq!(var_minhash(1.0, 10), 0.0);
+        assert!((var_minhash(0.5, 100) - 0.0025).abs() < 1e-15);
+        // symmetric about 1/2
+        assert!((var_minhash(0.3, 7) - var_minhash(0.7, 7)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ratio_none_at_degenerate_j() {
+        assert!(variance_ratio(100, 10, 0, 8).is_none());
+        assert!(variance_ratio(100, 10, 10, 8).is_none());
+        assert!(variance_ratio(100, 10, 5, 8).is_some());
+    }
+
+    #[test]
+    fn theorem_3_4_uniform_superiority_grid() {
+        // Var_{σ,π} < Var_MH strictly, for every feasible (D, f, a).
+        for d in [10usize, 33, 64, 200, 1000] {
+            for f in [2usize, 5, d / 3, d / 2, d - 1, d] {
+                if f < 2 || f > d {
+                    continue;
+                }
+                let k = 64.min(d);
+                for a in 1..f {
+                    let j = a as f64 / f as f64;
+                    let vs = var_sigma_pi(d, f, a, k);
+                    let vm = var_minhash(j, k);
+                    assert!(
+                        vs < vm + 1e-15,
+                        "Thm 3.4 violated at D={d} f={f} a={a}: {vs} >= {vm}"
+                    );
+                    assert!(vs >= 0.0, "negative variance at D={d} f={f} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn proposition_3_5_constant_ratio_in_a() {
+        // For fixed (D, f, K) the ratio is the same for every 0 < a < f.
+        let (d, f, k) = (500, 120, 256);
+        let base = variance_ratio(d, f, 1, k).unwrap();
+        for a in [2usize, 10, 60, 100, 119] {
+            let r = variance_ratio(d, f, a, k).unwrap();
+            // tolerance: the run-formula sums ~f ln/exp terms, so allow
+            // accumulated float noise of ~1e-7 relative
+            assert!(
+                (r - base).abs() < 1e-7 * base,
+                "Prop 3.5 violated at a={a}: {r} vs {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn proposition_3_2_symmetry_in_a() {
+        // Var for (D, f, a) equals Var for (D, f, f−a).
+        let (d, f, k) = (300, 80, 128);
+        for a in 1..f {
+            let v1 = var_sigma_pi(d, f, a, k);
+            let v2 = var_sigma_pi(d, f, f - a, k);
+            // ~1e-8 relative noise is expected: the run-formula goes
+            // through exp(ln-choose) with exponents of O(D ln D).
+            assert!(
+                (v1 - v2).abs() < 1e-6 * v1.abs().max(1e-12),
+                "Prop 3.2 violated at a={a}: {v1} vs {v2}"
+            );
+        }
+    }
+
+    #[test]
+    fn ratio_improves_with_k_and_f() {
+        // Figure 5's trends: ratio increases with K and with f.
+        let d = 500;
+        let r_k64 = variance_ratio(d, 200, 50, 64).unwrap();
+        let r_k400 = variance_ratio(d, 200, 50, 400).unwrap();
+        assert!(r_k400 > r_k64);
+        let r_f50 = variance_ratio(d, 50, 10, 256).unwrap();
+        let r_f400 = variance_ratio(d, 400, 10, 256).unwrap();
+        assert!(r_f400 > r_f50);
+    }
+}

@@ -1,0 +1,302 @@
+//! Theorem 3.1: Var[Ĵ_{σ,π}] — four independent evaluation paths.
+//!
+//! 1. [`e_tilde`] — the run-count decomposition (exact, O(min(f, D−f)),
+//!    works at any D; see the module docs in `theory/mod.rs` for the
+//!    derivation).  This is the production path used by Figures 2–5.
+//! 2. [`e_tilde_enum`] — a literal implementation of the paper's
+//!    two-step stars-and-bars enumeration (Appendix A.3, eq. 25),
+//!    O((D−f)·a⁴): the cross-check that our decomposition and the
+//!    paper's combinatorics agree.
+//! 3. [`e_tilde_brute`] — full enumeration of all labeled circular
+//!    arrangements (D ≤ ~12): the ground truth both of the above are
+//!    tested against.
+//! 4. [`e_tilde_mc`] — Monte Carlo over σ: used by tests and by users
+//!    who want error bars at parameter ranges they do not trust.
+
+use crate::util::rng::Rng;
+
+use super::combinat::ln_choose;
+use super::location::{LocationVector, Symbol};
+
+/// Lemma 2.1's conditional expectation at Δ=1, as a function of the
+/// lag-1 pair counts: g = (ℓ₀ + a(g₀+ℓ₂)/f) / (f+g₀+g₁).
+#[inline]
+fn g_value(l0: f64, l2: f64, g0: f64, g1: f64, f: f64, a: f64) -> f64 {
+    (l0 + a * (g0 + l2) / f) / (f + g0 + g1)
+}
+
+/// Ẽ of Theorem 3.1 via the exact run-count decomposition.
+///
+/// Requires 0 < a < f ≤ D.  Exact for every D (validated against
+/// [`e_tilde_brute`] and [`e_tilde_enum`] in the test-suite).
+pub fn e_tilde(d: usize, f: usize, a: usize) -> f64 {
+    assert!(a > 0 && a < f && f <= d, "need 0 < a < f <= D");
+    let (df, ff, af) = (d as f64, f as f64, a as f64);
+    if d == f {
+        // No “−” symbols: |𝓖₀|=|𝓖₁|=|𝓛₂|=0 and |𝓛₀| ~ hyper;
+        // Ẽ = E[ℓ₀]/f = a(a−1)/(f(f−1)) = J·(a−1)/(f−1)  (proof of Thm 3.4).
+        return af * (af - 1.0) / (ff * (ff - 1.0));
+    }
+    // P(R = r) = (D/r)·C(D−f−1, r−1)·C(f−1, r−1) / C(D, D−f):
+    // run-count law of the (D−f) “−”s on a labeled circle.
+    let ln_denom = ln_choose(d, d - f);
+    let mut total = 0.0f64;
+    for r in 1..=f.min(d - f) {
+        let rf = r as f64;
+        let ln_p = df.ln() - rf.ln() + ln_choose(d - f - 1, r - 1) + ln_choose(f - 1, r - 1)
+            - ln_denom;
+        if ln_p == f64::NEG_INFINITY {
+            continue;
+        }
+        // E[numerator | R=r]:
+        //   E[ℓ₀|r] = (f−r)·a(a−1)/(f(f−1))       (f−r intra-gap pairs)
+        //   E[g₀|r] = E[ℓ₂|r] = r·a/f             (gap ends, exchangeable)
+        let e_l0 = (ff - rf) * af * (af - 1.0) / (ff * (ff - 1.0));
+        let e_num = e_l0 + af * (2.0 * rf * af / ff) / ff;
+        total += ln_p.exp() * e_num / (ff + rf);
+    }
+    total
+}
+
+/// Theorem 3.1: Var[Ĵ_{σ,π}] = J/K + (K−1)·Ẽ/K − J².
+///
+/// Exact for any (D, f, a, K) with K ≤ D; 0 when J ∈ {0, 1}.
+pub fn var_sigma_pi(d: usize, f: usize, a: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k <= d, "need 1 <= K <= D");
+    assert!(f <= d && a <= f);
+    if a == 0 || a == f {
+        return 0.0;
+    }
+    let j = a as f64 / f as f64;
+    let kf = k as f64;
+    let e = e_tilde(d, f, a);
+    // Mathematically >= 0; clamp the ~1e-18 float residue that appears
+    // at exact-zero cases (e.g. D = f, a = 1, K = D).
+    (j / kf + (kf - 1.0) * e / kf - j * j).max(0.0)
+}
+
+/// Literal implementation of the paper's Appendix A.3 enumeration
+/// (eq. 25): step 1 places “×”s between “−”s (hypergeometric over
+/// s = |𝒞₁|), step 2 throws “O”s into the four bin types (multivariate
+/// stars-and-bars over n₁..n₄).  O((D−f)·a⁴) — use for cross-checks at
+/// small/medium sizes, not for D = 1000 sweeps.
+pub fn e_tilde_enum(d: usize, f: usize, a: usize) -> f64 {
+    assert!(a > 0 && a < f && f <= d, "need 0 < a < f <= D");
+    if d == f {
+        return e_tilde(d, f, a);
+    }
+    let (ff, af) = (f as f64, a as f64);
+    let ln_step1_denom = ln_choose(d - a - 1, d - f - 1);
+    let ln_step2_denom = ln_choose(d - 1, a);
+    let s_lo = (d as i64 - 2 * f as i64 + a as i64).max(0) as usize;
+    let mut total = 0.0f64;
+    for s in s_lo..=(d - f - 1) {
+        // |𝒞₁| = s (−,− pairs), |𝒞₂| = |𝒞₃| = D−f−s, |𝒞₄| = f−a−(D−f−s).
+        let c2 = d - f - s;
+        if c2 > f - a {
+            continue; // more occupied gaps than “×”s
+        }
+        let c4 = (f - a) - c2;
+        let ln_ps = ln_choose(d - f, s) + ln_choose(f - a - 1, c2.wrapping_sub(1))
+            - ln_step1_denom;
+        let ln_ps = if c2 == 0 { f64::NEG_INFINITY } else { ln_ps };
+        if ln_ps == f64::NEG_INFINITY {
+            continue;
+        }
+        let ps = ln_ps.exp();
+        for n1 in 0..=s.min(a) {
+            for n2 in 0..=c2.min(a) {
+                for n3 in 0..=c2.min(a) {
+                    for n4 in 0..=c4.min(a) {
+                        let m = n1 + n2 + n3 + n4;
+                        if m == 0 || m > a {
+                            continue;
+                        }
+                        let ln_w = ln_choose(s, n1)
+                            + ln_choose(c2, n2)
+                            + ln_choose(c2, n3)
+                            + ln_choose(c4, n4)
+                            + ln_choose(a - 1, m - 1)
+                            - ln_step2_denom;
+                        if ln_w == f64::NEG_INFINITY {
+                            continue;
+                        }
+                        // Bin effects (Appendix A.3 step 2):
+                        let l2 = (n1 + n3) as f64;
+                        let g0 = (n1 + n2) as f64;
+                        let g1 = (c2 - n2) as f64;
+                        let l0 = (a - m) as f64;
+                        total +=
+                            ps * ln_w.exp() * g_value(l0, l2, g0, g1, ff, af);
+                    }
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Ground truth for tiny D: enumerate every labeled circular arrangement
+/// of the multiset {O^a, ×^{f−a}, −^{D−f}} and average g.  Cost
+/// C(D,a)·C(D−a,f−a); keep D ≤ ~12.
+pub fn e_tilde_brute(d: usize, f: usize, a: usize) -> f64 {
+    assert!(a > 0 && a < f && f <= d && d <= 16, "brute force needs tiny D");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    // Iterate subsets for "O" positions, then "×" positions among the rest.
+    let o_sets = combinations(d, a);
+    for oset in &o_sets {
+        let rest: Vec<usize> = (0..d).filter(|i| !oset.contains(i)).collect();
+        for xidx in combinations(rest.len(), f - a) {
+            let mut sym = vec![Symbol::Neither; d];
+            for &i in oset {
+                sym[i] = Symbol::Both;
+            }
+            for &t in &xidx {
+                sym[rest[t]] = Symbol::One;
+            }
+            let x = LocationVector::from_symbols(sym);
+            let c = x.counts_at_lag(1);
+            total += g_value(
+                c.l0 as f64,
+                c.l2 as f64,
+                c.g0 as f64,
+                c.g1 as f64,
+                f as f64,
+                a as f64,
+            );
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(k);
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..n {
+            cur.push(i);
+            rec(i + 1, n, k, cur, out);
+            cur.pop();
+        }
+    }
+    rec(0, n, k, &mut cur, &mut out);
+    out
+}
+
+/// Monte-Carlo Ẽ: sample uniformly random circular arrangements
+/// (i.e. random σ) and average Lemma 2.1's conditional expectation — a
+/// Rao-Blackwellized estimator of Ẽ.
+pub fn e_tilde_mc(d: usize, f: usize, a: usize, samples: usize, seed: u64) -> f64 {
+    assert!(a > 0 && a < f && f <= d);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut sym: Vec<Symbol> = Vec::with_capacity(d);
+    sym.extend(std::iter::repeat(Symbol::Both).take(a));
+    sym.extend(std::iter::repeat(Symbol::One).take(f - a));
+    sym.extend(std::iter::repeat(Symbol::Neither).take(d - f));
+    let mut total = 0.0f64;
+    for _ in 0..samples {
+        rng.shuffle(&mut sym);
+        let x = LocationVector::from_symbols(sym.clone());
+        let c = x.counts_at_lag(1);
+        total += g_value(
+            c.l0 as f64,
+            c.l2 as f64,
+            c.g0 as f64,
+            c.g1 as f64,
+            f as f64,
+            a as f64,
+        );
+    }
+    total / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_formula_matches_brute_force() {
+        for (d, f, a) in [
+            (8, 4, 2),
+            (9, 5, 2),
+            (10, 4, 3),
+            (7, 6, 3),
+            (10, 7, 5),
+            (11, 3, 1),
+            (12, 9, 4),
+        ] {
+            let brute = e_tilde_brute(d, f, a);
+            let runs = e_tilde(d, f, a);
+            assert!(
+                (brute - runs).abs() < 1e-12,
+                "D={d} f={f} a={a}: brute={brute} runs={runs}"
+            );
+        }
+    }
+
+    #[test]
+    fn mc_agrees_with_exact() {
+        let (d, f, a) = (200, 60, 20);
+        let exact = e_tilde(d, f, a);
+        let mc = e_tilde_mc(d, f, a, 60_000, 7);
+        assert!(
+            (exact - mc).abs() < 5e-3,
+            "exact={exact} mc={mc}"
+        );
+    }
+
+    #[test]
+    fn d_equals_f_limit() {
+        // Ẽ_{D=f} = J·(a−1)/(f−1) (proof of Theorem 3.4).
+        let (f, a) = (20usize, 7usize);
+        let want = (a as f64 / f as f64) * ((a - 1) as f64 / (f - 1) as f64);
+        assert!((e_tilde(f, f, a) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lemma_3_3_monotone_in_d() {
+        // Ẽ_{D+1} > Ẽ_D for all D >= f; and Ẽ_D < J² (Thm 3.4).
+        for (f, a) in [(10usize, 3usize), (30, 11), (6, 5)] {
+            let j2 = (a as f64 / f as f64).powi(2);
+            let mut prev = e_tilde(f, f, a);
+            for d in (f + 1)..(f + 200) {
+                let cur = e_tilde(d, f, a);
+                assert!(cur > prev, "not increasing at D={d}, f={f}, a={a}");
+                assert!(cur < j2, "Ẽ >= J² at D={d}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn converges_to_j_squared() {
+        let (f, a) = (12usize, 5usize);
+        let j2 = (a as f64 / f as f64).powi(2);
+        let e = e_tilde(200_000, f, a);
+        assert!((e - j2).abs() < 1e-3, "e={e} j2={j2}");
+    }
+
+    #[test]
+    fn variance_nonnegative_and_below_minhash() {
+        for (d, f, a, k) in [(128, 50, 20, 64), (1000, 800, 400, 800), (64, 64, 32, 64)] {
+            let v = var_sigma_pi(d, f, a, k);
+            let j = a as f64 / f as f64;
+            assert!(v >= 0.0);
+            assert!(v < j * (1.0 - j) / k as f64 + 1e-15);
+        }
+    }
+
+    #[test]
+    fn k_equals_one_matches_minhash_exactly() {
+        // Single hash: no correlation terms at all.
+        let (d, f, a) = (64usize, 20usize, 8usize);
+        let j = a as f64 / f as f64;
+        assert!((var_sigma_pi(d, f, a, 1) - j * (1.0 - j)).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,136 @@
+//! Lemma 2.1 and Theorem 2.2: the location-dependent variance of
+//! C-MinHash-(0, π).
+
+use super::location::{LagCounts, LocationVector};
+
+/// Lemma 2.1: Θ_Δ = E_π[𝟙_s 𝟙_t] for t − s = Δ, given the lag-Δ pair
+/// counts of the (fixed) location vector:
+///
+/// Θ_Δ = (|𝓛₀| + (|𝓖₀| + |𝓛₂|)·J) / (f + |𝓖₀| + |𝓖₁|).
+pub fn theta_delta(c: &LagCounts, f: usize, a: usize) -> f64 {
+    if f == 0 {
+        return 0.0;
+    }
+    let j = a as f64 / f as f64;
+    (c.l0 as f64 + (c.g0 + c.l2) as f64 * j) / (f + c.g0 + c.g1) as f64
+}
+
+/// Theorem 2.2: Var[Ĵ_{0,π}] for a specific location vector and K.
+///
+/// Var = J/K + (2/K²)·Σ_{Δ=1}^{K−1} (K − Δ)·Θ_Δ − J²
+/// (the paper indexes the sum by s = 2..K with Δ = K−s+1 and weight
+/// s−1 = K−Δ; this is the same sum re-indexed).
+///
+/// Requires K ≤ D (the paper's standing assumption).
+pub fn var_zero_pi(x: &LocationVector, k: usize) -> f64 {
+    let (a, f, d) = (x.a(), x.f(), x.d());
+    assert!(k >= 1 && k <= d, "need 1 <= K <= D");
+    if a == 0 || a == f {
+        return 0.0; // J ∈ {0,1}: indicator is constant
+    }
+    let j = a as f64 / f as f64;
+    let kf = k as f64;
+    let mut cross = 0.0f64;
+    for delta in 1..k {
+        let c = x.counts_at_lag(delta);
+        cross += (k - delta) as f64 * theta_delta(&c, f, a);
+    }
+    j / kf + 2.0 * cross / (kf * kf) - j * j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{Perm, Sketcher, ZeroPiHasher};
+    use crate::theory::location::Symbol;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn degenerate_j_has_zero_variance() {
+        let x = LocationVector::contiguous(20, 5, 0);
+        assert_eq!(var_zero_pi(&x, 10), 0.0);
+        let x = LocationVector::contiguous(20, 5, 5);
+        assert_eq!(var_zero_pi(&x, 10), 0.0);
+    }
+
+    #[test]
+    fn k_equals_one_matches_minhash() {
+        // A single hash has no cross terms: Var = J(1−J)/1.
+        let x = LocationVector::contiguous(30, 12, 5);
+        let j = x.jaccard();
+        assert!((var_zero_pi(&x, 1) - j * (1.0 - j)).abs() < 1e-12);
+    }
+
+    /// Empirical Var[Ĵ_{0,π}] over random π for a fixed location vector —
+    /// directly simulates Algorithm 2 and checks Theorem 2.2.
+    fn empirical_var(x: &LocationVector, k: usize, reps: usize, seed: u64) -> f64 {
+        let d = x.d();
+        let (v, w) = x.realize();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..reps {
+            let pi = Perm::from_values(rng.permutation(d)).unwrap();
+            let h = ZeroPiHasher::from_perm(k, &pi).unwrap();
+            let est = crate::sketch::estimate(
+                &h.sketch_sparse(v.indices()),
+                &h.sketch_sparse(w.indices()),
+            );
+            sum += est;
+            sumsq += est * est;
+        }
+        let mean = sum / reps as f64;
+        sumsq / reps as f64 - mean * mean
+    }
+
+    #[test]
+    fn theorem_2_2_matches_simulation_contiguous() {
+        let x = LocationVector::contiguous(64, 24, 9);
+        let theo = var_zero_pi(&x, 32);
+        let emp = empirical_var(&x, 32, 30_000, 1);
+        // MC sd of a variance estimate at 30k reps is well under 5%.
+        assert!(
+            (theo - emp).abs() < 0.10 * theo.max(1e-4),
+            "theory {theo} vs empirical {emp}"
+        );
+    }
+
+    #[test]
+    fn theorem_2_2_matches_simulation_interleaved() {
+        let x = LocationVector::interleaved(64, 24, 9);
+        let theo = var_zero_pi(&x, 32);
+        let emp = empirical_var(&x, 32, 30_000, 2);
+        assert!(
+            (theo - emp).abs() < 0.10 * theo.max(1e-4),
+            "theory {theo} vs empirical {emp}"
+        );
+    }
+
+    #[test]
+    fn location_dependence_is_real() {
+        // The whole point of §2: different arrangements of the same
+        // (D, f, a) give different Var[Ĵ_{0,π}].
+        let xc = LocationVector::contiguous(64, 24, 9);
+        let xi = LocationVector::interleaved(64, 24, 9);
+        let vc = var_zero_pi(&xc, 32);
+        let vi = var_zero_pi(&xi, 32);
+        assert!((vc - vi).abs() > 1e-4, "contiguous {vc} vs interleaved {vi}");
+    }
+
+    #[test]
+    fn theta_is_a_probability() {
+        let x = LocationVector::contiguous(40, 15, 6);
+        for delta in 1..20 {
+            let th = theta_delta(&x.counts_at_lag(delta), x.f(), x.a());
+            assert!((0.0..=1.0).contains(&th), "delta={delta} theta={th}");
+        }
+    }
+
+    #[test]
+    fn all_both_symbols_mean_theta_one() {
+        // x = all "O": every hash collides, Θ = 1 for any Δ.
+        let x = LocationVector::from_symbols(vec![Symbol::Both; 16]);
+        let th = theta_delta(&x.counts_at_lag(3), x.f(), x.a());
+        assert!((th - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,523 @@
+//! Minimal JSON codec (RFC 8259 subset) — the in-tree replacement for
+//! serde_json in this offline build.
+//!
+//! Supports everything the repo needs: objects, arrays, strings with
+//! escapes (incl. `\uXXXX`), numbers (f64; integers round-trip exactly
+//! up to 2⁵³), bools, null.  Parsing is recursive-descent with a depth
+//! cap; serialization emits compact one-line output (the wire protocol
+//! is JSON-lines).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (f64 internally).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (sorted map; key order is not significant in our formats).
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse error with byte offset.
+#[derive(Debug)]
+pub struct ParseError {
+    /// Byte offset of the failure.
+    pub at: usize,
+    /// Description.
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl From<ParseError> for crate::Error {
+    fn from(e: ParseError) -> Self {
+        crate::Error::Protocol(e.to_string())
+    }
+}
+
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, ParseError> {
+        Err(ParseError {
+            at: self.i,
+            msg: msg.to_string(),
+        })
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected {:?}", c as char))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, ParseError> {
+        if depth > MAX_DEPTH {
+            return self.err("nesting too deep");
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => self.err(&format!("unexpected {:?}", c as char)),
+            None => self.err("unexpected end of input"),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, ParseError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected {s}"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, ParseError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        match text.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            _ => self.err("bad number"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.i += 1;
+                            let cp = self.hex4()?;
+                            // surrogate pair handling
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.peek() == Some(b'\\') {
+                                    self.i += 1;
+                                    self.eat(b'u')?;
+                                    let lo = self.hex4()?;
+                                    let c =
+                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(c)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match ch {
+                                Some(c) => out.push(c),
+                                None => return self.err("bad unicode escape"),
+                            }
+                            continue; // hex4 advanced past the digits
+                        }
+                        _ => return self.err("bad escape"),
+                    }
+                    self.i += 1;
+                }
+                Some(c) if c < 0x20 => return self.err("control char in string"),
+                Some(_) => {
+                    // copy one UTF-8 code point
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| ParseError {
+                            at: self.i,
+                            msg: "invalid utf-8".into(),
+                        })?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = match self.peek() {
+                Some(c) => c,
+                None => return self.err("eof in \\u"),
+            };
+            let d = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return self.err("bad hex digit"),
+            };
+            v = (v << 4) | u32::from(d);
+            self.i += 1;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, ParseError> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return self.err("expected , or ]"),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, ParseError> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value(depth + 1)?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return self.err("expected , or }"),
+            }
+        }
+    }
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<Json, ParseError> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return p.err("trailing garbage");
+        }
+        Ok(v)
+    }
+
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ----- constructors -----
+
+    /// Object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Array of u32 values.
+    pub fn from_u32s(xs: &[u32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(f64::from(x))).collect())
+    }
+
+    /// String value.
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    // ----- accessors (all return crate errors for protocol hygiene) -----
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> crate::Result<&Json> {
+        match self {
+            Json::Obj(m) => m
+                .get(key)
+                .ok_or_else(|| crate::Error::Protocol(format!("missing field {key:?}"))),
+            _ => Err(crate::Error::Protocol(format!(
+                "expected object with field {key:?}"
+            ))),
+        }
+    }
+
+    /// Optional object field.
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// As f64.
+    pub fn as_f64(&self) -> crate::Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => Err(crate::Error::Protocol("expected number".into())),
+        }
+    }
+
+    /// As u64 (must be a non-negative integer ≤ 2⁵³).
+    pub fn as_u64(&self) -> crate::Result<u64> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 || x > 9.0e15 {
+            return Err(crate::Error::Protocol(format!("expected integer, got {x}")));
+        }
+        Ok(x as u64)
+    }
+
+    /// As usize.
+    pub fn as_usize(&self) -> crate::Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    /// As u32.
+    pub fn as_u32(&self) -> crate::Result<u32> {
+        let v = self.as_u64()?;
+        u32::try_from(v).map_err(|_| crate::Error::Protocol(format!("{v} out of u32 range")))
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> crate::Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(crate::Error::Protocol("expected bool".into())),
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> crate::Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(crate::Error::Protocol("expected string".into())),
+        }
+    }
+
+    /// As array.
+    pub fn as_arr(&self) -> crate::Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => Err(crate::Error::Protocol("expected array".into())),
+        }
+    }
+
+    /// As Vec<u32>.
+    pub fn as_u32_vec(&self) -> crate::Result<Vec<u32>> {
+        self.as_arr()?.iter().map(|v| v.as_u32()).collect()
+    }
+
+    /// As Vec<usize>.
+    pub fn as_usize_vec(&self) -> crate::Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let j = Json::parse(r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "s": "x\ny"}"#)
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_f64().unwrap(), 2.5);
+        assert!(j.get("b").unwrap().get("c").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("s").unwrap().as_str().unwrap(), "x\ny");
+    }
+
+    #[test]
+    fn roundtrip_is_stable() {
+        let src = r#"{"arr":[0,1,18446744073709],"neg":-2.5,"s":"q\"uo\\te","t":true}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn integers_roundtrip_exactly() {
+        let j = Json::parse("9007199254740992").unwrap(); // 2^53
+        assert_eq!(j.to_string(), "9007199254740992");
+        let j = Json::from_u32s(&[0, 1, u32::MAX]);
+        assert_eq!(j.as_u32_vec().unwrap(), vec![0, 1, u32::MAX]);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let j = Json::parse(r#""é😀""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "é😀");
+        // non-ASCII survives a write/parse cycle
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "{", "[1,", "\"abc", "{\"a\" 1}", "tru", "01x", "[1]]", "", "nan",
+            "{\"a\":}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn accessor_errors_are_typed() {
+        let j = Json::parse(r#"{"x": "s"}"#).unwrap();
+        assert!(j.get("x").unwrap().as_u64().is_err());
+        assert!(j.get("missing").is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+    }
+
+    #[test]
+    fn deep_nesting_capped() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(Json::parse(&deep).is_err());
+    }
+}

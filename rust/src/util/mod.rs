@@ -1,0 +1,7 @@
+//! In-tree substrates for the offline build (DESIGN.md
+//! "Substitutions"): a deterministic RNG ([`rng`]), a JSON codec
+//! ([`json`]), and small test helpers ([`testutil`]).
+
+pub mod json;
+pub mod rng;
+pub mod testutil;

@@ -1,0 +1,98 @@
+//! Golden-vector test: the pure-Rust hashers must agree **bit-for-bit**
+//! with the Python oracles in `python/compile/kernels/ref.py` (which the
+//! Pallas kernel itself is verified against), over the cases exported by
+//! `make artifacts` into `artifacts/golden.json`.
+//!
+//! This closes the loop Rust ⇄ Python: same conventions, same hashes.
+
+use cminhash::sketch::{
+    CMinHasher, ClassicMinHasher, Perm, Sketcher, SparseVec, ZeroPiHasher,
+};
+use cminhash::util::json::Json;
+use std::path::Path;
+
+fn load_golden() -> Option<Json> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.json");
+    if !path.exists() {
+        eprintln!(
+            "SKIP: {} missing — run `make artifacts` first",
+            path.display()
+        );
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+fn rows_to_sparse(dim: u32, bits: &Json) -> Vec<SparseVec> {
+    bits.as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            let dense: Vec<u32> = row.as_u32_vec().unwrap();
+            let idx: Vec<u32> = dense
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b != 0)
+                .map(|(i, _)| i as u32)
+                .collect();
+            SparseVec::new(dim, idx).unwrap()
+        })
+        .collect()
+}
+
+fn expect_matrix(j: &Json) -> Vec<Vec<u32>> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_u32_vec().unwrap())
+        .collect()
+}
+
+#[test]
+fn rust_hashers_match_python_oracles() {
+    let Some(golden) = load_golden() else { return };
+    let cases = golden.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 3, "golden file has too few cases");
+    for (ci, case) in cases.iter().enumerate() {
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let k = case.get("k").unwrap().as_usize().unwrap();
+        let rows = rows_to_sparse(d as u32, case.get("bits").unwrap());
+        let sigma =
+            Perm::from_values(case.get("sigma").unwrap().as_u32_vec().unwrap()).unwrap();
+        let pi = Perm::from_values(case.get("pi").unwrap().as_u32_vec().unwrap()).unwrap();
+        let perm_rows: Vec<Perm> = case
+            .get("perms")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| Perm::from_values(p.as_u32_vec().unwrap()).unwrap())
+            .collect();
+
+        let minhash = ClassicMinHasher::from_perms(&perm_rows).unwrap();
+        let zero_pi = ZeroPiHasher::from_perm(k, &pi).unwrap();
+        let sigma_pi = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+
+        let want_mh = expect_matrix(case.get("minhash").unwrap());
+        let want_0pi = expect_matrix(case.get("cminhash_0pi").unwrap());
+        let want_spi = expect_matrix(case.get("cminhash_sigma_pi").unwrap());
+
+        for (ri, row) in rows.iter().enumerate() {
+            assert_eq!(
+                minhash.sketch_sparse(row.indices()),
+                want_mh[ri],
+                "minhash mismatch case {ci} row {ri}"
+            );
+            assert_eq!(
+                zero_pi.sketch_sparse(row.indices()),
+                want_0pi[ri],
+                "cminhash-(0,pi) mismatch case {ci} row {ri}"
+            );
+            assert_eq!(
+                sigma_pi.sketch_sparse(row.indices()),
+                want_spi[ri],
+                "cminhash-(sigma,pi) mismatch case {ci} row {ri}"
+            );
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Full three-layer consistency: XLA-engine-backed coordinator behind
+//! the TCP server must produce the exact sketches the pure-Rust hasher
+//! computes with the same seed — i.e. L1 (Pallas HLO) == L3 (Rust)
+//! through the complete serving stack, batcher and all.
+//!
+//! Self-skips without artifacts.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{CMinHasher, Sketcher};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn xla_serving_stack_matches_rust_hasher() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServeConfig {
+        engine: EngineKind::Xla,
+        artifacts_dir: dir,
+        dim: 1024,
+        num_hashes: 128,
+        seed: 31,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 500,
+            policy: BatchPolicy::Deadline,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+    };
+    let svc = Coordinator::start(cfg.clone()).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let oracle = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+
+    // Concurrent clients force real batching through the XLA engine.
+    let mut joins = Vec::new();
+    for t in 0..6u32 {
+        let addr = addr.clone();
+        let want = oracle.sketch_sparse(&[t, t * 7 + 3, 500 + t, 1023 - t]);
+        joins.push(std::thread::spawn(move || {
+            let mut c = BlockingClient::connect(&addr).unwrap();
+            for _ in 0..5 {
+                let got = c
+                    .sketch(1024, vec![t, t * 7 + 3, 500 + t, 1023 - t])
+                    .unwrap();
+                assert_eq!(got, want, "XLA stack != Rust oracle");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Batching actually happened (fewer batches than requests).
+    let (snap, _) = svc.stats();
+    assert_eq!(snap.sketches, 30);
+    assert!(
+        snap.batches < 30,
+        "expected coalescing, got {} batches for 30 requests",
+        snap.batches
+    );
+
+    // Empty vector over the full stack -> sentinel sketch.
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let sk = c.sketch(1024, vec![]).unwrap();
+    assert!(sk.iter().all(|&v| v == 1024));
+
+    // insert + query through the XLA path.
+    let doc: Vec<u32> = (100..200).collect();
+    let id = c.insert(1024, doc.clone()).unwrap();
+    let hits = c.query(1024, doc, 3).unwrap();
+    assert_eq!(hits[0].id, id);
+    assert_eq!(hits[0].score, 1.0);
+}
+
+#[test]
+fn heavy_rows_fall_back_to_dense_artifact() {
+    // D=1024 has a sparse variant with F_max=128; a row with more
+    // nonzeros must route to the dense artifact and stay bit-exact.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServeConfig {
+        engine: EngineKind::Xla,
+        artifacts_dir: dir,
+        dim: 1024,
+        num_hashes: 128,
+        seed: 77,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 200,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+    };
+    let svc = Coordinator::start(cfg.clone()).unwrap();
+    let oracle = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+
+    // light row -> sparse path
+    let light: Vec<u32> = (0..50).collect();
+    let got = svc
+        .sketch(cminhash::sketch::SparseVec::new(1024, light.clone()).unwrap())
+        .unwrap();
+    assert_eq!(got, oracle.sketch_sparse(&light));
+
+    // heavy row (600 > F_max=128) -> dense fallback
+    let heavy: Vec<u32> = (0..600).collect();
+    let got = svc
+        .sketch(cminhash::sketch::SparseVec::new(1024, heavy.clone()).unwrap())
+        .unwrap();
+    assert_eq!(got, oracle.sketch_sparse(&heavy));
+
+    let (snap, _) = svc.stats();
+    assert!(snap.sparse_batches >= 1, "light row should use sparse path");
+    assert!(
+        snap.batches > snap.sparse_batches,
+        "heavy row should use the dense path"
+    );
+}

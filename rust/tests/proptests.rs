@@ -1,0 +1,257 @@
+//! Property tests (seeded randomized invariants, via the in-tree
+//! `util::testutil::property` driver) over hashers, estimators, the
+//! batcher, the LSH index, the JSON codec and the theory layer.
+
+use cminhash::coordinator::{Batcher, FlushReason};
+use cminhash::index::{BandingIndex, IndexConfig};
+use cminhash::sketch::{
+    estimate, CMinHasher, ClassicMinHasher, Perm, Role, Sketcher, SparseVec, ZeroPiHasher,
+};
+use cminhash::theory::{var_minhash, var_sigma_pi};
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use cminhash::util::testutil::property;
+use std::time::{Duration, Instant};
+
+fn random_sparse(rng: &mut Rng, d: u32) -> Vec<u32> {
+    let nnz = rng.range_usize(0, (d as usize / 4).max(1) + 1);
+    let mut idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, d)).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
+#[test]
+fn prop_hash_values_always_in_range() {
+    property(40, |rng| {
+        let d = rng.range_usize(2, 200);
+        let k = rng.range_usize(1, d + 1);
+        let seed = rng.next_u64();
+        let idx = random_sparse(rng, d as u32);
+        for hasher in [
+            Box::new(CMinHasher::new(d, k, seed)) as Box<dyn Sketcher>,
+            Box::new(ZeroPiHasher::new(d, k, seed)),
+            Box::new(ClassicMinHasher::new(d, k, seed)),
+        ] {
+            let h = hasher.sketch_sparse(&idx);
+            assert_eq!(h.len(), k);
+            if idx.is_empty() {
+                assert!(h.iter().all(|&v| v == d as u32));
+            } else {
+                assert!(h.iter().all(|&v| v < d as u32));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_identical_inputs_identical_sketches_estimate_one() {
+    property(25, |rng| {
+        let d = rng.range_usize(4, 150);
+        let k = rng.range_usize(1, d + 1);
+        let hasher = CMinHasher::new(d, k, rng.next_u64());
+        let idx = random_sparse(rng, d as u32);
+        if idx.is_empty() {
+            return;
+        }
+        let h1 = hasher.sketch_sparse(&idx);
+        let h2 = hasher.sketch_sparse(&idx);
+        assert_eq!(h1, h2);
+        assert_eq!(estimate(&h1, &h2), 1.0);
+    });
+}
+
+#[test]
+fn prop_estimate_symmetric_and_bounded() {
+    property(25, |rng| {
+        let d = rng.range_usize(8, 120);
+        let k = rng.range_usize(1, d + 1);
+        let hasher = CMinHasher::new(d, k, rng.next_u64());
+        let a = hasher.sketch_sparse(&random_sparse(rng, d as u32));
+        let b = hasher.sketch_sparse(&random_sparse(rng, d as u32));
+        let j1 = estimate(&a, &b);
+        let j2 = estimate(&b, &a);
+        assert_eq!(j1, j2);
+        assert!((0.0..=1.0).contains(&j1));
+    });
+}
+
+#[test]
+fn prop_sigma_only_permutes_never_changes_multiset_of_minima_stats() {
+    // h_k over (σ,π) equals h_k over (0,π) applied to σ-permuted input.
+    property(25, |rng| {
+        let d = rng.range_usize(4, 120);
+        let k = rng.range_usize(1, d + 1);
+        let sigma = Perm::from_values(rng.permutation(d)).unwrap();
+        let pi = Perm::from_values(rng.permutation(d)).unwrap();
+        let cm = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+        let zp = ZeroPiHasher::from_perm(k, &pi).unwrap();
+        let idx = random_sparse(rng, d as u32);
+        let inv = sigma.inverse();
+        let mut permuted: Vec<u32> = idx.iter().map(|&s| inv.at(s as usize)).collect();
+        permuted.sort_unstable();
+        assert_eq!(cm.sketch_sparse(&idx), zp.sketch_sparse(&permuted));
+    });
+}
+
+#[test]
+fn prop_perm_generate_bijective_and_role_separated() {
+    property(25, |rng| {
+        let d = rng.range_usize(1, 500);
+        let seed = rng.next_u64();
+        let sigma = Perm::generate(d, seed, Role::Sigma);
+        let pi = Perm::generate(d, seed, Role::Pi);
+        let mut seen = vec![false; d];
+        for &v in sigma.values() {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+        if d > 3 {
+            assert_ne!(sigma.values(), pi.values());
+        }
+        // inverse really inverts
+        let inv = sigma.inverse();
+        for i in 0..d {
+            assert_eq!(inv.at(sigma.at(i) as usize), i as u32);
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_drops_never_reorders() {
+    property(30, |rng| {
+        let max_batch = rng.range_usize(1, 12);
+        let n = rng.range_usize(0, 100);
+        let mut b: Batcher<usize> = Batcher::new(max_batch, Duration::from_millis(1));
+        let t0 = Instant::now();
+        let mut out: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if let Some((batch, why)) = b.push(i, t0) {
+                assert_eq!(why, FlushReason::Full);
+                assert_eq!(batch.len(), max_batch);
+                out.extend(batch);
+            }
+        }
+        if let Some((batch, why)) = b.drain() {
+            assert_eq!(why, FlushReason::Drain);
+            out.extend(batch);
+        }
+        assert_eq!(out, (0..n).collect::<Vec<_>>(), "dropped or reordered");
+    });
+}
+
+#[test]
+fn prop_index_always_finds_exact_duplicates() {
+    property(15, |rng| {
+        let d = 512usize;
+        let k = 64usize;
+        let hasher = CMinHasher::new(d, k, rng.next_u64());
+        let mut idx = BandingIndex::new(
+            k,
+            IndexConfig {
+                bands: 16,
+                rows_per_band: 4,
+            },
+        )
+        .unwrap();
+        let n = rng.range_usize(1, 30);
+        let mut docs = Vec::new();
+        for i in 0..n {
+            let doc = random_sparse(rng, d as u32);
+            idx.insert(i as u64, &hasher.sketch_sparse(&doc)).unwrap();
+            docs.push(doc);
+        }
+        // every inserted doc is its own (score-1) neighbor
+        for (i, doc) in docs.iter().enumerate() {
+            let hits = idx.query(&hasher.sketch_sparse(doc), n);
+            assert!(
+                hits.iter().any(|h| h.id == i as u64 && h.score == 1.0),
+                "doc {i} lost"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_index_candidates_subset_of_inserted() {
+    property(15, |rng| {
+        let k = 32usize;
+        let mut idx = BandingIndex::new(
+            k,
+            IndexConfig {
+                bands: 8,
+                rows_per_band: 4,
+            },
+        )
+        .unwrap();
+        let n = rng.range_usize(0, 20);
+        for i in 0..n {
+            let sk: Vec<u32> = (0..k).map(|_| rng.range_u32(0, 50)).collect();
+            idx.insert(i as u64, &sk).unwrap();
+        }
+        let probe: Vec<u32> = (0..k).map(|_| rng.range_u32(0, 50)).collect();
+        for cand in idx.candidates(&probe) {
+            assert!(cand < n as u64);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.range_usize(0, 4) } else { rng.range_usize(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool_with(0.5)),
+            2 => Json::Num((rng.range_u32(0, 1_000_000) as f64) - 500_000.0),
+            3 => {
+                let n = rng.range_usize(0, 8);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(rng.range_u32(32, 0x2FF)).unwrap_or('x')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.range_usize(0, 5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range_usize(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property(60, |rng| {
+        let j = random_json(rng, 0);
+        let s = j.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back, j, "roundtrip failed for {s}");
+    });
+}
+
+#[test]
+fn prop_theorem_3_4_random_points() {
+    property(40, |rng| {
+        let d = rng.range_usize(3, 1500);
+        let f = rng.range_usize(2, d + 1);
+        let a = rng.range_usize(1, f);
+        let k = rng.range_usize(2, d.min(1000) + 1);
+        let j = a as f64 / f as f64;
+        let vs = var_sigma_pi(d, f, a, k);
+        let vm = var_minhash(j, k);
+        assert!(
+            vs < vm + 1e-12,
+            "Thm 3.4 violated at D={d} f={f} a={a} K={k}: {vs} >= {vm}"
+        );
+    });
+}
+
+#[test]
+fn prop_sparsevec_json_roundtrip() {
+    property(30, |rng| {
+        let d = rng.range_u32(1, 1000);
+        let v = SparseVec::new(d, random_sparse(rng, d)).unwrap();
+        let back = SparseVec::from_json(&Json::parse(&v.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, v);
+    });
+}

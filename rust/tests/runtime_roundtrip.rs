@@ -1,0 +1,256 @@
+//! End-to-end runtime test: load the real AOT artifacts via PJRT,
+//! execute them, and compare against the pure-Rust hashers — proving
+//! that L1 (Pallas) ≡ L2 (jax pipeline) ≡ L3 (Rust oracle) on the very
+//! bytes the server ships.
+//!
+//! Requires `make artifacts`; tests self-skip when the directory is
+//! absent so `cargo test` stays green on a fresh clone.
+
+use cminhash::runtime::{EngineHandle, HostTensor, XlaEngine};
+use cminhash::sketch::{estimate, CMinHasher, Perm, Role, Sketcher};
+use cminhash::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn make_inputs(b: usize, d: usize, seed: u64) -> (Vec<i32>, Vec<Vec<u32>>, Perm, Perm) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut bits = vec![0i32; b * d];
+    let mut sparse_rows = Vec::with_capacity(b);
+    for row in 0..b {
+        let nnz = rng.range_usize(0, d / 8 + 2); // includes possibly-empty rows
+        let mut idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, d as u32)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        for &i in &idx {
+            bits[row * d + i as usize] = 1;
+        }
+        sparse_rows.push(idx);
+    }
+    let sigma = Perm::generate(d, seed, Role::Sigma);
+    let pi = Perm::generate(d, seed, Role::Pi);
+    (bits, sparse_rows, sigma, pi)
+}
+
+#[test]
+fn artifact_sketches_match_rust_hasher() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).expect("engine load");
+    let (b, d, k) = (8usize, 1024usize, 128usize);
+    let variant = "cminhash_b8_d1024_k128";
+    let (bits, rows, sigma, pi) = make_inputs(b, d, 7);
+    let out = engine
+        .execute(
+            variant,
+            &[
+                HostTensor::I32(bits),
+                HostTensor::I32(sigma.values_i32()),
+                HostTensor::I32(pi.doubled_i32()),
+            ],
+        )
+        .expect("execute");
+    let hashes = out[0].as_i32().unwrap();
+    let hasher = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+    for (row, idx) in rows.iter().enumerate() {
+        let want = hasher.sketch_sparse(idx);
+        let got: Vec<u32> = hashes[row * k..(row + 1) * k]
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(got, want, "row {row} mismatch (XLA vs Rust)");
+    }
+}
+
+#[test]
+fn sparse_artifact_matches_rust_hasher() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).expect("engine load");
+    let (b, d, f_max, k) = (8usize, 1024usize, 128usize, 128usize);
+    let variant = "cminhashs_b8_d1024_f128_k128";
+    let (_bits, rows, sigma, pi) = make_inputs(b, d, 13);
+    // Pack padded index rows (pad = 2D -> sentinel tail of pi3).
+    let pad = 2 * d as i32;
+    let mut idx = vec![pad; b * f_max];
+    for (row, r) in rows.iter().enumerate() {
+        for (j, &i) in r.iter().enumerate() {
+            idx[row * f_max + j] = i as i32;
+        }
+    }
+    let out = engine
+        .execute(
+            variant,
+            &[
+                HostTensor::I32(idx),
+                HostTensor::I32(sigma.inverse().values_i32()),
+                HostTensor::I32(pi.tripled_sentinel_i32()),
+            ],
+        )
+        .expect("execute sparse");
+    let hashes = out[0].as_i32().unwrap();
+    let hasher = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+    for (row, r) in rows.iter().enumerate() {
+        let want = hasher.sketch_sparse(r);
+        let got: Vec<u32> = hashes[row * k..(row + 1) * k]
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(got, want, "sparse row {row} mismatch (XLA vs Rust)");
+    }
+}
+
+#[test]
+fn estimator_artifact_matches_rust_estimate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).expect("engine load");
+    let (n, k) = (8usize, 128usize);
+    let mut rng = Rng::seed_from_u64(3);
+    let h1: Vec<i32> = (0..n * k).map(|_| rng.range_u32(0, 64) as i32).collect();
+    let h2: Vec<i32> = (0..n * k).map(|_| rng.range_u32(0, 64) as i32).collect();
+    let out = engine
+        .execute(
+            "estimate_n8_m8_k128",
+            &[HostTensor::I32(h1.clone()), HostTensor::I32(h2.clone())],
+        )
+        .expect("execute");
+    let jhat = out[0].as_f32().unwrap();
+    for i in 0..n {
+        for j in 0..n {
+            let a: Vec<u32> = h1[i * k..(i + 1) * k].iter().map(|&v| v as u32).collect();
+            let b: Vec<u32> = h2[j * k..(j + 1) * k].iter().map(|&v| v as u32).collect();
+            let want = estimate(&a, &b) as f32;
+            assert!(
+                (jhat[i * n + j] - want).abs() < 1e-6,
+                "estimate mismatch at ({i},{j}): {} vs {want}",
+                jhat[i * n + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_pi_and_classic_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).expect("engine load");
+    let (b, d, k) = (8usize, 1024usize, 128usize);
+    let (bits, rows, _sigma, pi) = make_inputs(b, d, 11);
+    // (0, pi) ablation artifact
+    let out = engine
+        .execute(
+            "cminhash0_b8_d1024_k128",
+            &[HostTensor::I32(bits.clone()), HostTensor::I32(pi.doubled_i32())],
+        )
+        .expect("execute 0pi");
+    let hashes = out[0].as_i32().unwrap();
+    let zp = cminhash::sketch::ZeroPiHasher::from_perm(k, &pi).unwrap();
+    for (row, idx) in rows.iter().enumerate() {
+        let want = zp.sketch_sparse(idx);
+        let got: Vec<u32> = hashes[row * k..(row + 1) * k]
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(got, want, "0pi row {row}");
+    }
+    // classic MinHash artifact
+    let perms: Vec<Perm> = (0..k as u32)
+        .map(|i| Perm::generate(d, 5, Role::Classic(i)))
+        .collect();
+    let mut pmat = Vec::with_capacity(k * d);
+    for p in &perms {
+        pmat.extend(p.values_i32());
+    }
+    let out = engine
+        .execute(
+            "minhash_b8_d1024_k128",
+            &[HostTensor::I32(bits), HostTensor::I32(pmat)],
+        )
+        .expect("execute classic");
+    let hashes = out[0].as_i32().unwrap();
+    let mh = cminhash::sketch::ClassicMinHasher::from_perms(&perms).unwrap();
+    for (row, idx) in rows.iter().enumerate() {
+        let want = mh.sketch_sparse(idx);
+        let got: Vec<u32> = hashes[row * k..(row + 1) * k]
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(got, want, "classic row {row}");
+    }
+}
+
+#[test]
+fn engine_handle_executes_from_other_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = EngineHandle::spawn(&dir).expect("spawn");
+    let (b, d, k) = (8usize, 1024usize, 128usize);
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let (bits, rows, sigma, pi) = make_inputs(b, d, 100 + t);
+            let out = h
+                .execute(
+                    "cminhash_b8_d1024_k128",
+                    vec![
+                        HostTensor::I32(bits),
+                        HostTensor::I32(sigma.values_i32()),
+                        HostTensor::I32(pi.doubled_i32()),
+                    ],
+                )
+                .expect("execute");
+            let hashes = out[0].as_i32().unwrap();
+            let hasher = CMinHasher::from_perms(k, &sigma, &pi).unwrap();
+            for (row, idx) in rows.iter().enumerate() {
+                let want = hasher.sketch_sparse(idx);
+                let got: Vec<u32> = hashes[row * k..(row + 1) * k]
+                    .iter()
+                    .map(|&v| v as u32)
+                    .collect();
+                assert_eq!(got, want);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn engine_rejects_bad_shapes_and_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).expect("engine load");
+    assert!(engine.execute("nonexistent", &[]).is_err());
+    // wrong input count
+    assert!(engine
+        .execute("cminhash_b8_d1024_k128", &[HostTensor::I32(vec![0; 8])])
+        .is_err());
+    // wrong element count
+    assert!(engine
+        .execute(
+            "cminhash_b8_d1024_k128",
+            &[
+                HostTensor::I32(vec![0; 17]),
+                HostTensor::I32(vec![0; 1024]),
+                HostTensor::I32(vec![0; 2048]),
+            ],
+        )
+        .is_err());
+    // wrong dtype
+    assert!(engine
+        .execute(
+            "cminhash_b8_d1024_k128",
+            &[
+                HostTensor::F32(vec![0.0; 8 * 1024]),
+                HostTensor::I32(vec![0; 1024]),
+                HostTensor::I32(vec![0; 2048]),
+            ],
+        )
+        .is_err());
+}

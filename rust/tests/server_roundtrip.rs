@@ -1,0 +1,170 @@
+//! Full-stack server test over real TCP: coordinator + batcher + engine
+//! + index behind the JSON-line protocol.  Uses the Rust engine (no
+//! artifacts needed) so it runs on a fresh clone; the XLA path over TCP
+//! is covered by `pipeline_consistency.rs` and the e2e example.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::protocol::{Request, Response};
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
+use std::sync::Arc;
+
+fn start_server() -> (Server, Arc<Coordinator>, ServeConfig) {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 512,
+        num_hashes: 64,
+        seed: 9,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg.clone()).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (server, svc, cfg)
+}
+
+#[test]
+fn ping_sketch_insert_estimate_query() {
+    let (server, _svc, cfg) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+
+    // ping
+    assert!(matches!(c.call(&Request::Ping).unwrap(), Response::Pong));
+
+    // sketch matches the local hasher bit-for-bit
+    let hasher = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+    let idx = vec![5u32, 100, 400];
+    let sk = c.sketch(512, idx.clone()).unwrap();
+    assert_eq!(sk, hasher.sketch_sparse(&idx));
+
+    // insert two overlapping docs, estimate by id
+    let a: Vec<u32> = (0..60).collect();
+    let b: Vec<u32> = (30..90).collect();
+    let ia = c.insert(512, a.clone()).unwrap();
+    let ib = c.insert(512, b.clone()).unwrap();
+    match c.call(&Request::Estimate { a: ia, b: ib }).unwrap() {
+        Response::Estimate { jhat } => {
+            // true J = 1/3; K = 64 so allow wide but meaningful bounds
+            assert!(jhat > 0.05 && jhat < 0.7, "jhat={jhat}");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // query returns the identical doc first with score 1.0
+    let hits = c.query(512, a.clone(), 5).unwrap();
+    assert_eq!(hits[0].id, ia);
+    assert_eq!(hits[0].score, 1.0);
+
+    // stats reflect the traffic
+    let raw = c.call_raw(&Request::Stats).unwrap();
+    assert!(raw.get("ok").unwrap().as_bool().unwrap());
+    assert!(raw.get("stored").unwrap().as_u64().unwrap() == 2);
+    let sketches = raw
+        .get("metrics")
+        .unwrap()
+        .get("sketches")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(sketches >= 4, "sketches={sketches}");
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let (server, _svc, _cfg) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+
+    // wrong dimension -> typed error, connection stays usable
+    match c.call(&Request::Sketch {
+        vec: SparseVec::new(16, vec![1]).unwrap(),
+    }) {
+        Ok(Response::Err { error }) => assert!(error.contains("shape mismatch"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    // unknown id estimate
+    match c.call(&Request::Estimate { a: 10_000, b: 2 }).unwrap() {
+        Response::Err { error } => assert!(error.contains("unknown id")),
+        other => panic!("{other:?}"),
+    }
+    // still alive
+    assert!(matches!(c.call(&Request::Ping).unwrap(), Response::Pong));
+}
+
+#[test]
+fn malformed_json_gets_error_line() {
+    use std::io::{BufRead, BufReader, Write};
+    let (server, _svc, _cfg) = start_server();
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    // and an unknown op
+    w.write_all(b"{\"op\":\"evil\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown op"), "{line}");
+}
+
+#[test]
+fn concurrent_clients_get_consistent_sketches() {
+    let (server, svc, cfg) = start_server();
+    let addr = server.addr().to_string();
+    let hasher = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+    let mut joins = Vec::new();
+    for t in 0..8u32 {
+        let addr = addr.clone();
+        let want = hasher.sketch_sparse(&[t, t + 50, t + 200]);
+        joins.push(std::thread::spawn(move || {
+            let mut c = BlockingClient::connect(&addr).unwrap();
+            for _ in 0..20 {
+                let sk = c.sketch(512, vec![t, t + 50, t + 200]).unwrap();
+                assert_eq!(sk, want);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (snap, _) = svc.stats();
+    assert_eq!(snap.sketches, 160);
+    assert!(
+        snap.batches <= 160,
+        "batching should coalesce at least some requests"
+    );
+}
+
+#[test]
+fn near_duplicate_detection_over_wire() {
+    // The dedup use-case end-to-end: insert a corpus with duplicate
+    // families, query, and check family members rank on top.
+    let (server, _svc, _cfg) = start_server();
+    let addr = server.addr().to_string();
+    let corpus = cminhash::data::near_duplicate_corpus(6, 3, 512, 60, 3, 4);
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let mut ids = Vec::new();
+    for row in corpus.rows() {
+        ids.push(c.insert(512, row.indices().to_vec()).unwrap());
+    }
+    // Query with family 0's first member: its 2 siblings must appear in
+    // the top 3 (itself + siblings).
+    let hits = c.query(512, corpus.rows()[0].indices().to_vec(), 3).unwrap();
+    let top: Vec<u64> = hits.iter().map(|h| h.id).collect();
+    for sibling in [ids[0], ids[1], ids[2]] {
+        assert!(top.contains(&sibling), "top={top:?} missing {sibling}");
+    }
+}
