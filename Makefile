@@ -1,0 +1,43 @@
+# cminhash — build/test/bench/doc entry points.
+#
+# `make verify` is the tier-1 gate CI runs on every push.
+# `make artifacts` is the only target that needs Python (JAX); everything
+# else is pure cargo.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test bench doc verify artifacts figures clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Compile every bench target, then run them (fast mode keeps CI cheap).
+# Results land in results/bench/*.csv.
+bench:
+	$(CARGO) build --release --benches
+	CMINHASH_BENCH_FAST=1 $(CARGO) bench
+
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+verify: build test
+
+# AOT-lower the L1/L2 pipelines to artifacts/ (HLO text + manifest) and
+# export the golden vectors for rust/tests/golden.rs.  Optional: the
+# pure-Rust engine serves identical sketches without it.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
+	cd python && $(PYTHON) -m compile.golden --out ../artifacts/golden.json
+
+figures:
+	$(CARGO) run --release -- figures --all --out results
+
+clean:
+	$(CARGO) clean
+	rm -rf results

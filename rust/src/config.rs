@@ -121,7 +121,10 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:7878".to_string(),
             artifacts_dir: PathBuf::from("artifacts"),
-            engine: EngineKind::Xla,
+            // Rust is the default so a bare `cminhash serve` works on a
+            // fresh clone; xla requires `make artifacts` (and, in this
+            // offline build, the real PJRT bindings — see runtime::xla).
+            engine: EngineKind::Rust,
             dim: 4096,
             num_hashes: 256,
             seed: 42,

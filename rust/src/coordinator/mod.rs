@@ -14,8 +14,8 @@
 //!           sketch store ─▶ LSH banding index
 //! ```
 //!
-//! The batcher state machine ([`batcher::Batcher`]) is pure and unit
-//! tested; [`service::Coordinator`] wires it to tokio.
+//! The batcher state machine ([`Batcher`]) is pure and unit tested;
+//! [`Coordinator`] wires it to the thread-per-connection server.
 
 mod batcher;
 mod service;

@@ -1,8 +1,9 @@
 //! Datasets and workloads: everything the evaluation section needs.
 //!
 //! The paper's §4.2 uses NIPS/BBC (text) and MNIST/CIFAR (images); none
-//! are available in this offline image, so [`corpora`] generates
-//! synthetic stand-ins that preserve the property the experiment
+//! are available in this offline image, so the corpus generators
+//! ([`zipf_corpus`], [`image_corpus`]) produce synthetic stand-ins
+//! that preserve the property the experiment
 //! measures (see DESIGN.md "Substitutions"): text-like corpora have
 //! Zipf-distributed token sets with mild locational structure, while
 //! image-like corpora have strongly *contiguous* nonzero patterns —
@@ -14,6 +15,6 @@ mod structured;
 mod workload;
 
 pub use corpora::{image_corpus, near_duplicate_corpus, zipf_corpus, CorpusKind};
-pub use dataset::BinaryDataset;
+pub use dataset::{BinaryDataset, DatasetStats};
 pub use structured::{structured_pair, PairPattern};
-pub use workload::{Workload, WorkloadSpec};
+pub use workload::{TraceItem, Workload, WorkloadSpec};

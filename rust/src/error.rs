@@ -13,8 +13,11 @@ pub type Result<T> = std::result::Result<T, Error>;
 pub enum Error {
     /// Request shape does not match any loaded artifact variant.
     ShapeMismatch {
+        /// Which quantity mismatched ("vector dim", "sketch", …).
         what: &'static str,
+        /// The size the receiver requires.
         expected: usize,
+        /// The size the request carried.
         got: usize,
     },
     /// Named artifact missing from the manifest / registry.
@@ -67,8 +70,8 @@ impl From<std::io::Error> for Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }

@@ -7,7 +7,7 @@
 //!   circulant hashes of a batch; lowered to HLO text in `artifacts/`.
 //! * **L2** — JAX sketch pipelines (Algorithm 1/2/3 + estimator graphs),
 //!   also AOT-lowered.
-//! * **L3** — this crate: a tokio coordinator that loads the artifacts
+//! * **L3** — this crate: a serving coordinator that loads the artifacts
 //!   via PJRT ([`runtime`]), batches client requests ([`coordinator`]),
 //!   serves sketches / estimates / near-neighbor queries ([`server`],
 //!   [`index`]), and ships pure-Rust hashers ([`sketch`]), exact paper
@@ -28,6 +28,9 @@
 //! let j = cminhash::sketch::estimate(&hv, &hw);
 //! assert!(j > 0.0 && j <= 1.0);
 //! ```
+
+#![deny(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod bench;
 pub mod config;

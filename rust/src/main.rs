@@ -7,11 +7,12 @@
 //! * `sketch`   — offline batch sketching of a dataset file
 //! * `loadgen`  — drive a running server and report latency/throughput
 //! * `info`     — list compiled artifact variants
+//! * `theory`   — evaluate the paper's exact variance formulas
 //!
-//! Flags are parsed by the in-tree [`Args`] helper (no clap in the
-//! offline build).
+//! Flags are parsed by the in-tree `Args` helper, and errors flow
+//! through the crate's own [`cminhash::Error`] — the binary has zero
+//! external dependencies (no clap, no anyhow).
 
-use anyhow::{bail, Context};
 use cminhash::config::{EngineKind, ServeConfig};
 use cminhash::coordinator::Coordinator;
 use cminhash::data::{BinaryDataset, CorpusKind};
@@ -20,6 +21,7 @@ use cminhash::server::protocol::Request;
 use cminhash::server::{BlockingClient, Server};
 use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
 use cminhash::util::rng::Rng;
+use cminhash::{Error, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -40,13 +42,18 @@ USAGE:
   cminhash theory  --d D --f F [--a A] [--k K]
 ";
 
+/// Build the CLI's uniform error type (everything is user input here).
+fn usage_err(msg: impl Into<String>) -> Error {
+    Error::Invalid(msg.into())
+}
+
 /// Tiny `--flag value` / `--flag` parser.
 struct Args {
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+    fn parse(argv: &[String]) -> Result<Self> {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
@@ -59,12 +66,12 @@ impl Args {
                 } else {
                     let v = argv
                         .get(i + 1)
-                        .with_context(|| format!("--{name} needs a value"))?;
+                        .ok_or_else(|| usage_err(format!("--{name} needs a value")))?;
                     flags.insert(name.to_string(), v.clone());
                     i += 2;
                 }
             } else {
-                bail!("unexpected argument {a:?}");
+                return Err(usage_err(format!("unexpected argument {a:?}")));
             }
         }
         Ok(Args { flags })
@@ -74,7 +81,12 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str())
     }
 
-    fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| usage_err(format!("--{name} required")))
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
     {
@@ -83,8 +95,16 @@ impl Args {
             Some(v) => v
                 .parse::<T>()
                 .map(Some)
-                .map_err(|e| anyhow::anyhow!("bad --{name} {v:?}: {e}")),
+                .map_err(|e| usage_err(format!("bad --{name} {v:?}: {e}"))),
         }
+    }
+
+    fn require_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_parsed(name)?
+            .ok_or_else(|| usage_err(format!("--{name} required")))
     }
 
     fn has(&self, name: &str) -> bool {
@@ -92,7 +112,14 @@ impl Args {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         eprint!("{USAGE}");
@@ -111,11 +138,11 @@ fn main() -> anyhow::Result<()> {
             print!("{USAGE}");
             Ok(())
         }
-        other => bail!("unknown command {other:?}\n{USAGE}"),
+        other => Err(usage_err(format!("unknown command {other:?}\n{USAGE}"))),
     }
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
         Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
         None => ServeConfig::default(),
@@ -151,11 +178,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     server.join_forever();
 }
 
-fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+fn cmd_figures(args: &Args) -> Result<()> {
     let all = args.has("all");
     let fig = args.get_parsed::<u32>("fig")?;
     if fig.is_none() && !all {
-        bail!("pass --fig N or --all");
+        return Err(usage_err("pass --fig N or --all"));
     }
     let out = PathBuf::from(args.get("out").unwrap_or("results"));
     let t = Instant::now();
@@ -164,17 +191,17 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_dataset(args: &Args) -> anyhow::Result<()> {
-    let kind = match args.get("kind").context("--kind required")? {
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let kind = match args.require("kind")? {
         "nips" => CorpusKind::TextNips,
         "bbc" => CorpusKind::TextBbc,
         "mnist" => CorpusKind::ImageMnist,
         "cifar" => CorpusKind::ImageCifar,
-        other => bail!("unknown kind {other} (nips|bbc|mnist|cifar)"),
+        other => return Err(usage_err(format!("unknown kind {other} (nips|bbc|mnist|cifar)"))),
     };
     let n = args.get_parsed::<usize>("n")?.unwrap_or(100);
     let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0);
-    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let out = PathBuf::from(args.require("out")?);
     let ds = kind.generate(n, seed);
     ds.save(&out)?;
     println!("wrote {} rows (D={}) to {}", ds.len(), ds.dim(), out.display());
@@ -184,9 +211,9 @@ fn cmd_dataset(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
-    let input = PathBuf::from(args.get("input").context("--input required")?);
-    let out = PathBuf::from(args.get("out").context("--out required")?);
+fn cmd_sketch(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.require("input")?);
+    let out = PathBuf::from(args.require("out")?);
     let num_hashes = args.get_parsed::<usize>("num-hashes")?.unwrap_or(256);
     let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
     let ds = BinaryDataset::load(&input)?;
@@ -216,18 +243,23 @@ fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let requests = args.get_parsed::<usize>("requests")?.unwrap_or(1000);
     let dim = args.get_parsed::<u32>("dim")?.unwrap_or(4096);
     let nnz = args.get_parsed::<u32>("nnz")?.unwrap_or(64);
     let conns = args.get_parsed::<usize>("conns")?.unwrap_or(4);
     let per_conn = requests / conns.max(1);
+    if per_conn == 0 {
+        return Err(usage_err(format!(
+            "--requests {requests} is fewer than --conns {conns}; nothing to send"
+        )));
+    }
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..conns {
         let addr = addr.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
             let mut client = BlockingClient::connect(&addr)?;
             let mut rng = Rng::seed_from_u64(c as u64);
             let mut lats = Vec::with_capacity(per_conn);
@@ -263,13 +295,15 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
 
 /// Print the paper's exact variance theory for a (D, f, a, K) point —
 /// a quick calculator for capacity planning ("how big must K be?").
-fn cmd_theory(args: &Args) -> anyhow::Result<()> {
+fn cmd_theory(args: &Args) -> Result<()> {
     use cminhash::theory::{var_minhash, var_sigma_pi, variance_ratio};
-    let d = args.get_parsed::<usize>("d")?.context("--d required")?;
-    let f = args.get_parsed::<usize>("f")?.context("--f required")?;
+    let d = args.require_parsed::<usize>("d")?;
+    let f = args.require_parsed::<usize>("f")?;
     let a = args.get_parsed::<usize>("a")?.unwrap_or(f / 2);
     let k = args.get_parsed::<usize>("k")?.unwrap_or(256.min(d));
-    anyhow::ensure!(f <= d && a <= f && k >= 1 && k <= d, "need a <= f <= D, 1 <= K <= D");
+    if !(f >= 1 && f <= d && a <= f && k >= 1 && k <= d) {
+        return Err(usage_err("need a <= f <= D with f >= 1, and 1 <= K <= D"));
+    }
     let j = a as f64 / f as f64;
     println!("D={d} f={f} a={a} K={k}  (J = {j:.4})");
     println!("  Var[J_MH]        = {:.6e}   (sd {:.4})", var_minhash(j, k), var_minhash(j, k).sqrt());
@@ -282,7 +316,7 @@ fn cmd_theory(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let m = Manifest::load(&artifacts)?;
     println!("{} artifacts in {}:", m.artifacts.len(), artifacts.display());

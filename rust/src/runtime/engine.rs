@@ -7,6 +7,7 @@
 //! channels, with [`HostTensor`] as the plain-data interchange type.
 
 use super::artifact::{ArtifactMeta, Manifest};
+use super::xla;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc as std_mpsc;

@@ -7,9 +7,15 @@
 //! ([`HostTensor`]) over channels; everything else in the process stays
 //! `Send + Sync`.  This also gives the batcher a natural serialization
 //! point: XLA CPU already parallelizes *inside* an execution.
+//!
+//! In the offline build the PJRT bindings are replaced by the in-tree
+//! [`xla`] stub module, which compiles the same engine code but reports
+//! a clear "not available" error at start-up; the pure-Rust engine
+//! remains the fully supported path.
 
 mod artifact;
 mod engine;
+pub mod xla;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use engine::{EngineHandle, HostTensor, XlaEngine};

@@ -428,12 +428,12 @@ impl Json {
         }
     }
 
-    /// As Vec<u32>.
+    /// As `Vec<u32>`.
     pub fn as_u32_vec(&self) -> crate::Result<Vec<u32>> {
         self.as_arr()?.iter().map(|v| v.as_u32()).collect()
     }
 
-    /// As Vec<usize>.
+    /// As `Vec<usize>`.
     pub fn as_usize_vec(&self) -> crate::Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
