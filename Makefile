@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench doc verify artifacts figures clean
+.PHONY: all build test bench doc clippy verify artifacts figures clean
 
 all: build
 
@@ -16,6 +16,9 @@ build:
 
 test:
 	$(CARGO) test -q
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
 
 # Compile every bench target, then run them (fast mode keeps CI cheap).
 # Results land in results/bench/*.csv.
@@ -26,7 +29,7 @@ bench:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-verify: build test
+verify: build test clippy
 
 # AOT-lower the L1/L2 pipelines to artifacts/ (HLO text + manifest) and
 # export the golden vectors for rust/tests/golden.rs.  Optional: the

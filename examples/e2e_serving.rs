@@ -42,6 +42,7 @@ fn main() -> cminhash::Result<()> {
             bands: 32,
             rows_per_band: 4,
         },
+        store: Default::default(),
         addr: "127.0.0.1:0".into(),
     };
     println!("== e2e serving driver (engine={engine:?}, D={dim}, K={k}) ==");
@@ -111,10 +112,15 @@ fn main() -> cminhash::Result<()> {
         lats[lats.len() - 1]
     );
 
-    let (snap, stored) = svc.stats();
+    let (snap, store) = svc.stats();
     println!(
-        "batches={}  mean fill={:.1}/{}  pad rows={}  stored sketches={stored}",
-        snap.batches, snap.mean_batch_fill, 64, snap.pad_rows
+        "batches={}  mean fill={:.1}/{}  pad rows={}  stored sketches={} across {} shards",
+        snap.batches,
+        snap.mean_batch_fill,
+        64,
+        snap.pad_rows,
+        store.stored,
+        store.shards.len()
     );
     println!(
         "batch exec latency: mean={:.2}ms p99<={:.2}ms",

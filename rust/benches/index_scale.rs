@@ -1,0 +1,127 @@
+//! Sharded vs. single-shard index throughput at scale: concurrent
+//! inserts and queries against `ShardedIndex` at 100k items (20k under
+//! `CMINHASH_BENCH_FAST=1`), sweeping the shard count.  Emits
+//! `BENCH_index_scale.json` alongside the usual CSV so the perf
+//! trajectory of the store subsystem is machine-readable.
+//!
+//! The corpus is families of near-duplicate sketches (mutated copies
+//! of ~1k bases) so band postings actually collide and queries do real
+//! re-ranking work, without paying 100k full hashing passes.
+
+use cminhash::bench::Harness;
+use cminhash::index::IndexConfig;
+use cminhash::store::ShardedIndex;
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use std::time::Instant;
+
+const K: usize = 128;
+const QUERIES: usize = 2_000;
+
+fn corpus(n: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(7);
+    let bases: Vec<Vec<u32>> = (0..1024)
+        .map(|_| (0..K).map(|_| rng.range_u32(0, 1 << 20)).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let mut sk = bases[i % bases.len()].clone();
+            for _ in 0..rng.range_usize(1, K / 4) {
+                let pos = rng.range_usize(0, K);
+                sk[pos] = rng.range_u32(0, 1 << 20);
+            }
+            sk
+        })
+        .collect()
+}
+
+/// Insert the whole corpus from `threads` writers, then issue QUERIES
+/// top-10 queries from the same number of readers.  Returns
+/// (inserts/s, queries/s).
+fn run(h: &mut Harness, shards: usize, items: &[Vec<u32>], threads: usize) -> (f64, f64) {
+    let cfg = IndexConfig {
+        bands: 16,
+        rows_per_band: 8,
+    };
+    let idx = ShardedIndex::new(K, cfg, shards).unwrap();
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for chunk in items.chunks(items.len() / threads + 1) {
+            let idx = &idx;
+            s.spawn(move || {
+                for sk in chunk {
+                    idx.insert(sk).unwrap();
+                }
+            });
+        }
+    });
+    let insert_wall = t0.elapsed();
+    h.report(
+        &format!("insert {} items, {shards} shard(s), {threads} writers", items.len()),
+        insert_wall,
+        items.len() as u64,
+    );
+    assert_eq!(idx.len(), items.len());
+
+    let per = QUERIES / threads;
+    let total = per * threads;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let idx = &idx;
+            s.spawn(move || {
+                for q in 0..per {
+                    let probe = &items[(t * per + q) * items.len() / total];
+                    let hits = idx.query(probe, 10).unwrap();
+                    assert!(!hits.is_empty());
+                }
+            });
+        }
+    });
+    let query_wall = t0.elapsed();
+    h.report(
+        &format!("query {total} probes, {shards} shard(s), {threads} readers"),
+        query_wall,
+        total as u64,
+    );
+
+    (
+        items.len() as f64 / insert_wall.as_secs_f64(),
+        total as f64 / query_wall.as_secs_f64(),
+    )
+}
+
+fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
+    let n = if fast { 20_000 } else { 100_000 };
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get().min(8))
+        .unwrap_or(4);
+    let mut h = Harness::new("index_scale");
+    println!("corpus: {n} sketches of K={K}, {threads} client threads");
+    let items = corpus(n);
+
+    let mut results = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let (ins, qry) = run(&mut h, shards, &items, threads);
+        println!("  -> {shards} shard(s): {ins:.0} inserts/s, {qry:.0} queries/s");
+        results.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("insert_per_s", Json::Num(ins)),
+            ("query_per_s", Json::Num(qry)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("index_scale")),
+        ("items", Json::Num(n as f64)),
+        ("k", Json::Num(K as f64)),
+        ("queries", Json::Num(QUERIES as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_index_scale.json", out.to_string()).unwrap();
+    println!("wrote BENCH_index_scale.json");
+    h.write_csv().unwrap();
+}

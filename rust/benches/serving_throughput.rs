@@ -56,6 +56,7 @@ fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usi
             bands: 32,
             rows_per_band: 4,
         },
+        store: Default::default(),
         addr: "127.0.0.1:0".into(),
     };
     let svc = match Coordinator::start(cfg) {

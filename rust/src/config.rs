@@ -95,6 +95,17 @@ impl Default for IndexSettings {
     }
 }
 
+/// Sharding + persistence settings for the sketch store subsystem.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreSettings {
+    /// Number of index shards; 0 = auto (largest power of two ≤ the
+    /// machine's cores, capped at 8).
+    pub shards: usize,
+    /// Durability directory for the snapshot + write-ahead log;
+    /// `None` disables persistence (sketches die with the process).
+    pub persist_dir: Option<PathBuf>,
+}
+
 /// Top-level serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -114,6 +125,8 @@ pub struct ServeConfig {
     pub batch: BatchConfig,
     /// Index.
     pub index: IndexSettings,
+    /// Store sharding + persistence.
+    pub store: StoreSettings,
 }
 
 impl Default for ServeConfig {
@@ -130,6 +143,7 @@ impl Default for ServeConfig {
             seed: 42,
             batch: BatchConfig::default(),
             index: IndexSettings::default(),
+            store: StoreSettings::default(),
         }
     }
 }
@@ -181,6 +195,17 @@ impl ServeConfig {
                 cfg.index.rows_per_band = v.as_usize()?;
             }
         }
+        if let Some(st) = j.get_opt("store") {
+            if let Some(v) = st.get_opt("shards") {
+                cfg.store.shards = v.as_usize()?;
+            }
+            if let Some(v) = st.get_opt("persist_dir") {
+                cfg.store.persist_dir = match v {
+                    Json::Null => None,
+                    other => Some(PathBuf::from(other.as_str()?)),
+                };
+            }
+        }
         Ok(cfg)
     }
 
@@ -200,6 +225,12 @@ impl ServeConfig {
         }
         if self.batch.max_batch == 0 {
             return Err(crate::Error::Invalid("max_batch must be > 0".into()));
+        }
+        if self.store.shards > 1024 {
+            return Err(crate::Error::Invalid(format!(
+                "store.shards = {} is absurd (max 1024)",
+                self.store.shards
+            )));
         }
         Ok(())
     }
@@ -267,6 +298,30 @@ mod tests {
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.batch.policy, BatchPolicy::Deadline);
         assert_eq!(c.batch.max_delay_us, 77);
+    }
+
+    #[test]
+    fn store_settings_parse_and_default() {
+        let c = ServeConfig::default();
+        assert_eq!(c.store.shards, 0, "auto by default");
+        assert!(c.store.persist_dir.is_none(), "in-memory by default");
+        let j = crate::util::json::Json::parse(
+            r#"{"store": {"shards": 4, "persist_dir": "data/sketches"}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.store.shards, 4);
+        assert_eq!(
+            c.store.persist_dir,
+            Some(PathBuf::from("data/sketches"))
+        );
+        // explicit null turns persistence off
+        let j = crate::util::json::Json::parse(r#"{"store": {"persist_dir": null}}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).unwrap().store.persist_dir.is_none());
+        // absurd shard counts are rejected
+        let mut c = ServeConfig::default();
+        c.store.shards = 100_000;
+        assert!(c.validate().is_err());
     }
 
     #[test]

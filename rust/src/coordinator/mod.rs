@@ -1,7 +1,7 @@
 //! L3 coordinator — the serving-system contribution.
 //!
 //! ```text
-//! clients ─▶ Coordinator::sketch/insert/estimate/query
+//! clients ─▶ Coordinator::sketch/insert/delete/estimate/query/save
 //!                 │ (sketch requests)
 //!                 ▼
 //!           dynamic batcher (max_batch | max_delay)
@@ -11,11 +11,17 @@
 //!                          pure-Rust hashers (fallback)
 //!                 │
 //!                 ▼
-//!           sketch store ─▶ LSH banding index
+//!           sharded sketch store (crate::store): WAL + snapshot
+//!           durability, per-shard banding indexes, parallel query
+//!           fan-out
 //! ```
 //!
 //! The batcher state machine ([`Batcher`]) is pure and unit tested;
 //! [`Coordinator`] wires it to the thread-per-connection server.
+//! [`SketchStore`] is a standalone single-shard storage primitive
+//! with the same delete/re-insert contract; the sharded store itself
+//! keeps sketches inside each shard's
+//! [`BandingIndex`](crate::index::BandingIndex).
 
 mod batcher;
 mod service;

@@ -10,16 +10,18 @@
 
 use crate::config::{EngineKind, ServeConfig};
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::store::SketchStore;
-use crate::index::{BandingIndex, IndexConfig, Neighbor};
+use crate::index::{IndexConfig, Neighbor};
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::runtime::{EngineHandle, HostTensor};
-use crate::sketch::{estimate, CMinHasher, Perm, Role, Sketcher, SparseVec};
+use crate::sketch::{CMinHasher, Perm, Role, Sketcher, SparseVec};
+use crate::store::{resolve_shards, PersistentIndex, StoreStats};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Which compute backend the coordinator drives.
+// One long-lived value per service; the Xla/Rust size gap is irrelevant.
+#[allow(clippy::large_enum_variant)]
 pub enum EngineBackend {
     /// AOT XLA artifacts via the PJRT engine thread.  The *sparse*
     /// (gather-kernel) variant is preferred when every row in a batch
@@ -58,31 +60,32 @@ struct SketchJob {
 pub struct Coordinator {
     cfg: ServeConfig,
     tx: mpsc::Sender<SketchJob>,
-    store: Mutex<SketchStore>,
-    index: Mutex<BandingIndex>,
+    store: PersistentIndex,
     metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// Build the backend, spawn the batch pump thread, return the
-    /// service.
+    /// Build the backend, open (and, with persistence configured,
+    /// recover) the sharded sketch store, spawn the batch pump thread,
+    /// return the service.
     pub fn start(cfg: ServeConfig) -> crate::Result<Arc<Self>> {
         cfg.validate()?;
         let backend = Self::build_backend(&cfg)?;
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = mpsc::channel::<SketchJob>();
-        let index = BandingIndex::new(
+        let store = PersistentIndex::open(
             cfg.num_hashes,
             IndexConfig {
                 bands: cfg.index.bands,
                 rows_per_band: cfg.index.rows_per_band,
             },
+            resolve_shards(cfg.store.shards),
+            cfg.store.persist_dir.as_deref(),
         )?;
         let svc = Arc::new(Coordinator {
             cfg: cfg.clone(),
             tx,
-            store: Mutex::new(SketchStore::new()),
-            index: Mutex::new(index),
+            store,
             metrics: metrics.clone(),
         });
         let pump_metrics = metrics;
@@ -182,24 +185,27 @@ impl Coordinator {
     }
 
     /// Sketch, store, and index a vector; returns `(id, sketch)`.
+    /// With persistence configured the insert is WAL-logged before
+    /// this returns.
     pub fn insert(&self, v: SparseVec) -> crate::Result<(u64, Vec<u32>)> {
         let sk = self.sketch(v)?;
-        let id = self.store.lock().unwrap().insert(sk.clone());
-        self.index.lock().unwrap().insert(id, &sk)?;
+        let id = self.store.insert(sk.clone())?;
         Ok((id, sk))
+    }
+
+    /// Delete a stored id (error on unknown ids); the deletion is
+    /// WAL-logged and the id never resurfaces in query results.
+    pub fn delete(&self, id: u64) -> crate::Result<()> {
+        self.store.delete(id)?;
+        Metrics::inc(&self.metrics.deletes);
+        Ok(())
     }
 
     /// Estimate J between two stored sketches.
     pub fn estimate_ids(&self, a: u64, b: u64) -> crate::Result<f64> {
-        let store = self.store.lock().unwrap();
-        let sa = store
-            .get(a)
-            .ok_or_else(|| crate::Error::Invalid(format!("unknown id {a}")))?;
-        let sb = store
-            .get(b)
-            .ok_or_else(|| crate::Error::Invalid(format!("unknown id {b}")))?;
+        let jhat = self.store.estimate(a, b)?;
         Metrics::inc(&self.metrics.estimates);
-        Ok(estimate(sa, sb))
+        Ok(jhat)
     }
 
     /// Estimate J between two raw vectors (sketches both).
@@ -207,14 +213,19 @@ impl Coordinator {
         let sv = self.sketch(v)?;
         let sw = self.sketch(w)?;
         Metrics::inc(&self.metrics.estimates);
-        Ok(estimate(&sv, &sw))
+        Ok(crate::sketch::estimate(&sv, &sw))
     }
 
-    /// Top-k near neighbors of a vector among inserted items.
+    /// Top-k near neighbors of a vector among inserted items, fanned
+    /// out across the store's shards.  `topk == 0` is a client error
+    /// (it could only ever return nothing).
     pub fn query(&self, v: SparseVec, topk: usize) -> crate::Result<Vec<Neighbor>> {
+        if topk == 0 {
+            return Err(crate::Error::Invalid("topk must be at least 1".into()));
+        }
         let start = Instant::now();
         let sk = self.sketch(v)?;
-        let out = self.index.lock().unwrap().query(&sk, topk);
+        let out = self.store.query(&sk, topk)?;
         self.metrics
             .query_latency
             .record(start.elapsed().as_micros() as u64);
@@ -226,12 +237,18 @@ impl Coordinator {
     pub fn query_above(&self, v: SparseVec, threshold: f64) -> crate::Result<Vec<Neighbor>> {
         let sk = self.sketch(v)?;
         Metrics::inc(&self.metrics.queries);
-        Ok(self.index.lock().unwrap().query_above(&sk, threshold))
+        self.store.query_above(&sk, threshold)
     }
 
-    /// Metrics + store size snapshot.
-    pub fn stats(&self) -> (MetricsSnapshot, usize) {
-        (self.metrics.snapshot(), self.store.lock().unwrap().len())
+    /// Fold the WAL into a fresh snapshot; returns persisted bytes.
+    /// Errors when the service runs without a persist directory.
+    pub fn save(&self) -> crate::Result<u64> {
+        self.store.compact()
+    }
+
+    /// Metrics + store occupancy/durability snapshot.
+    pub fn stats(&self) -> (MetricsSnapshot, StoreStats) {
+        (self.metrics.snapshot(), self.store.stats())
     }
 }
 
@@ -242,6 +259,7 @@ impl Coordinator {
 /// engine is free — continuous batching, no idle waiting (§Perf: cut
 /// rust-engine mean latency ~3× vs deadline batching at equal
 /// throughput).  `Deadline`: classic wait-up-to-`max_delay`.
+#[allow(clippy::too_many_arguments)] // one private call site, plain plumbing
 fn batch_pump(
     rx: mpsc::Receiver<SketchJob>,
     backend: EngineBackend,
@@ -257,7 +275,7 @@ fn batch_pump(
         EngineBackend::Xla { dense, sparse, .. } => sparse
             .last()
             .map(|(_, b, _)| *b)
-            .or(dense.as_ref().map(|(_, b)| *b))
+            .or_else(|| dense.as_ref().map(|(_, b)| *b))
             .unwrap_or(max_batch),
         EngineBackend::Rust { .. } => max_batch,
     };
@@ -509,9 +527,50 @@ mod tests {
         let svc = Coordinator::start(rust_cfg()).unwrap();
         let bad = SparseVec::new(100, vec![1]).unwrap();
         assert!(matches!(
-            svc.sketch(bad),
+            svc.sketch(bad.clone()),
             Err(crate::Error::ShapeMismatch { .. })
         ));
+        // query paths surface the same clean error, not a panic
+        assert!(matches!(
+            svc.query(bad.clone(), 3),
+            Err(crate::Error::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            svc.query_above(bad, 0.5),
+            Err(crate::Error::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn topk_zero_is_a_client_error() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let v = SparseVec::new(512, vec![1, 2, 3]).unwrap();
+        match svc.query(v, 0) {
+            Err(crate::Error::Invalid(msg)) => assert!(msg.contains("topk"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn delete_removes_from_queries_and_counts() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let v = SparseVec::new(512, (0..50).collect()).unwrap();
+        let (id, _) = svc.insert(v.clone()).unwrap();
+        svc.delete(id).unwrap();
+        assert!(svc.delete(id).is_err(), "double delete is an error");
+        assert!(svc.query(v, 3).unwrap().iter().all(|n| n.id != id));
+        assert!(svc.estimate_ids(id, id).is_err());
+        let (snap, store) = svc.stats();
+        assert_eq!(snap.deletes, 1);
+        assert_eq!(store.stored, 0);
+        assert_eq!(store.shards.iter().sum::<usize>(), 0);
+        assert_eq!(store.persisted_bytes, 0, "no persistence configured");
+    }
+
+    #[test]
+    fn save_requires_persistence() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        assert!(svc.save().is_err());
     }
 
     #[test]

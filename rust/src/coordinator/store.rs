@@ -1,8 +1,14 @@
-//! Sketch store: id-keyed append-only storage of computed sketches.
+//! Sketch store: a standalone, single-shard id-keyed sketch map with
+//! monotonically increasing fresh ids, deletion, and explicit-id
+//! re-insert — the same storage contract the sharded store
+//! (`crate::store`) implements, which keeps its sketches inside each
+//! shard's `BandingIndex` rather than composing this type.  Useful on
+//! its own for embedding a flat sketch table without LSH postings.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-/// Append-only sketch storage with monotonically increasing ids.
+/// Id-keyed sketch storage with monotonically increasing fresh ids.
 #[derive(Debug, Default)]
 pub struct SketchStore {
     next_id: u64,
@@ -21,6 +27,27 @@ impl SketchStore {
         self.next_id += 1;
         self.sketches.insert(id, sketch);
         id
+    }
+
+    /// Insert under a caller-chosen id (recovery / re-insert after
+    /// delete).  Keeps the fresh-id counter ahead of every explicit
+    /// id.  Returns `false` (and leaves the store unchanged) if the id
+    /// is already occupied.
+    pub fn insert_with_id(&mut self, id: u64, sketch: Vec<u32>) -> bool {
+        match self.sketches.entry(id) {
+            Entry::Occupied(_) => false,
+            Entry::Vacant(slot) => {
+                slot.insert(sketch);
+                self.next_id = self.next_id.max(id.saturating_add(1));
+                true
+            }
+        }
+    }
+
+    /// Remove a sketch, returning it if present.  Ids handed out by
+    /// [`SketchStore::insert`] are never reused after removal.
+    pub fn remove(&mut self, id: u64) -> Option<Vec<u32>> {
+        self.sketches.remove(&id)
     }
 
     /// Fetch a sketch by id.
@@ -53,5 +80,30 @@ mod tests {
         assert_eq!(s.get(b), Some([2u32].as_slice()));
         assert_eq!(s.get(999), None);
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn remove_and_reinsert() {
+        let mut s = SketchStore::new();
+        let a = s.insert(vec![1]);
+        assert_eq!(s.remove(a), Some(vec![1]));
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert!(s.is_empty());
+        // fresh ids are never reused after a delete
+        let b = s.insert(vec![2]);
+        assert!(b > a);
+        // explicit-id re-insert works; occupied ids are rejected
+        assert!(s.insert_with_id(a, vec![3]));
+        assert!(!s.insert_with_id(b, vec![9]));
+        assert_eq!(s.get(a), Some([3u32].as_slice()));
+        assert_eq!(s.get(b), Some([2u32].as_slice()));
+    }
+
+    #[test]
+    fn insert_with_id_advances_fresh_ids() {
+        let mut s = SketchStore::new();
+        assert!(s.insert_with_id(100, vec![7]));
+        let fresh = s.insert(vec![8]);
+        assert!(fresh > 100, "fresh id {fresh} must skip past explicit ids");
     }
 }

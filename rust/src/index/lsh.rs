@@ -41,6 +41,15 @@ pub struct Neighbor {
     pub score: f64,
 }
 
+/// Sort neighbors into the one total result order every query path
+/// shares — score descending, then id ascending.  The sharded store
+/// merges per-shard results with this same function, which is what
+/// makes sharding a pure scaling knob (N = 1 byte-identical to the
+/// bare index, N > 1 merged deterministically).
+pub fn sort_neighbors(xs: &mut [Neighbor]) {
+    xs.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+}
+
 /// The banding index: b hash tables over band signatures, plus the
 /// stored sketches for re-ranking.
 #[derive(Debug)]
@@ -123,6 +132,33 @@ impl BandingIndex {
         Ok(())
     }
 
+    /// Remove an id, erasing its band postings in place (tombstone
+    /// free: the posting lists shrink immediately, so a deleted item
+    /// can never resurface as a candidate).  Returns the removed
+    /// sketch, or `None` if the id was not present.  The id may be
+    /// re-inserted afterwards.
+    pub fn remove(&mut self, id: u64) -> Option<Vec<u32>> {
+        let sketch = self.sketches.remove(&id)?;
+        let r = self.cfg.rows_per_band;
+        for (b, table) in self.tables.iter_mut().enumerate() {
+            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
+            if let Some(ids) = table.get_mut(&sig) {
+                if let Some(pos) = ids.iter().position(|&x| x == id) {
+                    ids.swap_remove(pos);
+                }
+                if ids.is_empty() {
+                    table.remove(&sig);
+                }
+            }
+        }
+        Some(sketch)
+    }
+
+    /// Iterate stored `(id, sketch)` pairs in unspecified order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> + '_ {
+        self.sketches.iter().map(|(&id, s)| (id, s.as_slice()))
+    }
+
     /// Raw candidate set for a query sketch (ids colliding in ≥1 band).
     pub fn candidates(&self, sketch: &[u32]) -> Vec<u64> {
         let r = self.cfg.rows_per_band;
@@ -148,7 +184,7 @@ impl BandingIndex {
                 score: estimate(sketch, &self.sketches[&id]),
             })
             .collect();
-        scored.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+        sort_neighbors(&mut scored);
         scored.truncate(topk);
         scored
     }
@@ -164,7 +200,7 @@ impl BandingIndex {
             })
             .filter(|n| n.score >= threshold)
             .collect();
-        out.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+        sort_neighbors(&mut out);
         out
     }
 
@@ -198,9 +234,9 @@ mod tests {
     #[test]
     fn insert_validates() {
         let mut idx = BandingIndex::new(64, cfg()).unwrap();
-        assert!(idx.insert(1, &vec![0u32; 63]).is_err());
-        assert!(idx.insert(1, &vec![0u32; 64]).is_ok());
-        assert!(idx.insert(1, &vec![0u32; 64]).is_err(), "duplicate id");
+        assert!(idx.insert(1, &[0u32; 63]).is_err());
+        assert!(idx.insert(1, &[0u32; 64]).is_ok());
+        assert!(idx.insert(1, &[0u32; 64]).is_err(), "duplicate id");
         assert!(BandingIndex::new(8, cfg()).is_err(), "b*r > K");
     }
 
@@ -239,6 +275,27 @@ mod tests {
         assert!(hits[0].score > 0.8);
         let above = idx.query_above(&h.sketch_sparse(&base), 0.5);
         assert!(above.iter().all(|n| n.id == 1));
+    }
+
+    #[test]
+    fn remove_erases_postings_and_allows_reinsert() {
+        let h = CMinHasher::new(1024, 64, 5);
+        let mut idx = BandingIndex::new(64, cfg()).unwrap();
+        let doc: Vec<u32> = (100..200).collect();
+        let sk = h.sketch_sparse(&doc);
+        idx.insert(42, &sk).unwrap();
+        idx.insert(43, &h.sketch_sparse(&(300..400).collect::<Vec<_>>()))
+            .unwrap();
+        assert_eq!(idx.remove(42), Some(sk.clone()));
+        assert_eq!(idx.len(), 1);
+        assert!(idx.remove(42).is_none(), "double remove is a no-op");
+        // deleted item never reappears as a candidate
+        assert!(idx.candidates(&sk).is_empty());
+        assert!(idx.query(&sk, 5).iter().all(|n| n.id != 42));
+        // re-insert under the same id works and is found again
+        idx.insert(42, &sk).unwrap();
+        assert_eq!(idx.query(&sk, 1)[0].id, 42);
+        assert_eq!(idx.iter().count(), 2);
     }
 
     #[test]

@@ -6,4 +6,4 @@
 
 mod lsh;
 
-pub use lsh::{BandingIndex, IndexConfig, Neighbor};
+pub use lsh::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};

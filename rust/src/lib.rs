@@ -10,8 +10,9 @@
 //! * **L3** — this crate: a serving coordinator that loads the artifacts
 //!   via PJRT ([`runtime`]), batches client requests ([`coordinator`]),
 //!   serves sketches / estimates / near-neighbor queries ([`server`],
-//!   [`index`]), and ships pure-Rust hashers ([`sketch`]), exact paper
-//!   theory ([`theory`]), and dataset generators ([`data`]).
+//!   [`index`]) out of a sharded, crash-recoverable sketch store
+//!   ([`store`]), and ships pure-Rust hashers ([`sketch`]), exact
+//!   paper theory ([`theory`]), and dataset generators ([`data`]).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, and the binary is self-contained afterwards.
@@ -43,6 +44,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod server;
 pub mod sketch;
+pub mod store;
 pub mod theory;
 pub mod util;
 

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `serve`    — run the sketching/similarity server (XLA or Rust engine)
+//! * `compact`  — fold a persist directory's WAL into a fresh snapshot
 //! * `figures`  — regenerate the paper's Figures 2–7 as CSV
 //! * `dataset`  — generate the §4.2 corpus stand-ins
 //! * `sketch`   — offline batch sketching of a dataset file
@@ -16,7 +17,9 @@
 use cminhash::config::{EngineKind, ServeConfig};
 use cminhash::coordinator::Coordinator;
 use cminhash::data::{BinaryDataset, CorpusKind};
+use cminhash::index::IndexConfig;
 use cminhash::runtime::Manifest;
+use cminhash::store::{resolve_shards, PersistentIndex};
 use cminhash::server::protocol::Request;
 use cminhash::server::{BlockingClient, Server};
 use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
@@ -32,6 +35,10 @@ cminhash — C-MinHash sketching & similarity-search service
 USAGE:
   cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
+                   [--shards N] [--persist DIR]
+  cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
+                   [--shards N]        (offline only — use the `save`
+                   wire op to compact under a running server)
   cminhash figures (--all | --fig N) [--out DIR] [--fast]
   cminhash dataset --kind nips|bbc|mnist|cifar --out FILE.json
                    [--n N] [--seed S] [--stats]
@@ -128,6 +135,7 @@ fn run() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "compact" => cmd_compact(&args),
         "figures" => cmd_figures(&args),
         "dataset" => cmd_dataset(&args),
         "sketch" => cmd_sketch(&args),
@@ -165,17 +173,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(s) = args.get_parsed::<u64>("seed")? {
         cfg.seed = s;
     }
+    if let Some(s) = args.get_parsed::<usize>("shards")? {
+        cfg.store.shards = s;
+    }
+    if let Some(p) = args.get("persist") {
+        cfg.store.persist_dir = Some(PathBuf::from(p));
+    }
     cfg.validate()?;
     let svc = Coordinator::start(cfg.clone())?;
-    let server = Server::spawn(svc, &cfg.addr)?;
+    let server = Server::spawn(svc.clone(), &cfg.addr)?;
+    let (_, store) = svc.stats();
     println!(
-        "serving on {} (engine={:?}, D={}, K={})",
+        "serving on {} (engine={:?}, D={}, K={}, shards={})",
         server.addr(),
         cfg.engine,
         cfg.dim,
-        cfg.num_hashes
+        cfg.num_hashes,
+        store.shards.len(),
     );
+    match &cfg.store.persist_dir {
+        Some(dir) => println!(
+            "persistence: {} (recovered {} sketches, {} bytes on disk)",
+            dir.display(),
+            store.stored,
+            store.persisted_bytes
+        ),
+        None => println!("persistence: off (sketches die with the process)"),
+    }
     server.join_forever();
+}
+
+/// Fold a persist directory's WAL into a fresh snapshot.  Recovery at
+/// `serve` startup replays the WAL anyway; compacting bounds startup
+/// time and disk usage for long-lived corpora.
+///
+/// Must NOT be run against a directory a live server is using: both
+/// processes would hold the same WAL open and this command truncates
+/// it, destroying records the server already acknowledged.  Stop the
+/// server first, or use the `save` wire op, which compacts in-process
+/// under the server's own WAL lock.
+fn cmd_compact(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(d) = args.get("dir") {
+        cfg.store.persist_dir = Some(PathBuf::from(d));
+    }
+    if let Some(k) = args.get_parsed::<usize>("num-hashes")? {
+        cfg.num_hashes = k;
+    }
+    if let Some(s) = args.get_parsed::<usize>("shards")? {
+        cfg.store.shards = s;
+    }
+    cfg.validate()?;
+    let Some(dir) = cfg.store.persist_dir.clone() else {
+        return Err(usage_err(
+            "compact needs --dir or store.persist_dir in the config",
+        ));
+    };
+    // Refuse to mint a fresh (possibly wrong-K) snapshot into a
+    // directory with no prior state: compact has nothing of its own to
+    // validate --num-hashes against, and a snapshot stamped with the
+    // wrong K would block the real server from ever opening the dir.
+    let has_snapshot = dir.join(cminhash::store::SNAPSHOT_FILE).exists();
+    let has_wal = std::fs::metadata(dir.join(cminhash::store::WAL_FILE))
+        .map(|m| m.len() > 0)
+        .unwrap_or(false);
+    if !has_snapshot && !has_wal {
+        return Err(usage_err(format!(
+            "{} holds no snapshot or WAL records; nothing to compact \
+             (check --dir, and that --num-hashes matches the serving config)",
+            dir.display()
+        )));
+    }
+    let t = Instant::now();
+    let store = PersistentIndex::open(
+        cfg.num_hashes,
+        IndexConfig {
+            bands: cfg.index.bands,
+            rows_per_band: cfg.index.rows_per_band,
+        },
+        resolve_shards(cfg.store.shards),
+        Some(&dir),
+    )?;
+    let bytes = store.compact()?;
+    println!(
+        "compacted {} sketches in {} -> {bytes} bytes in {:.1}ms",
+        store.len(),
+        dir.display(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -300,8 +389,8 @@ fn cmd_theory(args: &Args) -> Result<()> {
     let d = args.require_parsed::<usize>("d")?;
     let f = args.require_parsed::<usize>("f")?;
     let a = args.get_parsed::<usize>("a")?.unwrap_or(f / 2);
-    let k = args.get_parsed::<usize>("k")?.unwrap_or(256.min(d));
-    if !(f >= 1 && f <= d && a <= f && k >= 1 && k <= d) {
+    let k = args.get_parsed::<usize>("k")?.unwrap_or_else(|| 256.min(d));
+    if !((1..=d).contains(&f) && a <= f && (1..=d).contains(&k)) {
         return Err(usage_err("need a <= f <= D with f >= 1, and 1 <= K <= D"));
     }
     let j = a as f64 / f as f64;

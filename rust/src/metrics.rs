@@ -113,6 +113,8 @@ pub struct Metrics {
     pub queries: AtomicU64,
     /// Total estimates served.
     pub estimates: AtomicU64,
+    /// Total deletes applied.
+    pub deletes: AtomicU64,
     /// Requests rejected with an error.
     pub errors: AtomicU64,
 }
@@ -138,6 +140,8 @@ pub struct MetricsSnapshot {
     pub queries: u64,
     /// Estimates served.
     pub estimates: u64,
+    /// Deletes applied.
+    pub deletes: u64,
     /// Errors returned.
     pub errors: u64,
     /// Mean rows per executed batch.
@@ -170,6 +174,7 @@ impl MetricsSnapshot {
             ("pad_rows", Json::Num(self.pad_rows as f64)),
             ("queries", Json::Num(self.queries as f64)),
             ("estimates", Json::Num(self.estimates as f64)),
+            ("deletes", Json::Num(self.deletes as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
         ])
@@ -191,6 +196,7 @@ impl Metrics {
             pad_rows: self.pad_rows.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),
             estimates: self.estimates.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             mean_batch_fill: if batches == 0 {
                 0.0

@@ -96,6 +96,13 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
                 let (id, sketch) = svc.insert(vec)?;
                 Response::Insert { id, sketch }
             }
+            Request::Delete { id } => {
+                svc.delete(id)?;
+                Response::Deleted { id }
+            }
+            Request::Save => Response::Saved {
+                persisted_bytes: svc.save()?,
+            },
             Request::Estimate { a, b } => Response::Estimate {
                 jhat: svc.estimate_ids(a, b)?,
             },
@@ -123,8 +130,8 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
                     .collect(),
             },
             Request::Stats => {
-                let (metrics, stored) = svc.stats();
-                Response::Stats { metrics, stored }
+                let (metrics, store) = svc.stats();
+                Response::Stats { metrics, store }
             }
         })
     })();
@@ -196,6 +203,17 @@ impl BlockingClient {
         let vec = crate::sketch::SparseVec::new(dim, indices)?;
         match self.call(&Request::Insert { vec })? {
             Response::Insert { id, .. } => Ok(id),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
+    /// Convenience: delete a stored id.
+    pub fn delete(&mut self, id: u64) -> crate::Result<()> {
+        match self.call(&Request::Delete { id })? {
+            Response::Deleted { .. } => Ok(()),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
             other => Err(crate::Error::Protocol(format!(
                 "unexpected response {other:?}"

@@ -9,15 +9,20 @@
 //! ← {"ok":true,"sketch":[...]}
 //! → {"op":"insert","vec":{...}}
 //! ← {"ok":true,"id":7,"sketch":[...]}
+//! → {"op":"delete","id":7}
+//! ← {"ok":true,"deleted":7}
 //! → {"op":"estimate","a":7,"b":9}
 //! ← {"ok":true,"jhat":0.4921875}
 //! → {"op":"query","vec":{...},"topk":5}
 //! ← {"ok":true,"neighbors":[{"id":7,"score":0.98}, ...]}
+//! → {"op":"save"}
+//! ← {"ok":true,"saved":true,"persisted_bytes":123456}
 //! → {"op":"stats"}      → {"op":"ping"}
 //! ```
 
 use crate::metrics::MetricsSnapshot;
 use crate::sketch::SparseVec;
+use crate::store::StoreStats;
 use crate::util::json::Json;
 
 /// Client → server requests.
@@ -34,6 +39,11 @@ pub enum Request {
     Insert {
         /// The vector.
         vec: SparseVec,
+    },
+    /// Delete a stored id from the store and index.
+    Delete {
+        /// The id to delete.
+        id: u64,
     },
     /// Estimate J between two stored ids.
     Estimate {
@@ -63,6 +73,8 @@ pub enum Request {
         /// Similarity threshold.
         threshold: f64,
     },
+    /// Fold the WAL into a fresh snapshot on disk.
+    Save,
     /// Metrics snapshot.
     Stats,
 }
@@ -78,6 +90,9 @@ impl Request {
             },
             "insert" => Request::Insert {
                 vec: SparseVec::from_json(j.get("vec")?)?,
+            },
+            "delete" => Request::Delete {
+                id: j.get("id")?.as_u64()?,
             },
             "estimate" => Request::Estimate {
                 a: j.get("a")?.as_u64()?,
@@ -95,6 +110,7 @@ impl Request {
                 vec: SparseVec::from_json(j.get("vec")?)?,
                 threshold: j.get("threshold")?.as_f64()?,
             },
+            "save" => Request::Save,
             "stats" => Request::Stats,
             other => {
                 return Err(crate::Error::Protocol(format!("unknown op {other:?}")))
@@ -113,6 +129,10 @@ impl Request {
             Request::Insert { vec } => Json::obj(vec![
                 ("op", Json::str("insert")),
                 ("vec", vec.to_json()),
+            ]),
+            Request::Delete { id } => Json::obj(vec![
+                ("op", Json::str("delete")),
+                ("id", Json::Num(*id as f64)),
             ]),
             Request::Estimate { a, b } => Json::obj(vec![
                 ("op", Json::str("estimate")),
@@ -134,6 +154,7 @@ impl Request {
                 ("vec", vec.to_json()),
                 ("threshold", Json::Num(*threshold)),
             ]),
+            Request::Save => Json::obj(vec![("op", Json::str("save"))]),
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
         }
     }
@@ -149,6 +170,9 @@ pub struct WireNeighbor {
 }
 
 /// Server → client responses.
+// Stats inlines the full metrics snapshot; responses are serialized
+// immediately, never stored in bulk, so the size skew is harmless.
+#[allow(clippy::large_enum_variant)]
 #[derive(Clone, Debug)]
 pub enum Response {
     /// Failure.
@@ -170,6 +194,16 @@ pub enum Response {
         /// K hash values.
         sketch: Vec<u32>,
     },
+    /// Delete result.
+    Deleted {
+        /// The removed id.
+        id: u64,
+    },
+    /// Save (snapshot compaction) result.
+    Saved {
+        /// Bytes on disk after compaction.
+        persisted_bytes: u64,
+    },
     /// Estimate result.
     Estimate {
         /// Ĵ.
@@ -184,8 +218,8 @@ pub enum Response {
     Stats {
         /// Metrics snapshot.
         metrics: MetricsSnapshot,
-        /// Stored sketch count.
-        stored: usize,
+        /// Store occupancy + durability.
+        store: StoreStats,
     },
 }
 
@@ -217,6 +251,15 @@ impl Response {
                 ("id", Json::Num(*id as f64)),
                 ("sketch", Json::from_u32s(sketch)),
             ]),
+            Response::Deleted { id } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("deleted", Json::Num(*id as f64)),
+            ]),
+            Response::Saved { persisted_bytes } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("saved", Json::Bool(true)),
+                ("persisted_bytes", Json::Num(*persisted_bytes as f64)),
+            ]),
             Response::Estimate { jhat } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("jhat", Json::Num(*jhat)),
@@ -238,10 +281,21 @@ impl Response {
                     ),
                 ),
             ]),
-            Response::Stats { metrics, stored } => Json::obj(vec![
+            Response::Stats { metrics, store } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("metrics", metrics.to_json()),
-                ("stored", Json::Num(*stored as f64)),
+                ("stored", Json::Num(store.stored as f64)),
+                (
+                    "shards",
+                    Json::Arr(
+                        store
+                            .shards
+                            .iter()
+                            .map(|&n| Json::Num(n as f64))
+                            .collect(),
+                    ),
+                ),
+                ("persisted_bytes", Json::Num(store.persisted_bytes as f64)),
             ]),
         }
     }
@@ -255,6 +309,14 @@ impl Response {
         }
         if j.get_opt("pong").is_some() {
             return Ok(Response::Pong);
+        }
+        if let Some(id) = j.get_opt("deleted") {
+            return Ok(Response::Deleted { id: id.as_u64()? });
+        }
+        if j.get_opt("saved").is_some() {
+            return Ok(Response::Saved {
+                persisted_bytes: j.get("persisted_bytes")?.as_u64()?,
+            });
         }
         if let Some(id) = j.get_opt("id") {
             return Ok(Response::Insert {
@@ -324,6 +386,8 @@ mod tests {
         for line in [
             r#"{"op":"ping"}"#,
             r#"{"op":"insert","vec":{"dim":4,"indices":[]}}"#,
+            r#"{"op":"delete","id":7}"#,
+            r#"{"op":"save"}"#,
             r#"{"op":"estimate","a":1,"b":2}"#,
             r#"{"op":"estimate_vecs","v":{"dim":4,"indices":[0]},"w":{"dim":4,"indices":[1]}}"#,
             r#"{"op":"query","vec":{"dim":4,"indices":[0]},"topk":3}"#,
@@ -339,6 +403,51 @@ mod tests {
     fn unknown_op_rejected() {
         let j = Json::parse(r#"{"op":"drop_tables"}"#).unwrap();
         assert!(Request::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn delete_and_save_roundtrip() {
+        let req = Request::Delete { id: 12 };
+        let line = req.to_json().to_string();
+        match Request::from_json(&Json::parse(&line).unwrap()).unwrap() {
+            Request::Delete { id } => assert_eq!(id, 12),
+            other => panic!("{other:?}"),
+        }
+        let r = Response::Deleted { id: 12 }.to_json().to_string();
+        match Response::from_json(&Json::parse(&r).unwrap()).unwrap() {
+            Response::Deleted { id } => assert_eq!(id, 12),
+            other => panic!("{other:?}"),
+        }
+        let r = Response::Saved {
+            persisted_bytes: 4096,
+        }
+        .to_json()
+        .to_string();
+        match Response::from_json(&Json::parse(&r).unwrap()).unwrap() {
+            Response::Saved { persisted_bytes } => assert_eq!(persisted_bytes, 4096),
+            other => panic!("{other:?}"),
+        }
+        // a delete op with no id is a protocol error
+        assert!(Request::from_json(&Json::parse(r#"{"op":"delete"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn stats_response_carries_shard_occupancy() {
+        let r = Response::Stats {
+            metrics: crate::metrics::Metrics::default().snapshot(),
+            store: crate::store::StoreStats {
+                stored: 5,
+                shards: vec![2, 3],
+                persisted_bytes: 77,
+            },
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("stored").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("persisted_bytes").unwrap().as_u64().unwrap(), 77);
+        assert_eq!(
+            j.get("shards").unwrap().as_u32_vec().unwrap(),
+            vec![2u32, 3]
+        );
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! The sketch-store subsystem: a sharded, optionally durable home for
+//! sketches and their LSH postings.
+//!
+//! ```text
+//!            PersistentIndex
+//!            ┌──────────────────────────────────────────┐
+//! insert ───▶│ WAL append ──▶ ShardedIndex (id-hash     │
+//! delete ───▶│ (serialized)     routed, RwLock/shard)   │
+//! query  ───▶│ ShardedIndex fan-out (scoped threads) ───▶ merged top-k
+//! compact ──▶│ Snapshot::write + WAL reset              │
+//!            └──────────────────────────────────────────┘
+//! recovery:  Snapshot::load ─▶ WAL replay (upsert) ─▶ serving state
+//! ```
+//!
+//! [`ShardedIndex`] is the pure in-memory layer (usable on its own —
+//! the `index_scale` bench drives it directly); [`PersistentIndex`]
+//! adds the write-ahead log and snapshot compaction when a persist
+//! directory is configured, and degrades to a thin pass-through when
+//! it is not.
+
+mod sharded;
+mod snapshot;
+mod wal;
+
+pub use sharded::{resolve_shards, ShardedIndex};
+pub use snapshot::{Snapshot, SnapshotData};
+pub use wal::{Wal, WalRecord};
+
+use crate::index::{IndexConfig, Neighbor};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Snapshot file name inside the persist directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+/// WAL file name inside the persist directory.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Occupancy and durability snapshot of the store subsystem
+/// (the store half of the `stats` wire response).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Total sketches resident.
+    pub stored: usize,
+    /// Items per shard.
+    pub shards: Vec<usize>,
+    /// Bytes on disk (snapshot + WAL); 0 without persistence.
+    pub persisted_bytes: u64,
+}
+
+struct PersistState {
+    dir: PathBuf,
+    wal: Wal,
+    snapshot_bytes: u64,
+}
+
+/// A [`ShardedIndex`] with optional crash recovery: every mutation is
+/// WAL-logged before the call returns, and [`PersistentIndex::compact`]
+/// folds the log into a fresh snapshot.
+///
+/// Mutations are serialized through the WAL lock (appends are
+/// inherently sequential); queries go straight to the sharded index
+/// and stay parallel.  Without a persist directory there is no WAL
+/// lock and mutations contend only on their owning shard.
+pub struct PersistentIndex {
+    index: ShardedIndex,
+    persist: Option<Mutex<PersistState>>,
+}
+
+impl PersistentIndex {
+    /// Open a store for sketches of length `k`.  With `dir` set, an
+    /// existing snapshot is loaded, the WAL's valid prefix is replayed
+    /// on top (inserts upsert, deletes tolerate missing ids — so any
+    /// snapshot/WAL interleaving recovers cleanly), and the WAL is
+    /// kept open for append.  With `dir = None` the store is purely
+    /// in-memory.
+    pub fn open(
+        k: usize,
+        cfg: IndexConfig,
+        num_shards: usize,
+        dir: Option<&Path>,
+    ) -> crate::Result<Self> {
+        let index = ShardedIndex::new(k, cfg, num_shards)?;
+        let Some(dir) = dir else {
+            return Ok(PersistentIndex {
+                index,
+                persist: None,
+            });
+        };
+        std::fs::create_dir_all(dir)?;
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let mut snapshot_bytes = 0u64;
+        if snap_path.exists() {
+            let data = Snapshot::load(&snap_path)?;
+            if data.k != k {
+                return Err(crate::Error::Invalid(format!(
+                    "snapshot in {} has K={}, configured K={k}",
+                    dir.display(),
+                    data.k
+                )));
+            }
+            for (id, sketch) in &data.items {
+                index.insert_with_id(*id, sketch)?;
+            }
+            index.reserve_ids(data.next_id);
+            snapshot_bytes = std::fs::metadata(&snap_path)?.len();
+        }
+        let (wal, records) = Wal::open(&dir.join(WAL_FILE))?;
+        for rec in records {
+            match rec {
+                WalRecord::Insert { id, sketch } => {
+                    let _ = index.delete(id);
+                    index.insert_with_id(id, &sketch)?;
+                }
+                WalRecord::Delete { id } => {
+                    let _ = index.delete(id);
+                }
+            }
+        }
+        Ok(PersistentIndex {
+            index,
+            persist: Some(Mutex::new(PersistState {
+                dir: dir.to_path_buf(),
+                wal,
+                snapshot_bytes,
+            })),
+        })
+    }
+
+    /// The underlying sharded index.
+    pub fn sharded(&self) -> &ShardedIndex {
+        &self.index
+    }
+
+    /// True iff a persist directory is configured.
+    pub fn is_durable(&self) -> bool {
+        self.persist.is_some()
+    }
+
+    /// Insert a sketch under a fresh id, WAL-logging it first-class.
+    /// If the log append fails (disk full, I/O error) the in-memory
+    /// insert is rolled back, so memory and log never diverge; the
+    /// burned id is simply never reused.
+    pub fn insert(&self, sketch: Vec<u32>) -> crate::Result<u64> {
+        match &self.persist {
+            None => self.index.insert(&sketch),
+            Some(m) => {
+                let mut st = m.lock().unwrap();
+                let id = self.index.insert(&sketch)?;
+                if let Err(e) = st.wal.append(&WalRecord::Insert { id, sketch }) {
+                    let _ = self.index.delete(id);
+                    return Err(e);
+                }
+                Ok(id)
+            }
+        }
+    }
+
+    /// Delete an id (error on unknown ids), WAL-logging the removal.
+    /// If the log append fails the in-memory delete is rolled back
+    /// (re-inserted under the same id), so a delete the client saw
+    /// fail can never silently take effect after a restart — and a
+    /// logged delete never resurrects.
+    pub fn delete(&self, id: u64) -> crate::Result<()> {
+        match &self.persist {
+            None => {
+                self.index.delete(id)?;
+                Ok(())
+            }
+            Some(m) => {
+                let mut st = m.lock().unwrap();
+                let removed = self.index.delete(id)?;
+                if let Err(e) = st.wal.append(&WalRecord::Delete { id }) {
+                    let _ = self.index.insert_with_id(id, &removed);
+                    return Err(e);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Fold the WAL into a fresh snapshot (fsynced, atomically
+    /// replaced) and truncate the log.  Returns total persisted bytes.
+    /// Errors without a persist directory.
+    pub fn compact(&self) -> crate::Result<u64> {
+        let Some(m) = &self.persist else {
+            return Err(crate::Error::Invalid(
+                "no persist_dir configured; nothing to compact".into(),
+            ));
+        };
+        let mut st = m.lock().unwrap();
+        let bytes = Snapshot::write(
+            &st.dir.join(SNAPSHOT_FILE),
+            self.index.num_hashes(),
+            self.index.next_id(),
+            &self.index.items(),
+        )?;
+        // The snapshot is durable (fsynced file + directory entry);
+        // make the truncation durable too so a reboot never replays a
+        // stale pre-compaction log on top of the new snapshot (replay
+        // is idempotent, but a long stale log costs startup time).
+        st.wal.reset()?;
+        st.wal.sync()?;
+        st.snapshot_bytes = bytes;
+        Ok(bytes)
+    }
+
+    /// Top-k neighbors of a query sketch.
+    pub fn query(&self, sketch: &[u32], topk: usize) -> crate::Result<Vec<Neighbor>> {
+        self.index.query(sketch, topk)
+    }
+
+    /// All neighbors with estimate ≥ `threshold`.
+    pub fn query_above(&self, sketch: &[u32], threshold: f64) -> crate::Result<Vec<Neighbor>> {
+        self.index.query_above(sketch, threshold)
+    }
+
+    /// Estimate J between two stored ids.
+    pub fn estimate(&self, a: u64, b: u64) -> crate::Result<f64> {
+        self.index.estimate(a, b)
+    }
+
+    /// Stored sketch for an id.
+    pub fn sketch(&self, id: u64) -> Option<Vec<u32>> {
+        self.index.sketch(id)
+    }
+
+    /// Total sketches resident.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True iff empty.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Occupancy + durability snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let persisted_bytes = match &self.persist {
+            None => 0,
+            Some(m) => {
+                let st = m.lock().unwrap();
+                st.snapshot_bytes + st.wal.bytes()
+            }
+        };
+        StoreStats {
+            stored: self.index.len(),
+            shards: self.index.shard_sizes(),
+            persisted_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    fn cfg() -> IndexConfig {
+        IndexConfig {
+            bands: 4,
+            rows_per_band: 2,
+        }
+    }
+
+    fn sk(seed: u32) -> Vec<u32> {
+        (0..8).map(|i| seed.wrapping_mul(31).wrapping_add(i)).collect()
+    }
+
+    #[test]
+    fn in_memory_mode_has_no_disk_footprint() {
+        let store = PersistentIndex::open(8, cfg(), 2, None).unwrap();
+        assert!(!store.is_durable());
+        let id = store.insert(sk(1)).unwrap();
+        store.delete(id).unwrap();
+        assert!(store.compact().is_err());
+        assert_eq!(store.stats().persisted_bytes, 0);
+    }
+
+    #[test]
+    fn wal_only_recovery() {
+        let dir = TempDir::new().unwrap();
+        let (a, b);
+        {
+            let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+            a = store.insert(sk(1)).unwrap();
+            b = store.insert(sk(2)).unwrap();
+            store.delete(a).unwrap();
+            // dropped without compacting: recovery is pure WAL replay
+        }
+        let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+        assert_eq!(store.len(), 1);
+        assert!(store.sketch(a).is_none(), "deleted id must stay deleted");
+        assert_eq!(store.sketch(b), Some(sk(2)));
+        // fresh ids continue past everything ever allocated
+        assert_eq!(store.insert(sk(3)).unwrap(), 2);
+    }
+
+    #[test]
+    fn snapshot_plus_wal_recovery_and_compaction() {
+        let dir = TempDir::new().unwrap();
+        {
+            let store = PersistentIndex::open(8, cfg(), 4, Some(dir.path())).unwrap();
+            for s in 0..6u32 {
+                store.insert(sk(s)).unwrap();
+            }
+            store.delete(0).unwrap();
+            let bytes = store.compact().unwrap();
+            assert!(bytes > 0);
+            // post-snapshot tail lives only in the WAL
+            store.insert(sk(100)).unwrap(); // id 6
+            store.delete(3).unwrap();
+        }
+        let store = PersistentIndex::open(8, cfg(), 4, Some(dir.path())).unwrap();
+        assert_eq!(store.len(), 5);
+        for gone in [0u64, 3] {
+            assert!(store.sketch(gone).is_none());
+        }
+        assert_eq!(store.sketch(6), Some(sk(100)));
+        let stats = store.stats();
+        assert_eq!(stats.stored, 5);
+        assert_eq!(stats.shards.len(), 4);
+        assert!(stats.persisted_bytes > 0);
+        // compaction shrinks the footprint to snapshot-only
+        let compacted = store.compact().unwrap();
+        assert_eq!(store.stats().persisted_bytes, compacted);
+    }
+
+    #[test]
+    fn mismatched_k_is_rejected_on_open() {
+        let dir = TempDir::new().unwrap();
+        {
+            let store = PersistentIndex::open(8, cfg(), 1, Some(dir.path())).unwrap();
+            store.insert(sk(1)).unwrap();
+            store.compact().unwrap();
+        }
+        assert!(PersistentIndex::open(16, cfg(), 1, Some(dir.path())).is_err());
+    }
+}

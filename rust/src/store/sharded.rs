@@ -1,0 +1,385 @@
+//! Sharded sketch index: N independent [`BandingIndex`] shards, each
+//! behind its own `RwLock`, with inserts/deletes routed by a mix of
+//! the item id and queries fanned out across shards on scoped threads.
+//!
+//! Sharding is a pure scaling knob, not a semantics change: results
+//! are merged under the same total order (score desc, id asc) the
+//! single-shard index uses, so `N = 1` is byte-identical to a bare
+//! [`BandingIndex`] and `N > 1` returns exactly the same top-k set
+//! (each shard's local top-k is a superset of its contribution to the
+//! global top-k).
+
+use crate::index::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};
+use crate::sketch::estimate;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// SplitMix64 finalizer — decorrelates shard choice from id assignment
+/// order so sequential ids spread evenly across shards.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Pick a shard count for `requested` (0 = auto): the largest power of
+/// two ≤ the machine's available parallelism, capped at 8.
+pub fn resolve_shards(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut s = 1usize;
+    while s * 2 <= cores && s < 8 {
+        s *= 2;
+    }
+    s
+}
+
+/// Below this many resident items, cross-shard queries run inline on
+/// the calling thread instead of spawning per-shard threads.
+const PARALLEL_QUERY_MIN_ITEMS: usize = 8192;
+
+/// A sharded, concurrently accessible banding index over sketches.
+///
+/// Each shard owns its own [`BandingIndex`] (band postings + sketch
+/// map) behind its own `RwLock`; writes touch exactly one shard,
+/// reads fan out and merge.
+#[derive(Debug)]
+pub struct ShardedIndex {
+    k: usize,
+    cfg: IndexConfig,
+    next_id: AtomicU64,
+    // Resident-item count maintained on insert/delete so hot read
+    // paths (len, the fan-out threshold, stats) never have to sweep
+    // every shard lock.
+    resident: AtomicUsize,
+    shards: Vec<RwLock<BandingIndex>>,
+}
+
+impl ShardedIndex {
+    /// Create an index over sketches of length `k`, partitioned into
+    /// `num_shards` (≥ 1) shards.
+    pub fn new(k: usize, cfg: IndexConfig, num_shards: usize) -> crate::Result<Self> {
+        if num_shards == 0 {
+            return Err(crate::Error::Invalid("need at least one shard".into()));
+        }
+        let mut shards = Vec::with_capacity(num_shards);
+        for _ in 0..num_shards {
+            shards.push(RwLock::new(BandingIndex::new(k, cfg)?));
+        }
+        Ok(ShardedIndex {
+            k,
+            cfg,
+            next_id: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
+            shards,
+        })
+    }
+
+    /// Sketch length K.
+    pub fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    /// Band configuration (shared by every shard).
+    pub fn config(&self) -> IndexConfig {
+        self.cfg
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The next id a fresh [`ShardedIndex::insert`] would hand out.
+    pub fn next_id(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Ensure every future fresh id is ≥ `floor` (snapshot recovery).
+    pub fn reserve_ids(&self, floor: u64) {
+        self.next_id.fetch_max(floor, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u64) -> usize {
+        (mix64(id) % self.shards.len() as u64) as usize
+    }
+
+    fn check_len(&self, sketch: &[u32]) -> crate::Result<()> {
+        if sketch.len() != self.k {
+            return Err(crate::Error::ShapeMismatch {
+                what: "sketch",
+                expected: self.k,
+                got: sketch.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Insert a sketch under a fresh id and return it.
+    pub fn insert(&self, sketch: &[u32]) -> crate::Result<u64> {
+        self.check_len(sketch)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shards[self.shard_of(id)]
+            .write()
+            .unwrap()
+            .insert(id, sketch)?;
+        self.resident.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Insert under a caller-chosen id (WAL replay, snapshot load,
+    /// re-insert after delete).  Keeps the fresh-id counter ahead of
+    /// every explicit id; rejects occupied ids.
+    pub fn insert_with_id(&self, id: u64, sketch: &[u32]) -> crate::Result<()> {
+        self.check_len(sketch)?;
+        self.shards[self.shard_of(id)]
+            .write()
+            .unwrap()
+            .insert(id, sketch)?;
+        self.resident.fetch_add(1, Ordering::Relaxed);
+        self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Delete an id, returning its sketch; unknown ids are an error.
+    pub fn delete(&self, id: u64) -> crate::Result<Vec<u32>> {
+        let removed = self.shards[self.shard_of(id)]
+            .write()
+            .unwrap()
+            .remove(id)
+            .ok_or_else(|| crate::Error::Invalid(format!("unknown id {id}")))?;
+        self.resident.fetch_sub(1, Ordering::Relaxed);
+        Ok(removed)
+    }
+
+    /// Stored sketch for an id (cloned out of the owning shard).
+    pub fn sketch(&self, id: u64) -> Option<Vec<u32>> {
+        self.shards[self.shard_of(id)]
+            .read()
+            .unwrap()
+            .sketch(id)
+            .map(|s| s.to_vec())
+    }
+
+    /// Estimate J between two stored ids.
+    pub fn estimate(&self, a: u64, b: u64) -> crate::Result<f64> {
+        let sa = self
+            .sketch(a)
+            .ok_or_else(|| crate::Error::Invalid(format!("unknown id {a}")))?;
+        let sb = self
+            .sketch(b)
+            .ok_or_else(|| crate::Error::Invalid(format!("unknown id {b}")))?;
+        Ok(estimate(&sa, &sb))
+    }
+
+    /// Top-k neighbors of a query sketch across all shards.
+    ///
+    /// With one shard this runs inline; otherwise each shard is
+    /// queried on its own scoped thread and the per-shard top-k lists
+    /// are merged under the global order.
+    pub fn query(&self, sketch: &[u32], topk: usize) -> crate::Result<Vec<Neighbor>> {
+        self.check_len(sketch)?;
+        if self.shards.len() == 1 {
+            return Ok(self.shards[0].read().unwrap().query(sketch, topk));
+        }
+        let mut merged = self.fan_out(|shard| shard.query(sketch, topk));
+        sort_neighbors(&mut merged);
+        merged.truncate(topk);
+        Ok(merged)
+    }
+
+    /// All neighbors with estimate ≥ `threshold`, across all shards.
+    pub fn query_above(&self, sketch: &[u32], threshold: f64) -> crate::Result<Vec<Neighbor>> {
+        self.check_len(sketch)?;
+        if self.shards.len() == 1 {
+            return Ok(self.shards[0].read().unwrap().query_above(sketch, threshold));
+        }
+        let mut merged = self.fan_out(|shard| shard.query_above(sketch, threshold));
+        sort_neighbors(&mut merged);
+        Ok(merged)
+    }
+
+    /// Run `f` against every shard and concatenate.  Small indexes run
+    /// inline — per-shard probe work is then comparable to the cost of
+    /// spawning a thread, so fan-out would only add overhead — while
+    /// large indexes query all shards on scoped threads in parallel.
+    /// The caller merges, so both paths return identical results.
+    fn fan_out(&self, f: impl Fn(&BandingIndex) -> Vec<Neighbor> + Sync) -> Vec<Neighbor> {
+        if self.len() < PARALLEL_QUERY_MIN_ITEMS {
+            let mut out = Vec::new();
+            for shard in &self.shards {
+                out.extend(f(&shard.read().unwrap()));
+            }
+            return out;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| s.spawn(move || f(&shard.read().unwrap())))
+                .collect();
+            let mut out = Vec::new();
+            for h in handles {
+                out.extend(h.join().expect("shard query thread panicked"));
+            }
+            out
+        })
+    }
+
+    /// Total number of indexed items (lock-free counter).
+    pub fn len(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// True iff no items are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Items per shard (occupancy, for `/stats`).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.read().unwrap().len()).collect()
+    }
+
+    /// All `(id, sketch)` pairs, sorted by id (snapshotting, tests).
+    pub fn items(&self) -> Vec<(u64, Vec<u32>)> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            out.extend(guard.iter().map(|(id, s)| (id, s.to_vec())));
+        }
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{CMinHasher, Sketcher};
+
+    fn cfg() -> IndexConfig {
+        IndexConfig {
+            bands: 16,
+            rows_per_band: 4,
+        }
+    }
+
+    fn sketches(n: usize) -> Vec<Vec<u32>> {
+        let h = CMinHasher::new(1024, 64, 5);
+        (0..n)
+            .map(|i| {
+                let doc: Vec<u32> = (i as u32 * 7..i as u32 * 7 + 80).collect();
+                h.sketch_sparse(&doc)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fresh_ids_are_sequential_and_routed() {
+        let idx = ShardedIndex::new(64, cfg(), 4).unwrap();
+        for (i, sk) in sketches(12).iter().enumerate() {
+            assert_eq!(idx.insert(sk).unwrap(), i as u64);
+        }
+        assert_eq!(idx.len(), 12);
+        assert_eq!(idx.shard_sizes().iter().sum::<usize>(), 12);
+        assert_eq!(idx.num_shards(), 4);
+        // every id is retrievable through its owning shard
+        for i in 0..12u64 {
+            assert!(idx.sketch(i).is_some(), "id {i} lost in routing");
+        }
+        let ids: Vec<u64> = idx.items().iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn delete_and_reinsert_across_shards() {
+        let idx = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let sks = sketches(8);
+        for sk in &sks {
+            idx.insert(sk).unwrap();
+        }
+        let removed = idx.delete(3).unwrap();
+        assert_eq!(removed, sks[3]);
+        assert!(idx.delete(3).is_err(), "unknown id after delete");
+        assert!(idx.sketch(3).is_none());
+        assert_eq!(idx.len(), 7);
+        // query never returns the deleted id
+        let hits = idx.query(&sks[3], 8).unwrap();
+        assert!(hits.iter().all(|n| n.id != 3));
+        // re-insert under the same id, and fresh ids skip past it
+        idx.insert_with_id(3, &sks[3]).unwrap();
+        assert_eq!(idx.query(&sks[3], 1).unwrap()[0].id, 3);
+        let fresh = idx.insert(&sks[0]).unwrap();
+        assert_eq!(fresh, 8);
+    }
+
+    #[test]
+    fn validates_sketch_length() {
+        let idx = ShardedIndex::new(64, cfg(), 2).unwrap();
+        assert!(idx.insert(&[0u32; 63]).is_err());
+        assert!(idx.query(&[0u32; 1], 3).is_err());
+        assert!(idx.query_above(&[0u32; 65], 0.5).is_err());
+        assert!(ShardedIndex::new(64, cfg(), 0).is_err());
+    }
+
+    #[test]
+    fn estimate_matches_direct() {
+        let idx = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let sks = sketches(4);
+        for sk in &sks {
+            idx.insert(sk).unwrap();
+        }
+        assert_eq!(idx.estimate(0, 1).unwrap(), estimate(&sks[0], &sks[1]));
+        assert!(idx.estimate(0, 99).is_err());
+    }
+
+    #[test]
+    fn parallel_fan_out_matches_inline_results() {
+        // Push past PARALLEL_QUERY_MIN_ITEMS with cheap synthetic
+        // sketches so the scoped-thread path actually runs, and pin it
+        // against a single BandingIndex over the same items.
+        let cfg = IndexConfig {
+            bands: 4,
+            rows_per_band: 2,
+        };
+        let n = PARALLEL_QUERY_MIN_ITEMS + 64;
+        let sharded = ShardedIndex::new(8, cfg, 4).unwrap();
+        let mut golden = BandingIndex::new(8, cfg).unwrap();
+        for i in 0..n as u32 {
+            // small value range -> real band collisions
+            let sk: Vec<u32> = (0..8u32).map(|j| (i / 16).wrapping_add(j) % 97).collect();
+            golden.insert(u64::from(i), &sk).unwrap();
+            sharded.insert(&sk).unwrap();
+        }
+        assert!(sharded.len() >= PARALLEL_QUERY_MIN_ITEMS);
+        for probe_seed in [0u32, 40, 800] {
+            let probe: Vec<u32> = (0..8u32)
+                .map(|j| (probe_seed / 16).wrapping_add(j) % 97)
+                .collect();
+            assert_eq!(
+                sharded.query(&probe, 9).unwrap(),
+                golden.query(&probe, 9),
+                "parallel fan-out diverged for probe {probe_seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_shards_is_sane() {
+        assert_eq!(resolve_shards(3), 3);
+        let auto = resolve_shards(0);
+        assert!((1..=8).contains(&auto));
+        assert!(auto.is_power_of_two());
+    }
+}

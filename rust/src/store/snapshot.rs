@@ -1,0 +1,196 @@
+//! Compact binary snapshot of the whole sketch store.
+//!
+//! ```text
+//! snapshot := magic "CMHSNAP1" | k:u32le | next_id:u64le
+//!           | count:u64le | count × (id:u64le | k × u32le)
+//!           | crc:u64le                     (FNV-1a 64 over all prior bytes)
+//! ```
+//!
+//! Written to a temp file, fsynced, then renamed into place, so a
+//! crash during [`Snapshot::write`] leaves the previous snapshot
+//! intact.  Items are sorted by id, so identical store contents
+//! produce identical snapshot bytes.
+
+use crate::util::fnv::fnv1a64;
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CMHSNAP1";
+
+fn bad(msg: impl Into<String>) -> crate::Error {
+    crate::Error::Invalid(format!("snapshot: {}", msg.into()))
+}
+
+/// Decoded snapshot contents.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotData {
+    /// Sketch length K the snapshot was taken under.
+    pub k: usize,
+    /// Fresh-id floor at snapshot time.
+    pub next_id: u64,
+    /// All `(id, sketch)` pairs, sorted by id.
+    pub items: Vec<(u64, Vec<u32>)>,
+}
+
+/// Snapshot codec (see the module docs for the byte format).
+pub struct Snapshot;
+
+impl Snapshot {
+    /// Serialize `items` (each sketch of length `k`) to `path`
+    /// atomically (temp file + fsync + rename).  Returns the snapshot
+    /// size in bytes.
+    pub fn write(
+        path: &Path,
+        k: usize,
+        next_id: u64,
+        items: &[(u64, Vec<u32>)],
+    ) -> crate::Result<u64> {
+        let mut buf = Vec::with_capacity(8 + 4 + 8 + 8 + items.len() * (8 + 4 * k) + 8);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(k as u32).to_le_bytes());
+        buf.extend_from_slice(&next_id.to_le_bytes());
+        buf.extend_from_slice(&(items.len() as u64).to_le_bytes());
+        for (id, sketch) in items {
+            if sketch.len() != k {
+                return Err(bad(format!(
+                    "id {id} has sketch length {}, expected {k}",
+                    sketch.len()
+                )));
+            }
+            buf.extend_from_slice(&id.to_le_bytes());
+            for v in sketch {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = fnv1a64(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        // The rename itself is directory metadata: fsync the directory
+        // so the new snapshot is durable before the caller truncates
+        // the WAL — otherwise power loss could keep the truncation but
+        // drop the rename, losing every folded record.
+        #[cfg(unix)]
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::File::open(parent)?.sync_all()?;
+        }
+        Ok(buf.len() as u64)
+    }
+
+    /// Load and validate a snapshot (magic, checksum, exact framing).
+    pub fn load(path: &Path) -> crate::Result<SnapshotData> {
+        let bytes = std::fs::read(path)?;
+        let header = 8 + 4 + 8 + 8;
+        if bytes.len() < header + 8 {
+            return Err(bad("file too short"));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
+        let mut crc = [0u8; 8];
+        crc.copy_from_slice(crc_bytes);
+        if fnv1a64(body) != u64::from_le_bytes(crc) {
+            return Err(bad("checksum mismatch"));
+        }
+        if &body[..8] != MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let k = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+        let next_id = u64::from_le_bytes(body[12..20].try_into().unwrap());
+        let count = u64::from_le_bytes(body[20..28].try_into().unwrap()) as usize;
+        let item_bytes = count
+            .checked_mul(8 + 4 * k)
+            .ok_or_else(|| bad("count overflow"))?;
+        if body.len() - header != item_bytes {
+            return Err(bad(format!(
+                "expected {item_bytes} item bytes, found {}",
+                body.len() - header
+            )));
+        }
+        let mut items = Vec::with_capacity(count);
+        let mut off = header;
+        for _ in 0..count {
+            let id = u64::from_le_bytes(body[off..off + 8].try_into().unwrap());
+            off += 8;
+            let mut sketch = Vec::with_capacity(k);
+            for _ in 0..k {
+                sketch.push(u32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+                off += 4;
+            }
+            items.push((id, sketch));
+        }
+        Ok(SnapshotData { k, next_id, items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    fn sample_items() -> Vec<(u64, Vec<u32>)> {
+        vec![
+            (0, vec![5, 6, 7]),
+            (2, vec![1, 2, 3]),
+            (9, vec![u32::MAX, 0, 42]),
+        ]
+    }
+
+    #[test]
+    fn write_load_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        let bytes = Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let data = Snapshot::load(&path).unwrap();
+        assert_eq!(data.k, 3);
+        assert_eq!(data.next_id, 10);
+        assert_eq!(data.items, sample_items());
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        Snapshot::write(&path, 64, 0, &[]).unwrap();
+        let data = Snapshot::load(&path).unwrap();
+        assert!(data.items.is_empty());
+        assert_eq!(data.k, 64);
+    }
+
+    #[test]
+    fn rewrite_is_atomic_replacement() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        Snapshot::write(&path, 3, 5, &sample_items()).unwrap();
+        Snapshot::write(&path, 3, 6, &sample_items()[..1]).unwrap();
+        let data = Snapshot::load(&path).unwrap();
+        assert_eq!(data.next_id, 6);
+        assert_eq!(data.items.len(), 1);
+        assert!(!path.with_extension("tmp").exists(), "tmp cleaned up");
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[30] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Snapshot::load(&path).is_err(), "checksum must catch flips");
+        // truncation is also caught
+        let good = {
+            Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+            std::fs::read(&path).unwrap()
+        };
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(Snapshot::load(&path).is_err());
+        // wrong-length sketches are rejected at write time
+        assert!(Snapshot::write(&path, 4, 0, &sample_items()).is_err());
+    }
+}

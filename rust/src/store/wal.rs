@@ -1,0 +1,296 @@
+//! Append-only write-ahead log for the sketch store.
+//!
+//! One length-prefixed binary record per mutation, std only:
+//!
+//! ```text
+//! record  := len:u32le | crc:u32le | payload (len bytes)
+//! payload := 0x01 | id:u64le | k:u32le | k × u32le   (insert)
+//!          | 0x02 | id:u64le                          (delete)
+//! ```
+//!
+//! `crc` is FNV-1a over the payload.  On open, the valid prefix is
+//! replayed and any torn tail (short record, bad checksum, bad tag —
+//! the signature of a crash mid-append) is truncated away so the log
+//! is always well-formed for the next append.  Appends reach the OS
+//! (`write_all`) on every call, so recovery survives a process crash;
+//! power-loss durability is provided by [`super::Snapshot`] at
+//! compaction time, which fsyncs.
+
+use crate::util::fnv::fnv1a32;
+use std::fs::OpenOptions;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// One logged mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WalRecord {
+    /// Insert `id` with its sketch.
+    Insert {
+        /// Item id.
+        id: u64,
+        /// K hash values.
+        sketch: Vec<u32>,
+    },
+    /// Delete `id`.
+    Delete {
+        /// Item id.
+        id: u64,
+    },
+}
+
+const TAG_INSERT: u8 = 1;
+const TAG_DELETE: u8 = 2;
+
+fn encode(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::new();
+    match rec {
+        WalRecord::Insert { id, sketch } => {
+            payload.push(TAG_INSERT);
+            payload.extend_from_slice(&id.to_le_bytes());
+            payload.extend_from_slice(&(sketch.len() as u32).to_le_bytes());
+            for v in sketch {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WalRecord::Delete { id } => {
+            payload.push(TAG_DELETE);
+            payload.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn read_u64(b: &[u8], off: usize) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(a)
+}
+
+fn decode_payload(p: &[u8]) -> Option<WalRecord> {
+    match p.first()? {
+        &TAG_INSERT => {
+            if p.len() < 1 + 8 + 4 {
+                return None;
+            }
+            let id = read_u64(p, 1);
+            let k = read_u32(p, 9) as usize;
+            if p.len() != 1 + 8 + 4 + 4 * k {
+                return None;
+            }
+            let sketch = (0..k).map(|i| read_u32(p, 13 + 4 * i)).collect();
+            Some(WalRecord::Insert { id, sketch })
+        }
+        &TAG_DELETE => {
+            if p.len() != 1 + 8 {
+                return None;
+            }
+            Some(WalRecord::Delete { id: read_u64(p, 1) })
+        }
+        _ => None,
+    }
+}
+
+/// Scan the valid record prefix of raw log bytes; returns the decoded
+/// records and the byte length of that prefix.
+fn scan(bytes: &[u8]) -> (Vec<WalRecord>, usize) {
+    let mut recs = Vec::new();
+    let mut off = 0usize;
+    loop {
+        if bytes.len() - off < 8 {
+            break;
+        }
+        let len = read_u32(bytes, off) as usize;
+        let crc = read_u32(bytes, off + 4);
+        if bytes.len() - off - 8 < len {
+            break;
+        }
+        let payload = &bytes[off + 8..off + 8 + len];
+        if fnv1a32(payload) != crc {
+            break;
+        }
+        match decode_payload(payload) {
+            Some(rec) => recs.push(rec),
+            None => break,
+        }
+        off += 8 + len;
+    }
+    (recs, off)
+}
+
+/// An open write-ahead log positioned for append.
+#[derive(Debug)]
+pub struct Wal {
+    file: std::fs::File,
+    bytes: u64,
+}
+
+impl Wal {
+    /// Open `path` (creating it if absent), replay the valid record
+    /// prefix, truncate any torn tail, and return the log positioned
+    /// for append together with the replayed records (oldest first).
+    pub fn open(path: &Path) -> crate::Result<(Wal, Vec<WalRecord>)> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        let (recs, valid) = scan(&bytes);
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path)?;
+        file.set_len(valid as u64)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok((
+            Wal {
+                file,
+                bytes: valid as u64,
+            },
+            recs,
+        ))
+    }
+
+    /// Append one record (reaches the OS before returning).  On a
+    /// failed (possibly partial) write the file is restored to the
+    /// clean record prefix, so a later successful append can never
+    /// land behind torn bytes — which recovery would otherwise treat
+    /// as the end of the log, silently discarding those records.
+    pub fn append(&mut self, rec: &WalRecord) -> crate::Result<()> {
+        let buf = encode(rec);
+        if let Err(e) = self.file.write_all(&buf) {
+            let _ = self.file.set_len(self.bytes);
+            let _ = self.file.seek(SeekFrom::End(0));
+            return Err(e.into());
+        }
+        self.bytes += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Flush the log all the way to disk (fsync).
+    pub fn sync(&mut self) -> crate::Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Truncate the log to empty (after its records have been folded
+    /// into a snapshot).
+    pub fn reset(&mut self) -> crate::Result<()> {
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.bytes = 0;
+        Ok(())
+    }
+
+    /// Current log size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TempDir;
+
+    fn sample() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert {
+                id: 0,
+                sketch: vec![1, 2, 3, 4],
+            },
+            WalRecord::Delete { id: 0 },
+            WalRecord::Insert {
+                id: 1,
+                sketch: vec![9, 8, 7, 6],
+            },
+        ]
+    }
+
+    #[test]
+    fn append_and_replay_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        {
+            let (mut wal, recs) = Wal::open(&path).unwrap();
+            assert!(recs.is_empty());
+            for r in sample() {
+                wal.append(&r).unwrap();
+            }
+            assert!(wal.bytes() > 0);
+            wal.sync().unwrap();
+        }
+        let (wal, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs, sample());
+        assert_eq!(wal.bytes(), std::fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appendable() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for r in sample() {
+                wal.append(&r).unwrap();
+            }
+        }
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // simulate a crash mid-append: garbage half-record at the tail
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0x20, 0x00, 0x00, 0x00, 0xde, 0xad]).unwrap();
+        }
+        let (mut wal, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs, sample(), "valid prefix survives the torn tail");
+        assert_eq!(wal.bytes(), clean_len, "tail truncated");
+        wal.append(&WalRecord::Delete { id: 42 }).unwrap();
+        drop(wal);
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs.len(), sample().len() + 1);
+        assert_eq!(*recs.last().unwrap(), WalRecord::Delete { id: 42 });
+    }
+
+    #[test]
+    fn corrupt_crc_stops_replay() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for r in sample() {
+                wal.append(&r).unwrap();
+            }
+        }
+        // flip a payload byte inside the second record
+        let mut bytes = std::fs::read(&path).unwrap();
+        let first_len = 8 + read_u32(&bytes, 0) as usize;
+        let target = first_len + 9; // inside record 2's payload
+        bytes[target] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs.len(), 1, "replay stops at the corrupt record");
+        assert_eq!(recs[0], sample()[0]);
+    }
+
+    #[test]
+    fn reset_empties_the_log() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        wal.reset().unwrap();
+        assert_eq!(wal.bytes(), 0);
+        wal.append(&WalRecord::Delete { id: 2 }).unwrap();
+        drop(wal);
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs, vec![WalRecord::Delete { id: 2 }]);
+    }
+}

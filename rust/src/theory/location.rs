@@ -162,7 +162,7 @@ impl LocationVector {
     /// (Definition 2.2 with Remark 2.1's wrap-around).
     pub fn counts_at_lag(&self, delta: usize) -> LagCounts {
         let d = self.symbols.len();
-        debug_assert!(delta >= 1 && delta < d);
+        debug_assert!((1..d).contains(&delta));
         let mut c = LagCounts::default();
         for i in 0..d {
             let j = if i + delta >= d { i + delta - d } else { i + delta };

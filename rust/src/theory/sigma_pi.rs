@@ -62,7 +62,7 @@ pub fn e_tilde(d: usize, f: usize, a: usize) -> f64 {
 ///
 /// Exact for any (D, f, a, K) with K ≤ D; 0 when J ∈ {0, 1}.
 pub fn var_sigma_pi(d: usize, f: usize, a: usize, k: usize) -> f64 {
-    assert!(k >= 1 && k <= d, "need 1 <= K <= D");
+    assert!((1..=d).contains(&k), "need 1 <= K <= D");
     assert!(f <= d && a <= f);
     if a == 0 || a == f {
         return 0.0;

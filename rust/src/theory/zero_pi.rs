@@ -24,7 +24,7 @@ pub fn theta_delta(c: &LagCounts, f: usize, a: usize) -> f64 {
 /// Requires K ≤ D (the paper's standing assumption).
 pub fn var_zero_pi(x: &LocationVector, k: usize) -> f64 {
     let (a, f, d) = (x.a(), x.f(), x.d());
-    assert!(k >= 1 && k <= d, "need 1 <= K <= D");
+    assert!((1..=d).contains(&k), "need 1 <= K <= D");
     if a == 0 || a == f {
         return 0.0; // J ∈ {0,1}: indicator is constant
     }

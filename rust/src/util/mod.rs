@@ -1,7 +1,9 @@
 //! In-tree substrates for the offline build (DESIGN.md
 //! "Substitutions"): a deterministic RNG ([`rng`]), a JSON codec
-//! ([`json`]), and small test helpers ([`testutil`]).
+//! ([`json`]), the shared on-disk checksum ([`fnv`]), and small test
+//! helpers ([`testutil`]).
 
+pub mod fnv;
 pub mod json;
 pub mod rng;
 pub mod testutil;

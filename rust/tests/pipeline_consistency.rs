@@ -39,6 +39,7 @@ fn xla_serving_stack_matches_rust_hasher() {
             bands: 32,
             rows_per_band: 4,
         },
+        store: Default::default(),
         addr: "127.0.0.1:0".into(),
     };
     let svc = Coordinator::start(cfg.clone()).unwrap();
@@ -108,6 +109,7 @@ fn heavy_rows_fall_back_to_dense_artifact() {
             bands: 32,
             rows_per_band: 4,
         },
+        store: Default::default(),
         addr: "127.0.0.1:0".into(),
     };
     let svc = Coordinator::start(cfg.clone()).unwrap();

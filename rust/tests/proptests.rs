@@ -173,6 +173,58 @@ fn prop_index_always_finds_exact_duplicates() {
 }
 
 #[test]
+fn prop_index_config_s_curve_monotone_and_bounded() {
+    property(60, |rng| {
+        let cfg = IndexConfig {
+            bands: rng.range_usize(1, 65),
+            rows_per_band: rng.range_usize(1, 9),
+        };
+        // candidate_probability is in [0, 1], monotone non-decreasing
+        // in j, and pinned at the endpoints
+        assert_eq!(cfg.candidate_probability(0.0), 0.0);
+        assert!((cfg.candidate_probability(1.0) - 1.0).abs() < 1e-12);
+        let mut prev = 0.0f64;
+        for step in 0..=100 {
+            let j = f64::from(step) / 100.0;
+            let p = cfg.candidate_probability(j);
+            assert!(
+                (-1e-12..=1.0 + 1e-12).contains(&p),
+                "p({j}) = {p} out of [0,1] for {cfg:?}"
+            );
+            assert!(
+                p + 1e-12 >= prev,
+                "not monotone at j={j} for {cfg:?}: {p} < {prev}"
+            );
+            prev = p;
+        }
+    });
+}
+
+#[test]
+fn prop_index_config_threshold_brackets_the_half_point() {
+    property(60, |rng| {
+        let cfg = IndexConfig {
+            bands: rng.range_usize(1, 65),
+            rows_per_band: rng.range_usize(1, 9),
+        };
+        let t = cfg.threshold();
+        assert!(t > 0.0 && t <= 1.0, "threshold {t} for {cfg:?}");
+        // p(t) = 1 - (1 - 1/b)^b >= 1 - 1/e > 0.5: the S-curve has
+        // already crossed one half by the threshold...
+        assert!(
+            cfg.candidate_probability(t) >= 0.5,
+            "p(threshold) < 0.5 for {cfg:?}"
+        );
+        // ...and had not yet crossed it at half the threshold, so the
+        // ~0.5 crossing sits in (t/2, t]
+        assert!(
+            cfg.candidate_probability(t / 2.0) <= 0.5 + 1e-12,
+            "p(threshold/2) > 0.5 for {cfg:?}"
+        );
+    });
+}
+
+#[test]
 fn prop_index_candidates_subset_of_inserted() {
     property(15, |rng| {
         let k = 32usize;

@@ -98,8 +98,69 @@ fn protocol_errors_are_reported_not_fatal() {
         Response::Err { error } => assert!(error.contains("unknown id")),
         other => panic!("{other:?}"),
     }
-    // still alive
+    // topk == 0 is a clean client error, not an empty result
+    match c
+        .call(&Request::Query {
+            vec: SparseVec::new(512, vec![1, 2]).unwrap(),
+            topk: 0,
+        })
+        .unwrap()
+    {
+        Response::Err { error } => assert!(error.contains("topk"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    // dim-mismatched query vector: clean error on the query path too
+    match c
+        .call(&Request::Query {
+            vec: SparseVec::new(16, vec![1]).unwrap(),
+            topk: 5,
+        })
+        .unwrap()
+    {
+        Response::Err { error } => assert!(error.contains("shape mismatch"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    // delete of an unknown id
+    match c.call(&Request::Delete { id: 31_337 }).unwrap() {
+        Response::Err { error } => assert!(error.contains("unknown id"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    // save without a persist_dir configured
+    match c.call(&Request::Save).unwrap() {
+        Response::Err { error } => assert!(error.contains("persist"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    // still alive after every error
     assert!(matches!(c.call(&Request::Ping).unwrap(), Response::Pong));
+}
+
+#[test]
+fn delete_over_the_wire() {
+    let (server, _svc, _cfg) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let a: Vec<u32> = (0..60).collect();
+    let id = c.insert(512, a.clone()).unwrap();
+    let hits = c.query(512, a.clone(), 3).unwrap();
+    assert_eq!(hits[0].id, id);
+    c.delete(id).unwrap();
+    assert!(c.delete(id).is_err(), "double delete is an error");
+    let hits = c.query(512, a, 3).unwrap();
+    assert!(hits.iter().all(|h| h.id != id), "deleted id resurfaced");
+    // stats reflect the shard occupancy and the delete
+    let raw = c.call_raw(&Request::Stats).unwrap();
+    assert_eq!(raw.get("stored").unwrap().as_u64().unwrap(), 0);
+    assert!(!raw.get("shards").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(raw.get("persisted_bytes").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(
+        raw.get("metrics")
+            .unwrap()
+            .get("deletes")
+            .unwrap()
+            .as_u64()
+            .unwrap(),
+        1
+    );
 }
 
 #[test]
@@ -117,7 +178,19 @@ fn malformed_json_gets_error_line() {
     w.write_all(b"{\"op\":\"evil\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
     assert!(line.contains("unknown op"), "{line}");
+    // estimate with a missing id
+    w.write_all(b"{\"op\":\"estimate\",\"a\":424242,\"b\":0}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("unknown id"), "{line}");
+    // the connection survived all three errors
+    w.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\":true"), "{line}");
 }
 
 #[test]

@@ -1,0 +1,214 @@
+//! Integration tests for the store subsystem (rust/src/store/):
+//! crash recovery through the full coordinator, sharding-is-pure-
+//! scaling golden checks, and end-to-end persistence over the wire.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::index::{BandingIndex, IndexConfig, Neighbor};
+use cminhash::server::protocol::Request;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
+use cminhash::store::ShardedIndex;
+use cminhash::util::testutil::TempDir;
+use std::path::PathBuf;
+
+const DIM: usize = 512;
+const K: usize = 64;
+
+fn cfg_with(persist_dir: Option<PathBuf>, shards: usize) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM,
+        num_hashes: K,
+        seed: 9,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    cfg.store.shards = shards;
+    cfg.store.persist_dir = persist_dir;
+    cfg
+}
+
+fn doc(i: u32) -> SparseVec {
+    SparseVec::new(DIM as u32, (i * 3..i * 3 + 40).collect()).unwrap()
+}
+
+/// A mixed insert/delete workload with a mid-stream compaction, so the
+/// final on-disk state is snapshot + non-empty WAL tail.  Returns
+/// (live ids, deleted ids).
+fn run_workload(svc: &Coordinator, compact: bool) -> (Vec<u64>, Vec<u64>) {
+    let mut live = Vec::new();
+    let mut deleted = Vec::new();
+    for i in 0..30u32 {
+        let (id, _) = svc.insert(doc(i)).unwrap();
+        live.push(id);
+    }
+    for id in 5..10u64 {
+        svc.delete(id).unwrap();
+        live.retain(|&x| x != id);
+        deleted.push(id);
+    }
+    if compact {
+        assert!(svc.save().unwrap() > 0);
+    }
+    // post-snapshot tail: fresh inserts plus deletes of one
+    // pre-snapshot id and one post-snapshot id (WAL-only state)
+    for i in 30..40u32 {
+        let (id, _) = svc.insert(doc(i)).unwrap();
+        live.push(id);
+    }
+    for id in [2u64, 35] {
+        svc.delete(id).unwrap();
+        live.retain(|&x| x != id);
+        deleted.push(id);
+    }
+    (live, deleted)
+}
+
+#[test]
+fn crash_recovery_is_byte_identical_to_uninterrupted_run() {
+    let dir = TempDir::new().unwrap();
+
+    // interrupted run: workload with a mid-stream compaction, then the
+    // coordinator is dropped with a non-empty, uncompacted WAL tail
+    let (live, deleted) = {
+        let svc = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 4)).unwrap();
+        run_workload(&svc, true)
+    };
+
+    // control: same op sequence, purely in-memory, never interrupted
+    let control = Coordinator::start(cfg_with(None, 4)).unwrap();
+    let (control_live, control_deleted) = run_workload(&control, false);
+    assert_eq!(live, control_live, "id sequences must line up");
+    assert_eq!(deleted, control_deleted);
+
+    // recover from snapshot + WAL replay
+    let recovered = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 4)).unwrap();
+    let (_, store) = recovered.stats();
+    assert_eq!(store.stored, live.len());
+    assert!(store.persisted_bytes > 0);
+
+    // every query answer is byte-identical to the uninterrupted run,
+    // and deleted ids never reappear as neighbors
+    for i in 0..40u32 {
+        let got: Vec<Neighbor> = recovered.query(doc(i), 10).unwrap();
+        let want: Vec<Neighbor> = control.query(doc(i), 10).unwrap();
+        assert_eq!(got, want, "query mismatch for probe {i}");
+        assert!(
+            got.iter().all(|n| !deleted.contains(&n.id)),
+            "deleted id resurfaced for probe {i}: {got:?}"
+        );
+        let above = recovered.query_above(doc(i), 0.3).unwrap();
+        assert_eq!(above, control.query_above(doc(i), 0.3).unwrap());
+    }
+
+    // estimates between live ids are byte-identical too
+    for pair in live.windows(2) {
+        let got = recovered.estimate_ids(pair[0], pair[1]).unwrap();
+        let want = control.estimate_ids(pair[0], pair[1]).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+    // deleted ids are gone from the estimate path as well
+    assert!(recovered.estimate_ids(deleted[0], live[0]).is_err());
+
+    // fresh ids continue past everything ever allocated (no reuse)
+    let (fresh, _) = recovered.insert(doc(99)).unwrap();
+    assert_eq!(fresh, 40);
+}
+
+#[test]
+fn recovery_without_snapshot_is_pure_wal_replay() {
+    let dir = TempDir::new().unwrap();
+    let (live, deleted) = {
+        let svc = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 2)).unwrap();
+        run_workload(&svc, false) // never compacted: WAL only
+    };
+    let recovered = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 2)).unwrap();
+    let (_, store) = recovered.stats();
+    assert_eq!(store.stored, live.len());
+    for &id in &deleted {
+        assert!(recovered.estimate_ids(id, id).is_err(), "id {id} survived");
+    }
+    for &id in &live {
+        assert!(recovered.estimate_ids(id, id).is_ok(), "id {id} lost");
+    }
+}
+
+#[test]
+fn sharded_n1_is_identical_to_banding_index() {
+    let hasher = CMinHasher::new(1024, K, 5);
+    let cfg = IndexConfig {
+        bands: 16,
+        rows_per_band: 4,
+    };
+    let sketches: Vec<Vec<u32>> = (0..64u32)
+        .map(|i| {
+            // overlapping shingle windows -> plenty of near neighbors
+            let d: Vec<u32> = (i * 5..i * 5 + 60).collect();
+            hasher.sketch_sparse(&d)
+        })
+        .collect();
+
+    let mut golden = BandingIndex::new(K, cfg).unwrap();
+    let single = ShardedIndex::new(K, cfg, 1).unwrap();
+    let wide = ShardedIndex::new(K, cfg, 4).unwrap();
+    for (i, sk) in sketches.iter().enumerate() {
+        golden.insert(i as u64, sk).unwrap();
+        assert_eq!(single.insert(sk).unwrap(), i as u64);
+        assert_eq!(wide.insert(sk).unwrap(), i as u64);
+    }
+
+    for sk in &sketches {
+        let want = golden.query(sk, 7);
+        assert_eq!(single.query(sk, 7).unwrap(), want, "N=1 must be identical");
+        assert_eq!(
+            wide.query(sk, 7).unwrap(),
+            want,
+            "sharding is a scaling knob, not a semantics change"
+        );
+        let want_above = golden.query_above(sk, 0.4);
+        assert_eq!(single.query_above(sk, 0.4).unwrap(), want_above);
+        assert_eq!(wide.query_above(sk, 0.4).unwrap(), want_above);
+    }
+}
+
+#[test]
+fn save_and_recover_over_the_wire() {
+    let dir = TempDir::new().unwrap();
+    let addr;
+    {
+        let svc = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 2)).unwrap();
+        let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+        addr = server.addr().to_string();
+        let mut c = BlockingClient::connect(&addr).unwrap();
+        let a = c.insert(DIM as u32, (0..50).collect()).unwrap();
+        let _b = c.insert(DIM as u32, (25..75).collect()).unwrap();
+        c.delete(a).unwrap();
+        // explicit save folds the WAL into the snapshot
+        let raw = c.call_raw(&Request::Save).unwrap();
+        assert!(raw.get("ok").unwrap().as_bool().unwrap());
+        let bytes = raw.get("persisted_bytes").unwrap().as_u64().unwrap();
+        assert!(bytes > 0);
+        let stats = c.call_raw(&Request::Stats).unwrap();
+        assert_eq!(stats.get("persisted_bytes").unwrap().as_u64().unwrap(), bytes);
+        drop(c);
+    }
+    // a fresh service over the same directory serves the saved state
+    let svc = Coordinator::start(cfg_with(Some(dir.path().to_path_buf()), 2)).unwrap();
+    let (_, store) = svc.stats();
+    assert_eq!(store.stored, 1);
+    let hits = svc
+        .query(SparseVec::new(DIM as u32, (25..75).collect()).unwrap(), 3)
+        .unwrap();
+    assert_eq!(hits[0].id, 1, "survivor keeps its id across restart");
+    assert_eq!(hits[0].score, 1.0);
+}
