@@ -42,8 +42,8 @@ fn main() -> cminhash::Result<()> {
             bands: 32,
             rows_per_band: 4,
         },
-        store: Default::default(),
         addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
     };
     println!("== e2e serving driver (engine={engine:?}, D={dim}, K={k}) ==");
     let svc = Coordinator::start(cfg)?;
@@ -130,16 +130,29 @@ fn main() -> cminhash::Result<()> {
 
     // Accuracy check through the served sketches: estimate J for 200
     // random pairs via one connection and compare with exact values.
+    // The 200 probe sketches travel as two `sketch_batch` round-trips
+    // instead of 200 per-item calls — the batch wire path end to end.
     let mut client = BlockingClient::connect(&addr)?;
+    let rows = corpus.rows();
+    let probes: Vec<&cminhash::sketch::SparseVec> =
+        (0..200).map(|i| &rows[i % rows.len()]).collect();
+    let t_batch = Instant::now();
+    let mut sketches = Vec::with_capacity(probes.len());
+    for chunk in probes.chunks(100) {
+        let batch: Vec<Vec<u32>> = chunk.iter().map(|v| v.indices().to_vec()).collect();
+        sketches.extend(client.sketch_batch(dim as u32, batch)?);
+    }
+    println!(
+        "\nsketched {} probes over {} batched round-trips in {:.1}ms",
+        probes.len(),
+        probes.len() / 100,
+        t_batch.elapsed().as_secs_f64() * 1e3
+    );
     let mut err_sum = 0.0f64;
     let mut n_pairs = 0usize;
-    let rows = corpus.rows();
     for i in (0..200).step_by(2) {
-        let a = &rows[i % rows.len()];
-        let b = &rows[(i + 1) % rows.len()];
-        let sa = client.sketch(a.dim(), a.indices().to_vec())?;
-        let sb = client.sketch(b.dim(), b.indices().to_vec())?;
-        let j_hat = estimate(&sa, &sb);
+        let (a, b) = (probes[i], probes[i + 1]);
+        let j_hat = estimate(&sketches[i], &sketches[i + 1]);
         err_sum += (j_hat - a.jaccard(b)).abs();
         n_pairs += 1;
     }

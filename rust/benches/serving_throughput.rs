@@ -1,16 +1,34 @@
 //! End-to-end serving throughput: the full coordinator + TCP + batcher
 //! stack under closed-loop load, for both engines.  The L3 overhead
 //! claim (coordinator ≪ hash compute) is quantified by comparing the
-//! rust-engine serving throughput against the bare hasher throughput.
+//! rust-engine serving throughput against the bare hasher throughput,
+//! and the batch-protocol claim (one round-trip per *batch* beats one
+//! per *vector*) is measured by driving the same row budget through
+//! per-item `sketch` ops vs `sketch_batch`/`insert_batch` ops and
+//! recorded in `BENCH_serving_batch.json`.
 
 use cminhash::bench::Harness;
 use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
 use cminhash::coordinator::Coordinator;
 use cminhash::server::{BlockingClient, Server};
 use cminhash::sketch::{CMinHasher, Sketcher};
+use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
+
+fn rand_rows(dim: u32, nnz: usize, n: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            idx
+        })
+        .collect()
+}
 
 fn drive(addr: &str, dim: u32, nnz: usize, requests: usize, conns: usize) -> (f64, f64) {
     let per_conn = requests / conns;
@@ -20,13 +38,9 @@ fn drive(addr: &str, dim: u32, nnz: usize, requests: usize, conns: usize) -> (f6
         let addr = addr.to_string();
         joins.push(std::thread::spawn(move || {
             let mut client = BlockingClient::connect(&addr).unwrap();
-            let mut rng = Rng::seed_from_u64(c as u64);
+            let rows = rand_rows(dim, nnz, per_conn, c as u64);
             let mut lat = 0.0f64;
-            for _ in 0..per_conn {
-                let mut idx: Vec<u32> =
-                    (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
-                idx.sort_unstable();
-                idx.dedup();
+            for idx in rows {
                 let t = Instant::now();
                 let _ = client.sketch(dim, idx).unwrap();
                 lat += t.elapsed().as_secs_f64();
@@ -40,7 +54,38 @@ fn drive(addr: &str, dim: u32, nnz: usize, requests: usize, conns: usize) -> (f6
     ((requests as f64) / wall, mean_lat * 1e3)
 }
 
-fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) {
+/// Same row budget as [`drive`], but `wire_batch` rows per request
+/// line through `sketch_batch` — one round-trip, one response line,
+/// one engine submission per client batch.
+fn drive_batched(
+    addr: &str,
+    dim: u32,
+    nnz: usize,
+    requests: usize,
+    conns: usize,
+    wire_batch: usize,
+) -> f64 {
+    let per_conn = requests / conns;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..conns {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut client = BlockingClient::connect(&addr).unwrap();
+            let rows = rand_rows(dim, nnz, per_conn, 1000 + c as u64);
+            for chunk in rows.chunks(wire_batch) {
+                let got = client.sketch_batch(dim, chunk.to_vec()).unwrap();
+                assert_eq!(got.len(), chunk.len());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    (requests as f64) / t0.elapsed().as_secs_f64()
+}
+
+fn start(engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) -> Option<(Arc<Coordinator>, Server)> {
     let cfg = ServeConfig {
         engine,
         artifacts_dir: Path::new("artifacts").to_path_buf(),
@@ -56,17 +101,24 @@ fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usi
             bands: 32,
             rows_per_band: 4,
         },
-        store: Default::default(),
         addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
     };
     let svc = match Coordinator::start(cfg) {
         Ok(s) => s,
         Err(e) => {
             println!("(skipping {engine:?} serving bench: {e})");
-            return;
+            return None;
         }
     };
     let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    Some((svc, server))
+}
+
+fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) {
+    let Some((svc, server)) = start(engine, policy, dim, k) else {
+        return;
+    };
     let addr = server.addr().to_string();
     // warmup
     let _ = drive(&addr, dim as u32, 64, 64, 8);
@@ -86,7 +138,84 @@ fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usi
     );
 }
 
+/// Per-item vs batched wire ops over the same row budget; returns the
+/// JSON record for `BENCH_serving_batch.json`.
+fn run_batch_comparison(h: &mut Harness, dim: usize, k: usize, rows: usize) -> Json {
+    let (svc, server) =
+        start(EngineKind::Rust, BatchPolicy::Eager, dim, k).expect("rust engine always starts");
+    let addr = server.addr().to_string();
+    let conns = 8usize;
+
+    // warmup both paths
+    let _ = drive(&addr, dim as u32, 64, 256, conns);
+    let _ = drive_batched(&addr, dim as u32, 64, 256, conns, 32);
+
+    let t0 = Instant::now();
+    let (item_rps, item_lat) = drive(&addr, dim as u32, 64, rows, conns);
+    h.report(
+        &format!("wire per-item sketch x{rows} ({conns} conns)"),
+        t0.elapsed(),
+        rows as u64,
+    );
+
+    let mut batched = Vec::new();
+    for wire_batch in [8usize, 32, 128] {
+        let t0 = Instant::now();
+        let rps = drive_batched(&addr, dim as u32, 64, rows, conns, wire_batch);
+        h.report(
+            &format!("wire sketch_batch B={wire_batch} x{rows} ({conns} conns)"),
+            t0.elapsed(),
+            rows as u64,
+        );
+        println!(
+            "  -> sketch_batch B={wire_batch}: {rps:.0} rows/s ({:.2}x per-item)",
+            rps / item_rps
+        );
+        batched.push(Json::obj(vec![
+            ("wire_batch", Json::Num(wire_batch as f64)),
+            ("rows_per_s", Json::Num(rps)),
+            ("speedup_vs_per_item", Json::Num(rps / item_rps)),
+        ]));
+    }
+
+    // Bulk ingest: insert_batch against per-item insert, single conn
+    // (the `cminhash load` shape).
+    let ingest_rows = rand_rows(dim as u32, 64, rows.min(2048), 77);
+    let mut client = BlockingClient::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    for r in &ingest_rows {
+        client.insert(dim as u32, r.clone()).unwrap();
+    }
+    let item_ingest = ingest_rows.len() as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for chunk in ingest_rows.chunks(256) {
+        client.insert_batch(dim as u32, chunk.to_vec()).unwrap();
+    }
+    let batch_ingest = ingest_rows.len() as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  -> ingest: per-item {item_ingest:.0} rows/s, insert_batch(256) \
+         {batch_ingest:.0} rows/s ({:.2}x)",
+        batch_ingest / item_ingest
+    );
+
+    let (snap, _) = svc.stats();
+    Json::obj(vec![
+        ("bench", Json::str("serving_batch")),
+        ("dim", Json::Num(dim as f64)),
+        ("k", Json::Num(k as f64)),
+        ("rows", Json::Num(rows as f64)),
+        ("conns", Json::Num(conns as f64)),
+        ("per_item_rows_per_s", Json::Num(item_rps)),
+        ("per_item_mean_latency_ms", Json::Num(item_lat)),
+        ("batched", Json::Arr(batched)),
+        ("ingest_per_item_rows_per_s", Json::Num(item_ingest)),
+        ("ingest_insert_batch_rows_per_s", Json::Num(batch_ingest)),
+        ("mean_engine_batch_fill", Json::Num(snap.mean_batch_fill)),
+    ])
+}
+
 fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
     let mut h = Harness::new("serving_throughput");
     let (dim, k) = (4096usize, 256usize);
 
@@ -103,6 +232,12 @@ fn main() {
     run_engine(&mut h, EngineKind::Rust, BatchPolicy::Eager, dim, k);
     run_engine(&mut h, EngineKind::Rust, BatchPolicy::Deadline, dim, k);
     run_engine(&mut h, EngineKind::Xla, BatchPolicy::Eager, dim, k);
+
+    // Batched vs per-item wire ops (the batch-protocol claim).
+    let rows = if fast { 1024 } else { 8192 };
+    let record = run_batch_comparison(&mut h, dim, k, rows);
+    std::fs::write("BENCH_serving_batch.json", record.to_string()).unwrap();
+    println!("wrote BENCH_serving_batch.json");
 
     println!(
         "PAPER-CHECK L3 overhead: bare hash = {:.1} µs/sketch; serving adds \

@@ -106,6 +106,24 @@ pub struct StoreSettings {
     pub persist_dir: Option<PathBuf>,
 }
 
+/// TCP server settings (connection admission).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerSettings {
+    /// Size of the connection worker pool: at most this many
+    /// connections are served concurrently.  Connection number
+    /// `max_connections + 1` receives a clean `busy` protocol error
+    /// and is closed instead of spawning an unbounded OS thread.
+    pub max_connections: usize,
+}
+
+impl Default for ServerSettings {
+    fn default() -> Self {
+        ServerSettings {
+            max_connections: 256,
+        }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -127,6 +145,8 @@ pub struct ServeConfig {
     pub index: IndexSettings,
     /// Store sharding + persistence.
     pub store: StoreSettings,
+    /// Server connection admission.
+    pub server: ServerSettings,
 }
 
 impl Default for ServeConfig {
@@ -144,6 +164,7 @@ impl Default for ServeConfig {
             batch: BatchConfig::default(),
             index: IndexSettings::default(),
             store: StoreSettings::default(),
+            server: ServerSettings::default(),
         }
     }
 }
@@ -206,6 +227,11 @@ impl ServeConfig {
                 };
             }
         }
+        if let Some(sv) = j.get_opt("server") {
+            if let Some(v) = sv.get_opt("max_connections") {
+                cfg.server.max_connections = v.as_usize()?;
+            }
+        }
         Ok(cfg)
     }
 
@@ -230,6 +256,18 @@ impl ServeConfig {
             return Err(crate::Error::Invalid(format!(
                 "store.shards = {} is absurd (max 1024)",
                 self.store.shards
+            )));
+        }
+        if self.server.max_connections == 0 {
+            return Err(crate::Error::Invalid(
+                "server.max_connections must be > 0".into(),
+            ));
+        }
+        if self.server.max_connections > 16_384 {
+            return Err(crate::Error::Invalid(format!(
+                "server.max_connections = {} is absurd (max 16384; each \
+                 connection holds one pool worker)",
+                self.server.max_connections
             )));
         }
         Ok(())
@@ -321,6 +359,22 @@ mod tests {
         // absurd shard counts are rejected
         let mut c = ServeConfig::default();
         c.store.shards = 100_000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn server_settings_parse_and_validate() {
+        let c = ServeConfig::default();
+        assert_eq!(c.server.max_connections, 256, "pool default");
+        let j = crate::util::json::Json::parse(r#"{"server": {"max_connections": 2}}"#)
+            .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.server.max_connections, 2);
+        c.validate().unwrap();
+        let mut c = ServeConfig::default();
+        c.server.max_connections = 0;
+        assert!(c.validate().is_err(), "a zero-worker pool can serve nobody");
+        c.server.max_connections = 1_000_000;
         assert!(c.validate().is_err());
     }
 

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! clients ─▶ Coordinator::sketch/insert/delete/estimate/query/save
+//!            (+ sketch_many/insert_many/query_many batch units)
 //!                 │ (sketch requests)
 //!                 ▼
 //!           dynamic batcher (max_batch | max_delay)
@@ -13,11 +14,11 @@
 //!                 ▼
 //!           sharded sketch store (crate::store): WAL + snapshot
 //!           durability, per-shard banding indexes, parallel query
-//!           fan-out
+//!           fan-out, one lock acquisition per shard per batch
 //! ```
 //!
 //! The batcher state machine ([`Batcher`]) is pure and unit tested;
-//! [`Coordinator`] wires it to the thread-per-connection server.
+//! [`Coordinator`] wires it to the server's bounded connection pool.
 //! [`SketchStore`] is a standalone single-shard storage primitive
 //! with the same delete/re-insert contract; the sharded store itself
 //! keeps sketches inside each shard's

@@ -2,11 +2,12 @@
 //! plus sketch store, LSH index and metrics.
 //!
 //! Threading model (the offline build has no async runtime, and none is
-//! needed): the server runs thread-per-connection; every connection
-//! thread calls the blocking [`Coordinator`] API; sketch requests cross
+//! needed): the server runs a bounded pool of connection workers; every
+//! worker calls the blocking [`Coordinator`] API; sketch requests cross
 //! one channel into the **batch pump thread**, which groups them up to
 //! the artifact batch size or the latency deadline and executes on the
-//! backend; responses travel back over per-request rendezvous channels.
+//! backend; responses travel back over one channel per client batch
+//! (a singleton request is a batch of one).
 
 use crate::config::{EngineKind, ServeConfig};
 use crate::coordinator::batcher::Batcher;
@@ -51,9 +52,16 @@ pub enum EngineBackend {
     },
 }
 
+/// One row of a client batch queued for the pump.  `resp` is shared by
+/// every row of the same client batch — **one channel per batch**, not
+/// per row — and carries the row index so the client can reassemble
+/// results in submission order even when the pump splits the rows
+/// across engine batches.  The channel's capacity equals the batch
+/// size, so the pump never blocks delivering results.
 struct SketchJob {
     vec: SparseVec,
-    resp: mpsc::SyncSender<crate::Result<Vec<u32>>>,
+    row: usize,
+    resp: mpsc::SyncSender<(usize, crate::Result<Vec<u32>>)>,
 }
 
 /// The L3 coordinator.
@@ -156,7 +164,13 @@ impl Coordinator {
         &self.metrics
     }
 
-    fn check_dim(&self, v: &SparseVec) -> crate::Result<()> {
+    /// Validate a request vector: the dimension must match the service
+    /// and the vector must have at least one nonzero.  An empty vector
+    /// has no minimum — its sketch would be the all-sentinel value,
+    /// which collides in every slot with every other empty vector and
+    /// fabricates Ĵ = 1.0 where exact Jaccard (eq. 1) gives 0 — so it
+    /// is rejected at the boundary with a clean error.
+    fn check_vec(&self, v: &SparseVec) -> crate::Result<()> {
         if v.dim() as usize != self.cfg.dim {
             return Err(crate::Error::ShapeMismatch {
                 what: "vector dim",
@@ -164,23 +178,64 @@ impl Coordinator {
                 got: v.dim() as usize,
             });
         }
+        if v.nnz() == 0 {
+            return Err(crate::Error::Invalid(
+                "empty vector (0 nonzeros): MinHash is undefined on the empty \
+                 set and its sentinel sketch would spuriously estimate Ĵ = 1.0 \
+                 against every other empty vector"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 
     /// Sketch one vector through the batched engine (blocks until the
     /// batch executes).
     pub fn sketch(&self, v: SparseVec) -> crate::Result<Vec<u32>> {
-        self.check_dim(&v)?;
+        let mut out = self.sketch_many(vec![v])?;
+        Ok(out.pop().expect("one row in, one row out"))
+    }
+
+    /// Sketch a whole client batch through the engine: every row is
+    /// submitted to the batch pump **before** the first wait, so the
+    /// rows coalesce into as few engine executions as the artifact
+    /// batch size allows, and all results come back over one channel.
+    /// Results are returned in submission order.  The batch is
+    /// all-or-nothing: any row failing validation or execution fails
+    /// the call.
+    pub fn sketch_many(&self, vs: Vec<SparseVec>) -> crate::Result<Vec<Vec<u32>>> {
+        if vs.is_empty() {
+            return Err(crate::Error::Invalid("empty batch".into()));
+        }
+        for v in &vs {
+            self.check_vec(v)?;
+        }
+        let n = vs.len();
         let start = Instant::now();
-        let (resp, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(SketchJob { vec: v, resp })
-            .map_err(|_| crate::Error::Shutdown)?;
-        let out = rx.recv().map_err(|_| crate::Error::Shutdown)??;
+        // Capacity n: the pump can deliver every row without blocking
+        // even before this thread starts receiving.
+        let (resp, rx) = mpsc::sync_channel(n);
+        for (row, vec) in vs.into_iter().enumerate() {
+            self.tx
+                .send(SketchJob {
+                    vec,
+                    row,
+                    resp: resp.clone(),
+                })
+                .map_err(|_| crate::Error::Shutdown)?;
+        }
+        drop(resp);
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for _ in 0..n {
+            let (row, sk) = rx.recv().map_err(|_| crate::Error::Shutdown)?;
+            out[row] = sk?;
+        }
         self.metrics
             .sketch_latency
             .record(start.elapsed().as_micros() as u64);
-        Metrics::inc(&self.metrics.sketches);
+        self.metrics
+            .sketches
+            .fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
         Ok(out)
     }
 
@@ -191,6 +246,19 @@ impl Coordinator {
         let sk = self.sketch(v)?;
         let id = self.store.insert(sk.clone())?;
         Ok((id, sk))
+    }
+
+    /// Sketch, store, and index a whole batch as a unit: one pass
+    /// through the batch pump, one WAL append, one lock acquisition
+    /// per store shard.  Returns `(id, sketch)` per row in submission
+    /// order; ids are consecutive.
+    pub fn insert_many(
+        &self,
+        vs: Vec<SparseVec>,
+    ) -> crate::Result<Vec<(u64, Vec<u32>)>> {
+        let sks = self.sketch_many(vs)?;
+        let ids = self.store.insert_many(&sks)?;
+        Ok(ids.into_iter().zip(sks).collect())
     }
 
     /// Delete a stored id (error on unknown ids); the deletion is
@@ -208,12 +276,12 @@ impl Coordinator {
         Ok(jhat)
     }
 
-    /// Estimate J between two raw vectors (sketches both).
+    /// Estimate J between two raw vectors (sketches both as one
+    /// two-row batch through the pump).
     pub fn estimate_vecs(&self, v: SparseVec, w: SparseVec) -> crate::Result<f64> {
-        let sv = self.sketch(v)?;
-        let sw = self.sketch(w)?;
+        let sks = self.sketch_many(vec![v, w])?;
         Metrics::inc(&self.metrics.estimates);
-        Ok(crate::sketch::estimate(&sv, &sw))
+        Ok(crate::sketch::estimate(&sks[0], &sks[1]))
     }
 
     /// Top-k near neighbors of a vector among inserted items, fanned
@@ -233,11 +301,43 @@ impl Coordinator {
         Ok(out)
     }
 
+    /// Top-k near neighbors for a whole batch of query vectors: one
+    /// pass through the batch pump, one lock acquisition per store
+    /// shard.  Returns one neighbor list per row, each identical to
+    /// what the singleton [`Coordinator::query`] would return.
+    pub fn query_many(
+        &self,
+        vs: Vec<SparseVec>,
+        topk: usize,
+    ) -> crate::Result<Vec<Vec<Neighbor>>> {
+        if topk == 0 {
+            return Err(crate::Error::Invalid("topk must be at least 1".into()));
+        }
+        let n = vs.len();
+        let start = Instant::now();
+        let sks = self.sketch_many(vs)?;
+        let out = self.store.query_many(&sks, topk)?;
+        self.metrics
+            .query_latency
+            .record(start.elapsed().as_micros() as u64);
+        self.metrics
+            .queries
+            .fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+
     /// All inserted items with estimated J ≥ `threshold`.
     pub fn query_above(&self, v: SparseVec, threshold: f64) -> crate::Result<Vec<Neighbor>> {
+        let start = Instant::now();
         let sk = self.sketch(v)?;
+        let out = self.store.query_above(&sk, threshold)?;
+        // Same accounting as `query`: a latency sample per request, so
+        // `stats` reflects threshold queries too.
+        self.metrics
+            .query_latency
+            .record(start.elapsed().as_micros() as u64);
         Metrics::inc(&self.metrics.queries);
-        self.store.query_above(&sk, threshold)
+        Ok(out)
     }
 
     /// Fold the WAL into a fresh snapshot; returns persisted bytes.
@@ -335,6 +435,38 @@ fn batch_pump(
     }
 }
 
+/// The largest batch the loaded artifact ladder can execute when the
+/// heaviest row carries `max_nnz` nonzeros: the biggest batch
+/// dimension among the sparse variants whose `F_max` fits the row,
+/// plus the dense fallback (which fits any row).  `None` means no
+/// loaded variant can hash such a row at all.
+///
+/// This is the invariant that kills the dense-fallback overflow: any
+/// batch larger than the capacity is **split** before execution, so
+/// the dense arm can never see more rows than its fixed batch
+/// dimension (`batch_b - n` used to wrap and index out of bounds).
+fn batch_capacity(
+    dense: &Option<(String, usize)>,
+    sparse: &[(String, usize, usize)],
+    max_nnz: usize,
+) -> Option<usize> {
+    sparse
+        .iter()
+        .filter(|(_, _, f)| max_nnz <= *f)
+        .map(|(_, b, _)| *b)
+        .chain(dense.as_ref().map(|(_, b)| *b))
+        .max()
+}
+
+fn fail_batch(batch: Vec<SketchJob>, msg: &str, metrics: &Metrics) {
+    Metrics::inc(&metrics.errors);
+    for job in batch {
+        let _ = job
+            .resp
+            .send((job.row, Err(crate::Error::Invalid(msg.to_string()))));
+    }
+}
+
 fn run_batch(
     backend: &EngineBackend,
     dim: usize,
@@ -342,17 +474,18 @@ fn run_batch(
     batch: Vec<SketchJob>,
     metrics: &Metrics,
 ) {
-    let start = Instant::now();
     let n = batch.len();
-    // Counted up-front so a client that observes its response also
-    // observes the batch in /stats (responses are sent below).
-    Metrics::inc(&metrics.batches);
     match backend {
         EngineBackend::Rust { hasher } => {
+            let start = Instant::now();
+            Metrics::inc(&metrics.batches);
             for job in batch {
                 let sk = hasher.sketch_sparse(job.vec.indices());
-                let _ = job.resp.send(Ok(sk));
+                let _ = job.resp.send((job.row, Ok(sk)));
             }
+            metrics
+                .batch_latency
+                .record(start.elapsed().as_micros() as u64);
         }
         EngineBackend::Xla {
             handle,
@@ -363,10 +496,42 @@ fn run_batch(
             pi2,
             pi3,
         } => {
-            // Route: sparse gather kernel when every row fits in F_max
-            // (the common case), dense kernel otherwise.
             let max_nnz = batch.iter().map(|j| j.vec.nnz()).max().unwrap_or(0);
-            // Smallest sparse variant that fits this batch and its rows.
+            let Some(cap) = batch_capacity(dense, sparse, max_nnz) else {
+                // Truthful cause: capacity is None only when the row
+                // weight itself is unservable (batch *size* overflows
+                // are split below, never errored).
+                let f_ceiling = sparse.iter().map(|(_, _, f)| *f).max().unwrap_or(0);
+                fail_batch(
+                    batch,
+                    &format!(
+                        "row with {max_nnz} nonzeros exceeds every sparse \
+                         variant's F_max ({f_ceiling}) and no dense artifact \
+                         is loaded"
+                    ),
+                    metrics,
+                );
+                return;
+            };
+            if n > cap {
+                // Oversized for every variant that can take these rows:
+                // split into capacity-sized chunks.  Each chunk
+                // re-routes independently, so chunks that dodge the
+                // heavy rows may still take the fast sparse path.
+                let mut rest = batch;
+                while rest.len() > cap {
+                    let tail = rest.split_off(cap);
+                    run_batch(backend, dim, k, rest, metrics);
+                    rest = tail;
+                }
+                run_batch(backend, dim, k, rest, metrics);
+                return;
+            }
+            let start = Instant::now();
+            Metrics::inc(&metrics.batches);
+            // Route: sparse gather kernel when every row fits in F_max
+            // (the common case), dense kernel otherwise.  Smallest
+            // sparse variant that fits this batch and its rows wins.
             let pick = sparse
                 .iter()
                 .find(|(_, b, f)| n <= *b && max_nnz <= *f);
@@ -393,46 +558,45 @@ fn run_batch(
                     ],
                 )
             } else {
-                match dense {
-                    Some((name, batch_b)) => {
-                        debug_assert!(n <= *batch_b);
-                        metrics.pad_rows.fetch_add(
-                            (*batch_b - n) as u64,
-                            std::sync::atomic::Ordering::Relaxed,
-                        );
-                        // Dense bits matrix; padding rows stay all-zero
-                        // and their sentinel sketches are never
-                        // delivered to anyone.
-                        let mut bits = vec![0i32; batch_b * dim];
-                        for (row, job) in batch.iter().enumerate() {
-                            for &i in job.vec.indices() {
-                                bits[row * dim + i as usize] = 1;
-                            }
-                        }
-                        (
-                            name.clone(),
-                            vec![
-                                HostTensor::I32(bits),
-                                HostTensor::I32(sigma.clone()),
-                                HostTensor::I32(pi2.clone()),
-                            ],
-                        )
-                    }
-                    None => {
-                        let msg = format!(
-                            "row with {max_nnz} nonzeros exceeds sparse F_max and no \
-                             dense artifact is loaded"
-                        );
-                        Metrics::inc(&metrics.errors);
-                        for job in batch {
-                            let _ = job.resp.send(Err(crate::Error::Invalid(msg.clone())));
-                        }
-                        metrics
-                            .batch_latency
-                            .record(start.elapsed().as_micros() as u64);
-                        return;
+                // No sparse variant fits; the capacity invariant above
+                // proves the dense fallback exists and fits n.
+                let (name, batch_b) = dense
+                    .as_ref()
+                    .expect("capacity came from the dense variant");
+                if n > *batch_b {
+                    // Unreachable after the split; fail closed with a
+                    // protocol error rather than writing out of bounds.
+                    fail_batch(
+                        batch,
+                        &format!(
+                            "internal routing bug: {n} rows reached the dense \
+                             arm with batch capacity {batch_b}"
+                        ),
+                        metrics,
+                    );
+                    return;
+                }
+                metrics.pad_rows.fetch_add(
+                    (*batch_b - n) as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+                // Dense bits matrix; padding rows stay all-zero
+                // and their sentinel sketches are never
+                // delivered to anyone.
+                let mut bits = vec![0i32; batch_b * dim];
+                for (row, job) in batch.iter().enumerate() {
+                    for &i in job.vec.indices() {
+                        bits[row * dim + i as usize] = 1;
                     }
                 }
+                (
+                    name.clone(),
+                    vec![
+                        HostTensor::I32(bits),
+                        HostTensor::I32(sigma.clone()),
+                        HostTensor::I32(pi2.clone()),
+                    ],
+                )
             };
             match handle.execute(&variant, inputs) {
                 Ok(outputs) => match outputs[0].as_i32() {
@@ -442,13 +606,15 @@ fn run_batch(
                                 .iter()
                                 .map(|&v| v as u32)
                                 .collect();
-                            let _ = job.resp.send(Ok(sk));
+                            let _ = job.resp.send((job.row, Ok(sk)));
                         }
                     }
                     Err(e) => {
                         let msg = e.to_string();
                         for job in batch {
-                            let _ = job.resp.send(Err(crate::Error::Xla(msg.clone())));
+                            let _ = job
+                                .resp
+                                .send((job.row, Err(crate::Error::Xla(msg.clone()))));
                         }
                     }
                 },
@@ -456,15 +622,17 @@ fn run_batch(
                     let msg = e.to_string();
                     Metrics::inc(&metrics.errors);
                     for job in batch {
-                        let _ = job.resp.send(Err(crate::Error::Xla(msg.clone())));
+                        let _ = job
+                            .resp
+                            .send((job.row, Err(crate::Error::Xla(msg.clone()))));
                     }
                 }
             }
+            metrics
+                .batch_latency
+                .record(start.elapsed().as_micros() as u64);
         }
     }
-    metrics
-        .batch_latency
-        .record(start.elapsed().as_micros() as u64);
 }
 
 #[cfg(test)]
@@ -591,6 +759,143 @@ mod tests {
         let (snap, _) = svc.stats();
         assert_eq!(snap.sketches, 32);
         assert!(snap.batches >= 1);
+    }
+
+    #[test]
+    fn sketch_many_matches_singletons_in_order() {
+        let cfg = rust_cfg();
+        let svc = Coordinator::start(cfg.clone()).unwrap();
+        let hasher = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+        // 13 rows > max_batch=4: the client batch spans several engine
+        // batches and must still come back in submission order.
+        let vs: Vec<SparseVec> = (0..13u32)
+            .map(|i| SparseVec::new(512, vec![i, i + 40, i + 300]).unwrap())
+            .collect();
+        let got = svc.sketch_many(vs.clone()).unwrap();
+        assert_eq!(got.len(), 13);
+        for (row, v) in vs.iter().enumerate() {
+            assert_eq!(
+                got[row],
+                hasher.sketch_sparse(v.indices()),
+                "row {row} out of order or wrong"
+            );
+        }
+        let (snap, _) = svc.stats();
+        assert_eq!(snap.sketches, 13);
+        assert!(snap.batches >= 4, "13 rows over max_batch=4 need >= 4 flushes");
+    }
+
+    #[test]
+    fn insert_many_and_query_many_match_singleton_paths() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let single = Coordinator::start(rust_cfg()).unwrap();
+        let vs: Vec<SparseVec> = (0..6u32)
+            .map(|i| SparseVec::new(512, (i * 20..i * 20 + 50).collect()).unwrap())
+            .collect();
+        let batched = svc.insert_many(vs.clone()).unwrap();
+        let singles: Vec<(u64, Vec<u32>)> = vs
+            .iter()
+            .map(|v| single.insert(v.clone()).unwrap())
+            .collect();
+        assert_eq!(batched, singles, "N-row batch == N singleton inserts");
+        // batch query rows equal singleton query results
+        let hits = svc.query_many(vs.clone(), 3).unwrap();
+        assert_eq!(hits.len(), 6);
+        for (row, v) in vs.iter().enumerate() {
+            assert_eq!(hits[row], svc.query(v.clone(), 3).unwrap(), "row {row}");
+            assert_eq!(hits[row][0].id, batched[row].0, "self is the top hit");
+        }
+        assert!(svc.query_many(vs, 0).is_err(), "topk=0 stays a client error");
+        assert!(
+            matches!(svc.sketch_many(vec![]), Err(crate::Error::Invalid(_))),
+            "empty batch is a client error"
+        );
+    }
+
+    #[test]
+    fn empty_vectors_are_rejected_not_estimated_as_identical() {
+        // Regression: two empty vectors used to sketch to the all-D
+        // sentinel and estimate Ĵ = 1.0 against each other.
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let empty = SparseVec::new(512, vec![]).unwrap();
+        let full = SparseVec::new(512, vec![1, 2, 3]).unwrap();
+        for r in [
+            svc.sketch(empty.clone()).err(),
+            svc.insert(empty.clone()).err(),
+            svc.query(empty.clone(), 3).err(),
+            svc.query_above(empty.clone(), 0.5).err(),
+            svc.estimate_vecs(empty.clone(), empty.clone()).err(),
+            svc.estimate_vecs(full.clone(), empty.clone()).err(),
+        ] {
+            match r {
+                Some(crate::Error::Invalid(msg)) => {
+                    assert!(msg.contains("empty vector"), "{msg}")
+                }
+                other => panic!("expected Invalid(empty vector), got {other:?}"),
+            }
+        }
+        // one empty row poisons a whole batch before submission
+        assert!(svc
+            .insert_many(vec![full.clone(), empty.clone()])
+            .is_err());
+        let (_, store) = svc.stats();
+        assert_eq!(store.stored, 0, "nothing slipped into the store");
+        // non-empty traffic still works afterwards
+        assert_eq!(svc.sketch(full).unwrap().len(), 64);
+    }
+
+    #[test]
+    fn query_above_records_latency_like_query() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let v = SparseVec::new(512, (0..50).collect()).unwrap();
+        svc.insert(v.clone()).unwrap();
+        svc.query(v.clone(), 3).unwrap();
+        svc.query_above(v, 0.5).unwrap();
+        let (snap, _) = svc.stats();
+        assert_eq!(snap.queries, 2);
+        assert_eq!(
+            snap.query_latency.count, 2,
+            "query_above must contribute a query_latency sample"
+        );
+    }
+
+    #[test]
+    fn batch_capacity_prevents_dense_overflow() {
+        // Regression for the dense-fallback overflow: a sparse ladder
+        // with a large batch dimension and a smaller dense fallback.
+        // The old pump flushed at the largest sparse batch (64) and let
+        // a heavy-row batch fall into the dense arm, where
+        // `dense_b - n` = 8 - 64 wrapped and indexed out of bounds.
+        let dense = Some(("dense_b8".to_string(), 8usize));
+        let sparse = vec![
+            ("sparse_b16_f32".to_string(), 16usize, 32usize),
+            ("sparse_b64_f16".to_string(), 64usize, 16usize),
+        ];
+        // Heavy rows (nnz 20 > both F_max=16; <= F_max=32): the b=16
+        // sparse variant and the dense fallback can take them.
+        assert_eq!(batch_capacity(&dense, &sparse, 20), Some(16));
+        // Rows too heavy for every sparse variant: dense only -> any
+        // batch larger than 8 must split, never execute.
+        assert_eq!(batch_capacity(&dense, &sparse, 40), Some(8));
+        // Light rows: the full 64-row sparse batch is usable.
+        assert_eq!(batch_capacity(&dense, &sparse, 10), Some(64));
+        // No dense artifact and rows overflow every F_max: unservable.
+        assert_eq!(batch_capacity(&None, &sparse, 40), None);
+        // No dense artifact but a sparse variant fits: capacity is its
+        // batch size (old code errored here blaming nonzeros).
+        assert_eq!(batch_capacity(&None, &sparse, 20), Some(16));
+        // The invariant the split loop enforces: chunks of `cap` rows
+        // can never exceed the batch dimension of the arm they route
+        // to, so the `batch_b - n` pad computation cannot wrap.
+        for nnz in [0usize, 10, 20, 40] {
+            if let Some(cap) = batch_capacity(&dense, &sparse, nnz) {
+                let fits = sparse
+                    .iter()
+                    .any(|(_, b, f)| cap <= *b && nnz <= *f)
+                    || dense.as_ref().is_some_and(|(_, b)| cap <= *b);
+                assert!(fits, "cap {cap} unservable for nnz {nnz}");
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub enum Error {
     Xla(String),
     /// Server protocol violation (bad JSON, unknown op, …).
     Protocol(String),
+    /// Connection pool saturated; the client should retry later.
+    Busy {
+        /// The configured connection cap that was hit.
+        max_connections: usize,
+    },
     /// Coordinator shut down / channel closed.
     Shutdown,
     /// Underlying I/O failure.
@@ -49,6 +54,10 @@ impl fmt::Display for Error {
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
             Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            Error::Busy { max_connections } => write!(
+                f,
+                "busy: all {max_connections} connection slots are in use; retry later"
+            ),
             Error::Shutdown => write!(f, "coordinator is shut down"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -92,6 +101,16 @@ mod tests {
         assert!(e.to_string().contains("1024"));
         let e = Error::UnknownArtifact("nope".into());
         assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn busy_error_names_the_cap() {
+        let e = Error::Busy {
+            max_connections: 4,
+        };
+        let s = e.to_string();
+        assert!(s.starts_with("busy"), "{s}");
+        assert!(s.contains('4'), "{s}");
     }
 
     #[test]

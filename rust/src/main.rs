@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `serve`    — run the sketching/similarity server (XLA or Rust engine)
+//! * `load`     — bulk-ingest a JSONL vector file through `insert_batch`
 //! * `compact`  — fold a persist directory's WAL into a fresh snapshot
 //! * `figures`  — regenerate the paper's Figures 2–7 as CSV
 //! * `dataset`  — generate the §4.2 corpus stand-ins
@@ -35,7 +36,10 @@ cminhash — C-MinHash sketching & similarity-search service
 USAGE:
   cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
-                   [--shards N] [--persist DIR]
+                   [--shards N] [--persist DIR] [--max-conns N]
+  cminhash load    FILE.jsonl [--addr A] [--batch N]
+                   (bulk-ingest: one {\"dim\":D,\"indices\":[...]} object
+                   per line, streamed through insert_batch)
   cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
                    [--shards N]        (offline only — use the `save`
                    wire op to compact under a running server)
@@ -132,9 +136,22 @@ fn run() -> Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    let args = Args::parse(&argv[1..])?;
+    // `load` takes its file as a positional argument; peel it off
+    // before the flag parser (which accepts only --flags).
+    let mut positional: Option<String> = None;
+    let mut flag_args = &argv[1..];
+    if cmd == "load" {
+        if let Some(first) = flag_args.first() {
+            if !first.starts_with("--") {
+                positional = Some(first.clone());
+                flag_args = &argv[2..];
+            }
+        }
+    }
+    let args = Args::parse(flag_args)?;
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "load" => cmd_load(&args, positional),
         "compact" => cmd_compact(&args),
         "figures" => cmd_figures(&args),
         "dataset" => cmd_dataset(&args),
@@ -179,17 +196,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = args.get("persist") {
         cfg.store.persist_dir = Some(PathBuf::from(p));
     }
+    if let Some(c) = args.get_parsed::<usize>("max-conns")? {
+        cfg.server.max_connections = c;
+    }
     cfg.validate()?;
     let svc = Coordinator::start(cfg.clone())?;
     let server = Server::spawn(svc.clone(), &cfg.addr)?;
     let (_, store) = svc.stats();
     println!(
-        "serving on {} (engine={:?}, D={}, K={}, shards={})",
+        "serving on {} (engine={:?}, D={}, K={}, shards={}, max-conns={})",
         server.addr(),
         cfg.engine,
         cfg.dim,
         cfg.num_hashes,
         store.shards.len(),
+        cfg.server.max_connections,
     );
     match &cfg.store.persist_dir {
         Some(dir) => println!(
@@ -201,6 +222,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => println!("persistence: off (sketches die with the process)"),
     }
     server.join_forever();
+}
+
+/// Bulk-ingest a JSONL vector file into a running server through
+/// `insert_batch` round-trips, with periodic progress/throughput
+/// lines.  The file is `cminhash load FILE.jsonl` (positional) or
+/// `--input FILE.jsonl`.
+fn cmd_load(args: &Args, positional: Option<String>) -> Result<()> {
+    let file = match positional.or_else(|| args.get("input").map(String::from)) {
+        Some(f) => PathBuf::from(f),
+        None => return Err(usage_err("load needs a FILE.jsonl (or --input FILE)")),
+    };
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
+    let batch = args.get_parsed::<usize>("batch")?.unwrap_or(512);
+    if batch == 0 {
+        return Err(usage_err("--batch must be > 0"));
+    }
+    println!(
+        "loading {} into {addr} ({batch} rows per insert_batch)",
+        file.display()
+    );
+    // Print a progress line roughly every 8 batches so multi-million
+    // row ingests show a heartbeat without drowning the terminal.
+    let mut last_printed = 0u64;
+    let report = cminhash::server::load_jsonl(&addr, &file, batch, |r| {
+        if r.batches - last_printed >= 8 {
+            last_printed = r.batches;
+            println!(
+                "  {} rows in {} batches ({:.0} rows/s)",
+                r.rows,
+                r.batches,
+                r.rows_per_sec()
+            );
+        }
+    })?;
+    println!(
+        "loaded {} rows in {} batches over {:.2}s -> {:.0} rows/s",
+        report.rows,
+        report.batches,
+        report.secs,
+        report.rows_per_sec()
+    );
+    Ok(())
 }
 
 /// Fold a persist directory's WAL into a fresh snapshot.  Recovery at

@@ -117,6 +117,10 @@ pub struct Metrics {
     pub deletes: AtomicU64,
     /// Requests rejected with an error.
     pub errors: AtomicU64,
+    /// Connections turned away with a `busy` error (pool saturated).
+    pub busy_rejections: AtomicU64,
+    /// Transient accept() failures survived by the accept loop.
+    pub accept_errors: AtomicU64,
 }
 
 /// JSON-serializable snapshot of [`Metrics`].
@@ -144,6 +148,10 @@ pub struct MetricsSnapshot {
     pub deletes: u64,
     /// Errors returned.
     pub errors: u64,
+    /// Connections rejected busy.
+    pub busy_rejections: u64,
+    /// Accept failures survived.
+    pub accept_errors: u64,
     /// Mean rows per executed batch.
     pub mean_batch_fill: f64,
 }
@@ -176,6 +184,8 @@ impl MetricsSnapshot {
             ("estimates", Json::Num(self.estimates as f64)),
             ("deletes", Json::Num(self.deletes as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("busy_rejections", Json::Num(self.busy_rejections as f64)),
+            ("accept_errors", Json::Num(self.accept_errors as f64)),
             ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
         ])
     }
@@ -198,6 +208,8 @@ impl Metrics {
             estimates: self.estimates.load(Ordering::Relaxed),
             deletes: self.deletes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
             mean_batch_fill: if batches == 0 {
                 0.0
             } else {

@@ -1,44 +1,96 @@
-//! TCP server speaking the JSON-line protocol (thread-per-connection),
-//! plus a small blocking client used by examples, benches and tests.
+//! TCP server speaking the JSON-line protocol over a **bounded worker
+//! pool**, plus a small blocking client used by examples, benches and
+//! tests, and a JSONL bulk loader streaming through `insert_batch`.
+//!
+//! Connection admission: `server.max_connections` worker threads are
+//! spawned up front; the accept loop tracks how many are serving via a
+//! shared counter and hands accepted sockets over a rendezvous
+//! channel.  A connection arriving while **every** worker is serving
+//! is turned away with a clean `busy` protocol error line instead of
+//! spawning an unbounded OS thread; while any worker is free the
+//! handoff blocks for at most the instant it takes that worker to
+//! park, so connection bursts are never spuriously rejected.  The
+//! accept loop never dies on transient `accept()` failures
+//! (`ECONNABORTED`, `EMFILE` under fd pressure, interrupts): it logs,
+//! counts them in `accept_errors`, backs off briefly and keeps
+//! listening; only a listener-is-gone class error (`EBADF`/`EINVAL`)
+//! stops it.
 
 pub mod protocol;
 
 use crate::coordinator::Coordinator;
 use crate::metrics::Metrics;
+use crate::sketch::SparseVec;
 use crate::util::json::Json;
 use protocol::{Request, Response, WireNeighbor};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// A running server (listener thread + per-connection threads).
+/// A running server (accept loop + fixed pool of connection workers).
 pub struct Server {
     addr: SocketAddr,
 }
 
 impl Server {
-    /// Bind `addr` (may be port 0) and start accepting in background
-    /// threads.  Returns once the listener is live.
+    /// Bind `addr` (may be port 0), spawn the
+    /// `server.max_connections`-sized worker pool and the accept loop.
+    /// Returns once the listener is live.
     pub fn spawn(svc: Arc<Coordinator>, addr: &str) -> crate::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        std::thread::Builder::new()
-            .name("accept-loop".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    match conn {
-                        Ok(socket) => {
+        let max_conns = svc.config().server.max_connections;
+        // `active` counts sockets handed to the pool whose connections
+        // have not finished.  The accept loop is the only incrementer
+        // (before the handoff) and each worker decrements exactly once
+        // per connection (drop guard), so `active == max_conns` is a
+        // precise "every worker is serving" signal.
+        let active = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        // Rendezvous handoff: the accept loop only sends after proving
+        // `active < max_conns`, which guarantees some worker is parked
+        // in (or headed for) `recv`, so the blocking send completes
+        // immediately.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(0);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        for i in 0..max_conns {
+            let rx = conn_rx.clone();
+            let svc = svc.clone();
+            let active = active.clone();
+            std::thread::Builder::new()
+                .name(format!("conn-worker-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only while parked: the
+                    // guard drops as soon as `recv` hands us a socket,
+                    // letting the next idle worker park itself.
+                    let socket = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match socket {
+                        Ok(s) => {
+                            let _release = ActiveGuard(&active);
+                            // Contain panics: a worker that dies takes a
+                            // pool slot with it forever (and a fully dead
+                            // pool wedges the accept loop), so one bad
+                            // request path must only cost its own
+                            // connection — as thread-per-connection did.
                             let svc = svc.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("conn".into())
-                                .spawn(move || {
-                                    let _ = handle_conn(svc, socket);
-                                });
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(move || {
+                                    let _ = handle_conn(svc, s);
+                                }),
+                            );
                         }
+                        // Accept loop gone: the pool drains and exits.
                         Err(_) => break,
                     }
-                }
-            })
+                })
+                .map_err(crate::Error::Io)?;
+        }
+        std::thread::Builder::new()
+            .name("accept-loop".into())
+            .spawn(move || accept_loop(&listener, &conn_tx, &active, &svc, max_conns))
             .map_err(crate::Error::Io)?;
         Ok(Server { addr: local })
     }
@@ -54,6 +106,85 @@ impl Server {
             std::thread::park();
         }
     }
+}
+
+/// Decrements the active-connection counter when a worker finishes a
+/// connection, even if `handle_conn` unwinds.
+struct ActiveGuard<'a>(&'a std::sync::atomic::AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, std::sync::atomic::Ordering::Release);
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    conn_tx: &mpsc::SyncSender<TcpStream>,
+    active: &std::sync::atomic::AtomicUsize,
+    svc: &Arc<Coordinator>,
+    max_connections: usize,
+) {
+    use std::sync::atomic::Ordering;
+    for conn in listener.incoming() {
+        match conn {
+            Ok(socket) => {
+                if active.load(Ordering::Acquire) >= max_connections {
+                    // Every worker is serving a connection: turn the
+                    // overflow client away with a protocol-level error
+                    // instead of queueing it invisibly or spawning an
+                    // unbounded thread.
+                    Metrics::inc(&svc.metrics().busy_rejections);
+                    busy_reject(socket, max_connections);
+                    continue;
+                }
+                // A slot is free, so a worker is parked in (or headed
+                // for) `recv`; increment first so the worker's paired
+                // decrement can never underflow the counter.
+                active.fetch_add(1, Ordering::AcqRel);
+                if conn_tx.send(socket).is_err() {
+                    // Pool gone (shutdown): stop accepting.
+                    active.fetch_sub(1, Ordering::Release);
+                    break;
+                }
+            }
+            Err(e) if accept_error_is_fatal(&e) => {
+                eprintln!("accept-loop: fatal accept error, stopping listener: {e}");
+                break;
+            }
+            Err(e) => {
+                // Transient (ECONNABORTED, EINTR, EMFILE/ENFILE fd
+                // pressure…): the listener is still valid, so dying
+                // here would silently stop the server accepting
+                // forever.  Log, count, back off a breath, continue.
+                Metrics::inc(&svc.metrics().accept_errors);
+                eprintln!("accept-loop: transient accept error (continuing): {e}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Whether an `accept()` error means the listener itself is unusable.
+/// `accept(2)` on a healthy listener only fails transiently (aborted
+/// handshakes, signal interrupts, fd exhaustion that later clears);
+/// `EBADF`/`EINVAL` mean the listening socket is gone or was never
+/// valid, which no amount of retrying fixes.
+fn accept_error_is_fatal(e: &std::io::Error) -> bool {
+    const EBADF: i32 = 9;
+    const EINVAL: i32 = 22;
+    matches!(e.raw_os_error(), Some(EBADF) | Some(EINVAL))
+        || e.kind() == std::io::ErrorKind::InvalidInput
+}
+
+/// Send one `busy` error line to an overflow connection and close it.
+fn busy_reject(mut socket: TcpStream, max_connections: usize) {
+    let mut line = Response::err(&crate::Error::Busy { max_connections })
+        .to_json()
+        .to_string();
+    line.push('\n');
+    let _ = socket.write_all(line.as_bytes());
+    // Dropping the socket closes the connection.
 }
 
 fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
@@ -85,6 +216,15 @@ fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
     Ok(())
 }
 
+fn wire_neighbors(ns: Vec<crate::index::Neighbor>) -> Vec<WireNeighbor> {
+    ns.into_iter()
+        .map(|n| WireNeighbor {
+            id: n.id,
+            score: n.score,
+        })
+        .collect()
+}
+
 fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
     let result: crate::Result<Response> = (|| {
         Ok(match req {
@@ -92,10 +232,20 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
             Request::Sketch { vec } => Response::Sketch {
                 sketch: svc.sketch(vec)?,
             },
+            Request::SketchBatch { vecs } => Response::SketchBatch {
+                sketches: svc.sketch_many(vecs)?,
+            },
             Request::Insert { vec } => {
                 let (id, sketch) = svc.insert(vec)?;
                 Response::Insert { id, sketch }
             }
+            Request::InsertBatch { vecs } => Response::InsertBatch {
+                ids: svc
+                    .insert_many(vecs)?
+                    .into_iter()
+                    .map(|(id, _)| id)
+                    .collect(),
+            },
             Request::Delete { id } => {
                 svc.delete(id)?;
                 Response::Deleted { id }
@@ -110,24 +260,17 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
                 jhat: svc.estimate_vecs(v, w)?,
             },
             Request::Query { vec, topk } => Response::Query {
-                neighbors: svc
-                    .query(vec, topk)?
+                neighbors: wire_neighbors(svc.query(vec, topk)?),
+            },
+            Request::QueryBatch { vecs, topk } => Response::QueryBatch {
+                results: svc
+                    .query_many(vecs, topk)?
                     .into_iter()
-                    .map(|n| WireNeighbor {
-                        id: n.id,
-                        score: n.score,
-                    })
+                    .map(wire_neighbors)
                     .collect(),
             },
             Request::QueryAbove { vec, threshold } => Response::Query {
-                neighbors: svc
-                    .query_above(vec, threshold)?
-                    .into_iter()
-                    .map(|n| WireNeighbor {
-                        id: n.id,
-                        score: n.score,
-                    })
-                    .collect(),
+                neighbors: wire_neighbors(svc.query_above(vec, threshold)?),
             },
             Request::Stats => {
                 let (metrics, store) = svc.stats();
@@ -186,9 +329,13 @@ impl BlockingClient {
         Ok(Json::parse(&resp)?)
     }
 
+    fn vecs(dim: u32, rows: Vec<Vec<u32>>) -> crate::Result<Vec<SparseVec>> {
+        rows.into_iter().map(|r| SparseVec::new(dim, r)).collect()
+    }
+
     /// Convenience: sketch a sparse vector.
     pub fn sketch(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<Vec<u32>> {
-        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        let vec = SparseVec::new(dim, indices)?;
         match self.call(&Request::Sketch { vec })? {
             Response::Sketch { sketch } => Ok(sketch),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
@@ -198,11 +345,44 @@ impl BlockingClient {
         }
     }
 
+    /// Convenience: sketch many vectors in one round-trip.
+    pub fn sketch_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+    ) -> crate::Result<Vec<Vec<u32>>> {
+        let vecs = Self::vecs(dim, rows)?;
+        match self.call(&Request::SketchBatch { vecs })? {
+            Response::SketchBatch { sketches } => Ok(sketches),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
     /// Convenience: insert a sparse vector.
     pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
-        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        let vec = SparseVec::new(dim, indices)?;
         match self.call(&Request::Insert { vec })? {
             Response::Insert { id, .. } => Ok(id),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
+    /// Convenience: insert many vectors as one unit; returns the
+    /// assigned (consecutive) ids in row order.
+    pub fn insert_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+    ) -> crate::Result<Vec<u64>> {
+        let vecs = Self::vecs(dim, rows)?;
+        match self.call(&Request::InsertBatch { vecs })? {
+            Response::InsertBatch { ids } => Ok(ids),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
             other => Err(crate::Error::Protocol(format!(
                 "unexpected response {other:?}"
@@ -228,7 +408,7 @@ impl BlockingClient {
         indices: Vec<u32>,
         topk: usize,
     ) -> crate::Result<Vec<WireNeighbor>> {
-        let vec = crate::sketch::SparseVec::new(dim, indices)?;
+        let vec = SparseVec::new(dim, indices)?;
         match self.call(&Request::Query { vec, topk })? {
             Response::Query { neighbors } => Ok(neighbors),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
@@ -236,5 +416,187 @@ impl BlockingClient {
                 "unexpected response {other:?}"
             ))),
         }
+    }
+
+    /// Convenience: top-k queries for many vectors in one round-trip;
+    /// one neighbor list per row, in row order.
+    pub fn query_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+        topk: usize,
+    ) -> crate::Result<Vec<Vec<WireNeighbor>>> {
+        let vecs = Self::vecs(dim, rows)?;
+        match self.call(&Request::QueryBatch { vecs, topk })? {
+            Response::QueryBatch { results } => Ok(results),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Err(crate::Error::Protocol(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Cumulative progress of a [`load_jsonl`] bulk ingest.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    /// Vector rows inserted so far.
+    pub rows: u64,
+    /// `insert_batch` round-trips issued so far.
+    pub batches: u64,
+    /// Wall-clock seconds elapsed.
+    pub secs: f64,
+}
+
+impl LoadReport {
+    /// Ingest throughput in rows per second (0 before the clock moves).
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.rows as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Stream a JSONL vector file — one `{"dim":D,"indices":[...]}` object
+/// per line, blank lines skipped — into a running server through
+/// `insert_batch` round-trips of up to `batch_size` rows.  `progress`
+/// is called after every round-trip with cumulative counts (the CLI
+/// prints a throughput line from it).  Ingest is sequential over one
+/// connection; a bad line or a rejected batch aborts with an error
+/// naming the offending line.
+pub fn load_jsonl(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    mut progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    if batch_size == 0 {
+        return Err(crate::Error::Invalid("batch size must be > 0".into()));
+    }
+    if batch_size > protocol::MAX_WIRE_BATCH {
+        return Err(crate::Error::Invalid(format!(
+            "batch size {batch_size} exceeds the wire cap of {} rows per \
+             request",
+            protocol::MAX_WIRE_BATCH
+        )));
+    }
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut client = BlockingClient::connect(addr)?;
+    let t0 = Instant::now();
+    let mut report = LoadReport {
+        rows: 0,
+        batches: 0,
+        secs: 0.0,
+    };
+    let mut pending: Vec<SparseVec> = Vec::with_capacity(batch_size);
+    let mut first_line = 0usize; // 1-based line number of pending[0]
+    let mut flush = |pending: &mut Vec<SparseVec>,
+                     report: &mut LoadReport,
+                     client: &mut BlockingClient,
+                     first_line: usize|
+     -> crate::Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let n = pending.len();
+        match client.call(&Request::InsertBatch {
+            vecs: std::mem::take(pending),
+        })? {
+            Response::InsertBatch { ids } => {
+                if ids.len() != n {
+                    return Err(crate::Error::Protocol(format!(
+                        "insert_batch returned {} ids for {n} rows",
+                        ids.len()
+                    )));
+                }
+            }
+            Response::Err { error } => {
+                return Err(crate::Error::Protocol(format!(
+                    "batch starting at line {first_line} rejected: {error}"
+                )));
+            }
+            other => {
+                return Err(crate::Error::Protocol(format!(
+                    "unexpected response {other:?}"
+                )));
+            }
+        }
+        report.rows += n as u64;
+        report.batches += 1;
+        report.secs = t0.elapsed().as_secs_f64();
+        Ok(())
+    };
+    for (idx, line) in reader.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(&line)
+            .map_err(crate::Error::from)
+            .and_then(|j| SparseVec::from_json(&j))
+            .map_err(|e| {
+                crate::Error::Invalid(format!("{}:{lineno}: {e}", path.display()))
+            })?;
+        if pending.is_empty() {
+            first_line = lineno;
+        }
+        pending.push(parsed);
+        if pending.len() == batch_size {
+            flush(&mut pending, &mut report, &mut client, first_line)?;
+            progress(&report);
+        }
+    }
+    if !pending.is_empty() {
+        flush(&mut pending, &mut report, &mut client, first_line)?;
+        progress(&report);
+    }
+    report.secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_error_classification() {
+        // Transient: the loop must survive these (the old code died on
+        // the first one and stopped listening forever).
+        for e in [
+            std::io::Error::new(std::io::ErrorKind::ConnectionAborted, "ECONNABORTED"),
+            std::io::Error::new(std::io::ErrorKind::Interrupted, "EINTR"),
+            std::io::Error::from_raw_os_error(24), // EMFILE
+            std::io::Error::from_raw_os_error(23), // ENFILE
+        ] {
+            assert!(!accept_error_is_fatal(&e), "{e} must be survivable");
+        }
+        // Fatal: the listener fd itself is unusable.
+        for e in [
+            std::io::Error::from_raw_os_error(9),  // EBADF
+            std::io::Error::from_raw_os_error(22), // EINVAL
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "bad listener"),
+        ] {
+            assert!(accept_error_is_fatal(&e), "{e} must stop the loop");
+        }
+    }
+
+    #[test]
+    fn load_report_throughput() {
+        let r = LoadReport {
+            rows: 100,
+            batches: 2,
+            secs: 4.0,
+        };
+        assert_eq!(r.rows_per_sec(), 25.0);
+        let r = LoadReport {
+            rows: 0,
+            batches: 0,
+            secs: 0.0,
+        };
+        assert_eq!(r.rows_per_sec(), 0.0);
     }
 }

@@ -19,6 +19,27 @@
 //! ← {"ok":true,"saved":true,"persisted_bytes":123456}
 //! → {"op":"stats"}      → {"op":"ping"}
 //! ```
+//!
+//! **Batch ops** carry many vectors per request line and return one
+//! response line per batch — the bulk-ingest path that amortizes the
+//! round-trip and lets the engine see full batches.  A batch is
+//! all-or-nothing: any bad row fails the whole request and mutates
+//! nothing.  An `N = 1` batch returns exactly the singleton op's
+//! values, and one line carries at most [`MAX_WIRE_BATCH`] rows.
+//!
+//! ```text
+//! → {"op":"sketch_batch","vecs":[{...},{...}]}
+//! ← {"ok":true,"sketches":[[...],[...]]}
+//! → {"op":"insert_batch","vecs":[{...},{...}]}
+//! ← {"ok":true,"ids":[7,8]}
+//! → {"op":"query_batch","vecs":[{...},{...}],"topk":5}
+//! ← {"ok":true,"results":[[{"id":7,"score":0.98},...],[...]]}
+//! ```
+//!
+//! `insert_batch` deliberately returns **ids only**: bulk ingest is
+//! its use-case, and echoing K hash values per row back at a client
+//! that discards them would dominate the response bytes.  Clients
+//! that want the sketches use `sketch_batch` (stateless) instead.
 
 use crate::metrics::MetricsSnapshot;
 use crate::sketch::SparseVec;
@@ -35,10 +56,21 @@ pub enum Request {
         /// The vector.
         vec: SparseVec,
     },
+    /// Sketch many vectors in one round-trip (stateless).
+    SketchBatch {
+        /// The vectors, in response order.
+        vecs: Vec<SparseVec>,
+    },
     /// Sketch + store + index; returns the new id.
     Insert {
         /// The vector.
         vec: SparseVec,
+    },
+    /// Sketch + store + index many vectors as one unit; returns
+    /// consecutive new ids.
+    InsertBatch {
+        /// The vectors, in id-assignment order.
+        vecs: Vec<SparseVec>,
     },
     /// Delete a stored id from the store and index.
     Delete {
@@ -66,6 +98,13 @@ pub enum Request {
         /// Result bound.
         topk: usize,
     },
+    /// Top-k near neighbors for many query vectors in one round-trip.
+    QueryBatch {
+        /// The query vectors, in response order.
+        vecs: Vec<SparseVec>,
+        /// Result bound per row.
+        topk: usize,
+    },
     /// All neighbors with Ĵ ≥ threshold.
     QueryAbove {
         /// The query vector.
@@ -79,6 +118,33 @@ pub enum Request {
     Stats,
 }
 
+/// Upper bound on rows per batch op.  One request line must not be
+/// able to buffer unbounded memory or park an unbounded row count in
+/// front of the batch pump (that would defeat the connection-level
+/// admission control); clients ingesting more rows send more batches.
+pub const MAX_WIRE_BATCH: usize = 8_192;
+
+/// Parse the `"vecs"` array of a batch op.  An empty batch is a
+/// protocol error — it could only ever return nothing and usually
+/// signals a client-side bug — and an oversized one is rejected
+/// before any row is parsed (see [`MAX_WIRE_BATCH`]).
+fn vecs_field(j: &Json) -> crate::Result<Vec<SparseVec>> {
+    let arr = j.get("vecs")?.as_arr()?;
+    if arr.is_empty() {
+        return Err(crate::Error::Protocol(
+            "batch op with empty \"vecs\"".into(),
+        ));
+    }
+    if arr.len() > MAX_WIRE_BATCH {
+        return Err(crate::Error::Protocol(format!(
+            "batch op with {} rows exceeds the {MAX_WIRE_BATCH}-row cap; \
+             split the request into smaller batches",
+            arr.len()
+        )));
+    }
+    arr.iter().map(SparseVec::from_json).collect()
+}
+
 impl Request {
     /// Parse a request line.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
@@ -88,8 +154,14 @@ impl Request {
             "sketch" => Request::Sketch {
                 vec: SparseVec::from_json(j.get("vec")?)?,
             },
+            "sketch_batch" => Request::SketchBatch {
+                vecs: vecs_field(j)?,
+            },
             "insert" => Request::Insert {
                 vec: SparseVec::from_json(j.get("vec")?)?,
+            },
+            "insert_batch" => Request::InsertBatch {
+                vecs: vecs_field(j)?,
             },
             "delete" => Request::Delete {
                 id: j.get("id")?.as_u64()?,
@@ -104,6 +176,10 @@ impl Request {
             },
             "query" => Request::Query {
                 vec: SparseVec::from_json(j.get("vec")?)?,
+                topk: j.get("topk")?.as_usize()?,
+            },
+            "query_batch" => Request::QueryBatch {
+                vecs: vecs_field(j)?,
                 topk: j.get("topk")?.as_usize()?,
             },
             "query_above" => Request::QueryAbove {
@@ -126,9 +202,17 @@ impl Request {
                 ("op", Json::str("sketch")),
                 ("vec", vec.to_json()),
             ]),
+            Request::SketchBatch { vecs } => Json::obj(vec![
+                ("op", Json::str("sketch_batch")),
+                ("vecs", Json::Arr(vecs.iter().map(|v| v.to_json()).collect())),
+            ]),
             Request::Insert { vec } => Json::obj(vec![
                 ("op", Json::str("insert")),
                 ("vec", vec.to_json()),
+            ]),
+            Request::InsertBatch { vecs } => Json::obj(vec![
+                ("op", Json::str("insert_batch")),
+                ("vecs", Json::Arr(vecs.iter().map(|v| v.to_json()).collect())),
             ]),
             Request::Delete { id } => Json::obj(vec![
                 ("op", Json::str("delete")),
@@ -147,6 +231,11 @@ impl Request {
             Request::Query { vec, topk } => Json::obj(vec![
                 ("op", Json::str("query")),
                 ("vec", vec.to_json()),
+                ("topk", Json::Num(*topk as f64)),
+            ]),
+            Request::QueryBatch { vecs, topk } => Json::obj(vec![
+                ("op", Json::str("query_batch")),
+                ("vecs", Json::Arr(vecs.iter().map(|v| v.to_json()).collect())),
                 ("topk", Json::Num(*topk as f64)),
             ]),
             Request::QueryAbove { vec, threshold } => Json::obj(vec![
@@ -187,12 +276,23 @@ pub enum Response {
         /// K hash values.
         sketch: Vec<u32>,
     },
+    /// Batched sketch result, one sketch per request row.
+    SketchBatch {
+        /// K hash values per row, in request order.
+        sketches: Vec<Vec<u32>>,
+    },
     /// Insert result.
     Insert {
         /// Assigned id.
         id: u64,
         /// K hash values.
         sketch: Vec<u32>,
+    },
+    /// Batched insert result: ids only, in request order (bulk ingest
+    /// discards sketches; use `sketch_batch` to obtain them).
+    InsertBatch {
+        /// Assigned (consecutive) ids.
+        ids: Vec<u64>,
     },
     /// Delete result.
     Deleted {
@@ -214,6 +314,11 @@ pub enum Response {
         /// Scored neighbors, best first.
         neighbors: Vec<WireNeighbor>,
     },
+    /// Batched query result, one neighbor list per request row.
+    QueryBatch {
+        /// Per-row scored neighbors, best first, in request order.
+        results: Vec<Vec<WireNeighbor>>,
+    },
     /// Stats result.
     Stats {
         /// Metrics snapshot.
@@ -221,6 +326,33 @@ pub enum Response {
         /// Store occupancy + durability.
         store: StoreStats,
     },
+}
+
+/// Serialize one neighbor list (shared by `query` and `query_batch`).
+fn neighbors_json(ns: &[WireNeighbor]) -> Json {
+    Json::Arr(
+        ns.iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("id", Json::Num(n.id as f64)),
+                    ("score", Json::Num(n.score)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse one neighbor list (shared by `query` and `query_batch`).
+fn neighbors_from_json(j: &Json) -> crate::Result<Vec<WireNeighbor>> {
+    j.as_arr()?
+        .iter()
+        .map(|n| {
+            Ok(WireNeighbor {
+                id: n.get("id")?.as_u64()?,
+                score: n.get("score")?.as_f64()?,
+            })
+        })
+        .collect()
 }
 
 impl Response {
@@ -246,10 +378,24 @@ impl Response {
                 ("ok", Json::Bool(true)),
                 ("sketch", Json::from_u32s(sketch)),
             ]),
+            Response::SketchBatch { sketches } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "sketches",
+                    Json::Arr(sketches.iter().map(|s| Json::from_u32s(s)).collect()),
+                ),
+            ]),
             Response::Insert { id, sketch } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("id", Json::Num(*id as f64)),
                 ("sketch", Json::from_u32s(sketch)),
+            ]),
+            Response::InsertBatch { ids } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "ids",
+                    Json::Arr(ids.iter().map(|&id| Json::Num(id as f64)).collect()),
+                ),
             ]),
             Response::Deleted { id } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -266,19 +412,13 @@ impl Response {
             ]),
             Response::Query { neighbors } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
+                ("neighbors", neighbors_json(neighbors)),
+            ]),
+            Response::QueryBatch { results } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
                 (
-                    "neighbors",
-                    Json::Arr(
-                        neighbors
-                            .iter()
-                            .map(|n| {
-                                Json::obj(vec![
-                                    ("id", Json::Num(n.id as f64)),
-                                    ("score", Json::Num(n.score)),
-                                ])
-                            })
-                            .collect(),
-                    ),
+                    "results",
+                    Json::Arr(results.iter().map(|ns| neighbors_json(ns)).collect()),
                 ),
             ]),
             Response::Stats { metrics, store } => Json::obj(vec![
@@ -318,6 +458,33 @@ impl Response {
                 persisted_bytes: j.get("persisted_bytes")?.as_u64()?,
             });
         }
+        if let Some(ids) = j.get_opt("ids") {
+            return Ok(Response::InsertBatch {
+                ids: ids
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_u64())
+                    .collect::<crate::Result<_>>()?,
+            });
+        }
+        if let Some(s) = j.get_opt("sketches") {
+            return Ok(Response::SketchBatch {
+                sketches: s
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_u32_vec())
+                    .collect::<crate::Result<_>>()?,
+            });
+        }
+        if let Some(rs) = j.get_opt("results") {
+            return Ok(Response::QueryBatch {
+                results: rs
+                    .as_arr()?
+                    .iter()
+                    .map(neighbors_from_json)
+                    .collect::<crate::Result<_>>()?,
+            });
+        }
         if let Some(id) = j.get_opt("id") {
             return Ok(Response::Insert {
                 id: id.as_u64()?,
@@ -336,16 +503,7 @@ impl Response {
         }
         if let Some(ns) = j.get_opt("neighbors") {
             return Ok(Response::Query {
-                neighbors: ns
-                    .as_arr()?
-                    .iter()
-                    .map(|n| {
-                        Ok(WireNeighbor {
-                            id: n.get("id")?.as_u64()?,
-                            score: n.get("score")?.as_f64()?,
-                        })
-                    })
-                    .collect::<crate::Result<_>>()?,
+                neighbors: neighbors_from_json(ns)?,
             });
         }
         if j.get_opt("metrics").is_some() {
@@ -392,10 +550,106 @@ mod tests {
             r#"{"op":"estimate_vecs","v":{"dim":4,"indices":[0]},"w":{"dim":4,"indices":[1]}}"#,
             r#"{"op":"query","vec":{"dim":4,"indices":[0]},"topk":3}"#,
             r#"{"op":"query_above","vec":{"dim":4,"indices":[0]},"threshold":0.5}"#,
+            r#"{"op":"sketch_batch","vecs":[{"dim":4,"indices":[0]}]}"#,
+            r#"{"op":"insert_batch","vecs":[{"dim":4,"indices":[0]},{"dim":4,"indices":[1]}]}"#,
+            r#"{"op":"query_batch","vecs":[{"dim":4,"indices":[0]}],"topk":3}"#,
             r#"{"op":"stats"}"#,
         ] {
             Request::from_json(&Json::parse(line).unwrap())
                 .unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+    }
+
+    #[test]
+    fn batch_ops_roundtrip() {
+        let vecs = vec![
+            SparseVec::new(16, vec![1, 5]).unwrap(),
+            SparseVec::new(16, vec![2]).unwrap(),
+        ];
+        // requests
+        for req in [
+            Request::SketchBatch { vecs: vecs.clone() },
+            Request::InsertBatch { vecs: vecs.clone() },
+            Request::QueryBatch {
+                vecs: vecs.clone(),
+                topk: 4,
+            },
+        ] {
+            let line = req.to_json().to_string();
+            let back = Request::from_json(&Json::parse(&line).unwrap()).unwrap();
+            match (&req, &back) {
+                (Request::SketchBatch { vecs: a }, Request::SketchBatch { vecs: b })
+                | (Request::InsertBatch { vecs: a }, Request::InsertBatch { vecs: b }) => {
+                    assert_eq!(a, b)
+                }
+                (
+                    Request::QueryBatch { vecs: a, topk: ta },
+                    Request::QueryBatch { vecs: b, topk: tb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ta, tb);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // responses
+        let r = Response::SketchBatch {
+            sketches: vec![vec![1, 2], vec![3, 4]],
+        };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            Response::SketchBatch { sketches } => {
+                assert_eq!(sketches, vec![vec![1, 2], vec![3, 4]])
+            }
+            other => panic!("{other:?}"),
+        }
+        let r = Response::InsertBatch { ids: vec![7, 8] };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            Response::InsertBatch { ids } => assert_eq!(ids, vec![7, 8]),
+            other => panic!("{other:?}"),
+        }
+        let r = Response::QueryBatch {
+            results: vec![vec![WireNeighbor { id: 3, score: 0.5 }], vec![]],
+        };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            Response::QueryBatch { results } => {
+                assert_eq!(results.len(), 2);
+                assert_eq!(results[0], vec![WireNeighbor { id: 3, score: 0.5 }]);
+                assert!(results[1].is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_protocol_error() {
+        for op in ["sketch_batch", "insert_batch"] {
+            let j = Json::parse(&format!(r#"{{"op":"{op}","vecs":[]}}"#)).unwrap();
+            assert!(Request::from_json(&j).is_err(), "{op} with no vecs");
+        }
+        let j = Json::parse(r#"{"op":"query_batch","vecs":[],"topk":3}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+        // missing vecs key entirely
+        let j = Json::parse(r#"{"op":"sketch_batch"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn oversized_batch_is_a_protocol_error() {
+        let row = SparseVec::new(8, vec![1]).unwrap().to_json();
+        let at_cap = Json::obj(vec![
+            ("op", Json::str("sketch_batch")),
+            ("vecs", Json::Arr(vec![row.clone(); MAX_WIRE_BATCH])),
+        ]);
+        assert!(Request::from_json(&at_cap).is_ok(), "cap itself is allowed");
+        let over = Json::obj(vec![
+            ("op", Json::str("insert_batch")),
+            ("vecs", Json::Arr(vec![row; MAX_WIRE_BATCH + 1])),
+        ]);
+        match Request::from_json(&over) {
+            Err(crate::Error::Protocol(msg)) => {
+                assert!(msg.contains("cap"), "{msg}")
+            }
+            other => panic!("{other:?}"),
         }
     }
 

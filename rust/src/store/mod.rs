@@ -111,6 +111,12 @@ impl PersistentIndex {
                     let _ = index.delete(id);
                     index.insert_with_id(id, &sketch)?;
                 }
+                WalRecord::InsertBatch { items } => {
+                    for (id, sketch) in items {
+                        let _ = index.delete(id);
+                        index.insert_with_id(id, &sketch)?;
+                    }
+                }
                 WalRecord::Delete { id } => {
                     let _ = index.delete(id);
                 }
@@ -151,6 +157,38 @@ impl PersistentIndex {
                     return Err(e);
                 }
                 Ok(id)
+            }
+        }
+    }
+
+    /// Insert a whole batch of sketches under fresh consecutive ids,
+    /// WAL-logged as **one** [`WalRecord::InsertBatch`] record under
+    /// one checksum — so the batch is all-or-nothing both on an
+    /// in-process append failure (every in-memory insert is rolled
+    /// back; the burned ids are simply never reused) *and* across a
+    /// crash mid-write (a torn record fails its CRC and recovery
+    /// truncates the whole batch away).  Each shard lock is taken
+    /// once per batch, not once per row.
+    pub fn insert_many(&self, sketches: &[Vec<u32>]) -> crate::Result<Vec<u64>> {
+        match &self.persist {
+            None => self.index.insert_many(sketches),
+            Some(m) => {
+                let mut st = m.lock().unwrap();
+                let ids = self.index.insert_many(sketches)?;
+                let rec = WalRecord::InsertBatch {
+                    items: ids
+                        .iter()
+                        .zip(sketches)
+                        .map(|(&id, sketch)| (id, sketch.clone()))
+                        .collect(),
+                };
+                if let Err(e) = st.wal.append(&rec) {
+                    for &id in &ids {
+                        let _ = self.index.delete(id);
+                    }
+                    return Err(e);
+                }
+                Ok(ids)
             }
         }
     }
@@ -207,6 +245,16 @@ impl PersistentIndex {
     /// Top-k neighbors of a query sketch.
     pub fn query(&self, sketch: &[u32], topk: usize) -> crate::Result<Vec<Neighbor>> {
         self.index.query(sketch, topk)
+    }
+
+    /// Top-k neighbors for a batch of query sketches (one shard lock
+    /// acquisition per shard per batch).
+    pub fn query_many(
+        &self,
+        sketches: &[Vec<u32>],
+        topk: usize,
+    ) -> crate::Result<Vec<Vec<Neighbor>>> {
+        self.index.query_many(sketches, topk)
     }
 
     /// All neighbors with estimate ≥ `threshold`.
@@ -324,6 +372,31 @@ mod tests {
         // compaction shrinks the footprint to snapshot-only
         let compacted = store.compact().unwrap();
         assert_eq!(store.stats().persisted_bytes, compacted);
+    }
+
+    #[test]
+    fn insert_many_is_durable_and_recovers() {
+        let dir = TempDir::new().unwrap();
+        let ids;
+        {
+            let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+            ids = store
+                .insert_many(&[sk(1), sk(2), sk(3)])
+                .unwrap();
+            assert_eq!(ids, vec![0, 1, 2]);
+            store.delete(ids[1]).unwrap();
+            // dropped without compacting: recovery replays the batch
+        }
+        let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.sketch(ids[0]), Some(sk(1)));
+        assert!(store.sketch(ids[1]).is_none());
+        assert_eq!(store.sketch(ids[2]), Some(sk(3)));
+        // batch queries agree with singleton queries after recovery
+        let probes = vec![sk(1), sk(3)];
+        let batched = store.query_many(&probes, 2).unwrap();
+        assert_eq!(batched[0], store.query(&sk(1), 2).unwrap());
+        assert_eq!(batched[1], store.query(&sk(3), 2).unwrap());
     }
 
     #[test]

@@ -136,6 +136,38 @@ impl ShardedIndex {
         Ok(id)
     }
 
+    /// Insert a whole batch of sketches under fresh ids, taking each
+    /// shard's write lock **once per batch** instead of once per item.
+    /// Returns the assigned ids in row order (always `base..base+n`
+    /// consecutive).  All sketch lengths are validated before any row
+    /// is inserted, so the batch is all-or-nothing.
+    pub fn insert_many(&self, sketches: &[Vec<u32>]) -> crate::Result<Vec<u64>> {
+        for sk in sketches {
+            self.check_len(sk)?;
+        }
+        let n = sketches.len();
+        let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
+        // Group rows by owning shard so each lock is taken exactly once.
+        let mut by_shard: Vec<Vec<(u64, &[u32])>> = vec![Vec::new(); self.shards.len()];
+        for (row, sk) in sketches.iter().enumerate() {
+            let id = base + row as u64;
+            by_shard[self.shard_of(id)].push((id, sk.as_slice()));
+        }
+        for (shard, rows) in self.shards.iter().zip(&by_shard) {
+            if rows.is_empty() {
+                continue;
+            }
+            let mut guard = shard.write().unwrap();
+            for &(id, sk) in rows {
+                // Fresh ids cannot collide, and lengths were validated
+                // above, so this insert is infallible here.
+                guard.insert(id, sk)?;
+            }
+        }
+        self.resident.fetch_add(n, Ordering::Relaxed);
+        Ok((base..base + n as u64).collect())
+    }
+
     /// Insert under a caller-chosen id (WAL replay, snapshot load,
     /// re-insert after delete).  Keeps the fresh-id counter ahead of
     /// every explicit id; rejects occupied ids.
@@ -197,6 +229,43 @@ impl ShardedIndex {
         Ok(merged)
     }
 
+    /// Top-k neighbors for a whole batch of query sketches, taking
+    /// each shard's read lock **once per batch**: every shard scores
+    /// all rows under one lock acquisition, then the per-shard partial
+    /// results are merged per row under the same global order the
+    /// single-probe [`ShardedIndex::query`] uses — so each row of the
+    /// result equals `query(&sketches[row], topk)` exactly.
+    pub fn query_many(
+        &self,
+        sketches: &[Vec<u32>],
+        topk: usize,
+    ) -> crate::Result<Vec<Vec<Neighbor>>> {
+        for sk in sketches {
+            self.check_len(sk)?;
+        }
+        if self.shards.len() == 1 {
+            let guard = self.shards[0].read().unwrap();
+            return Ok(sketches.iter().map(|sk| guard.query(sk, topk)).collect());
+        }
+        let per_shard = self.fan_out_with(|shard| {
+            sketches
+                .iter()
+                .map(|sk| shard.query(sk, topk))
+                .collect::<Vec<_>>()
+        });
+        let mut out: Vec<Vec<Neighbor>> = vec![Vec::new(); sketches.len()];
+        for shard_rows in per_shard {
+            for (row, hits) in shard_rows.into_iter().enumerate() {
+                out[row].extend(hits);
+            }
+        }
+        for merged in &mut out {
+            sort_neighbors(merged);
+            merged.truncate(topk);
+        }
+        Ok(out)
+    }
+
     /// All neighbors with estimate ≥ `threshold`, across all shards.
     pub fn query_above(&self, sketch: &[u32], threshold: f64) -> crate::Result<Vec<Neighbor>> {
         self.check_len(sketch)?;
@@ -208,18 +277,24 @@ impl ShardedIndex {
         Ok(merged)
     }
 
-    /// Run `f` against every shard and concatenate.  Small indexes run
+    /// Run `f` against every shard and concatenate.  The caller
+    /// merges, so inline and threaded paths return identical results.
+    fn fan_out(&self, f: impl Fn(&BandingIndex) -> Vec<Neighbor> + Sync) -> Vec<Neighbor> {
+        self.fan_out_with(f).into_iter().flatten().collect()
+    }
+
+    /// Run `f` once per shard (under that shard's read lock) and
+    /// return the per-shard results in shard order.  Small indexes run
     /// inline — per-shard probe work is then comparable to the cost of
     /// spawning a thread, so fan-out would only add overhead — while
-    /// large indexes query all shards on scoped threads in parallel.
-    /// The caller merges, so both paths return identical results.
-    fn fan_out(&self, f: impl Fn(&BandingIndex) -> Vec<Neighbor> + Sync) -> Vec<Neighbor> {
+    /// large indexes run all shards on scoped threads in parallel.
+    fn fan_out_with<R: Send>(&self, f: impl Fn(&BandingIndex) -> R + Sync) -> Vec<R> {
         if self.len() < PARALLEL_QUERY_MIN_ITEMS {
-            let mut out = Vec::new();
-            for shard in &self.shards {
-                out.extend(f(&shard.read().unwrap()));
-            }
-            return out;
+            return self
+                .shards
+                .iter()
+                .map(|shard| f(&shard.read().unwrap()))
+                .collect();
         }
         let f = &f;
         std::thread::scope(|s| {
@@ -228,11 +303,10 @@ impl ShardedIndex {
                 .iter()
                 .map(|shard| s.spawn(move || f(&shard.read().unwrap())))
                 .collect();
-            let mut out = Vec::new();
-            for h in handles {
-                out.extend(h.join().expect("shard query thread panicked"));
-            }
-            out
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard query thread panicked"))
+                .collect()
         })
     }
 
@@ -373,6 +447,44 @@ mod tests {
                 "parallel fan-out diverged for probe {probe_seed}"
             );
         }
+    }
+
+    #[test]
+    fn insert_many_matches_singleton_inserts() {
+        let sks = sketches(17);
+        let batched = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let single = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let ids = batched.insert_many(&sks).unwrap();
+        assert_eq!(ids, (0..17).collect::<Vec<u64>>(), "ids are consecutive");
+        for sk in &sks {
+            single.insert(sk).unwrap();
+        }
+        assert_eq!(batched.items(), single.items(), "same routing, same state");
+        // fresh singleton ids continue past the batch
+        assert_eq!(batched.insert(&sks[0]).unwrap(), 17);
+        // a bad row poisons the whole batch before any insert happens
+        let mixed = vec![sks[0].clone(), vec![0u32; 63]];
+        assert!(batched.insert_many(&mixed).is_err());
+        assert_eq!(batched.len(), 18, "all-or-nothing: nothing inserted");
+    }
+
+    #[test]
+    fn query_many_matches_per_probe_queries() {
+        let idx = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let sks = sketches(40);
+        idx.insert_many(&sks).unwrap();
+        let probes: Vec<Vec<u32>> = sks.iter().take(6).cloned().collect();
+        let batched = idx.query_many(&probes, 5).unwrap();
+        assert_eq!(batched.len(), 6);
+        for (row, probe) in probes.iter().enumerate() {
+            assert_eq!(
+                batched[row],
+                idx.query(probe, 5).unwrap(),
+                "row {row} diverged from the singleton query"
+            );
+        }
+        // length validation covers every row
+        assert!(idx.query_many(&[vec![0u32; 63]], 5).is_err());
     }
 
     #[test]

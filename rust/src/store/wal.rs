@@ -6,7 +6,15 @@
 //! record  := len:u32le | crc:u32le | payload (len bytes)
 //! payload := 0x01 | id:u64le | k:u32le | k × u32le   (insert)
 //!          | 0x02 | id:u64le                          (delete)
+//!          | 0x03 | n:u32le | n × item                (insert batch)
+//! item    := id:u64le | k:u32le | k × u32le
 //! ```
+//!
+//! A batched insert is **one** record under **one** checksum, which is
+//! what makes `insert_batch` all-or-nothing across crashes: a torn
+//! write fails the CRC and the whole batch is truncated away on open —
+//! there is no recovery state in which only some rows of a batch are
+//! durable.
 //!
 //! `crc` is FNV-1a over the payload.  On open, the valid prefix is
 //! replayed and any torn tail (short record, bad checksum, bad tag —
@@ -36,25 +44,44 @@ pub enum WalRecord {
         /// Item id.
         id: u64,
     },
+    /// Insert a whole batch of `(id, sketch)` rows as one record —
+    /// one checksum, so a crash mid-write durably keeps either every
+    /// row or none (torn-tail truncation on open).
+    InsertBatch {
+        /// `(id, sketch)` per row.
+        items: Vec<(u64, Vec<u32>)>,
+    },
 }
 
 const TAG_INSERT: u8 = 1;
 const TAG_DELETE: u8 = 2;
+const TAG_INSERT_BATCH: u8 = 3;
+
+fn push_item(payload: &mut Vec<u8>, id: u64, sketch: &[u32]) {
+    payload.extend_from_slice(&id.to_le_bytes());
+    payload.extend_from_slice(&(sketch.len() as u32).to_le_bytes());
+    for v in sketch {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+}
 
 fn encode(rec: &WalRecord) -> Vec<u8> {
     let mut payload = Vec::new();
     match rec {
         WalRecord::Insert { id, sketch } => {
             payload.push(TAG_INSERT);
-            payload.extend_from_slice(&id.to_le_bytes());
-            payload.extend_from_slice(&(sketch.len() as u32).to_le_bytes());
-            for v in sketch {
-                payload.extend_from_slice(&v.to_le_bytes());
-            }
+            push_item(&mut payload, *id, sketch);
         }
         WalRecord::Delete { id } => {
             payload.push(TAG_DELETE);
             payload.extend_from_slice(&id.to_le_bytes());
+        }
+        WalRecord::InsertBatch { items } => {
+            payload.push(TAG_INSERT_BATCH);
+            payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for (id, sketch) in items {
+                push_item(&mut payload, *id, sketch);
+            }
         }
     }
     let mut out = Vec::with_capacity(8 + payload.len());
@@ -74,18 +101,29 @@ fn read_u64(b: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(a)
 }
 
+/// Decode one `id | k | k×u32` item at `off`; returns the item and
+/// the offset just past it, or `None` on a short buffer.
+fn read_item(p: &[u8], off: usize) -> Option<((u64, Vec<u32>), usize)> {
+    if p.len() < off + 8 + 4 {
+        return None;
+    }
+    let id = read_u64(p, off);
+    let k = read_u32(p, off + 8) as usize;
+    let end = off + 12 + 4 * k;
+    if p.len() < end {
+        return None;
+    }
+    let sketch = (0..k).map(|i| read_u32(p, off + 12 + 4 * i)).collect();
+    Some(((id, sketch), end))
+}
+
 fn decode_payload(p: &[u8]) -> Option<WalRecord> {
     match p.first()? {
         &TAG_INSERT => {
-            if p.len() < 1 + 8 + 4 {
+            let ((id, sketch), end) = read_item(p, 1)?;
+            if p.len() != end {
                 return None;
             }
-            let id = read_u64(p, 1);
-            let k = read_u32(p, 9) as usize;
-            if p.len() != 1 + 8 + 4 + 4 * k {
-                return None;
-            }
-            let sketch = (0..k).map(|i| read_u32(p, 13 + 4 * i)).collect();
             Some(WalRecord::Insert { id, sketch })
         }
         &TAG_DELETE => {
@@ -93,6 +131,29 @@ fn decode_payload(p: &[u8]) -> Option<WalRecord> {
                 return None;
             }
             Some(WalRecord::Delete { id: read_u64(p, 1) })
+        }
+        &TAG_INSERT_BATCH => {
+            if p.len() < 1 + 4 {
+                return None;
+            }
+            let n = read_u32(p, 1) as usize;
+            // Every item needs at least 12 bytes; a count the payload
+            // cannot possibly hold is corruption — reject it before
+            // trusting it as an allocation size.
+            if n > (p.len() - 5) / 12 {
+                return None;
+            }
+            let mut items = Vec::with_capacity(n);
+            let mut off = 5;
+            for _ in 0..n {
+                let (item, next) = read_item(p, off)?;
+                items.push(item);
+                off = next;
+            }
+            if p.len() != off {
+                return None;
+            }
+            Some(WalRecord::InsertBatch { items })
         }
         _ => None,
     }
@@ -278,6 +339,38 @@ mod tests {
         let (_, recs) = Wal::open(&path).unwrap();
         assert_eq!(recs.len(), 1, "replay stops at the corrupt record");
         assert_eq!(recs[0], sample()[0]);
+    }
+
+    #[test]
+    fn insert_batch_record_is_atomic_under_torn_writes() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        let batch = WalRecord::InsertBatch {
+            items: vec![(0, vec![1, 2, 3, 4]), (1, vec![9, 8, 7, 6]), (2, vec![5; 4])],
+        };
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(&WalRecord::Delete { id: 9 }).unwrap();
+            wal.append(&batch).unwrap();
+        }
+        // full record replays as one unit
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs, vec![WalRecord::Delete { id: 9 }, batch.clone()]);
+        // a crash mid-batch-write (torn tail anywhere inside the
+        // record) durably keeps NONE of the batch rows: cut the
+        // original file inside the batch record and reopen.  (Wal::open
+        // truncates on open, so restore the full image before each cut.)
+        let original = std::fs::read(&path).unwrap();
+        let full = original.len();
+        for cut in [full - 1, full - 7, full - 20] {
+            std::fs::write(&path, &original[..cut]).unwrap();
+            let (_, recs) = Wal::open(&path).unwrap();
+            assert_eq!(
+                recs,
+                vec![WalRecord::Delete { id: 9 }],
+                "cut at {cut}: partial batch must not replay"
+            );
+        }
     }
 
     #[test]

@@ -39,8 +39,8 @@ fn xla_serving_stack_matches_rust_hasher() {
             bands: 32,
             rows_per_band: 4,
         },
-        store: Default::default(),
         addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
     };
     let svc = Coordinator::start(cfg.clone()).unwrap();
     let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
@@ -76,17 +76,29 @@ fn xla_serving_stack_matches_rust_hasher() {
         snap.batches
     );
 
-    // Empty vector over the full stack -> sentinel sketch.
+    // Empty vectors are rejected at the boundary (their sentinel
+    // sketch would estimate Ĵ = 1.0 against every other empty vector).
     let mut c = BlockingClient::connect(&addr).unwrap();
-    let sk = c.sketch(1024, vec![]).unwrap();
-    assert!(sk.iter().all(|&v| v == 1024));
+    match c.sketch(1024, vec![]) {
+        Err(cminhash::Error::Protocol(msg)) => assert!(msg.contains("empty vector"), "{msg}"),
+        other => panic!("empty vector must be rejected, got {other:?}"),
+    }
 
     // insert + query through the XLA path.
     let doc: Vec<u32> = (100..200).collect();
     let id = c.insert(1024, doc.clone()).unwrap();
-    let hits = c.query(1024, doc, 3).unwrap();
+    let hits = c.query(1024, doc.clone(), 3).unwrap();
     assert_eq!(hits[0].id, id);
     assert_eq!(hits[0].score, 1.0);
+
+    // batch wire ops through the XLA engine match the oracle too.
+    let rows: Vec<Vec<u32>> = (0..5u32).map(|t| vec![t, t * 3 + 7, 900 + t]).collect();
+    let sks = c.sketch_batch(1024, rows.clone()).unwrap();
+    for (row, sk) in rows.iter().zip(&sks) {
+        assert_eq!(*sk, oracle.sketch_sparse(row), "batched XLA != oracle");
+    }
+    let results = c.query_batch(1024, vec![doc], 3).unwrap();
+    assert_eq!(results[0][0].id, id);
 }
 
 #[test]
@@ -109,8 +121,8 @@ fn heavy_rows_fall_back_to_dense_artifact() {
             bands: 32,
             rows_per_band: 4,
         },
-        store: Default::default(),
         addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
     };
     let svc = Coordinator::start(cfg.clone()).unwrap();
     let oracle = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);

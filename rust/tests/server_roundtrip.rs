@@ -135,6 +135,125 @@ fn protocol_errors_are_reported_not_fatal() {
 }
 
 #[test]
+fn batch_ops_roundtrip_and_match_singletons() {
+    let (server, _svc, cfg) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let hasher = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+
+    // N = 1 batch results are identical to the singleton ops.
+    let row: Vec<u32> = (0..40).collect();
+    let batch_sk = c.sketch_batch(512, vec![row.clone()]).unwrap();
+    assert_eq!(batch_sk.len(), 1);
+    assert_eq!(batch_sk[0], c.sketch(512, row.clone()).unwrap());
+    assert_eq!(batch_sk[0], hasher.sketch_sparse(&row));
+
+    // insert_batch assigns consecutive ids and stores every row.
+    let rows: Vec<Vec<u32>> = (0..5u32)
+        .map(|i| (i * 25..i * 25 + 50).collect())
+        .collect();
+    let ids = c.insert_batch(512, rows.clone()).unwrap();
+    assert_eq!(ids.len(), 5);
+    for w in ids.windows(2) {
+        assert_eq!(w[1], w[0] + 1, "batch ids are consecutive");
+    }
+
+    // query_batch: one neighbor list per row, each matching the
+    // singleton query for that row.
+    let results = c.query_batch(512, rows.clone(), 3).unwrap();
+    assert_eq!(results.len(), 5);
+    for (row_i, (hits, row)) in results.iter().zip(&rows).enumerate() {
+        assert_eq!(hits[0].id, ids[row_i], "row {row_i}: self is top hit");
+        assert_eq!(hits[0].score, 1.0);
+        let single = c.query(512, row.clone(), 3).unwrap();
+        assert_eq!(*hits, single, "row {row_i} diverged from singleton query");
+    }
+
+    // stats sees the batched traffic: 5 stored rows + row counters.
+    let raw = c.call_raw(&Request::Stats).unwrap();
+    assert_eq!(raw.get("stored").unwrap().as_u64().unwrap(), 5);
+    let m = raw.get("metrics").unwrap();
+    assert_eq!(m.get("queries").unwrap().as_u64().unwrap(), 10, "5 batched + 5 single");
+
+    // an empty vecs array is a protocol error, not a crash
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(b"{\"op\":\"sketch_batch\",\"vecs\":[]}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("vecs"), "{line}");
+}
+
+#[test]
+fn empty_vectors_rejected_over_the_wire() {
+    // Regression: two empty vectors used to estimate Ĵ = 1.0 (both
+    // sketch to the all-D sentinel, which collides in every slot).
+    let (server, _svc, _cfg) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let empty = SparseVec::new(512, vec![]).unwrap();
+    let full = SparseVec::new(512, vec![1, 2, 3]).unwrap();
+
+    // estimate_vecs of two empties: clean error, not jhat = 1.0
+    match c
+        .call(&Request::EstimateVecs {
+            v: empty.clone(),
+            w: empty.clone(),
+        })
+        .unwrap()
+    {
+        Response::Err { error } => assert!(error.contains("empty vector"), "{error}"),
+        other => panic!("empty ∩ empty must not estimate: {other:?}"),
+    }
+    // sketch / insert / query of an empty vector: same clean error
+    for req in [
+        Request::Sketch { vec: empty.clone() },
+        Request::Insert { vec: empty.clone() },
+        Request::Query {
+            vec: empty.clone(),
+            topk: 3,
+        },
+        Request::QueryAbove {
+            vec: empty.clone(),
+            threshold: 0.5,
+        },
+        Request::EstimateVecs {
+            v: full.clone(),
+            w: empty.clone(),
+        },
+    ] {
+        match c.call(&req).unwrap() {
+            Response::Err { error } => {
+                assert!(error.contains("empty vector"), "{req:?}: {error}")
+            }
+            other => panic!("{req:?} must be rejected, got {other:?}"),
+        }
+    }
+    // a batch containing one empty row is rejected wholesale
+    match c
+        .call(&Request::InsertBatch {
+            vecs: vec![full.clone(), empty],
+        })
+        .unwrap()
+    {
+        Response::Err { error } => assert!(error.contains("empty vector"), "{error}"),
+        other => panic!("{other:?}"),
+    }
+    let raw = c.call_raw(&Request::Stats).unwrap();
+    assert_eq!(
+        raw.get("stored").unwrap().as_u64().unwrap(),
+        0,
+        "the rejected batch must not partially insert"
+    );
+    // the connection survives and serves normal traffic
+    let id = c.insert(512, (0..50).collect()).unwrap();
+    assert_eq!(c.query(512, (0..50).collect(), 1).unwrap()[0].id, id);
+}
+
+#[test]
 fn delete_over_the_wire() {
     let (server, _svc, _cfg) = start_server();
     let addr = server.addr().to_string();

@@ -1,0 +1,194 @@
+//! Bounded connection pool + bulk loading over real TCP: saturate
+//! `server.max_connections`, assert overflow clients get the clean
+//! `busy` protocol error while the server stays live, and round-trip a
+//! JSONL file through `cminhash`'s `load_jsonl` into stats occupancy.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::protocol::{Request, Response};
+use cminhash::server::{load_jsonl, BlockingClient, Server};
+use cminhash::sketch::SparseVec;
+use cminhash::util::testutil::TempDir;
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn start_server(max_connections: usize) -> (Server, Arc<Coordinator>) {
+    let mut cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 256,
+        num_hashes: 64,
+        seed: 5,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    cfg.server.max_connections = max_connections;
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (server, svc)
+}
+
+fn ping_ok(c: &mut BlockingClient) -> bool {
+    matches!(c.call(&Request::Ping), Ok(Response::Pong))
+}
+
+#[test]
+fn overflow_connections_get_busy_and_server_stays_live() {
+    let (server, svc) = start_server(2);
+    let addr = server.addr().to_string();
+
+    // Fill both pool slots; a ping round-trip proves each connection
+    // is actually being served by a worker before we overflow.
+    let mut c1 = BlockingClient::connect(&addr).unwrap();
+    assert!(ping_ok(&mut c1));
+    let mut c2 = BlockingClient::connect(&addr).unwrap();
+    assert!(ping_ok(&mut c2));
+
+    // Overflow: the server sends one busy error line unprompted and
+    // closes; no request needs to be written to observe it.
+    for _ in 0..3 {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{line}");
+        assert!(line.contains("busy"), "{line}");
+        // closed after the error line: next read sees EOF
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "socket must close");
+    }
+
+    // The pool members were never disturbed.
+    assert!(ping_ok(&mut c1), "existing connection 1 survived saturation");
+    assert!(ping_ok(&mut c2), "existing connection 2 survived saturation");
+    let (snap, _) = svc.stats();
+    assert_eq!(snap.busy_rejections, 3, "each overflow is counted");
+
+    // Freeing one slot re-admits new connections (the worker notices
+    // EOF asynchronously, so poll briefly).
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut admitted = false;
+    while Instant::now() < deadline {
+        if let Ok(mut c) = BlockingClient::connect(&addr) {
+            if ping_ok(&mut c) {
+                admitted = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(admitted, "a freed worker slot must re-admit connections");
+}
+
+#[test]
+fn saturated_pool_still_serves_real_traffic() {
+    // One worker, one working client, many rejected ones: the single
+    // slot keeps doing real request work throughout.
+    let (server, _svc) = start_server(1);
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    assert!(ping_ok(&mut c));
+    for i in 0..4u32 {
+        // each overflow connection is turned away...
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("busy"), "{line}");
+        // ...while the admitted connection keeps inserting
+        let id = c.insert(256, vec![i, i + 10, i + 20]).unwrap();
+        assert_eq!(id, u64::from(i));
+    }
+    let hits = c.query(256, vec![0, 10, 20], 1).unwrap();
+    assert_eq!(hits[0].id, 0);
+}
+
+#[test]
+fn load_jsonl_roundtrips_into_stats_occupancy() {
+    let (server, svc) = start_server(4);
+    let addr = server.addr().to_string();
+
+    // 11 rows with batch 4 -> 3 insert_batch round-trips (4+4+3),
+    // plus blank lines that must be skipped.
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("vectors.jsonl");
+    let mut lines = Vec::new();
+    for i in 0..11u32 {
+        let v = SparseVec::new(256, vec![i, i + 30, i + 90]).unwrap();
+        lines.push(v.to_json().to_string());
+        if i % 4 == 0 {
+            lines.push(String::new());
+        }
+    }
+    std::fs::write(&path, lines.join("\n")).unwrap();
+
+    let mut progress_calls = 0u64;
+    let report = load_jsonl(&addr, &path, 4, |_| progress_calls += 1).unwrap();
+    assert_eq!(report.rows, 11);
+    assert_eq!(report.batches, 3);
+    assert_eq!(progress_calls, 3, "one progress call per round-trip");
+    assert!(report.secs >= 0.0 && report.rows_per_sec() >= 0.0);
+
+    // stats occupancy reflects exactly the loaded rows
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let raw = c.call_raw(&Request::Stats).unwrap();
+    assert_eq!(raw.get("stored").unwrap().as_u64().unwrap(), 11);
+    // and the rows are queryable
+    let hits = c.query(256, vec![3, 33, 93], 1).unwrap();
+    assert_eq!(hits[0].score, 1.0);
+    drop(server);
+    let (snap, _) = svc.stats();
+    assert_eq!(snap.sketches, 12, "11 loaded + 1 query probe");
+}
+
+#[test]
+fn load_jsonl_reports_bad_lines_and_rejected_batches() {
+    let (server, _svc) = start_server(4);
+    let addr = server.addr().to_string();
+    let dir = TempDir::new().unwrap();
+
+    // malformed JSON names the file and line
+    let bad = dir.path().join("bad.jsonl");
+    std::fs::write(
+        &bad,
+        "{\"dim\":256,\"indices\":[1]}\nthis is not json\n",
+    )
+    .unwrap();
+    match load_jsonl(&addr, &bad, 8, |_| {}) {
+        Err(cminhash::Error::Invalid(msg)) => {
+            assert!(msg.contains("bad.jsonl:2"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // an empty vector row is rejected by the server (whole batch) and
+    // surfaces the offending batch's starting line
+    let empty = dir.path().join("empty_row.jsonl");
+    std::fs::write(
+        &empty,
+        "{\"dim\":256,\"indices\":[1]}\n{\"dim\":256,\"indices\":[]}\n",
+    )
+    .unwrap();
+    match load_jsonl(&addr, &empty, 8, |_| {}) {
+        Err(cminhash::Error::Protocol(msg)) => {
+            assert!(msg.contains("line 1"), "{msg}");
+            assert!(msg.contains("empty vector"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // zero batch size is a client error before any I/O
+    assert!(load_jsonl(&addr, &bad, 0, |_| {}).is_err());
+    let _ = server;
+}
