@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench doc clippy verify artifacts figures clean
+.PHONY: all build test bench doc clippy linkcheck verify artifacts figures clean
 
 all: build
 
@@ -29,7 +29,12 @@ bench:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-verify: build test clippy
+# Offline markdown link check over README/DESIGN/docs/… so the docs
+# can't rot silently (local targets only; external URLs not fetched).
+linkcheck:
+	$(PYTHON) tools/linkcheck.py .
+
+verify: build test clippy linkcheck
 
 # AOT-lower the L1/L2 pipelines to artifacts/ (HLO text + manifest) and
 # export the golden vectors for rust/tests/golden.rs.  Optional: the

@@ -1,13 +1,18 @@
-//! Hot-path microbenchmarks: ns/sketch for the three pure-Rust hashers
-//! across (D, f, K), permutation-memory footprint, and the XLA artifact
-//! batch execution (when artifacts are present).  This is the §Perf
-//! baseline/after instrument.
+//! Hot-path microbenchmarks: ns/sketch for the pure-Rust hashers
+//! across (D, f, K), permutation-memory footprint, the XLA artifact
+//! batch execution (when artifacts are present), and a **scheme
+//! sweep** — sketch throughput and estimate MSE vs K for all five
+//! [`SketchScheme`]s, emitted machine-readable as
+//! `BENCH_scheme_sweep.json`.  This is the §Perf baseline/after
+//! instrument.
 
 use cminhash::bench::{black_box, Harness};
 use cminhash::runtime::{HostTensor, XlaEngine};
 use cminhash::sketch::{
-    CMinHasher, ClassicMinHasher, Perm, Role, Sketcher, ZeroPiHasher,
+    estimate, CMinHasher, ClassicMinHasher, Perm, Role, SketchScheme, Sketcher,
+    ZeroPiHasher,
 };
+use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
 use std::path::Path;
 
@@ -18,9 +23,86 @@ fn doc(rng: &mut Rng, d: u32, f: usize) -> Vec<u32> {
     idx
 }
 
+/// The scheme sweep: for every [`SketchScheme`] × K, measure sketch
+/// throughput (ns/sketch at D = 4096, f ≈ 256) and estimator MSE
+/// against exact Jaccard (pairs at J = 1/3, averaged over seeds).
+/// Emits `BENCH_scheme_sweep.json` so the scheme-selection guide in
+/// `docs/SCHEMES.md` is backed by regenerable numbers.
+fn scheme_sweep(h: &mut Harness, fast: bool) {
+    let d = 4096usize;
+    let f = 256usize;
+    let seeds = if fast { 8u64 } else { 50 };
+    let mut rng = Rng::seed_from_u64(3);
+    // Overlapping windows -> exact J = f/2 / (3f/2) = 1/3.
+    let v: Vec<u32> = (0..f as u32).collect();
+    let w: Vec<u32> = (f as u32 / 2..3 * f as u32 / 2).collect();
+    let truth = 1.0 / 3.0;
+    let idx: Vec<u32> = {
+        let mut i: Vec<u32> = (0..f).map(|_| rng.range_u32(0, d as u32)).collect();
+        i.sort_unstable();
+        i.dedup();
+        i
+    };
+
+    let mut rows = Vec::new();
+    for &k in &[16usize, 64, 256] {
+        for scheme in SketchScheme::ALL {
+            let hasher = scheme.build(d, k, 7).expect("K divides D=4096");
+            let stats = h
+                .bench(&format!("scheme {scheme} D={d} f={} K={k}", idx.len()), || {
+                    black_box(hasher.sketch_sparse(&idx))
+                })
+                .clone();
+            // MSE of the collision estimator over independent seeds.
+            let mut sq = 0.0f64;
+            for seed in 0..seeds {
+                let hs = scheme.build(d, k, 1000 + seed).unwrap();
+                let e = estimate(&hs.sketch_sparse(&v), &hs.sketch_sparse(&w));
+                sq += (e - truth) * (e - truth);
+            }
+            let mse = sq / seeds as f64;
+            println!(
+                "  scheme={scheme:8} K={k:4}: {:9.0} ns/sketch, MSE {mse:.5}",
+                stats.mean_ns
+            );
+            rows.push(Json::obj(vec![
+                ("scheme", Json::str(scheme.as_str())),
+                ("k", Json::Num(k as f64)),
+                ("ns_per_sketch", Json::Num(stats.mean_ns)),
+                ("estimate_mse", Json::Num(mse)),
+            ]));
+        }
+        // Shape check: every scheme's MSE at this K is in the same
+        // ballpark as the binomial variance J(1-J)/K (unbiased
+        // estimators; OPH variants can be tighter, classic/cmh are
+        // pinned near it).
+        let bound = truth * (1.0 - truth) / k as f64;
+        for row in rows.iter().rev().take(SketchScheme::ALL.len()) {
+            let mse = row.get("estimate_mse").unwrap().as_f64().unwrap();
+            assert!(
+                mse < 6.0 * bound + 1e-4,
+                "MSE {mse} implausible vs binomial bound {bound}"
+            );
+        }
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::str("scheme_sweep")),
+        ("dim", Json::Num(d as f64)),
+        ("nnz", Json::Num(idx.len() as f64)),
+        ("jaccard", Json::Num(truth)),
+        ("seeds", Json::Num(seeds as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_scheme_sweep.json", out.to_string()).unwrap();
+    println!("wrote BENCH_scheme_sweep.json");
+}
+
 fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
     let mut h = Harness::new("hasher_hotpath");
     let mut rng = Rng::seed_from_u64(1);
+
+    scheme_sweep(&mut h, fast);
 
     for &(d, f, k) in &[
         (4096usize, 64usize, 256usize),

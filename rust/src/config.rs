@@ -3,6 +3,7 @@
 //! (The offline build has no TOML parser; configs are JSON — see
 //! `configs/serve.json` for the annotated default.)
 
+use crate::sketch::SketchScheme;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -77,6 +78,24 @@ impl Default for BatchConfig {
     }
 }
 
+/// Sketching-scheme settings (which hasher the service runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchSettings {
+    /// The minwise-hashing scheme: `classic | cmh | zero-pi | oph |
+    /// coph` (see `docs/SCHEMES.md`).  Sketches from different schemes
+    /// are not comparable, so the scheme is stamped into snapshots and
+    /// reported by the `stats` wire op.
+    pub scheme: SketchScheme,
+}
+
+impl Default for SketchSettings {
+    fn default() -> Self {
+        SketchSettings {
+            scheme: SketchScheme::Cmh,
+        }
+    }
+}
+
 /// LSH index settings.
 #[derive(Clone, Copy, Debug)]
 pub struct IndexSettings {
@@ -137,8 +156,10 @@ pub struct ServeConfig {
     pub dim: usize,
     /// Sketch length K.
     pub num_hashes: usize,
-    /// Seed for (σ, π) generation — the *only* hashing state.
+    /// Seed for permutation generation — the *only* hashing state.
     pub seed: u64,
+    /// Sketch-scheme selection.
+    pub sketch: SketchSettings,
     /// Batching.
     pub batch: BatchConfig,
     /// Index.
@@ -161,6 +182,7 @@ impl Default for ServeConfig {
             dim: 4096,
             num_hashes: 256,
             seed: 42,
+            sketch: SketchSettings::default(),
             batch: BatchConfig::default(),
             index: IndexSettings::default(),
             store: StoreSettings::default(),
@@ -196,6 +218,11 @@ impl ServeConfig {
         }
         if let Some(v) = j.get_opt("seed") {
             cfg.seed = v.as_u64()?;
+        }
+        if let Some(sk) = j.get_opt("sketch") {
+            if let Some(v) = sk.get_opt("scheme") {
+                cfg.sketch.scheme = SketchScheme::parse(v.as_str()?)?;
+            }
         }
         if let Some(b) = j.get_opt("batch") {
             if let Some(v) = b.get_opt("max_batch") {
@@ -243,6 +270,8 @@ impl ServeConfig {
                 self.num_hashes, self.dim
             )));
         }
+        // Scheme-specific shape constraints (the OPH family needs K | D).
+        self.sketch.scheme.validate(self.dim, self.num_hashes)?;
         if self.index.bands * self.index.rows_per_band > self.num_hashes {
             return Err(crate::Error::Invalid(format!(
                 "bands({}) * rows({}) > K({})",
@@ -376,6 +405,36 @@ mod tests {
         assert!(c.validate().is_err(), "a zero-worker pool can serve nobody");
         c.server.max_connections = 1_000_000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sketch_scheme_parse_and_validate() {
+        let c = ServeConfig::default();
+        assert_eq!(c.sketch.scheme, SketchScheme::Cmh, "cmh is the default");
+        let j = crate::util::json::Json::parse(r#"{"sketch": {"scheme": "coph"}}"#)
+            .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.sketch.scheme, SketchScheme::Coph);
+        c.validate().unwrap();
+        // unknown scheme names fail at parse time
+        let j = crate::util::json::Json::parse(r#"{"sketch": {"scheme": "md5"}}"#)
+            .unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        // the OPH family's divisibility constraint is enforced
+        let mut c = ServeConfig::default();
+        c.sketch.scheme = SketchScheme::Oph;
+        c.dim = 4096;
+        c.num_hashes = 100; // 100 does not divide 4096
+        c.index.bands = 10;
+        c.index.rows_per_band = 10;
+        match c.validate() {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("divide"), "{msg}")
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        c.sketch.scheme = SketchScheme::Cmh;
+        c.validate().unwrap();
     }
 
     #[test]

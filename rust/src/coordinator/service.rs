@@ -14,7 +14,7 @@ use crate::coordinator::batcher::Batcher;
 use crate::index::{IndexConfig, Neighbor};
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::runtime::{EngineHandle, HostTensor};
-use crate::sketch::{CMinHasher, Perm, Role, Sketcher, SparseVec};
+use crate::sketch::{Perm, Role, SketchScheme, Sketcher, SparseVec};
 use crate::store::{resolve_shards, PersistentIndex, StoreStats};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -45,9 +45,10 @@ pub enum EngineBackend {
         /// π tripled with sentinel tail (sparse artifact input).
         pi3: Vec<i32>,
     },
-    /// Pure-Rust fallback.
+    /// Pure-Rust hashers — the path that supports every
+    /// [`SketchScheme`], selected by `cfg.sketch.scheme`.
     Rust {
-        /// The hasher.
+        /// The scheme-selected hasher.
         hasher: Arc<dyn Sketcher>,
     },
 }
@@ -83,6 +84,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<SketchJob>();
         let store = PersistentIndex::open(
             cfg.num_hashes,
+            cfg.sketch.scheme,
             IndexConfig {
                 bands: cfg.index.bands,
                 rows_per_band: cfg.index.rows_per_band,
@@ -124,9 +126,24 @@ impl Coordinator {
     fn build_backend(cfg: &ServeConfig) -> crate::Result<EngineBackend> {
         match cfg.engine {
             EngineKind::Rust => Ok(EngineBackend::Rust {
-                hasher: Arc::new(CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed)),
+                hasher: cfg
+                    .sketch
+                    .scheme
+                    .build(cfg.dim, cfg.num_hashes, cfg.seed)?,
             }),
             EngineKind::Xla => {
+                // The AOT artifacts implement exactly one pipeline: the
+                // C-MinHash-(σ, π) kernels.  Serving any other scheme
+                // through them would produce sketches from the wrong
+                // algorithm, so the mismatch is rejected up front.
+                if cfg.sketch.scheme != SketchScheme::Cmh {
+                    return Err(crate::Error::Invalid(format!(
+                        "engine xla only implements the 'cmh' scheme (the \
+                         compiled artifacts are C-MinHash-(σ, π) kernels); \
+                         scheme '{}' needs --engine rust",
+                        cfg.sketch.scheme
+                    )));
+                }
                 let handle = EngineHandle::spawn(&cfg.artifacts_dir)?;
                 let dense = handle.manifest().sketch_variant_for(cfg.dim, cfg.num_hashes);
                 let sparse = handle
@@ -638,6 +655,7 @@ fn run_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::CMinHasher;
 
     fn rust_cfg() -> ServeConfig {
         ServeConfig {
@@ -895,6 +913,37 @@ mod tests {
                     || dense.as_ref().is_some_and(|(_, b)| cap <= *b);
                 assert!(fits, "cap {cap} unservable for nnz {nnz}");
             }
+        }
+    }
+
+    #[test]
+    fn scheme_knob_selects_the_hasher() {
+        // Every scheme serves end to end on the Rust engine, and the
+        // served sketch equals the scheme's direct hasher output.
+        let v = SparseVec::new(512, vec![1, 99, 300]).unwrap();
+        for scheme in SketchScheme::ALL {
+            let mut cfg = rust_cfg();
+            cfg.sketch.scheme = scheme;
+            let svc = Coordinator::start(cfg.clone()).unwrap();
+            let direct = scheme
+                .build(cfg.dim, cfg.num_hashes, cfg.seed)
+                .unwrap()
+                .sketch_sparse(v.indices());
+            assert_eq!(svc.sketch(v.clone()).unwrap(), direct, "{scheme}");
+        }
+    }
+
+    #[test]
+    fn xla_engine_rejects_non_cmh_schemes() {
+        let mut cfg = rust_cfg();
+        cfg.engine = EngineKind::Xla;
+        cfg.sketch.scheme = SketchScheme::Coph;
+        match Coordinator::start(cfg) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("cmh") && msg.contains("coph"), "{msg}")
+            }
+            Err(other) => panic!("expected Invalid, got {other:?}"),
+            Ok(_) => panic!("xla + coph must be rejected"),
         }
     }
 

@@ -11,8 +11,10 @@
 //!   via PJRT ([`runtime`]), batches client requests ([`coordinator`]),
 //!   serves sketches / estimates / near-neighbor queries ([`server`],
 //!   [`index`]) out of a sharded, crash-recoverable sketch store
-//!   ([`store`]), and ships pure-Rust hashers ([`sketch`]), exact
-//!   paper theory ([`theory`]), and dataset generators ([`data`]).
+//!   ([`store`]), and ships five pluggable hashing schemes —
+//!   classic MinHash, C-MinHash-(σ, π)/(0, π), OPH, and C-OPH,
+//!   selected end to end via [`sketch::SketchScheme`] — plus exact
+//!   paper theory ([`theory`]) and dataset generators ([`data`]).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, and the binary is self-contained afterwards.

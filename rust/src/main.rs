@@ -23,7 +23,7 @@ use cminhash::runtime::Manifest;
 use cminhash::store::{resolve_shards, PersistentIndex};
 use cminhash::server::protocol::Request;
 use cminhash::server::{BlockingClient, Server};
-use cminhash::sketch::{CMinHasher, Sketcher, SparseVec};
+use cminhash::sketch::{SketchScheme, Sketcher, SparseVec};
 use cminhash::util::rng::Rng;
 use cminhash::{Error, Result};
 use std::collections::HashMap;
@@ -35,19 +35,21 @@ cminhash — C-MinHash sketching & similarity-search service
 
 USAGE:
   cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
+                   [--scheme classic|cmh|zero-pi|oph|coph]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
                    [--shards N] [--persist DIR] [--max-conns N]
   cminhash load    FILE.jsonl [--addr A] [--batch N]
                    (bulk-ingest: one {\"dim\":D,\"indices\":[...]} object
                    per line, streamed through insert_batch)
   cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
-                   [--shards N]        (offline only — use the `save`
-                   wire op to compact under a running server)
+                   [--scheme S] [--shards N]
+                   (offline only — use the `save` wire op to compact
+                   under a running server)
   cminhash figures (--all | --fig N) [--out DIR] [--fast]
   cminhash dataset --kind nips|bbc|mnist|cifar --out FILE.json
                    [--n N] [--seed S] [--stats]
   cminhash sketch  --input FILE.json --out FILE.json
-                   [--num-hashes K] [--seed S]
+                   [--num-hashes K] [--seed S] [--scheme S]
   cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
   cminhash info    [--artifacts DIR]
   cminhash theory  --d D --f F [--a A] [--k K]
@@ -178,6 +180,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    if let Some(s) = args.get("scheme") {
+        cfg.sketch.scheme = SketchScheme::parse(s)?;
+    }
     if let Some(d) = args.get_parsed::<usize>("dim")? {
         cfg.dim = d;
     }
@@ -204,9 +209,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::spawn(svc.clone(), &cfg.addr)?;
     let (_, store) = svc.stats();
     println!(
-        "serving on {} (engine={:?}, D={}, K={}, shards={}, max-conns={})",
+        "serving on {} (engine={:?}, scheme={}, D={}, K={}, shards={}, max-conns={})",
         server.addr(),
         cfg.engine,
+        cfg.sketch.scheme,
         cfg.dim,
         cfg.num_hashes,
         store.shards.len(),
@@ -286,6 +292,9 @@ fn cmd_compact(args: &Args) -> Result<()> {
     if let Some(k) = args.get_parsed::<usize>("num-hashes")? {
         cfg.num_hashes = k;
     }
+    if let Some(s) = args.get("scheme") {
+        cfg.sketch.scheme = SketchScheme::parse(s)?;
+    }
     if let Some(s) = args.get_parsed::<usize>("shards")? {
         cfg.store.shards = s;
     }
@@ -306,13 +315,15 @@ fn cmd_compact(args: &Args) -> Result<()> {
     if !has_snapshot && !has_wal {
         return Err(usage_err(format!(
             "{} holds no snapshot or WAL records; nothing to compact \
-             (check --dir, and that --num-hashes matches the serving config)",
+             (check --dir, and that --num-hashes/--scheme match the \
+             serving config)",
             dir.display()
         )));
     }
     let t = Instant::now();
     let store = PersistentIndex::open(
         cfg.num_hashes,
+        cfg.sketch.scheme,
         IndexConfig {
             bands: cfg.index.bands,
             rows_per_band: cfg.index.rows_per_band,
@@ -368,9 +379,16 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.require("out")?);
     let num_hashes = args.get_parsed::<usize>("num-hashes")?.unwrap_or(256);
     let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let scheme = match args.get("scheme") {
+        Some(s) => SketchScheme::parse(s)?,
+        None => SketchScheme::Cmh,
+    };
     let ds = BinaryDataset::load(&input)?;
     let k = num_hashes.min(ds.dim() as usize);
-    let hasher = CMinHasher::new(ds.dim() as usize, k, seed);
+    // Offline sketches are interchangeable with a server running the
+    // same (scheme, D, K, seed); the scheme's own validation (e.g. the
+    // OPH divisibility rule) surfaces here as a clean CLI error.
+    let hasher = scheme.build(ds.dim() as usize, k, seed)?;
     let t = Instant::now();
     let sketches: Vec<Vec<u32>> = ds
         .rows()
@@ -386,7 +404,7 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     );
     std::fs::write(&out, json.to_string())?;
     println!(
-        "sketched {} rows (K={k}) in {:.1}ms ({:.0} rows/s) -> {}",
+        "sketched {} rows (scheme={scheme}, K={k}) in {:.1}ms ({:.0} rows/s) -> {}",
         ds.len(),
         dt.as_secs_f64() * 1e3,
         ds.len() as f64 / dt.as_secs_f64(),

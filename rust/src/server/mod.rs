@@ -274,7 +274,11 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
             },
             Request::Stats => {
                 let (metrics, store) = svc.stats();
-                Response::Stats { metrics, store }
+                Response::Stats {
+                    scheme: svc.config().sketch.scheme,
+                    metrics,
+                    store,
+                }
             }
         })
     })();

@@ -20,6 +20,13 @@
 //! → {"op":"stats"}      → {"op":"ping"}
 //! ```
 //!
+//! `stats` responses lead with `"scheme"` — the active
+//! [`SketchScheme`]'s canonical name — so clients can check that their
+//! offline sketches are comparable with the server's before mixing
+//! them.  The complete operator-facing reference for every op
+//! (including error classes and `busy` semantics) is
+//! `docs/PROTOCOL.md`; this module is the codec it describes.
+//!
 //! **Batch ops** carry many vectors per request line and return one
 //! response line per batch — the bulk-ingest path that amortizes the
 //! round-trip and lets the engine see full batches.  A batch is
@@ -42,7 +49,7 @@
 //! that want the sketches use `sketch_batch` (stateless) instead.
 
 use crate::metrics::MetricsSnapshot;
-use crate::sketch::SparseVec;
+use crate::sketch::{SketchScheme, SparseVec};
 use crate::store::StoreStats;
 use crate::util::json::Json;
 
@@ -321,6 +328,10 @@ pub enum Response {
     },
     /// Stats result.
     Stats {
+        /// The active sketch scheme (serialized as its canonical name,
+        /// e.g. `"scheme":"cmh"`) — clients use it to check that their
+        /// offline sketches are comparable with the server's.
+        scheme: SketchScheme,
         /// Metrics snapshot.
         metrics: MetricsSnapshot,
         /// Store occupancy + durability.
@@ -421,8 +432,13 @@ impl Response {
                     Json::Arr(results.iter().map(|ns| neighbors_json(ns)).collect()),
                 ),
             ]),
-            Response::Stats { metrics, store } => Json::obj(vec![
+            Response::Stats {
+                scheme,
+                metrics,
+                store,
+            } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
+                ("scheme", Json::str(scheme.as_str())),
                 ("metrics", metrics.to_json()),
                 ("stored", Json::Num(store.stored as f64)),
                 (
@@ -686,8 +702,9 @@ mod tests {
     }
 
     #[test]
-    fn stats_response_carries_shard_occupancy() {
+    fn stats_response_carries_scheme_and_shard_occupancy() {
         let r = Response::Stats {
+            scheme: SketchScheme::Coph,
             metrics: crate::metrics::Metrics::default().snapshot(),
             store: crate::store::StoreStats {
                 stored: 5,
@@ -696,6 +713,7 @@ mod tests {
             },
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("scheme").unwrap().as_str().unwrap(), "coph");
         assert_eq!(j.get("stored").unwrap().as_u64().unwrap(), 5);
         assert_eq!(j.get("persisted_bytes").unwrap().as_u64().unwrap(), 77);
         assert_eq!(

@@ -21,6 +21,16 @@ use super::Sketcher;
 ///
 /// Stores exactly two permutations regardless of K (the paper's memory
 /// pitch): σ as its *inverse* (so sparse gathers are O(f)) and π doubled.
+///
+/// ```
+/// use cminhash::sketch::{estimate, CMinHasher, Sketcher};
+/// let h = CMinHasher::new(1024, 128, 42);          // D, K, seed
+/// let hv = h.sketch_sparse(&[3, 17, 900]);         // sorted nonzeros
+/// let hw = h.sketch_sparse(&[3, 17, 901]);
+/// assert_eq!(hv.len(), 128);
+/// let jhat = estimate(&hv, &hw);                   // true J = 2/4
+/// assert!(jhat > 0.0 && jhat < 1.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct CMinHasher {
     d: usize,

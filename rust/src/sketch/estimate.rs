@@ -6,6 +6,12 @@ use super::{SparseVec, Sketcher};
 /// Collision-fraction estimator Ĵ = (1/K) Σ 1{h_k(v) = h_k(w)}.
 ///
 /// Both sketches must come from the *same* hasher (same permutations).
+///
+/// ```
+/// use cminhash::sketch::estimate;
+/// assert_eq!(estimate(&[1, 2, 3, 4], &[1, 2, 9, 9]), 0.5);
+/// assert_eq!(estimate(&[7, 7], &[7, 7]), 1.0);
+/// ```
 #[inline]
 pub fn estimate(hv: &[u32], hw: &[u32]) -> f64 {
     assert_eq!(hv.len(), hw.len(), "sketch lengths differ");

@@ -9,6 +9,14 @@ use super::perm::{Perm, Role};
 use super::Sketcher;
 
 /// Classical MinHash with K independent permutations.
+///
+/// ```
+/// use cminhash::sketch::{ClassicMinHasher, Sketcher};
+/// let h = ClassicMinHasher::new(256, 8, 7);        // D, K, seed
+/// assert_eq!(h.sketch_sparse(&[1, 100, 200]).len(), 8);
+/// // the memory footprint the paper eliminates: K × D × 4 bytes
+/// assert_eq!(h.perm_bytes(), 8 * 256 * 4);
+/// ```
 #[derive(Clone, Debug)]
 pub struct ClassicMinHasher {
     d: usize,

@@ -1,5 +1,12 @@
-//! Pure-Rust sketching: the paper's three hashing schemes plus
+//! Pure-Rust sketching: five pluggable minwise-hashing schemes plus
 //! estimators.
+//!
+//! The schemes — selected end to end via [`SketchScheme`] — are
+//! classical MinHash ([`ClassicMinHasher`]), the source paper's
+//! C-MinHash-(σ, π) ([`CMinHasher`]) and C-MinHash-(0, π)
+//! ([`ZeroPiHasher`]), One Permutation Hashing with optimal
+//! densification ([`OphHasher`]), and circulant OPH ([`CophHasher`]);
+//! `docs/SCHEMES.md` compares them.
 //!
 //! These implementations are the CPU fallback engine of the server, the
 //! baseline for every benchmark, and the oracle for property tests.
@@ -11,24 +18,43 @@
 //! * the k-th C-MinHash hash (k = 1..K) uses `pi[(i - k) mod D]`
 //!   (right-circulant shift by k, Algorithm 2/3);
 //! * `sigma` is applied as a gather `v'[i] = v[sigma[i]]`;
-//! * an all-zero vector hashes to the sentinel `D` in every slot.
+//! * an all-zero vector hashes to the sentinel `D` in every slot —
+//!   in every scheme, so estimators and the b-bit compressor never
+//!   need to know which hasher produced a sketch.
 
 mod bbit;
 mod cminhash;
 mod estimate;
 mod minhash;
+mod oph;
 mod perm;
+mod scheme;
 mod sparse;
 
 pub use bbit::{BBitSketch, BBitSketcher};
 pub use cminhash::{CMinHasher, ZeroPiHasher};
 pub use estimate::{estimate, estimate_batch_mae, mean_absolute_error, mean_squared_error};
 pub use minhash::ClassicMinHasher;
+pub use oph::{CophHasher, OphHasher};
 pub use perm::{Perm, Role};
+pub use scheme::SketchScheme;
 pub use sparse::SparseVec;
 
 /// Common interface for all sketchers: D-dimensional binary vectors in,
 /// K hash values out.
+///
+/// Implementations are interchangeable downstream (store, index,
+/// estimator) because they share the value range `0..D` with sentinel
+/// `D`; construct one directly or via [`SketchScheme::build`].
+///
+/// ```
+/// use cminhash::sketch::{SketchScheme, Sketcher};
+/// let h = SketchScheme::Oph.build(32, 8, 1).unwrap();
+/// let dense: Vec<u8> = (0..32).map(|i| u8::from(i % 3 == 0)).collect();
+/// // dense and sparse entry points agree by construction
+/// let nz: Vec<u32> = (0..32).filter(|i| i % 3 == 0).collect();
+/// assert_eq!(h.sketch_dense(&dense), h.sketch_sparse(&nz));
+/// ```
 pub trait Sketcher: Send + Sync {
     /// Data dimensionality D.
     fn dim(&self) -> usize;
@@ -76,6 +102,8 @@ mod tests {
             Box::new(CMinHasher::new(32, 16, 1)) as Box<dyn Sketcher>,
             Box::new(ZeroPiHasher::new(32, 16, 1)),
             Box::new(ClassicMinHasher::new(32, 16, 1)),
+            Box::new(OphHasher::new(32, 16, 1).unwrap()),
+            Box::new(CophHasher::new(32, 16, 1).unwrap()),
         ] {
             let h = sk.sketch_sparse(&[]);
             assert!(h.iter().all(|&v| v == 32), "sentinel expected");

@@ -1,0 +1,447 @@
+//! One Permutation Hashing (OPH) and its circulant variant C-OPH.
+//!
+//! Classical MinHash (and C-MinHash) spend O(f·K) work per sketch: every
+//! nonzero is looked at once *per hash*.  OPH (Li, Owen & Zhang, 2012)
+//! instead permutes the universe **once**, splits the permuted axis into
+//! K equal bins, and takes one minimum per bin — each nonzero touches
+//! exactly one bin, so a sketch costs **O(f)** total.  Empty bins are
+//! repaired by *optimal densification* (Shrivastava, 2017): each empty
+//! bin copies the value of a uniformly re-hashed non-empty bin, which
+//! preserves the unbiasedness of the collision estimator.
+//!
+//! C-OPH (Li & Li, arXiv:2111.09544) applies the C-MinHash idea to OPH:
+//! an initial σ scatters the data into random bins (exactly the role σ
+//! plays in C-MinHash-(σ, π)), and then **one** permutation of length
+//! D/K — re-used across the K bins via circulant shifts (bin b
+//! re-orders its local offsets with the shift-by-b rotation) — replaces
+//! the in-bin ordering that OPH's full-length permutation provided.
+//! The sketch stays O(f).
+//!
+//! Both hashers store, per bin, the *global* permuted position of the
+//! bin's minimum (a value in `0..D`, sentinel `D` for a vector with no
+//! nonzeros anywhere) — so slot values from different source bins can
+//! never collide accidentally, and the sentinel/estimator conventions
+//! match the circulant hashers ([`CMinHasher`](super::CMinHasher),
+//! [`ZeroPiHasher`](super::ZeroPiHasher)).
+
+use super::perm::{Perm, Role};
+use super::Sketcher;
+
+/// SplitMix64-style finalizer used as the 2-universal probe hash of
+/// optimal densification: attempt `t` for empty bin `b` probes bin
+/// `mix(seed, b, t) mod K`.  Both vectors of a pair share the hasher
+/// (same seed), hence the same probe sequences — the property the
+/// densification unbiasedness proof needs.
+#[inline]
+fn mix(seed: u64, bin: u64, attempt: u64) -> u64 {
+    let mut z = seed
+        ^ bin.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ attempt.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Optimal densification: every empty bin (slot still holding
+/// `sentinel`) copies the pre-densification value of a non-empty bin
+/// chosen by rehashing `(bin, attempt)` until an occupied bin is hit.
+/// A sketch with *no* occupied bin (the all-zero vector) is left as
+/// all-sentinel, matching every other hasher in this crate.
+///
+/// The probe loop is bounded: after `64·K` misses (probability ≈ 0 for
+/// any vector with at least one nonzero) it falls back to the nearest
+/// occupied bin to the right, so the function always terminates and
+/// stays deterministic per `(seed, empty-pattern)`.
+fn densify(out: &mut [u32], sentinel: u32, seed: u64) {
+    // Fast path: dense-enough vectors (f ≫ K, the common serving case)
+    // leave no bin empty — keep the advertised O(f) sketch cost
+    // allocation-free for them.
+    if !out.contains(&sentinel) {
+        return;
+    }
+    let k = out.len();
+    let occupied: Vec<bool> = out.iter().map(|&v| v != sentinel).collect();
+    if occupied.iter().all(|&o| !o) {
+        return;
+    }
+    let snapshot: Vec<u32> = out.to_vec();
+    for b in 0..k {
+        if occupied[b] {
+            continue;
+        }
+        let mut src = None;
+        for t in 1..=(64 * k as u64) {
+            let cand = (mix(seed, b as u64, t) % k as u64) as usize;
+            if occupied[cand] {
+                src = Some(cand);
+                break;
+            }
+        }
+        let src = src.unwrap_or_else(|| {
+            (1..k)
+                .map(|step| (b + step) % k)
+                .find(|&c| occupied[c])
+                .expect("some bin is occupied")
+        });
+        out[b] = snapshot[src];
+    }
+}
+
+/// One Permutation Hashing with optimal densification.
+///
+/// One permutation π of `0..D`; bin `b` of the sketch covers permuted
+/// positions `[b·D/K, (b+1)·D/K)` and holds the smallest permuted
+/// position of the vector's nonzeros that lands there (empty bins are
+/// densified).  Requires `K | D` so every bin has the same width.
+///
+/// ```
+/// use cminhash::sketch::{OphHasher, Sketcher};
+/// let h = OphHasher::new(64, 16, 7).unwrap();        // D=64, K=16 bins
+/// let sk = h.sketch_sparse(&[3, 17, 40, 63]);
+/// assert_eq!(sk.len(), 16);
+/// assert!(sk.iter().all(|&v| v < 64), "densified: no sentinel left");
+/// ```
+#[derive(Clone, Debug)]
+pub struct OphHasher {
+    d: usize,
+    k: usize,
+    /// Bin width m = D/K.
+    m: usize,
+    /// π as a value array: `pi[s]` is the permuted position of index s.
+    pi: Vec<u32>,
+    /// Densification probe seed.
+    seed: u64,
+}
+
+impl OphHasher {
+    /// Seeded constructor; errors unless `1 <= K <= D` and `K | D`.
+    pub fn new(d: usize, k: usize, seed: u64) -> crate::Result<Self> {
+        let pi = Perm::generate(d, seed, Role::Oph);
+        Self::from_perm(k, &pi, seed)
+    }
+
+    /// Explicit binning permutation (length D); errors unless
+    /// `1 <= K <= D` and `K | D`.
+    pub fn from_perm(k: usize, pi: &Perm, densify_seed: u64) -> crate::Result<Self> {
+        let d = pi.len();
+        check_bins(d, k)?;
+        Ok(OphHasher {
+            d,
+            k,
+            m: d / k,
+            pi: pi.values().to_vec(),
+            seed: densify_seed,
+        })
+    }
+
+    /// Bin width D/K.
+    pub fn bin_width(&self) -> usize {
+        self.m
+    }
+}
+
+impl Sketcher for OphHasher {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32> {
+        let mut out = vec![self.d as u32; self.k];
+        for &s in nonzeros {
+            debug_assert!((s as usize) < self.d);
+            let p = self.pi[s as usize];
+            let bin = p as usize / self.m;
+            if p < out[bin] {
+                out[bin] = p;
+            }
+        }
+        densify(&mut out, self.d as u32, self.seed);
+        out
+    }
+}
+
+/// C-OPH (arXiv:2111.09544): One Permutation Hashing where one
+/// circulant permutation of length **D/K** replaces the in-bin
+/// ordering across all K bins.
+///
+/// Exactly like C-MinHash-(σ, π), an initial full-length permutation σ
+/// first scatters the data (randomizing *which bin* every index lands
+/// in — without it, deterministic binning makes the estimator biased
+/// on structured data, the OPH analogue of the paper's Figure-7
+/// degradation for C-MinHash-(0, π)).  The scattered axis is split
+/// into K bins of width m = D/K; a nonzero landing in bin `b` at local
+/// offset `j` gets the in-bin rank `π_m[(j − b) mod m]` — the
+/// shift-by-`b` rotation of the **single** small permutation π_m —
+/// and bin `b`'s slot keeps the global value `b·m + min rank` (empty
+/// bins are densified).
+///
+/// Versus OPH, the length-D binning permutation's second job (in-bin
+/// ordering) is done by a length-D/K array; versus C-MinHash, a
+/// sketch costs **O(f)** instead of O(f·K).
+///
+/// ```
+/// use cminhash::sketch::{CophHasher, Sketcher};
+/// let h = CophHasher::new(64, 16, 7).unwrap();       // bin width 4
+/// let sk = h.sketch_sparse(&[3, 17, 40, 63]);
+/// assert_eq!(sk.len(), 16);
+/// // slot values are global positions in 0..D (densified: no sentinel)
+/// assert!(sk.iter().all(|&v| v < 64));
+/// ```
+#[derive(Clone, Debug)]
+pub struct CophHasher {
+    d: usize,
+    k: usize,
+    /// Bin width m = D/K (also the length of the circulant permutation).
+    m: usize,
+    /// σ stored as its inverse: nonzero s lands at `inv_sigma[s]`.
+    inv_sigma: Vec<u32>,
+    /// π_m ‖ π_m — doubled so shift-by-`b` is the contiguous window
+    /// `pi2[j + m − (b mod m)]`, zero modular arithmetic (the same
+    /// trick as [`CMinHasher`](super::CMinHasher)'s doubled π).
+    pi2: Vec<u32>,
+    /// Densification probe seed.
+    seed: u64,
+}
+
+impl CophHasher {
+    /// Seeded constructor (σ on the same stream as [`CMinHasher`]'s σ
+    /// for the same seed, so ablations are paired); errors unless
+    /// `1 <= K <= D` and `K | D`.
+    ///
+    /// [`CMinHasher`]: super::CMinHasher
+    pub fn new(d: usize, k: usize, seed: u64) -> crate::Result<Self> {
+        check_bins(d, k)?;
+        let sigma = Perm::generate(d, seed, Role::Sigma);
+        let pi = Perm::generate(d / k, seed, Role::Oph);
+        Self::from_perms(k, &sigma, &pi, seed)
+    }
+
+    /// Explicit permutations: σ of length D, the circulant in-bin
+    /// permutation of length D/K; errors unless `1 <= K <= D` and
+    /// `K | D`.
+    pub fn from_perms(
+        k: usize,
+        sigma: &Perm,
+        pi: &Perm,
+        densify_seed: u64,
+    ) -> crate::Result<Self> {
+        let d = sigma.len();
+        check_bins(d, k)?;
+        let m = d / k;
+        if pi.len() != m {
+            return Err(crate::Error::Invalid(format!(
+                "C-OPH circulant permutation has length {}, need D/K = {m}",
+                pi.len()
+            )));
+        }
+        Ok(CophHasher {
+            d,
+            k,
+            m,
+            inv_sigma: sigma.inverse().values().to_vec(),
+            pi2: pi.doubled(),
+            seed: densify_seed,
+        })
+    }
+
+    /// Bin width D/K (= the circulant permutation's length).
+    pub fn bin_width(&self) -> usize {
+        self.m
+    }
+}
+
+impl Sketcher for CophHasher {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_hashes(&self) -> usize {
+        self.k
+    }
+
+    fn sketch_sparse(&self, nonzeros: &[u32]) -> Vec<u32> {
+        let m = self.m;
+        let mut out = vec![self.d as u32; self.k];
+        for &s in nonzeros {
+            debug_assert!((s as usize) < self.d);
+            let q = self.inv_sigma[s as usize] as usize;
+            let bin = q / m;
+            let j = q % m;
+            let sh = bin % m;
+            // π_m[(j − bin) mod m] via the doubled array; j + m − sh is
+            // always within 1..2m.
+            let rank = self.pi2[j + m - sh];
+            let global = (bin * m) as u32 + rank;
+            if global < out[bin] {
+                out[bin] = global;
+            }
+        }
+        densify(&mut out, self.d as u32, self.seed);
+        out
+    }
+}
+
+/// Bin-shape validation for the OPH family — the single authority for
+/// the equal-width-bin constraint, shared by the hasher constructors
+/// and [`SketchScheme::validate`](super::SketchScheme::validate) so
+/// the config/CLI path and direct construction give one diagnostic.
+pub(super) fn check_bins(d: usize, k: usize) -> crate::Result<()> {
+    if k == 0 || k > d {
+        return Err(crate::Error::Invalid(format!(
+            "need 1 <= K <= D, got K={k}, D={d}"
+        )));
+    }
+    if d % k != 0 {
+        return Err(crate::Error::Invalid(format!(
+            "OPH/C-OPH need K to divide D so bins are equal-width, \
+             got D={d}, K={k} (D mod K = {}); pick a K dividing D, or \
+             another scheme",
+            d % k
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{estimate, SparseVec};
+
+    #[test]
+    fn bin_shape_validation() {
+        assert!(OphHasher::new(64, 0, 1).is_err());
+        assert!(OphHasher::new(64, 65, 1).is_err());
+        assert!(OphHasher::new(64, 48, 1).is_err(), "48 does not divide 64");
+        assert!(OphHasher::new(64, 64, 1).is_ok());
+        assert!(CophHasher::new(64, 48, 1).is_err());
+        assert!(CophHasher::new(64, 16, 1).is_ok());
+        // explicit C-OPH circulant perm must be bin-width long
+        let sigma = Perm::identity(64);
+        let wrong = Perm::identity(5);
+        assert!(CophHasher::from_perms(16, &sigma, &wrong, 0).is_err());
+        let right = Perm::identity(4);
+        assert!(CophHasher::from_perms(16, &sigma, &right, 0).is_ok());
+    }
+
+    #[test]
+    fn oph_bins_hold_their_own_minima_before_densification() {
+        // Identity permutation makes the binning transparent: bin b of
+        // a full-width vector must hold exactly b*m.
+        let d = 32;
+        let k = 8; // m = 4
+        let h = OphHasher::from_perm(k, &Perm::identity(d), 9).unwrap();
+        let all: Vec<u32> = (0..d as u32).collect();
+        let sk = h.sketch_sparse(&all);
+        assert_eq!(sk, vec![0, 4, 8, 12, 16, 20, 24, 28]);
+        // a single nonzero occupies one bin; the rest copy it
+        let sk = h.sketch_sparse(&[9]);
+        assert!(sk.iter().all(|&v| v == 9), "{sk:?}");
+    }
+
+    #[test]
+    fn coph_identity_perms_make_ranks_transparent() {
+        // Identity σ keeps s in place; identity π_m maps local offset j
+        // in bin b to rank (j - b) mod m.  Over a full vector every
+        // bin's min rank is 0, i.e. global b*m.
+        let d = 32;
+        let k = 8; // m = 4
+        let h =
+            CophHasher::from_perms(k, &Perm::identity(d), &Perm::identity(4), 9).unwrap();
+        let all: Vec<u32> = (0..d as u32).collect();
+        assert_eq!(h.sketch_sparse(&all), vec![0, 4, 8, 12, 16, 20, 24, 28]);
+        // one nonzero s = 9: bin 2, j = 1, shift 2 -> rank (1-2) mod 4 = 3
+        let sk = h.sketch_sparse(&[9]);
+        assert!(sk.iter().all(|&v| v == 2 * 4 + 3), "{sk:?}");
+    }
+
+    #[test]
+    fn coph_sigma_randomizes_binning() {
+        // Regression: without σ, raw-index binning left structured
+        // vectors in fixed bins and the estimator was measurably
+        // biased on exactly the range-structured data the tests use.
+        // With σ the bin a nonzero lands in must follow inv_sigma.
+        let d = 32;
+        let k = 8;
+        let h = CophHasher::new(d, k, 3).unwrap();
+        let sigma = Perm::generate(d, 3, Role::Sigma);
+        let q = sigma.inverse().at(9) as usize;
+        let sk = h.sketch_sparse(&[9]);
+        // the single occupied bin is q/m, and densification copied its
+        // value everywhere
+        assert!(sk.iter().all(|&v| v == sk[q / 4]), "{sk:?}");
+        assert_eq!(sk[q / 4] as usize / 4, q / 4, "value stays in its bin");
+    }
+
+    #[test]
+    fn empty_vector_keeps_sentinels() {
+        for h in [
+            Box::new(OphHasher::new(32, 8, 1).unwrap()) as Box<dyn Sketcher>,
+            Box::new(CophHasher::new(32, 8, 1).unwrap()),
+        ] {
+            assert!(h.sketch_sparse(&[]).iter().all(|&v| v == 32));
+        }
+    }
+
+    #[test]
+    fn sketches_are_deterministic_and_in_range() {
+        let oph = OphHasher::new(256, 32, 11).unwrap();
+        let coph = CophHasher::new(256, 32, 11).unwrap();
+        let nz: Vec<u32> = vec![0, 7, 100, 200, 255];
+        for h in [&oph as &dyn Sketcher, &coph] {
+            let a = h.sketch_sparse(&nz);
+            assert_eq!(a, h.sketch_sparse(&nz));
+            assert!(a.iter().all(|&v| v < 256), "densified values in 0..D");
+        }
+    }
+
+    #[test]
+    fn densify_copies_only_from_occupied_bins() {
+        let sentinel = 100;
+        let mut out = vec![sentinel, 7, sentinel, 42, sentinel, sentinel];
+        densify(&mut out, sentinel, 33);
+        assert!(out.iter().all(|&v| v == 7 || v == 42), "{out:?}");
+        assert_eq!(out[1], 7);
+        assert_eq!(out[3], 42);
+        // fully dense and fully empty are both no-ops
+        let mut full = vec![1, 2, 3];
+        densify(&mut full, 9, 0);
+        assert_eq!(full, vec![1, 2, 3]);
+        let mut empty = vec![9, 9];
+        densify(&mut empty, 9, 0);
+        assert_eq!(empty, vec![9, 9]);
+    }
+
+    #[test]
+    fn estimates_track_exact_jaccard_on_average() {
+        // Mean estimate over many seeds must approach the exact J for
+        // both schemes (the densified estimator is unbiased).
+        const K: usize = 16;
+        let v = SparseVec::new(64, (0..24).collect()).unwrap();
+        let w = SparseVec::new(64, (12..36).collect()).unwrap();
+        let truth = v.jaccard(&w); // 12/36 = 1/3
+        for build in [
+            (|seed| Box::new(OphHasher::new(64, K, seed).unwrap()) as Box<dyn Sketcher>)
+                as fn(u64) -> Box<dyn Sketcher>,
+            |seed| Box::new(CophHasher::new(64, K, seed).unwrap()),
+        ] {
+            let trials = 300;
+            let mut sum = 0.0;
+            for seed in 0..trials {
+                let h = build(seed);
+                sum += estimate(
+                    &h.sketch_sparse(v.indices()),
+                    &h.sketch_sparse(w.indices()),
+                );
+            }
+            let mean = sum / trials as f64;
+            assert!(
+                (mean - truth).abs() < 0.04,
+                "mean {mean} vs truth {truth}"
+            );
+        }
+    }
+}

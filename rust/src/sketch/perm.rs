@@ -17,6 +17,9 @@ pub enum Role {
     Sigma,
     /// Circulant permutation π (Algorithms 2 and 3).
     Pi,
+    /// The binning permutation of the OPH family (full-length for OPH,
+    /// length D/K for C-OPH).
+    Oph,
     /// The i-th independent permutation of classical MinHash.
     Classic(u32),
 }
@@ -26,6 +29,7 @@ impl Role {
         match self {
             Role::Sigma => 0x5157_a5a5_0000_0001,
             Role::Pi => 0x5157_a5a5_0000_0002,
+            Role::Oph => 0x5157_a5a5_0000_0003,
             Role::Classic(i) => 0x5157_a5a5_1000_0000 ^ u64::from(i),
         }
     }

@@ -1,0 +1,218 @@
+//! The pluggable sketch-scheme registry: one name for every hasher the
+//! crate ships, parsed from configs/CLI, threaded through the
+//! coordinator, stamped into snapshots, and reported by `stats`.
+//!
+//! Dispatch is by enum (not a user-extensible trait registry): the set
+//! of schemes is closed by construction — each one is backed by paper
+//! math and a consistency suite — and enum dispatch keeps scheme
+//! selection exhaustively matchable everywhere it is consumed
+//! (coordinator, snapshot codec, benches, docs tables).
+
+use super::{
+    CMinHasher, ClassicMinHasher, CophHasher, OphHasher, Sketcher, ZeroPiHasher,
+};
+use std::fmt;
+use std::sync::Arc;
+
+/// Which minwise-hashing scheme the service sketches with.
+///
+/// All five produce length-K sketches over `0..D` (sentinel `D` for the
+/// all-zero vector) scored by the same collision estimator
+/// ([`super::estimate`]), but they differ in permutation memory and
+/// sketch cost — see `docs/SCHEMES.md` for the full comparison table.
+///
+/// ```
+/// use cminhash::sketch::{SketchScheme, Sketcher};
+/// let s = SketchScheme::parse("coph").unwrap();
+/// assert_eq!(s, SketchScheme::Coph);
+/// let h = s.build(64, 16, 42).unwrap();          // D, K, seed
+/// assert_eq!(h.sketch_sparse(&[1, 5, 40]).len(), 16);
+/// assert!(SketchScheme::parse("md5").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SketchScheme {
+    /// Classical MinHash: K independent permutations, O(K·D) memory,
+    /// O(f·K) per sketch (Algorithm 1 — the baseline).
+    Classic,
+    /// C-MinHash-(σ, π): two permutations, O(D) memory, O(f·K) per
+    /// sketch (Algorithm 3 — the source paper's recommendation, and
+    /// the default).
+    Cmh,
+    /// C-MinHash-(0, π): one permutation, no initial σ scramble
+    /// (Algorithm 2 — the ablation; arXiv:2109.04595 studies dropping
+    /// σ in practice).
+    ZeroPi,
+    /// One Permutation Hashing with optimal densification: one
+    /// permutation, O(D) memory, **O(f)** per sketch.
+    Oph,
+    /// C-OPH (arXiv:2111.09544): OPH where the in-bin ordering is one
+    /// circulant length-D/K permutation (plus the σ scatter, so O(D)
+    /// total like `oph`), **O(f)** per sketch.
+    Coph,
+}
+
+impl SketchScheme {
+    /// Every scheme, in documentation/bench order.
+    pub const ALL: [SketchScheme; 5] = [
+        SketchScheme::Classic,
+        SketchScheme::Cmh,
+        SketchScheme::ZeroPi,
+        SketchScheme::Oph,
+        SketchScheme::Coph,
+    ];
+
+    /// Parse a scheme name: `classic | cmh | zero-pi | oph | coph`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "classic" => SketchScheme::Classic,
+            "cmh" => SketchScheme::Cmh,
+            "zero-pi" => SketchScheme::ZeroPi,
+            "oph" => SketchScheme::Oph,
+            "coph" => SketchScheme::Coph,
+            other => {
+                return Err(crate::Error::Invalid(format!(
+                    "unknown sketch scheme {other:?} \
+                     (classic|cmh|zero-pi|oph|coph)"
+                )))
+            }
+        })
+    }
+
+    /// Canonical name (the `parse` spelling).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SketchScheme::Classic => "classic",
+            SketchScheme::Cmh => "cmh",
+            SketchScheme::ZeroPi => "zero-pi",
+            SketchScheme::Oph => "oph",
+            SketchScheme::Coph => "coph",
+        }
+    }
+
+    /// Stable on-disk code used by the snapshot header (never reuse or
+    /// renumber — snapshots outlive binaries).
+    pub fn code(self) -> u32 {
+        match self {
+            SketchScheme::Classic => 1,
+            SketchScheme::Cmh => 2,
+            SketchScheme::ZeroPi => 3,
+            SketchScheme::Oph => 4,
+            SketchScheme::Coph => 5,
+        }
+    }
+
+    /// Decode a snapshot-header code.
+    pub fn from_code(code: u32) -> crate::Result<Self> {
+        Ok(match code {
+            1 => SketchScheme::Classic,
+            2 => SketchScheme::Cmh,
+            3 => SketchScheme::ZeroPi,
+            4 => SketchScheme::Oph,
+            5 => SketchScheme::Coph,
+            other => {
+                return Err(crate::Error::Invalid(format!(
+                    "unknown sketch-scheme code {other} \
+                     (snapshot from a newer build?)"
+                )))
+            }
+        })
+    }
+
+    /// Validate a (D, K) shape for this scheme without building it:
+    /// every scheme needs `1 <= K <= D`; the OPH family additionally
+    /// needs `K | D` so bins are equal-width (delegated to the one
+    /// authority in the `oph` module, so the config/CLI path and the
+    /// hasher constructors give the same diagnostic).
+    pub fn validate(self, d: usize, k: usize) -> crate::Result<()> {
+        if k == 0 || k > d {
+            return Err(crate::Error::Invalid(format!(
+                "need 1 <= K <= D, got K={k}, D={d}"
+            )));
+        }
+        if matches!(self, SketchScheme::Oph | SketchScheme::Coph) {
+            super::oph::check_bins(d, k)?;
+        }
+        Ok(())
+    }
+
+    /// Construct the scheme's hasher for `(D, K, seed)`.  For a fixed
+    /// `(scheme, D, K, seed)` the hasher — and therefore every sketch —
+    /// is deterministic, which is what makes sketches interchangeable
+    /// between offline jobs and the server.
+    pub fn build(
+        self,
+        d: usize,
+        k: usize,
+        seed: u64,
+    ) -> crate::Result<Arc<dyn Sketcher>> {
+        self.validate(d, k)?;
+        Ok(match self {
+            SketchScheme::Classic => Arc::new(ClassicMinHasher::new(d, k, seed)),
+            SketchScheme::Cmh => Arc::new(CMinHasher::new(d, k, seed)),
+            SketchScheme::ZeroPi => Arc::new(ZeroPiHasher::new(d, k, seed)),
+            SketchScheme::Oph => Arc::new(OphHasher::new(d, k, seed)?),
+            SketchScheme::Coph => Arc::new(CophHasher::new(d, k, seed)?),
+        })
+    }
+}
+
+impl fmt::Display for SketchScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_scheme() {
+        for s in SketchScheme::ALL {
+            assert_eq!(SketchScheme::parse(s.as_str()).unwrap(), s);
+            assert_eq!(SketchScheme::from_code(s.code()).unwrap(), s);
+            assert_eq!(format!("{s}"), s.as_str());
+        }
+        assert!(SketchScheme::parse("sha256").is_err());
+        assert!(SketchScheme::from_code(0).is_err());
+        assert!(SketchScheme::from_code(99).is_err());
+    }
+
+    #[test]
+    fn codes_are_unique_and_stable() {
+        let codes: Vec<u32> = SketchScheme::ALL.iter().map(|s| s.code()).collect();
+        assert_eq!(codes, vec![1, 2, 3, 4, 5], "codes are an on-disk format");
+    }
+
+    #[test]
+    fn validate_gates_the_oph_family_on_divisibility() {
+        for s in SketchScheme::ALL {
+            assert!(s.validate(64, 0).is_err());
+            assert!(s.validate(64, 65).is_err());
+            assert!(s.validate(64, 16).is_ok());
+        }
+        assert!(SketchScheme::Cmh.validate(64, 48).is_ok());
+        assert!(SketchScheme::Oph.validate(64, 48).is_err());
+        assert!(SketchScheme::Coph.validate(64, 48).is_err());
+    }
+
+    #[test]
+    fn build_produces_working_hashers_with_shared_conventions() {
+        let nz: Vec<u32> = vec![3, 17, 40, 63];
+        for s in SketchScheme::ALL {
+            let h = s.build(64, 16, 7).unwrap();
+            assert_eq!(h.dim(), 64);
+            assert_eq!(h.num_hashes(), 16);
+            let sk = h.sketch_sparse(&nz);
+            assert_eq!(sk.len(), 16);
+            assert!(sk.iter().all(|&v| v <= 64), "{s}: values in 0..=D");
+            assert_eq!(sk, h.sketch_sparse(&nz), "{s}: deterministic");
+            // shared empty-vector sentinel convention
+            assert!(
+                h.sketch_sparse(&[]).iter().all(|&v| v == 64),
+                "{s}: sentinel"
+            );
+        }
+        assert!(SketchScheme::Oph.build(64, 48, 7).is_err());
+    }
+}

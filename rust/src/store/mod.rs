@@ -27,6 +27,7 @@ pub use snapshot::{Snapshot, SnapshotData};
 pub use wal::{Wal, WalRecord};
 
 use crate::index::{IndexConfig, Neighbor};
+use crate::sketch::SketchScheme;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -63,18 +64,30 @@ struct PersistState {
 /// lock and mutations contend only on their owning shard.
 pub struct PersistentIndex {
     index: ShardedIndex,
+    /// The hashing scheme the stored sketches were produced by —
+    /// stamped into every snapshot and matched on open, since sketches
+    /// from different schemes are incomparable bytes.
+    scheme: SketchScheme,
     persist: Option<Mutex<PersistState>>,
 }
 
 impl PersistentIndex {
-    /// Open a store for sketches of length `k`.  With `dir` set, an
-    /// existing snapshot is loaded, the WAL's valid prefix is replayed
-    /// on top (inserts upsert, deletes tolerate missing ids — so any
-    /// snapshot/WAL interleaving recovers cleanly), and the WAL is
-    /// kept open for append.  With `dir = None` the store is purely
+    /// Open a store for sketches of length `k` produced by `scheme`.
+    /// With `dir` set, an existing snapshot is loaded (refusing a
+    /// snapshot stamped with a different K or scheme), the WAL's valid
+    /// prefix is replayed on top (inserts upsert, deletes tolerate
+    /// missing ids — so any snapshot/WAL interleaving recovers
+    /// cleanly), and the WAL is kept open for append.  A directory
+    /// with no snapshot is stamped with an empty scheme-carrying one
+    /// before the WAL accepts its first record, so every durable
+    /// directory knows its scheme from birth — which makes a
+    /// record-bearing WAL without a snapshot provably a legacy
+    /// pre-scheme store (necessarily `cmh`; any other configured
+    /// scheme is refused).  With `dir = None` the store is purely
     /// in-memory.
     pub fn open(
         k: usize,
+        scheme: SketchScheme,
         cfg: IndexConfig,
         num_shards: usize,
         dir: Option<&Path>,
@@ -83,26 +96,73 @@ impl PersistentIndex {
         let Some(dir) = dir else {
             return Ok(PersistentIndex {
                 index,
+                scheme,
                 persist: None,
             });
         };
         std::fs::create_dir_all(dir)?;
         let snap_path = dir.join(SNAPSHOT_FILE);
-        let mut snapshot_bytes = 0u64;
+        let wal_has_records = std::fs::metadata(dir.join(WAL_FILE))
+            .map(|m| m.len() > 0)
+            .unwrap_or(false);
+        // `None` = the directory still needs its (K, scheme) stamp —
+        // written only *after* WAL replay succeeds, so an open that
+        // fails (e.g. replaying a legacy WAL under the wrong K) never
+        // wedges the directory behind a half-true stamp.
+        let mut snapshot_bytes: Option<u64> = None;
         if snap_path.exists() {
             let data = Snapshot::load(&snap_path)?;
-            if data.k != k {
+            // A stamp with no data behind it (no items, no id ever
+            // allocated, no WAL records) pins nothing: a mis-started
+            // server may leave one, so allow re-stamping it under the
+            // new configuration instead of demanding hand-deletion.
+            let empty_stamp =
+                data.items.is_empty() && data.next_id == 0 && !wal_has_records;
+            if data.k != k && !empty_stamp {
                 return Err(crate::Error::Invalid(format!(
                     "snapshot in {} has K={}, configured K={k}",
                     dir.display(),
                     data.k
                 )));
             }
-            for (id, sketch) in &data.items {
-                index.insert_with_id(*id, sketch)?;
+            if data.scheme != scheme && !empty_stamp {
+                return Err(crate::Error::Invalid(format!(
+                    "snapshot in {} was written under scheme '{}' but the \
+                     service is configured for '{scheme}'; sketches from \
+                     different schemes are incomparable — serve this \
+                     directory with --scheme {}, or re-ingest the corpus \
+                     into a fresh directory under the new scheme",
+                    dir.display(),
+                    data.scheme,
+                    data.scheme
+                )));
             }
-            index.reserve_ids(data.next_id);
-            snapshot_bytes = std::fs::metadata(&snap_path)?.len();
+            if data.k == k && data.scheme == scheme {
+                for (id, sketch) in &data.items {
+                    index.insert_with_id(*id, sketch)?;
+                }
+                index.reserve_ids(data.next_id);
+                snapshot_bytes = Some(std::fs::metadata(&snap_path)?.len());
+            }
+            // else: a mismatched but empty stamp — fall through and
+            // re-stamp under the configured (K, scheme) after replay.
+        } else if wal_has_records && scheme != SketchScheme::Cmh {
+            // No snapshot but a record-bearing WAL.  This build stamps
+            // a directory at its first successful open, before any
+            // record can be appended, so this state can only be a
+            // legacy pre-scheme store — necessarily written by the
+            // cmh-only era.  Refusing any other scheme here closes the
+            // gap where a WAL-only store would silently replay
+            // incomparable sketches under a freshly-configured scheme
+            // and then be re-stamped wrongly later.
+            return Err(crate::Error::Invalid(format!(
+                "{} holds WAL records but no snapshot: a legacy \
+                 pre-scheme store, necessarily written under 'cmh', \
+                 which cannot be served as '{scheme}' — open it with \
+                 --scheme cmh, or re-ingest the corpus into a fresh \
+                 directory under the new scheme",
+                dir.display()
+            )));
         }
         let (wal, records) = Wal::open(&dir.join(WAL_FILE))?;
         for rec in records {
@@ -122,8 +182,17 @@ impl PersistentIndex {
                 }
             }
         }
+        // Replay succeeded: stamp the directory if it still needs one
+        // (fresh dir, legacy cmh store, or an abandoned empty stamp
+        // being re-stamped).  From here on every record the WAL ever
+        // holds postdates a scheme-carrying snapshot.
+        let snapshot_bytes = match snapshot_bytes {
+            Some(bytes) => bytes,
+            None => Snapshot::write(&snap_path, k, scheme, 0, &[])?,
+        };
         Ok(PersistentIndex {
             index,
+            scheme,
             persist: Some(Mutex::new(PersistState {
                 dir: dir.to_path_buf(),
                 wal,
@@ -135,6 +204,11 @@ impl PersistentIndex {
     /// The underlying sharded index.
     pub fn sharded(&self) -> &ShardedIndex {
         &self.index
+    }
+
+    /// The hashing scheme this store's sketches were produced by.
+    pub fn scheme(&self) -> SketchScheme {
+        self.scheme
     }
 
     /// True iff a persist directory is configured.
@@ -229,6 +303,7 @@ impl PersistentIndex {
         let bytes = Snapshot::write(
             &st.dir.join(SNAPSHOT_FILE),
             self.index.num_hashes(),
+            self.scheme,
             self.index.next_id(),
             &self.index.items(),
         )?;
@@ -317,7 +392,7 @@ mod tests {
 
     #[test]
     fn in_memory_mode_has_no_disk_footprint() {
-        let store = PersistentIndex::open(8, cfg(), 2, None).unwrap();
+        let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, None).unwrap();
         assert!(!store.is_durable());
         let id = store.insert(sk(1)).unwrap();
         store.delete(id).unwrap();
@@ -330,13 +405,13 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let (a, b);
         {
-            let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+            let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path())).unwrap();
             a = store.insert(sk(1)).unwrap();
             b = store.insert(sk(2)).unwrap();
             store.delete(a).unwrap();
             // dropped without compacting: recovery is pure WAL replay
         }
-        let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+        let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path())).unwrap();
         assert_eq!(store.len(), 1);
         assert!(store.sketch(a).is_none(), "deleted id must stay deleted");
         assert_eq!(store.sketch(b), Some(sk(2)));
@@ -348,7 +423,7 @@ mod tests {
     fn snapshot_plus_wal_recovery_and_compaction() {
         let dir = TempDir::new().unwrap();
         {
-            let store = PersistentIndex::open(8, cfg(), 4, Some(dir.path())).unwrap();
+            let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 4, Some(dir.path())).unwrap();
             for s in 0..6u32 {
                 store.insert(sk(s)).unwrap();
             }
@@ -359,7 +434,7 @@ mod tests {
             store.insert(sk(100)).unwrap(); // id 6
             store.delete(3).unwrap();
         }
-        let store = PersistentIndex::open(8, cfg(), 4, Some(dir.path())).unwrap();
+        let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 4, Some(dir.path())).unwrap();
         assert_eq!(store.len(), 5);
         for gone in [0u64, 3] {
             assert!(store.sketch(gone).is_none());
@@ -379,7 +454,7 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let ids;
         {
-            let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+            let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path())).unwrap();
             ids = store
                 .insert_many(&[sk(1), sk(2), sk(3)])
                 .unwrap();
@@ -387,7 +462,7 @@ mod tests {
             store.delete(ids[1]).unwrap();
             // dropped without compacting: recovery replays the batch
         }
-        let store = PersistentIndex::open(8, cfg(), 2, Some(dir.path())).unwrap();
+        let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path())).unwrap();
         assert_eq!(store.len(), 2);
         assert_eq!(store.sketch(ids[0]), Some(sk(1)));
         assert!(store.sketch(ids[1]).is_none());
@@ -403,10 +478,139 @@ mod tests {
     fn mismatched_k_is_rejected_on_open() {
         let dir = TempDir::new().unwrap();
         {
-            let store = PersistentIndex::open(8, cfg(), 1, Some(dir.path())).unwrap();
+            let store = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path())).unwrap();
             store.insert(sk(1)).unwrap();
             store.compact().unwrap();
         }
-        assert!(PersistentIndex::open(16, cfg(), 1, Some(dir.path())).is_err());
+        assert!(PersistentIndex::open(16, SketchScheme::Cmh, cfg(), 1, Some(dir.path())).is_err());
+    }
+
+    #[test]
+    fn fresh_dirs_are_scheme_stamped_before_any_wal_record() {
+        // Regression for the WAL-only hole: a store that crashed
+        // before its first compaction used to carry no scheme stamp at
+        // all, so reopening under a different scheme silently replayed
+        // incomparable sketches.  Now the stamp is written at first
+        // open, before the WAL can hold a record.
+        let dir = TempDir::new().unwrap();
+        {
+            let store = PersistentIndex::open(
+                8,
+                SketchScheme::Coph,
+                cfg(),
+                2,
+                Some(dir.path()),
+            )
+            .unwrap();
+            store.insert(sk(1)).unwrap();
+            // dropped without compacting: snapshot is the empty stamp,
+            // the insert lives only in the WAL
+        }
+        assert!(
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path()))
+                .is_err(),
+            "WAL-tail-only state must still refuse the wrong scheme"
+        );
+        let store =
+            PersistentIndex::open(8, SketchScheme::Coph, cfg(), 2, Some(dir.path()))
+                .unwrap();
+        assert_eq!(store.len(), 1, "right scheme recovers the WAL tail");
+    }
+
+    #[test]
+    fn abandoned_empty_stamps_can_be_restamped() {
+        // A mis-started server (opened, stored nothing, died) must not
+        // wedge the directory: its stamp pins no data, so reopening
+        // under a different scheme — or K — re-stamps instead of
+        // demanding a hand-deleted snapshot.bin.
+        let dir = TempDir::new().unwrap();
+        drop(
+            PersistentIndex::open(8, SketchScheme::Coph, cfg(), 2, Some(dir.path()))
+                .unwrap(),
+        );
+        let store =
+            PersistentIndex::open(16, SketchScheme::Oph, cfg(), 2, Some(dir.path()))
+                .unwrap();
+        assert_eq!(store.scheme(), SketchScheme::Oph);
+        // once data exists the stamp is binding again
+        store.insert((0..16).collect()).unwrap();
+        drop(store);
+        assert!(
+            PersistentIndex::open(16, SketchScheme::Coph, cfg(), 2, Some(dir.path()))
+                .is_err(),
+            "a record-bearing WAL makes the stamp binding"
+        );
+        // ...even after compaction folds the records into the snapshot
+        let store =
+            PersistentIndex::open(16, SketchScheme::Oph, cfg(), 2, Some(dir.path()))
+                .unwrap();
+        store.compact().unwrap();
+        drop(store);
+        assert!(
+            PersistentIndex::open(16, SketchScheme::Coph, cfg(), 2, Some(dir.path()))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn legacy_wal_only_dirs_are_cmh() {
+        // A directory holding WAL records but no snapshot predates
+        // scheme stamping (this build stamps before the first append):
+        // it was necessarily written under cmh.
+        let dir = TempDir::new().unwrap();
+        {
+            let (mut wal, records) = Wal::open(&dir.path().join(WAL_FILE)).unwrap();
+            assert!(records.is_empty());
+            wal.append(&WalRecord::Insert {
+                id: 0,
+                sketch: sk(1),
+            })
+            .unwrap();
+        }
+        match PersistentIndex::open(8, SketchScheme::Oph, cfg(), 1, Some(dir.path())) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("legacy") && msg.contains("cmh"), "{msg}")
+            }
+            Err(other) => panic!("expected Invalid, got {other:?}"),
+            Ok(_) => panic!("legacy WAL-only dir must refuse non-cmh schemes"),
+        }
+        let store =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path()))
+                .unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.sketch(0), Some(sk(1)));
+    }
+
+    #[test]
+    fn mismatched_scheme_is_rejected_on_open() {
+        let dir = TempDir::new().unwrap();
+        {
+            let store =
+                PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path()))
+                    .unwrap();
+            assert_eq!(store.scheme(), SketchScheme::Cmh);
+            store.insert(sk(1)).unwrap();
+            store.compact().unwrap();
+        }
+        // the snapshot is stamped 'cmh'; opening under 'coph' must fail
+        // with an error naming both schemes
+        match PersistentIndex::open(
+            8,
+            SketchScheme::Coph,
+            cfg(),
+            1,
+            Some(dir.path()),
+        ) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("cmh") && msg.contains("coph"), "{msg}");
+            }
+            Err(other) => panic!("expected Invalid, got {other:?}"),
+            Ok(_) => panic!("mismatched scheme must not open"),
+        }
+        // the matching scheme still opens fine
+        let store =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path()))
+                .unwrap();
+        assert_eq!(store.len(), 1);
     }
 }

@@ -1,7 +1,7 @@
 //! Compact binary snapshot of the whole sketch store.
 //!
 //! ```text
-//! snapshot := magic "CMHSNAP1" | k:u32le | next_id:u64le
+//! snapshot := magic "CMHSNAP2" | k:u32le | scheme:u32le | next_id:u64le
 //!           | count:u64le | count × (id:u64le | k × u32le)
 //!           | crc:u64le                     (FNV-1a 64 over all prior bytes)
 //! ```
@@ -10,12 +10,23 @@
 //! crash during [`Snapshot::write`] leaves the previous snapshot
 //! intact.  Items are sorted by id, so identical store contents
 //! produce identical snapshot bytes.
+//!
+//! **Versioning / migration.**  `CMHSNAP2` added the `scheme` field
+//! (the [`SketchScheme`] code) so a store built under one hashing
+//! scheme refuses to load under another — sketches from different
+//! schemes are incomparable bytes, and silently mixing them would
+//! corrupt every estimate.  Legacy `CMHSNAP1` snapshots (which predate
+//! scheme selection and were only ever produced by the `cmh` scheme)
+//! still load, reporting `scheme = cmh`; the next compaction rewrites
+//! them as `CMHSNAP2`.
 
+use crate::sketch::SketchScheme;
 use crate::util::fnv::fnv1a64;
 use std::io::Write;
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"CMHSNAP1";
+const MAGIC_V2: &[u8; 8] = b"CMHSNAP2";
+const MAGIC_V1: &[u8; 8] = b"CMHSNAP1";
 
 fn bad(msg: impl Into<String>) -> crate::Error {
     crate::Error::Invalid(format!("snapshot: {}", msg.into()))
@@ -26,6 +37,9 @@ fn bad(msg: impl Into<String>) -> crate::Error {
 pub struct SnapshotData {
     /// Sketch length K the snapshot was taken under.
     pub k: usize,
+    /// Hashing scheme the sketches were produced by (`cmh` for legacy
+    /// v1 snapshots, which predate scheme selection).
+    pub scheme: SketchScheme,
     /// Fresh-id floor at snapshot time.
     pub next_id: u64,
     /// All `(id, sketch)` pairs, sorted by id.
@@ -36,18 +50,21 @@ pub struct SnapshotData {
 pub struct Snapshot;
 
 impl Snapshot {
-    /// Serialize `items` (each sketch of length `k`) to `path`
-    /// atomically (temp file + fsync + rename).  Returns the snapshot
-    /// size in bytes.
+    /// Serialize `items` (each sketch of length `k`, produced by
+    /// `scheme`) to `path` atomically (temp file + fsync + rename).
+    /// Returns the snapshot size in bytes.
     pub fn write(
         path: &Path,
         k: usize,
+        scheme: SketchScheme,
         next_id: u64,
         items: &[(u64, Vec<u32>)],
     ) -> crate::Result<u64> {
-        let mut buf = Vec::with_capacity(8 + 4 + 8 + 8 + items.len() * (8 + 4 * k) + 8);
-        buf.extend_from_slice(MAGIC);
+        let mut buf =
+            Vec::with_capacity(8 + 4 + 4 + 8 + 8 + items.len() * (8 + 4 * k) + 8);
+        buf.extend_from_slice(MAGIC_V2);
         buf.extend_from_slice(&(k as u32).to_le_bytes());
+        buf.extend_from_slice(&scheme.code().to_le_bytes());
         buf.extend_from_slice(&next_id.to_le_bytes());
         buf.extend_from_slice(&(items.len() as u64).to_le_bytes());
         for (id, sketch) in items {
@@ -84,10 +101,11 @@ impl Snapshot {
     }
 
     /// Load and validate a snapshot (magic, checksum, exact framing).
+    /// Accepts the current `CMHSNAP2` format and legacy `CMHSNAP1`
+    /// (no scheme field; decoded as `cmh` — see the module docs).
     pub fn load(path: &Path) -> crate::Result<SnapshotData> {
         let bytes = std::fs::read(path)?;
-        let header = 8 + 4 + 8 + 8;
-        if bytes.len() < header + 8 {
+        if bytes.len() < 8 + 8 {
             return Err(bad("file too short"));
         }
         let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
@@ -96,12 +114,29 @@ impl Snapshot {
         if fnv1a64(body) != u64::from_le_bytes(crc) {
             return Err(bad("checksum mismatch"));
         }
-        if &body[..8] != MAGIC {
+        let magic: &[u8] = &body[..8];
+        let (scheme_field_len, version) = if magic == MAGIC_V2 {
+            (4usize, 2u32)
+        } else if magic == MAGIC_V1 {
+            (0usize, 1u32)
+        } else {
             return Err(bad("bad magic"));
+        };
+        let header = 8 + 4 + scheme_field_len + 8 + 8;
+        if body.len() < header {
+            return Err(bad("file too short"));
         }
         let k = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
-        let next_id = u64::from_le_bytes(body[12..20].try_into().unwrap());
-        let count = u64::from_le_bytes(body[20..28].try_into().unwrap()) as usize;
+        let scheme = if version == 2 {
+            let code = u32::from_le_bytes(body[12..16].try_into().unwrap());
+            SketchScheme::from_code(code)?
+        } else {
+            SketchScheme::Cmh
+        };
+        let off0 = 12 + scheme_field_len;
+        let next_id = u64::from_le_bytes(body[off0..off0 + 8].try_into().unwrap());
+        let count =
+            u64::from_le_bytes(body[off0 + 8..off0 + 16].try_into().unwrap()) as usize;
         let item_bytes = count
             .checked_mul(8 + 4 * k)
             .ok_or_else(|| bad("count overflow"))?;
@@ -123,7 +158,12 @@ impl Snapshot {
             }
             items.push((id, sketch));
         }
-        Ok(SnapshotData { k, next_id, items })
+        Ok(SnapshotData {
+            k,
+            scheme,
+            next_id,
+            items,
+        })
     }
 }
 
@@ -144,30 +184,73 @@ mod tests {
     fn write_load_roundtrip() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        let bytes = Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+        let bytes =
+            Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
         assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
         let data = Snapshot::load(&path).unwrap();
         assert_eq!(data.k, 3);
+        assert_eq!(data.scheme, SketchScheme::Cmh);
         assert_eq!(data.next_id, 10);
         assert_eq!(data.items, sample_items());
+    }
+
+    #[test]
+    fn every_scheme_roundtrips_through_the_header() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        for scheme in SketchScheme::ALL {
+            Snapshot::write(&path, 3, scheme, 7, &sample_items()).unwrap();
+            assert_eq!(Snapshot::load(&path).unwrap().scheme, scheme);
+        }
     }
 
     #[test]
     fn empty_snapshot_roundtrips() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 64, 0, &[]).unwrap();
+        Snapshot::write(&path, 64, SketchScheme::Coph, 0, &[]).unwrap();
         let data = Snapshot::load(&path).unwrap();
         assert!(data.items.is_empty());
         assert_eq!(data.k, 64);
+        assert_eq!(data.scheme, SketchScheme::Coph);
+    }
+
+    #[test]
+    fn legacy_v1_snapshot_loads_as_cmh() {
+        // Hand-roll a CMHSNAP1 image (the pre-scheme format): the
+        // migration contract is that it decodes with scheme = cmh.
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        let k = 3usize;
+        let items = sample_items();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"CMHSNAP1");
+        buf.extend_from_slice(&(k as u32).to_le_bytes());
+        buf.extend_from_slice(&10u64.to_le_bytes());
+        buf.extend_from_slice(&(items.len() as u64).to_le_bytes());
+        for (id, sketch) in &items {
+            buf.extend_from_slice(&id.to_le_bytes());
+            for v in sketch {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crate::util::fnv::fnv1a64(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+
+        let data = Snapshot::load(&path).unwrap();
+        assert_eq!(data.scheme, SketchScheme::Cmh, "v1 predates schemes");
+        assert_eq!(data.k, k);
+        assert_eq!(data.next_id, 10);
+        assert_eq!(data.items, items);
     }
 
     #[test]
     fn rewrite_is_atomic_replacement() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 3, 5, &sample_items()).unwrap();
-        Snapshot::write(&path, 3, 6, &sample_items()[..1]).unwrap();
+        Snapshot::write(&path, 3, SketchScheme::Cmh, 5, &sample_items()).unwrap();
+        Snapshot::write(&path, 3, SketchScheme::Cmh, 6, &sample_items()[..1]).unwrap();
         let data = Snapshot::load(&path).unwrap();
         assert_eq!(data.next_id, 6);
         assert_eq!(data.items.len(), 1);
@@ -178,19 +261,21 @@ mod tests {
     fn corruption_is_detected() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+        Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         bytes[30] ^= 0x01;
         std::fs::write(&path, &bytes).unwrap();
         assert!(Snapshot::load(&path).is_err(), "checksum must catch flips");
         // truncation is also caught
         let good = {
-            Snapshot::write(&path, 3, 10, &sample_items()).unwrap();
+            Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
             std::fs::read(&path).unwrap()
         };
         std::fs::write(&path, &good[..good.len() - 3]).unwrap();
         assert!(Snapshot::load(&path).is_err());
         // wrong-length sketches are rejected at write time
-        assert!(Snapshot::write(&path, 4, 0, &sample_items()).is_err());
+        assert!(
+            Snapshot::write(&path, 4, SketchScheme::Cmh, 0, &sample_items()).is_err()
+        );
     }
 }

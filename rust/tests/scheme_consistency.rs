@@ -1,0 +1,176 @@
+//! Cross-scheme consistency suite: every [`SketchScheme`] must (1)
+//! estimate Jaccard unbiasedly within tolerance on seeded
+//! small-universe data, (2) share the crate-wide sketch conventions
+//! (value range, sentinel, determinism), (3) serve end to end through
+//! the full TCP stack with `stats` reporting the scheme, and (4)
+//! refuse to load a persisted store stamped with a different scheme.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::protocol::Request;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{estimate, SketchScheme, Sketcher, SparseVec};
+use cminhash::util::testutil::TempDir;
+use std::path::PathBuf;
+
+const DIM: usize = 64;
+const K: usize = 16;
+
+/// Seeded overlapping-range pairs spanning several J levels.  Ranges
+/// are deliberately *structured* (contiguous index runs): schemes that
+/// skip their scrambling permutation would be biased on exactly this
+/// data, so unbiasedness here exercises the σ machinery too.
+fn pairs() -> Vec<(SparseVec, SparseVec, f64)> {
+    let mk = |lo: u32, hi: u32| SparseVec::new(DIM as u32, (lo..hi).collect()).unwrap();
+    vec![
+        (mk(0, 24), mk(12, 36), 12.0 / 36.0),
+        (mk(0, 40), mk(30, 64), 10.0 / 64.0),
+        (mk(0, 32), mk(0, 32), 1.0),
+        (mk(0, 16), mk(16, 32), 0.0),
+    ]
+}
+
+#[test]
+fn every_scheme_is_unbiased_within_tolerance() {
+    // Mean estimate over many seeds must track exact Jaccard: the
+    // per-seed estimator has sd <= 1/(2*sqrt(K)) = 0.125, so over 300
+    // seeds the standard error is ~0.008; 0.035 is a > 4-sigma gate
+    // that still fails on any systematic bias (the deterministic-
+    // binning C-OPH bug this suite was written against showed +0.04).
+    let trials = 300u64;
+    for scheme in SketchScheme::ALL {
+        for (v, w, truth) in pairs() {
+            let mut sum = 0.0;
+            for seed in 0..trials {
+                let h = scheme.build(DIM, K, seed).unwrap();
+                sum += estimate(
+                    &h.sketch_sparse(v.indices()),
+                    &h.sketch_sparse(w.indices()),
+                );
+            }
+            let mean = sum / trials as f64;
+            assert!(
+                (mean - truth).abs() < 0.035,
+                "{scheme}: mean {mean:.4} vs exact J {truth:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn identical_and_disjoint_vectors_are_exact_for_every_scheme() {
+    // J = 1 must estimate exactly 1 (same sketch), and J = 0 on
+    // *dense-enough* disjoint vectors stays small; both hold for every
+    // scheme and every seed, not just on average.
+    let v = SparseVec::new(DIM as u32, (0..32).collect()).unwrap();
+    for scheme in SketchScheme::ALL {
+        for seed in [0u64, 7, 99] {
+            let h = scheme.build(DIM, K, seed).unwrap();
+            let sk = h.sketch_sparse(v.indices());
+            assert_eq!(estimate(&sk, &sk), 1.0, "{scheme}");
+            assert!(sk.iter().all(|&x| x < DIM as u32), "{scheme}: range");
+        }
+    }
+}
+
+fn cfg_for(scheme: SketchScheme, persist: Option<PathBuf>) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM,
+        num_hashes: K,
+        seed: 11,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 4,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    cfg.sketch.scheme = scheme;
+    cfg.store.persist_dir = persist;
+    cfg
+}
+
+#[test]
+fn coph_serves_end_to_end_and_stats_reports_the_scheme() {
+    // The acceptance scenario: `serve --scheme coph` handles
+    // sketch/insert/query over the wire and `stats` names the scheme.
+    let svc = Coordinator::start(cfg_for(SketchScheme::Coph, None)).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+
+    let direct = SketchScheme::Coph.build(DIM, K, 11).unwrap();
+    let nz: Vec<u32> = (0..24).collect();
+    let sk = c.sketch(DIM as u32, nz.clone()).unwrap();
+    assert_eq!(sk, direct.sketch_sparse(&nz), "wire sketch == direct hasher");
+
+    let id = c.insert(DIM as u32, nz.clone()).unwrap();
+    let hits = c.query(DIM as u32, nz, 3).unwrap();
+    assert_eq!(hits[0].id, id);
+    assert_eq!(hits[0].score, 1.0);
+
+    let stats = c.call_raw(&Request::Stats).unwrap();
+    assert!(stats.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(stats.get("scheme").unwrap().as_str().unwrap(), "coph");
+    assert_eq!(stats.get("stored").unwrap().as_u64().unwrap(), 1);
+}
+
+#[test]
+fn every_scheme_serves_the_coordinator_api() {
+    for scheme in SketchScheme::ALL {
+        let svc = Coordinator::start(cfg_for(scheme, None)).unwrap();
+        let v = SparseVec::new(DIM as u32, (0..24).collect()).unwrap();
+        let w = SparseVec::new(DIM as u32, (12..36).collect()).unwrap();
+        let (id, sk) = svc.insert(v.clone()).unwrap();
+        assert_eq!(sk.len(), K, "{scheme}");
+        svc.insert(w.clone()).unwrap();
+        let hits = svc.query(v.clone(), 2).unwrap();
+        assert_eq!(hits[0].id, id, "{scheme}: self is the top hit");
+        let jhat = svc.estimate_vecs(v, w).unwrap();
+        assert!((0.0..=1.0).contains(&jhat), "{scheme}");
+    }
+}
+
+#[test]
+fn snapshot_scheme_mismatch_fails_with_a_clean_error() {
+    let dir = TempDir::new().unwrap();
+    // Build + persist a store under cmh, folding the WAL into a
+    // scheme-stamped snapshot.
+    {
+        let svc = Coordinator::start(cfg_for(
+            SketchScheme::Cmh,
+            Some(dir.path().to_path_buf()),
+        ))
+        .unwrap();
+        let v = SparseVec::new(DIM as u32, (0..24).collect()).unwrap();
+        svc.insert(v).unwrap();
+        assert!(svc.save().unwrap() > 0);
+    }
+    // Reopening under coph must fail with an error naming both schemes
+    // (not a panic, not silent corruption).
+    match Coordinator::start(cfg_for(
+        SketchScheme::Coph,
+        Some(dir.path().to_path_buf()),
+    )) {
+        Err(cminhash::Error::Invalid(msg)) => {
+            assert!(msg.contains("cmh"), "{msg}");
+            assert!(msg.contains("coph"), "{msg}");
+        }
+        Err(other) => panic!("expected Invalid, got {other:?}"),
+        Ok(_) => panic!("scheme mismatch must refuse to open"),
+    }
+    // The stamped scheme still opens and serves its data.
+    let svc = Coordinator::start(cfg_for(
+        SketchScheme::Cmh,
+        Some(dir.path().to_path_buf()),
+    ))
+    .unwrap();
+    let (_, store) = svc.stats();
+    assert_eq!(store.stored, 1);
+}

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only, offline).
+
+Scans the repo's Markdown files for inline links/images
+(``[text](target)``) and verifies that every *local* target exists
+relative to the file containing it.  External schemes (http, https,
+mailto) are recorded but not fetched — this build is offline — and
+pure in-page anchors (``#section``) are skipped.  Anchored local links
+(``FILE.md#section``) are checked for file existence only.
+
+Exit status: 0 when every local target resolves, 1 otherwise (broken
+links are listed one per line as ``file:line: target``).
+
+Usage: python3 tools/linkcheck.py [ROOT]
+"""
+import os
+import re
+import sys
+
+# Inline markdown link or image: [text](target) / ![alt](target).
+# Targets may carry an optional title: (target "title").
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+# Directories never worth scanning (build output, VCS internals).
+SKIP_DIRS = {".git", "target", "results", "artifacts", "__pycache__", ".claude"}
+
+EXTERNAL_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def markdown_files(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path, root):
+    broken = []
+    external = 0
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            # Links inside fenced code blocks are examples, not links.
+            if CODE_FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(EXTERNAL_SCHEMES):
+                    external += 1
+                    continue
+                if target.startswith("#"):
+                    continue  # in-page anchor
+                local = target.split("#", 1)[0]
+                if not local:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), local)
+                )
+                if not os.path.exists(resolved):
+                    rel = os.path.relpath(path, root)
+                    broken.append(f"{rel}:{lineno}: {target}")
+    return broken, external
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    files = list(markdown_files(root))
+    if not files:
+        print(f"linkcheck: no markdown files under {root!r}", file=sys.stderr)
+        return 1
+    broken = []
+    checked = external = 0
+    for path in files:
+        b, e = check_file(path, root)
+        broken.extend(b)
+        external += e
+        checked += 1
+    if broken:
+        print(f"linkcheck: {len(broken)} broken local link(s):", file=sys.stderr)
+        for line in broken:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(
+        f"linkcheck: OK — {checked} markdown files, all local links resolve "
+        f"({external} external links not fetched: offline)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
