@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench doc clippy linkcheck verify artifacts figures clean
+.PHONY: all build test bench doc clippy linkcheck checkbench verify artifacts figures clean
 
 all: build
 
@@ -34,7 +34,14 @@ doc:
 linkcheck:
 	$(PYTHON) tools/linkcheck.py .
 
-verify: build test clippy linkcheck
+# Offline gate over emitted BENCH_*.json: the packed b-bit plane must
+# beat unpacked query throughput at b <= 8 and shrink memory ~32/b x.
+# Skips cleanly when benches haven't run (run `make bench` first to
+# arm it); CI always runs the bbit_query bench before this gate.
+checkbench:
+	$(PYTHON) tools/check_bench.py .
+
+verify: build test clippy linkcheck checkbench
 
 # AOT-lower the L1/L2 pipelines to artifacts/ (HLO text + manifest) and
 # export the golden vectors for rust/tests/golden.rs.  Optional: the

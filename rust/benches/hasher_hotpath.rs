@@ -14,6 +14,7 @@ use cminhash::sketch::{
 };
 use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
+use cminhash::util::testutil::overlap_pair;
 use std::path::Path;
 
 fn doc(rng: &mut Rng, d: u32, f: usize) -> Vec<u32> {
@@ -33,10 +34,12 @@ fn scheme_sweep(h: &mut Harness, fast: bool) {
     let f = 256usize;
     let seeds = if fast { 8u64 } else { 50 };
     let mut rng = Rng::seed_from_u64(3);
-    // Overlapping windows -> exact J = f/2 / (3f/2) = 1/3.
-    let v: Vec<u32> = (0..f as u32).collect();
-    let w: Vec<u32> = (f as u32 / 2..3 * f as u32 / 2).collect();
-    let truth = 1.0 / 3.0;
+    // Overlapping windows from the shared structured-pair generator:
+    // exact J = (f/2) / (3f/2) = 1/3 — the same corpus the statistical
+    // suites gate against.
+    let (va, wb, truth) =
+        overlap_pair(d as u32, f as u32, f as u32, f as u32 / 2);
+    let (v, w) = (va.indices().to_vec(), wb.indices().to_vec());
     let idx: Vec<u32> = {
         let mut i: Vec<u32> = (0..f).map(|_| rng.range_u32(0, d as u32)).collect();
         i.sort_unstable();

@@ -78,7 +78,8 @@ impl Default for BatchConfig {
     }
 }
 
-/// Sketching-scheme settings (which hasher the service runs).
+/// Sketching-scheme settings (which hasher the service runs and how
+/// wide the stored sketches are).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SketchSettings {
     /// The minwise-hashing scheme: `classic | cmh | zero-pi | oph |
@@ -86,12 +87,22 @@ pub struct SketchSettings {
     /// are not comparable, so the scheme is stamped into snapshots and
     /// reported by the `stats` wire op.
     pub scheme: SketchScheme,
+    /// Bits stored per hash in the serving plane: one of
+    /// `1|2|4|8|16|32`.  32 (the default) keeps full `u32` lanes and
+    /// the exact pre-b-bit behavior; smaller widths pack rows into a
+    /// contiguous bit-matrix (32/b× less resident memory per sketch),
+    /// score queries with the word-level XOR+popcount kernel through
+    /// the unbiased b-bit correction, and persist/WAL-log packed rows.
+    /// Stamped into snapshots and reported by `stats` like the scheme
+    /// (see `docs/SCHEMES.md` §Sketch width).
+    pub bits: u8,
 }
 
 impl Default for SketchSettings {
     fn default() -> Self {
         SketchSettings {
             scheme: SketchScheme::Cmh,
+            bits: 32,
         }
     }
 }
@@ -223,6 +234,14 @@ impl ServeConfig {
             if let Some(v) = sk.get_opt("scheme") {
                 cfg.sketch.scheme = SketchScheme::parse(v.as_str()?)?;
             }
+            if let Some(v) = sk.get_opt("bits") {
+                let raw = v.as_u64()?;
+                cfg.sketch.bits = u8::try_from(raw).map_err(|_| {
+                    crate::Error::Invalid(format!(
+                        "sketch.bits = {raw} out of range (1|2|4|8|16|32)"
+                    ))
+                })?;
+            }
         }
         if let Some(b) = j.get_opt("batch") {
             if let Some(v) = b.get_opt("max_batch") {
@@ -272,6 +291,8 @@ impl ServeConfig {
         }
         // Scheme-specific shape constraints (the OPH family needs K | D).
         self.sketch.scheme.validate(self.dim, self.num_hashes)?;
+        // Storage-width constraint: lanes must tile u64 words.
+        crate::sketch::check_sketch_bits(self.sketch.bits)?;
         if self.index.bands * self.index.rows_per_band > self.num_hashes {
             return Err(crate::Error::Invalid(format!(
                 "bands({}) * rows({}) > K({})",
@@ -405,6 +426,31 @@ mod tests {
         assert!(c.validate().is_err(), "a zero-worker pool can serve nobody");
         c.server.max_connections = 1_000_000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sketch_bits_parse_and_validate() {
+        let c = ServeConfig::default();
+        assert_eq!(c.sketch.bits, 32, "full width is the default");
+        let j = crate::util::json::Json::parse(r#"{"sketch": {"bits": 8}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.sketch.bits, 8);
+        c.validate().unwrap();
+        // every supported width validates; anything else is rejected
+        for bits in crate::sketch::SUPPORTED_BITS {
+            let mut c = ServeConfig::default();
+            c.sketch.bits = bits;
+            c.validate().unwrap();
+        }
+        for bits in [0u8, 3, 7, 12, 24, 33] {
+            let mut c = ServeConfig::default();
+            c.sketch.bits = bits;
+            assert!(c.validate().is_err(), "bits={bits}");
+        }
+        // out-of-range JSON values fail at parse time with a clean error
+        let j =
+            crate::util::json::Json::parse(r#"{"sketch": {"bits": 4096}}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

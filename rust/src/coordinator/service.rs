@@ -82,9 +82,10 @@ impl Coordinator {
         let backend = Self::build_backend(&cfg)?;
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = mpsc::channel::<SketchJob>();
-        let store = PersistentIndex::open(
+        let store = PersistentIndex::open_with_bits(
             cfg.num_hashes,
             cfg.sketch.scheme,
+            cfg.sketch.bits,
             IndexConfig {
                 bands: cfg.index.bands,
                 rows_per_band: cfg.index.rows_per_band,
@@ -286,7 +287,10 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Estimate J between two stored sketches.
+    /// Estimate J between two stored sketches.  With a packed store
+    /// (`sketch.bits` < 32) the stored lanes are b bits wide and the
+    /// estimate is the unbiased b-bit–corrected one; at the default
+    /// full width it is the plain collision fraction.
     pub fn estimate_ids(&self, a: u64, b: u64) -> crate::Result<f64> {
         let jhat = self.store.estimate(a, b)?;
         Metrics::inc(&self.metrics.estimates);
@@ -294,7 +298,8 @@ impl Coordinator {
     }
 
     /// Estimate J between two raw vectors (sketches both as one
-    /// two-row batch through the pump).
+    /// two-row batch through the pump).  Always full-width: inline
+    /// vectors never touch the packed store, so nothing is truncated.
     pub fn estimate_vecs(&self, v: SparseVec, w: SparseVec) -> crate::Result<f64> {
         let sks = self.sketch_many(vec![v, w])?;
         Metrics::inc(&self.metrics.estimates);
@@ -931,6 +936,36 @@ mod tests {
                 .sketch_sparse(v.indices());
             assert_eq!(svc.sketch(v.clone()).unwrap(), direct, "{scheme}");
         }
+    }
+
+    #[test]
+    fn bits_knob_packs_the_store_end_to_end() {
+        // `sketch.bits` < 32: sketch responses stay full-width (the
+        // engine is untouched), the store keeps packed rows, queries
+        // stay exact on self-probes, and stats report the width and
+        // the truthful per-item footprint.
+        let mut cfg = rust_cfg();
+        cfg.sketch.bits = 8;
+        let svc = Coordinator::start(cfg.clone()).unwrap();
+        let hasher = CMinHasher::new(cfg.dim, cfg.num_hashes, cfg.seed);
+        let v = SparseVec::new(512, (0..50).collect()).unwrap();
+        let (id, sk) = svc.insert(v.clone()).unwrap();
+        assert_eq!(
+            sk,
+            hasher.sketch_sparse(v.indices()),
+            "insert echoes the full-width sketch"
+        );
+        let hits = svc.query(v.clone(), 3).unwrap();
+        assert_eq!(hits[0].id, id);
+        assert_eq!(hits[0].score, 1.0);
+        assert_eq!(svc.estimate_ids(id, id).unwrap(), 1.0);
+        let (_, store) = svc.stats();
+        assert_eq!(store.bits, 8);
+        assert_eq!(store.sketch_bytes, 64, "64 lanes × 8 bits = 64 bytes");
+        // an unsupported width is rejected at startup, not at runtime
+        let mut bad = rust_cfg();
+        bad.sketch.bits = 5;
+        assert!(Coordinator::start(bad).is_err());
     }
 
     #[test]

@@ -5,8 +5,23 @@
 //! band with probability J^r, and in at least one band with probability
 //! 1 − (1 − J^r)^b — the classic S-curve.  Candidates are re-ranked by
 //! the full-sketch collision estimate.
+//!
+//! The index has two storage modes, selected by the sketch width:
+//!
+//! * **full** (`bits = 32`) — one `Vec<u32>` row per item, candidates
+//!   re-ranked by [`estimate`]; bit-for-bit the pre-b-bit behavior.
+//! * **packed** (`bits < 32`) — rows live in one contiguous
+//!   [`PackedRows`] bit-matrix (K·b bits per item), band signatures
+//!   hash the packed band bits directly (no unpacking), postings hold
+//!   arena *slots* instead of ids so the scoring loop reads candidate
+//!   rows sequentially, and candidates are scored by the word-level
+//!   XOR + popcount kernel fed through the unbiased b-bit correction.
 
-use crate::sketch::estimate;
+use crate::index::packed::PackedRows;
+use crate::sketch::{
+    check_sketch_bits, collision_count, corrected_estimate, estimate, pack_row,
+    packed_words,
+};
 use std::collections::HashMap;
 
 /// Band configuration.  `bands * rows_per_band` must be ≤ K.
@@ -37,7 +52,8 @@ impl IndexConfig {
 pub struct Neighbor {
     /// Item id (as assigned at insert time).
     pub id: u64,
-    /// Full-sketch collision estimate Ĵ.
+    /// Full-sketch collision estimate Ĵ (b-bit corrected in packed
+    /// storage mode).
     pub score: f64,
 }
 
@@ -50,14 +66,27 @@ pub fn sort_neighbors(xs: &mut [Neighbor]) {
     xs.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
 }
 
+/// Row storage: full-width `u32` rows or the packed bit-matrix.
+#[derive(Debug)]
+enum Rows {
+    Full(HashMap<u64, Vec<u32>>),
+    Packed(PackedRows),
+}
+
 /// The banding index: b hash tables over band signatures, plus the
 /// stored sketches for re-ranking.
+///
+/// Posting-list values are item **ids** in full mode and arena
+/// **slots** in packed mode (translated back to ids at the query
+/// boundary), so deletions must erase postings before the slot is
+/// recycled — which [`BandingIndex::remove`] does.
 #[derive(Debug)]
 pub struct BandingIndex {
     cfg: IndexConfig,
     k: usize,
+    bits: u8,
     tables: Vec<HashMap<u64, Vec<u64>>>,
-    sketches: HashMap<u64, Vec<u32>>,
+    rows: Rows,
 }
 
 /// FNV-1a over a band's u32 values — cheap, deterministic, dependency
@@ -74,9 +103,57 @@ fn band_hash(values: &[u32]) -> u64 {
     h
 }
 
+/// FNV-1a over a band's packed bit range — the packed-mode band
+/// signature, computed without unpacking lanes: the `nbits` bits from
+/// `start_bit` are streamed out of the word array in ≤ 64-bit chunks.
+/// Equal band values imply equal bits imply equal signatures.
+#[inline]
+fn band_hash_packed(words: &[u64], start_bit: usize, nbits: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut pos = start_bit;
+    let mut left = nbits;
+    while left > 0 {
+        let take = left.min(64);
+        let (w, off) = (pos / 64, pos % 64);
+        let mut v = words[w] >> off;
+        if off > 0 && off + take > 64 {
+            v |= words[w + 1] << (64 - off);
+        }
+        if take < 64 {
+            v &= (1u64 << take) - 1;
+        }
+        for b in v.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        pos += take;
+        left -= take;
+    }
+    h
+}
+
+/// All band signatures of one packed row — the one definition insert,
+/// remove, and the query path share, so their postings can never
+/// desynchronize.
+fn packed_band_sigs(words: &[u64], bands: usize, band_bits: usize) -> Vec<u64> {
+    (0..bands)
+        .map(|b| band_hash_packed(words, b * band_bits, band_bits))
+        .collect()
+}
+
 impl BandingIndex {
-    /// Create an index over sketches of length `k`.
+    /// Create a full-width index over sketches of length `k`
+    /// (equivalent to [`BandingIndex::with_bits`] at `bits = 32`).
     pub fn new(k: usize, cfg: IndexConfig) -> crate::Result<Self> {
+        Self::with_bits(k, cfg, 32)
+    }
+
+    /// Create an index over sketches of length `k` storing `bits` bits
+    /// per hash — 32 keeps full-width rows, anything smaller packs
+    /// rows into the contiguous bit-matrix and scores queries with the
+    /// popcount kernel.
+    pub fn with_bits(k: usize, cfg: IndexConfig, bits: u8) -> crate::Result<Self> {
+        check_sketch_bits(bits)?;
         if cfg.bands == 0 || cfg.rows_per_band == 0 {
             return Err(crate::Error::Invalid("bands and rows must be > 0".into()));
         }
@@ -86,11 +163,17 @@ impl BandingIndex {
                 cfg.bands, cfg.rows_per_band
             )));
         }
+        let rows = if bits == 32 {
+            Rows::Full(HashMap::new())
+        } else {
+            Rows::Packed(PackedRows::new(k, bits))
+        };
         Ok(BandingIndex {
             cfg,
             k,
+            bits,
             tables: vec![HashMap::new(); cfg.bands],
-            sketches: HashMap::new(),
+            rows,
         })
     }
 
@@ -99,19 +182,43 @@ impl BandingIndex {
         self.cfg
     }
 
+    /// Bits stored per hash (32 = full width).
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Resident bytes per stored sketch row.
+    pub fn sketch_bytes_per_item(&self) -> usize {
+        match &self.rows {
+            Rows::Full(_) => self.k * 4,
+            Rows::Packed(_) => packed_words(self.k, self.bits) * 8,
+        }
+    }
+
     /// Number of indexed items.
     pub fn len(&self) -> usize {
-        self.sketches.len()
+        match &self.rows {
+            Rows::Full(map) => map.len(),
+            Rows::Packed(rows) => rows.len(),
+        }
     }
 
     /// True iff no items are indexed.
     pub fn is_empty(&self) -> bool {
-        self.sketches.is_empty()
+        self.len() == 0
     }
 
-    /// Insert an item's sketch under `id` (overwrites an existing id's
-    /// sketch store entry but not its stale table entries — ids are
-    /// expected unique, enforced here).
+    /// The packed band signatures of one packed row.
+    fn packed_sigs(&self, words: &[u64]) -> Vec<u64> {
+        packed_band_sigs(
+            words,
+            self.cfg.bands,
+            self.cfg.rows_per_band * self.bits as usize,
+        )
+    }
+
+    /// Insert an item's sketch under `id` (ids are expected unique,
+    /// enforced here).
     pub fn insert(&mut self, id: u64, sketch: &[u32]) -> crate::Result<()> {
         if sketch.len() != self.k {
             return Err(crate::Error::ShapeMismatch {
@@ -120,53 +227,86 @@ impl BandingIndex {
                 got: sketch.len(),
             });
         }
-        if self.sketches.contains_key(&id) {
-            return Err(crate::Error::Invalid(format!("duplicate id {id}")));
-        }
         let r = self.cfg.rows_per_band;
-        for (b, table) in self.tables.iter_mut().enumerate() {
-            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
-            table.entry(sig).or_default().push(id);
+        match &mut self.rows {
+            Rows::Full(map) => {
+                if map.contains_key(&id) {
+                    return Err(crate::Error::Invalid(format!("duplicate id {id}")));
+                }
+                for (b, table) in self.tables.iter_mut().enumerate() {
+                    let sig = band_hash(&sketch[b * r..(b + 1) * r]);
+                    table.entry(sig).or_default().push(id);
+                }
+                map.insert(id, sketch.to_vec());
+            }
+            Rows::Packed(rows) => {
+                if rows.contains(id) {
+                    return Err(crate::Error::Invalid(format!("duplicate id {id}")));
+                }
+                let slot = rows.insert(id, sketch);
+                let sigs = packed_band_sigs(
+                    rows.row(slot),
+                    self.cfg.bands,
+                    r * self.bits as usize,
+                );
+                for (table, sig) in self.tables.iter_mut().zip(sigs) {
+                    table.entry(sig).or_default().push(slot as u64);
+                }
+            }
         }
-        self.sketches.insert(id, sketch.to_vec());
         Ok(())
     }
 
     /// Remove an id, erasing its band postings in place (tombstone
     /// free: the posting lists shrink immediately, so a deleted item
     /// can never resurface as a candidate).  Returns the removed
-    /// sketch, or `None` if the id was not present.  The id may be
-    /// re-inserted afterwards.
+    /// sketch (masked to the stored width in packed mode), or `None`
+    /// if the id was not present.  The id may be re-inserted
+    /// afterwards.
     pub fn remove(&mut self, id: u64) -> Option<Vec<u32>> {
-        let sketch = self.sketches.remove(&id)?;
         let r = self.cfg.rows_per_band;
-        for (b, table) in self.tables.iter_mut().enumerate() {
-            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
-            if let Some(ids) = table.get_mut(&sig) {
-                if let Some(pos) = ids.iter().position(|&x| x == id) {
-                    ids.swap_remove(pos);
+        match &mut self.rows {
+            Rows::Full(map) => {
+                let sketch = map.remove(&id)?;
+                for (b, table) in self.tables.iter_mut().enumerate() {
+                    let sig = band_hash(&sketch[b * r..(b + 1) * r]);
+                    erase_posting(table, sig, id);
                 }
-                if ids.is_empty() {
-                    table.remove(&sig);
+                Some(sketch)
+            }
+            Rows::Packed(rows) => {
+                let slot = rows.slot(id)?;
+                let sigs = packed_band_sigs(
+                    rows.row(slot),
+                    self.cfg.bands,
+                    r * self.bits as usize,
+                );
+                for (table, sig) in self.tables.iter_mut().zip(sigs) {
+                    erase_posting(table, sig, slot as u64);
                 }
+                rows.remove(id)
             }
         }
-        Some(sketch)
     }
 
-    /// Iterate stored `(id, sketch)` pairs in unspecified order.
-    pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> + '_ {
-        self.sketches.iter().map(|(&id, s)| (id, s.as_slice()))
+    /// Iterate stored `(id, sketch)` pairs in unspecified order
+    /// (values are masked to the stored width in packed mode).
+    pub fn iter(&self) -> Box<dyn Iterator<Item = (u64, Vec<u32>)> + '_> {
+        match &self.rows {
+            Rows::Full(map) => {
+                Box::new(map.iter().map(|(&id, s)| (id, s.clone())))
+            }
+            Rows::Packed(rows) => Box::new(rows.iter()),
+        }
     }
 
-    /// Raw candidate set for a query sketch (ids colliding in ≥1 band).
-    pub fn candidates(&self, sketch: &[u32]) -> Vec<u64> {
-        let r = self.cfg.rows_per_band;
+    /// The deduplicated posting values colliding with `sigs` in ≥ 1
+    /// band (ids in full mode, slots in packed mode).
+    fn collect_postings(&self, sigs: impl Iterator<Item = u64>) -> Vec<u64> {
         let mut out: Vec<u64> = Vec::new();
-        for (b, table) in self.tables.iter().enumerate() {
-            let sig = band_hash(&sketch[b * r..(b + 1) * r]);
-            if let Some(ids) = table.get(&sig) {
-                out.extend_from_slice(ids);
+        for (table, sig) in self.tables.iter().zip(sigs) {
+            if let Some(vals) = table.get(&sig) {
+                out.extend_from_slice(vals);
             }
         }
         out.sort_unstable();
@@ -174,16 +314,63 @@ impl BandingIndex {
         out
     }
 
-    /// Top-k neighbors by full-sketch estimate among the candidates.
+    /// Raw candidate set for a query sketch (ids colliding in ≥1 band).
+    pub fn candidates(&self, sketch: &[u32]) -> Vec<u64> {
+        let r = self.cfg.rows_per_band;
+        match &self.rows {
+            Rows::Full(_) => self.collect_postings(
+                (0..self.cfg.bands).map(|b| band_hash(&sketch[b * r..(b + 1) * r])),
+            ),
+            Rows::Packed(rows) => {
+                let mut q = vec![0u64; packed_words(self.k, self.bits)];
+                pack_row(sketch, self.bits, &mut q);
+                let mut ids: Vec<u64> = self
+                    .collect_postings(self.packed_sigs(&q).into_iter())
+                    .into_iter()
+                    .map(|slot| rows.id_at(slot as usize))
+                    .collect();
+                ids.sort_unstable();
+                ids
+            }
+        }
+    }
+
+    /// Score every candidate of `sketch` (unsorted).
+    fn scored(&self, sketch: &[u32]) -> Vec<Neighbor> {
+        let r = self.cfg.rows_per_band;
+        match &self.rows {
+            Rows::Full(map) => self
+                .collect_postings(
+                    (0..self.cfg.bands).map(|b| band_hash(&sketch[b * r..(b + 1) * r])),
+                )
+                .into_iter()
+                .map(|id| Neighbor {
+                    id,
+                    score: estimate(sketch, &map[&id]),
+                })
+                .collect(),
+            Rows::Packed(rows) => {
+                let mut q = vec![0u64; packed_words(self.k, self.bits)];
+                pack_row(sketch, self.bits, &mut q);
+                self.collect_postings(self.packed_sigs(&q).into_iter())
+                    .into_iter()
+                    .map(|slot| {
+                        let slot = slot as usize;
+                        let c = collision_count(&q, rows.row(slot), self.k, self.bits);
+                        Neighbor {
+                            id: rows.id_at(slot),
+                            score: corrected_estimate(c, self.k, self.bits),
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Top-k neighbors by (width-corrected) estimate among the
+    /// candidates.
     pub fn query(&self, sketch: &[u32], topk: usize) -> Vec<Neighbor> {
-        let mut scored: Vec<Neighbor> = self
-            .candidates(sketch)
-            .into_iter()
-            .map(|id| Neighbor {
-                id,
-                score: estimate(sketch, &self.sketches[&id]),
-            })
-            .collect();
+        let mut scored = self.scored(sketch);
         sort_neighbors(&mut scored);
         scored.truncate(topk);
         scored
@@ -192,21 +379,49 @@ impl BandingIndex {
     /// All neighbors with estimate ≥ `threshold`.
     pub fn query_above(&self, sketch: &[u32], threshold: f64) -> Vec<Neighbor> {
         let mut out: Vec<Neighbor> = self
-            .candidates(sketch)
+            .scored(sketch)
             .into_iter()
-            .map(|id| Neighbor {
-                id,
-                score: estimate(sketch, &self.sketches[&id]),
-            })
             .filter(|n| n.score >= threshold)
             .collect();
         sort_neighbors(&mut out);
         out
     }
 
-    /// Stored sketch for an id.
-    pub fn sketch(&self, id: u64) -> Option<&[u32]> {
-        self.sketches.get(&id).map(|s| s.as_slice())
+    /// All `(id, packed row words)` pairs when in packed storage mode,
+    /// `None` at full width — lets snapshotting copy rows as words
+    /// instead of widening every lane to a `u32` only to re-pack it
+    /// (a 32/b× transient-memory blowup on large corpora).
+    pub fn packed_items(&self) -> Option<Vec<(u64, Vec<u64>)>> {
+        match &self.rows {
+            Rows::Full(_) => None,
+            Rows::Packed(rows) => Some(
+                rows.iter_packed()
+                    .map(|(id, words)| (id, words.to_vec()))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Stored sketch for an id (masked to the stored width in packed
+    /// mode).
+    pub fn sketch(&self, id: u64) -> Option<Vec<u32>> {
+        match &self.rows {
+            Rows::Full(map) => map.get(&id).cloned(),
+            Rows::Packed(rows) => rows.get(id),
+        }
+    }
+}
+
+/// Drop one posting value from a signature's list, removing the list
+/// when it empties.
+fn erase_posting(table: &mut HashMap<u64, Vec<u64>>, sig: u64, value: u64) {
+    if let Some(vals) = table.get_mut(&sig) {
+        if let Some(pos) = vals.iter().position(|&x| x == value) {
+            vals.swap_remove(pos);
+        }
+        if vals.is_empty() {
+            table.remove(&sig);
+        }
     }
 }
 
@@ -238,6 +453,7 @@ mod tests {
         assert!(idx.insert(1, &[0u32; 64]).is_ok());
         assert!(idx.insert(1, &[0u32; 64]).is_err(), "duplicate id");
         assert!(BandingIndex::new(8, cfg()).is_err(), "b*r > K");
+        assert!(BandingIndex::with_bits(64, cfg(), 3).is_err(), "odd width");
     }
 
     #[test]
@@ -278,6 +494,42 @@ mod tests {
     }
 
     #[test]
+    fn packed_mode_finds_the_same_near_duplicate() {
+        // The packed plane must preserve retrieval semantics: exact
+        // self-match scores 1.0, the near-duplicate outranks the
+        // dissimilar item, and deletes erase candidates — at every
+        // supported width.
+        let h = CMinHasher::new(4096, 128, 9);
+        let base: Vec<u32> = (0..300).map(|i| i * 10).collect();
+        let mut near = base.clone();
+        near[0] = 7;
+        near[1] = 13;
+        let far: Vec<u32> = (0..300).map(|i| i * 10 + 5).collect();
+        for bits in [1u8, 2, 4, 8, 16] {
+            let mut idx = BandingIndex::with_bits(
+                128,
+                IndexConfig {
+                    bands: 16,
+                    rows_per_band: 8,
+                },
+                bits,
+            )
+            .unwrap();
+            idx.insert(1, &h.sketch_sparse(&near)).unwrap();
+            idx.insert(2, &h.sketch_sparse(&far)).unwrap();
+            let probe = h.sketch_sparse(&base);
+            let hits = idx.query(&probe, 10);
+            assert_eq!(hits[0].id, 1, "bits={bits}: near duplicate first");
+            assert!(hits[0].score > 0.7, "bits={bits}: score {}", hits[0].score);
+            // exact self-probe: every lane collides, corrected Ĵ = 1
+            let self_hits = idx.query(&h.sketch_sparse(&near), 1);
+            assert_eq!(self_hits[0].id, 1, "bits={bits}");
+            assert_eq!(self_hits[0].score, 1.0, "bits={bits}");
+            assert_eq!(idx.sketch_bytes_per_item(), 16 * bits as usize, "bits={bits}");
+        }
+    }
+
+    #[test]
     fn remove_erases_postings_and_allows_reinsert() {
         let h = CMinHasher::new(1024, 64, 5);
         let mut idx = BandingIndex::new(64, cfg()).unwrap();
@@ -299,11 +551,52 @@ mod tests {
     }
 
     #[test]
+    fn packed_remove_erases_postings_and_recycles_slots() {
+        let h = CMinHasher::new(1024, 64, 5);
+        let mut idx = BandingIndex::with_bits(64, cfg(), 8).unwrap();
+        let sk42 = h.sketch_sparse(&(100..200).collect::<Vec<_>>());
+        let sk43 = h.sketch_sparse(&(300..400).collect::<Vec<_>>());
+        idx.insert(42, &sk42).unwrap();
+        idx.insert(43, &sk43).unwrap();
+        let masked: Vec<u32> = sk42.iter().map(|&v| v & 0xff).collect();
+        assert_eq!(idx.remove(42), Some(masked));
+        assert!(idx.remove(42).is_none());
+        assert!(idx.candidates(&sk42).is_empty(), "postings erased");
+        assert!(idx.query(&sk42, 5).iter().all(|n| n.id != 42));
+        // a new id reuses the freed slot; the old id must not resurface
+        idx.insert(44, &sk42).unwrap();
+        let hits = idx.query(&sk42, 2);
+        assert_eq!(hits[0].id, 44);
+        assert_eq!(hits[0].score, 1.0);
+        assert!(hits.iter().all(|n| n.id != 42));
+        assert_eq!(idx.sketch(43), Some(sk43.iter().map(|&v| v & 0xff).collect()));
+        assert_eq!(idx.iter().count(), 2);
+    }
+
+    #[test]
     fn candidates_dedup() {
         let mut idx = BandingIndex::new(8, IndexConfig { bands: 4, rows_per_band: 2 }).unwrap();
         let sk = vec![1u32; 8];
         idx.insert(7, &sk).unwrap();
         // identical sketch collides in all 4 bands but appears once
         assert_eq!(idx.candidates(&sk), vec![7]);
+    }
+
+    #[test]
+    fn packed_candidates_dedup_and_translate_slots_to_ids() {
+        for bits in [1u8, 4, 16] {
+            let mut idx = BandingIndex::with_bits(
+                8,
+                IndexConfig {
+                    bands: 4,
+                    rows_per_band: 2,
+                },
+                bits,
+            )
+            .unwrap();
+            let sk = vec![1u32; 8];
+            idx.insert(7, &sk).unwrap();
+            assert_eq!(idx.candidates(&sk), vec![7], "bits={bits}");
+        }
     }
 }

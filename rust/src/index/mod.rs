@@ -3,7 +3,14 @@
 //! style hash tables; the paper's intro cites ANN as the regime where
 //! K must grow beyond 1024, which is exactly where C-MinHash's
 //! two-permutation memory story matters).
+//!
+//! The index stores rows either full-width (`Vec<u32>` per item) or
+//! packed — K·b-bit rows in one contiguous [`PackedRows`] bit-matrix,
+//! banded and scored without unpacking (see `rust/src/sketch/bbit.rs`
+//! for the lane codec and the XOR+popcount kernel).
 
 mod lsh;
+mod packed;
 
 pub use lsh::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};
+pub use packed::PackedRows;

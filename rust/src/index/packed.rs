@@ -1,0 +1,200 @@
+//! Contiguous packed row storage for the b-bit serving plane.
+//!
+//! One arena of `u64` words holds every resident sketch row-major —
+//! K·b bits per item, [`crate::sketch::packed_words`]`(K, b)` words
+//! per row — instead of one heap `Vec<u32>` per item.  Rows are
+//! addressed by *slot*; a slot map translates item ids, freed slots
+//! are recycled, and the banding index stores slots (not ids) in its
+//! postings so the query hot loop reads candidate rows straight out
+//! of the arena with no per-candidate hash lookup.
+
+use crate::sketch::{pack_row, packed_words, unpack_row};
+use std::collections::HashMap;
+
+/// A contiguous bit-matrix of packed b-bit sketch rows with id→slot
+/// addressing and slot recycling.
+#[derive(Debug)]
+pub struct PackedRows {
+    bits: u8,
+    k: usize,
+    /// Words per row.
+    wpr: usize,
+    /// The arena: `capacity × wpr` words, row-major.
+    words: Vec<u64>,
+    slot_of: HashMap<u64, usize>,
+    /// Slot → owning id (stale for free slots, which hold zeroed rows).
+    id_of: Vec<u64>,
+    free: Vec<usize>,
+}
+
+impl PackedRows {
+    /// An empty store for K-lane rows at `bits` per lane.
+    pub fn new(k: usize, bits: u8) -> Self {
+        PackedRows {
+            bits,
+            k,
+            wpr: packed_words(k, bits),
+            words: Vec::new(),
+            slot_of: HashMap::new(),
+            id_of: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Bits per lane.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Words per packed row.
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// Number of resident rows.
+    pub fn len(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    /// True iff no rows are resident.
+    pub fn is_empty(&self) -> bool {
+        self.slot_of.is_empty()
+    }
+
+    /// Arena footprint in bytes (allocated rows, including recycled
+    /// free slots — the number that actually sits in RAM).
+    pub fn arena_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// True iff `id` has a resident row.
+    pub fn contains(&self, id: u64) -> bool {
+        self.slot_of.contains_key(&id)
+    }
+
+    /// The slot holding `id`'s row.
+    pub fn slot(&self, id: u64) -> Option<usize> {
+        self.slot_of.get(&id).copied()
+    }
+
+    /// The id owning `slot` (only meaningful for occupied slots).
+    pub fn id_at(&self, slot: usize) -> u64 {
+        self.id_of[slot]
+    }
+
+    /// The packed words of `slot`'s row.
+    pub fn row(&self, slot: usize) -> &[u64] {
+        &self.words[slot * self.wpr..(slot + 1) * self.wpr]
+    }
+
+    /// Pack `full` (length K; values are masked to b bits) under `id`
+    /// and return the slot.  The caller guarantees `id` is not already
+    /// resident and the length matches K.
+    pub fn insert(&mut self, id: u64, full: &[u32]) -> usize {
+        debug_assert_eq!(full.len(), self.k);
+        debug_assert!(!self.slot_of.contains_key(&id), "duplicate id {id}");
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.id_of.len();
+                self.id_of.push(0);
+                self.words.resize(self.words.len() + self.wpr, 0);
+                s
+            }
+        };
+        pack_row(
+            full,
+            self.bits,
+            &mut self.words[slot * self.wpr..(slot + 1) * self.wpr],
+        );
+        self.id_of[slot] = id;
+        self.slot_of.insert(id, slot);
+        slot
+    }
+
+    /// Remove `id`'s row, returning its masked lane values (what
+    /// [`PackedRows::get`] would have returned) and recycling the
+    /// slot.  `None` if the id is not resident.
+    pub fn remove(&mut self, id: u64) -> Option<Vec<u32>> {
+        let slot = self.slot_of.remove(&id)?;
+        let row = unpack_row(self.row(slot), self.k, self.bits);
+        for w in &mut self.words[slot * self.wpr..(slot + 1) * self.wpr] {
+            *w = 0;
+        }
+        self.free.push(slot);
+        Some(row)
+    }
+
+    /// The masked lane values stored for `id`.
+    pub fn get(&self, id: u64) -> Option<Vec<u32>> {
+        self.slot(id)
+            .map(|s| unpack_row(self.row(s), self.k, self.bits))
+    }
+
+    /// Iterate `(id, masked lane values)` in unspecified order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, Vec<u32>)> + '_ {
+        self.slot_of
+            .iter()
+            .map(move |(&id, &s)| (id, unpack_row(self.row(s), self.k, self.bits)))
+    }
+
+    /// Iterate `(id, packed row words)` in unspecified order — the
+    /// allocation-light path for snapshotting: rows leave as the words
+    /// they are stored as, never widened.
+    pub fn iter_packed(&self) -> impl Iterator<Item = (u64, &[u64])> + '_ {
+        self.slot_of.iter().map(move |(&id, &s)| (id, self.row(s)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip_masks_lanes() {
+        let mut rows = PackedRows::new(6, 4);
+        let full = vec![0u32, 15, 16, 255, 7, 9];
+        let masked = vec![0u32, 15, 0, 15, 7, 9];
+        let slot = rows.insert(42, &full);
+        assert_eq!(rows.len(), 1);
+        assert!(rows.contains(42));
+        assert_eq!(rows.slot(42), Some(slot));
+        assert_eq!(rows.id_at(slot), 42);
+        assert_eq!(rows.get(42), Some(masked.clone()));
+        assert_eq!(rows.remove(42), Some(masked));
+        assert!(rows.is_empty());
+        assert!(rows.remove(42).is_none());
+    }
+
+    #[test]
+    fn slots_are_recycled_and_rows_zeroed() {
+        let mut rows = PackedRows::new(8, 8);
+        let a: Vec<u32> = (0..8).map(|i| i * 3 + 1).collect();
+        let b: Vec<u32> = (0..8).map(|i| i * 5 + 2).collect();
+        let sa = rows.insert(1, &a);
+        rows.insert(2, &b);
+        let bytes = rows.arena_bytes();
+        rows.remove(1).unwrap();
+        assert!(rows.row(sa).iter().all(|&w| w == 0), "freed row zeroed");
+        // the freed slot is reused; the arena does not grow
+        let sc = rows.insert(3, &a);
+        assert_eq!(sc, sa);
+        assert_eq!(rows.arena_bytes(), bytes);
+        assert_eq!(rows.get(3), Some(a));
+        assert_eq!(rows.get(2), Some(b));
+        let mut ids: Vec<u64> = rows.iter().map(|(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn partial_last_word_is_handled() {
+        // K = 5 at b = 16 ends mid-word (80 bits → 2 words).
+        let mut rows = PackedRows::new(5, 16);
+        assert_eq!(rows.words_per_row(), 2);
+        let full = vec![1u32, 70000, 65535, 0, 31];
+        rows.insert(9, &full);
+        assert_eq!(rows.get(9), Some(vec![1, 70000 % 65536, 65535, 0, 31]));
+        assert_eq!(rows.arena_bytes(), 16);
+    }
+}

@@ -13,8 +13,10 @@
 //!   [`index`]) out of a sharded, crash-recoverable sketch store
 //!   ([`store`]), and ships five pluggable hashing schemes —
 //!   classic MinHash, C-MinHash-(σ, π)/(0, π), OPH, and C-OPH,
-//!   selected end to end via [`sketch::SketchScheme`] — plus exact
-//!   paper theory ([`theory`]) and dataset generators ([`data`]).
+//!   selected end to end via [`sketch::SketchScheme`] — with an
+//!   optional packed b-bit storage plane (`sketch.bits`: 32/b× less
+//!   sketch memory, XOR+popcount query scoring), plus exact paper
+//!   theory ([`theory`]) and dataset generators ([`data`]).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, and the binary is self-contained afterwards.

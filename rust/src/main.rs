@@ -36,20 +36,21 @@ cminhash — C-MinHash sketching & similarity-search service
 USAGE:
   cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
                    [--scheme classic|cmh|zero-pi|oph|coph]
+                   [--bits 1|2|4|8|16|32]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
                    [--shards N] [--persist DIR] [--max-conns N]
   cminhash load    FILE.jsonl [--addr A] [--batch N]
                    (bulk-ingest: one {\"dim\":D,\"indices\":[...]} object
                    per line, streamed through insert_batch)
   cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
-                   [--scheme S] [--shards N]
+                   [--scheme S] [--bits B] [--shards N]
                    (offline only — use the `save` wire op to compact
                    under a running server)
   cminhash figures (--all | --fig N) [--out DIR] [--fast]
   cminhash dataset --kind nips|bbc|mnist|cifar --out FILE.json
                    [--n N] [--seed S] [--stats]
   cminhash sketch  --input FILE.json --out FILE.json
-                   [--num-hashes K] [--seed S] [--scheme S]
+                   [--num-hashes K] [--seed S] [--scheme S] [--bits B]
   cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
   cminhash info    [--artifacts DIR]
   cminhash theory  --d D --f F [--a A] [--k K]
@@ -183,6 +184,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(s) = args.get("scheme") {
         cfg.sketch.scheme = SketchScheme::parse(s)?;
     }
+    if let Some(b) = args.get_parsed::<u8>("bits")? {
+        cfg.sketch.bits = b;
+    }
     if let Some(d) = args.get_parsed::<usize>("dim")? {
         cfg.dim = d;
     }
@@ -209,10 +213,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::spawn(svc.clone(), &cfg.addr)?;
     let (_, store) = svc.stats();
     println!(
-        "serving on {} (engine={:?}, scheme={}, D={}, K={}, shards={}, max-conns={})",
+        "serving on {} (engine={:?}, scheme={}, bits={}, D={}, K={}, shards={}, \
+         max-conns={})",
         server.addr(),
         cfg.engine,
         cfg.sketch.scheme,
+        cfg.sketch.bits,
         cfg.dim,
         cfg.num_hashes,
         store.shards.len(),
@@ -295,6 +301,9 @@ fn cmd_compact(args: &Args) -> Result<()> {
     if let Some(s) = args.get("scheme") {
         cfg.sketch.scheme = SketchScheme::parse(s)?;
     }
+    if let Some(b) = args.get_parsed::<u8>("bits")? {
+        cfg.sketch.bits = b;
+    }
     if let Some(s) = args.get_parsed::<usize>("shards")? {
         cfg.store.shards = s;
     }
@@ -321,9 +330,10 @@ fn cmd_compact(args: &Args) -> Result<()> {
         )));
     }
     let t = Instant::now();
-    let store = PersistentIndex::open(
+    let store = PersistentIndex::open_with_bits(
         cfg.num_hashes,
         cfg.sketch.scheme,
+        cfg.sketch.bits,
         IndexConfig {
             bands: cfg.index.bands,
             rows_per_band: cfg.index.rows_per_band,
@@ -383,6 +393,10 @@ fn cmd_sketch(args: &Args) -> Result<()> {
         Some(s) => SketchScheme::parse(s)?,
         None => SketchScheme::Cmh,
     };
+    // --bits b < 32 emits the masked low-b lanes — the values a packed
+    // server (`serve --bits b`) stores and compares against.
+    let bits = args.get_parsed::<u8>("bits")?.unwrap_or(32);
+    cminhash::sketch::check_sketch_bits(bits)?;
     let ds = BinaryDataset::load(&input)?;
     let k = num_hashes.min(ds.dim() as usize);
     // Offline sketches are interchangeable with a server running the
@@ -390,10 +404,19 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     // OPH divisibility rule) surfaces here as a clean CLI error.
     let hasher = scheme.build(ds.dim() as usize, k, seed)?;
     let t = Instant::now();
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
     let sketches: Vec<Vec<u32>> = ds
         .rows()
         .iter()
-        .map(|r| hasher.sketch_sparse(r.indices()))
+        .map(|r| {
+            let mut sk = hasher.sketch_sparse(r.indices());
+            if bits < 32 {
+                for v in sk.iter_mut() {
+                    *v &= mask;
+                }
+            }
+            sk
+        })
         .collect();
     let dt = t.elapsed();
     let json = cminhash::util::json::Json::Arr(
@@ -404,7 +427,8 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     );
     std::fs::write(&out, json.to_string())?;
     println!(
-        "sketched {} rows (scheme={scheme}, K={k}) in {:.1}ms ({:.0} rows/s) -> {}",
+        "sketched {} rows (scheme={scheme}, bits={bits}, K={k}) in {:.1}ms \
+         ({:.0} rows/s) -> {}",
         ds.len(),
         dt.as_secs_f64() * 1e3,
         ds.len() as f64 / dt.as_secs_f64(),

@@ -21,9 +21,11 @@
 //! ```
 //!
 //! `stats` responses lead with `"scheme"` — the active
-//! [`SketchScheme`]'s canonical name — so clients can check that their
-//! offline sketches are comparable with the server's before mixing
-//! them.  The complete operator-facing reference for every op
+//! [`SketchScheme`]'s canonical name — and `"bits"`, the stored sketch
+//! width (32 = full lanes, < 32 = the packed b-bit plane, with
+//! `"sketch_bytes"` the truthful resident bytes per stored sketch), so
+//! clients can check that their offline sketches are comparable with
+//! the server's before mixing them.  The complete operator-facing reference for every op
 //! (including error classes and `busy` semantics) is
 //! `docs/PROTOCOL.md`; this module is the codec it describes.
 //!
@@ -439,6 +441,8 @@ impl Response {
             } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("scheme", Json::str(scheme.as_str())),
+                ("bits", Json::Num(f64::from(store.bits))),
+                ("sketch_bytes", Json::Num(store.sketch_bytes as f64)),
                 ("metrics", metrics.to_json()),
                 ("stored", Json::Num(store.stored as f64)),
                 (
@@ -702,7 +706,7 @@ mod tests {
     }
 
     #[test]
-    fn stats_response_carries_scheme_and_shard_occupancy() {
+    fn stats_response_carries_scheme_width_and_shard_occupancy() {
         let r = Response::Stats {
             scheme: SketchScheme::Coph,
             metrics: crate::metrics::Metrics::default().snapshot(),
@@ -710,10 +714,14 @@ mod tests {
                 stored: 5,
                 shards: vec![2, 3],
                 persisted_bytes: 77,
+                bits: 8,
+                sketch_bytes: 16,
             },
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.get("scheme").unwrap().as_str().unwrap(), "coph");
+        assert_eq!(j.get("bits").unwrap().as_u64().unwrap(), 8);
+        assert_eq!(j.get("sketch_bytes").unwrap().as_u64().unwrap(), 16);
         assert_eq!(j.get("stored").unwrap().as_u64().unwrap(), 5);
         assert_eq!(j.get("persisted_bytes").unwrap().as_u64().unwrap(), 77);
         assert_eq!(

@@ -14,8 +14,139 @@
 //! Combining both ideas: 2 permutations *and* b-bit sketches means a
 //! similarity service at D = 2³⁰, K = 1024 stores 8 GB of permutations
 //! → 8 KB, and 4 KB/item sketches → 128 B/item at b = 1.
+//!
+//! This module is also the row codec of the serving plane's **packed
+//! storage mode** (`sketch.bits` < 32): [`pack_row`]/[`unpack_row`]
+//! lay K b-bit lanes into contiguous `u64` words, and
+//! [`collision_count`] scores two packed rows with word-level
+//! XOR + popcount — no per-lane extraction on the query hot path.
 
 use super::Sketcher;
+
+/// The sketch widths the serving plane accepts for `sketch.bits`.
+///
+/// All of them divide 64, so a lane never straddles a word boundary
+/// and [`collision_count`] can run its SWAR popcount kernel.  (The
+/// [`BBitSketch`] codec itself accepts any `1 ≤ b ≤ 32`; widths
+/// outside this list just take the scalar scoring path.)
+pub const SUPPORTED_BITS: [u8; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Validate a serving-plane sketch width (`sketch.bits` / `--bits`).
+pub fn check_sketch_bits(bits: u8) -> crate::Result<()> {
+    if !SUPPORTED_BITS.contains(&bits) {
+        return Err(crate::Error::Invalid(format!(
+            "sketch bits must be one of 1|2|4|8|16|32, got {bits}"
+        )));
+    }
+    Ok(())
+}
+
+/// Number of `u64` words one packed row of K b-bit lanes occupies.
+pub fn packed_words(k: usize, bits: u8) -> usize {
+    (k * bits as usize).div_ceil(64)
+}
+
+#[inline]
+fn lane_mask(bits: u8) -> u64 {
+    debug_assert!((1..=32).contains(&bits));
+    (1u64 << bits) - 1
+}
+
+/// Pack `full` (one b-bit lane per hash, low bits kept) into `out`,
+/// which must be exactly [`packed_words`]`(full.len(), bits)` long.
+/// Unused high bits of the last word are left zero, so identical
+/// logical rows always produce identical words.
+pub fn pack_row(full: &[u32], bits: u8, out: &mut [u64]) {
+    debug_assert_eq!(out.len(), packed_words(full.len(), bits));
+    for w in out.iter_mut() {
+        *w = 0;
+    }
+    let b = bits as usize;
+    let mask = lane_mask(bits);
+    for (i, &h) in full.iter().enumerate() {
+        let v = u64::from(h) & mask;
+        let pos = i * b;
+        let (w, off) = (pos / 64, pos % 64);
+        out[w] |= v << off;
+        if off + b > 64 {
+            out[w + 1] |= v >> (64 - off);
+        }
+    }
+}
+
+/// Unpack a row packed by [`pack_row`] back into its K masked lane
+/// values (the low b bits of the original hashes).
+pub fn unpack_row(words: &[u64], k: usize, bits: u8) -> Vec<u32> {
+    let b = bits as usize;
+    let mask = lane_mask(bits);
+    (0..k)
+        .map(|i| {
+            let pos = i * b;
+            let (w, off) = (pos / 64, pos % 64);
+            let mut v = words[w] >> off;
+            if off + b > 64 {
+                v |= words[w + 1] << (64 - off);
+            }
+            (v & mask) as u32
+        })
+        .collect()
+}
+
+/// Number of equal b-bit lanes between two packed rows of K lanes —
+/// the packed plane's query kernel: one XOR per word, a log₂(b) OR
+/// fold to collapse each lane to its low bit, one popcount.
+///
+/// Requires a lane width that divides 64 (every [`SUPPORTED_BITS`]
+/// value qualifies), so lanes never straddle words.  Padding lanes
+/// beyond K are zero in both rows by construction and are subtracted
+/// out.
+pub fn collision_count(a: &[u64], b: &[u64], k: usize, bits: u8) -> usize {
+    debug_assert_eq!(a.len(), b.len(), "packed rows differ in width");
+    debug_assert_eq!(a.len(), packed_words(k, bits));
+    let bw = bits as usize;
+    debug_assert_eq!(64 % bw, 0, "kernel needs a word-aligned lane width");
+    let lanes_per_word = 64 / bw;
+    let mut eq = 0usize;
+    if bits == 1 {
+        for (&x, &y) in a.iter().zip(b) {
+            eq += 64 - (x ^ y).count_ones() as usize;
+        }
+    } else {
+        // Low bit of every lane: e.g. 0x0101…01 for b = 8.
+        let lsb = u64::MAX / lane_mask(bits);
+        for (&x, &y) in a.iter().zip(b) {
+            let mut z = x ^ y;
+            // OR-fold each lane's bits down onto its low bit.  Total
+            // shift < b, so a neighboring lane's bits can never reach
+            // this lane's bit 0.
+            let mut sh = 1usize;
+            while sh < bw {
+                z |= z >> sh;
+                sh <<= 1;
+            }
+            eq += lanes_per_word - (z & lsb).count_ones() as usize;
+        }
+    }
+    // Lanes past K are zero on both sides and always count as equal.
+    eq - (a.len() * lanes_per_word - k)
+}
+
+/// The collision-corrected Jaccard estimate for `collisions` equal
+/// lanes out of K at width `bits`:
+/// Ĵ_b = (c − 2^{−b}) / (1 − 2^{−b}) clamped to [0, 1].
+///
+/// At `bits = 32` no information was discarded (hash values live in
+/// `0..D ≤ 2³²`), so the raw collision fraction is returned untouched
+/// — exactly [`super::estimate`] — keeping the full-width path
+/// bit-for-bit identical to the uncompressed estimator.
+pub fn corrected_estimate(collisions: usize, k: usize, bits: u8) -> f64 {
+    let c = collisions as f64 / k as f64;
+    if bits >= 32 {
+        return c;
+    }
+    let r = 1.0 / (1u64 << bits) as f64;
+    ((c - r) / (1.0 - r)).clamp(0.0, 1.0)
+}
 
 /// A compressed sketch: K values of b bits each, bit-packed into u64
 /// words.
@@ -27,27 +158,41 @@ pub struct BBitSketch {
 }
 
 impl BBitSketch {
-    /// Compress a full sketch to b bits per hash (1 ≤ b ≤ 16).
+    /// Compress a full sketch to b bits per hash (1 ≤ b ≤ 32; b = 32
+    /// keeps every bit and exists so packed and full code paths share
+    /// one codec).
     pub fn compress(full: &[u32], b: u8) -> Self {
-        assert!((1..=16).contains(&b), "need 1 <= b <= 16");
+        assert!((1..=32).contains(&b), "need 1 <= b <= 32");
         let k = full.len();
-        let bits = b as usize;
-        let mask = (1u64 << bits) - 1;
-        let mut words = vec![0u64; (k * bits + 63) / 64];
-        for (i, &h) in full.iter().enumerate() {
-            let v = u64::from(h) & mask;
-            let pos = i * bits;
-            let (w, off) = (pos / 64, pos % 64);
-            words[w] |= v << off;
-            if off + bits > 64 {
-                words[w + 1] |= v >> (64 - off);
-            }
-        }
+        let mut words = vec![0u64; packed_words(k, b)];
+        pack_row(full, b, &mut words);
         BBitSketch {
             bits_per_hash: b,
             k,
             words,
         }
+    }
+
+    /// Reassemble a sketch from its packed words (the snapshot / WAL
+    /// load path).  The word count must match [`packed_words`].
+    pub fn from_words(b: u8, k: usize, words: Vec<u64>) -> crate::Result<Self> {
+        if !(1..=32).contains(&b) {
+            return Err(crate::Error::Invalid(format!(
+                "bits per hash must be in 1..=32, got {b}"
+            )));
+        }
+        if words.len() != packed_words(k, b) {
+            return Err(crate::Error::Invalid(format!(
+                "packed sketch has {} words, K={k} at b={b} needs {}",
+                words.len(),
+                packed_words(k, b)
+            )));
+        }
+        Ok(BBitSketch {
+            bits_per_hash: b,
+            k,
+            words,
+        })
     }
 
     /// Number of hash slots K.
@@ -70,11 +215,16 @@ impl BBitSketch {
         self.words.len() * 8
     }
 
+    /// The packed words (row-major lanes, low-bit first).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// The i-th b-bit value.
     #[inline]
     pub fn get(&self, i: usize) -> u64 {
         let bits = self.bits_per_hash as usize;
-        let mask = (1u64 << bits) - 1;
+        let mask = lane_mask(self.bits_per_hash);
         let pos = i * bits;
         let (w, off) = (pos / 64, pos % 64);
         let mut v = self.words[w] >> off;
@@ -84,29 +234,31 @@ impl BBitSketch {
         v & mask
     }
 
-    /// Raw fraction of colliding b-bit slots.
-    pub fn collision_fraction(&self, other: &BBitSketch) -> f64 {
+    /// Number of colliding b-bit slots (word-level XOR + popcount when
+    /// b divides 64, per-lane scalar comparison otherwise).
+    pub fn collisions(&self, other: &BBitSketch) -> usize {
         assert_eq!(self.k, other.k, "sketch lengths differ");
         assert_eq!(
             self.bits_per_hash, other.bits_per_hash,
             "bit widths differ"
         );
-        let mut eq = 0usize;
-        // Fast path for b dividing 64: word-level XOR + per-lane test.
-        for i in 0..self.k {
-            if self.get(i) == other.get(i) {
-                eq += 1;
-            }
+        if 64 % self.bits_per_hash as usize == 0 {
+            collision_count(&self.words, &other.words, self.k, self.bits_per_hash)
+        } else {
+            (0..self.k).filter(|&i| self.get(i) == other.get(i)).count()
         }
-        eq as f64 / self.k as f64
+    }
+
+    /// Raw fraction of colliding b-bit slots.
+    pub fn collision_fraction(&self, other: &BBitSketch) -> f64 {
+        self.collisions(other) as f64 / self.k as f64
     }
 
     /// Unbiased-corrected Jaccard estimate
-    /// Ĵ_b = (c − 2^{−b}) / (1 − 2^{−b}), clamped to [0, 1].
+    /// Ĵ_b = (c − 2^{−b}) / (1 − 2^{−b}), clamped to [0, 1]
+    /// (the raw fraction at b = 32 — see [`corrected_estimate`]).
     pub fn estimate(&self, other: &BBitSketch) -> f64 {
-        let c = self.collision_fraction(other);
-        let r = 1.0 / (1u64 << self.bits_per_hash) as f64;
-        ((c - r) / (1.0 - r)).clamp(0.0, 1.0)
+        corrected_estimate(self.collisions(other), self.k, self.bits_per_hash)
     }
 }
 
@@ -117,9 +269,9 @@ pub struct BBitSketcher<S: Sketcher> {
 }
 
 impl<S: Sketcher> BBitSketcher<S> {
-    /// Wrap a full-width sketcher.
+    /// Wrap a full-width sketcher (1 ≤ b ≤ 32).
     pub fn new(inner: S, b: u8) -> Self {
-        assert!((1..=16).contains(&b));
+        assert!((1..=32).contains(&b));
         BBitSketcher { inner, b }
     }
 
@@ -143,14 +295,31 @@ mod tests {
     #[test]
     fn pack_unpack_roundtrip() {
         let full: Vec<u32> = (0..100).map(|i| i * 37 % 1024).collect();
-        for b in [1u8, 2, 3, 5, 8, 12, 16] {
+        for b in [1u8, 2, 3, 5, 8, 12, 16, 32] {
             let sk = BBitSketch::compress(&full, b);
             assert_eq!(sk.len(), 100);
-            let mask = (1u64 << b) - 1;
+            let mask = lane_mask(b);
             for (i, &h) in full.iter().enumerate() {
                 assert_eq!(sk.get(i), u64::from(h) & mask, "b={b} i={i}");
             }
+            // the free-function codec agrees with the struct
+            assert_eq!(unpack_row(sk.words(), 100, b), {
+                let masked: Vec<u32> =
+                    full.iter().map(|&h| (u64::from(h) & mask) as u32).collect();
+                masked
+            });
         }
+    }
+
+    #[test]
+    fn from_words_validates_width() {
+        let full: Vec<u32> = (0..10).collect();
+        let sk = BBitSketch::compress(&full, 4);
+        let back = BBitSketch::from_words(4, 10, sk.words().to_vec()).unwrap();
+        assert_eq!(back, sk);
+        assert!(BBitSketch::from_words(4, 10, vec![0; 2]).is_err());
+        assert!(BBitSketch::from_words(0, 10, vec![]).is_err());
+        assert!(BBitSketch::from_words(33, 10, vec![0; 6]).is_err());
     }
 
     #[test]
@@ -168,6 +337,51 @@ mod tests {
         assert_eq!(one_bit.size_bytes(), 128);
         let two_bit = BBitSketch::compress(&full, 2);
         assert_eq!(two_bit.size_bytes(), 256);
+    }
+
+    #[test]
+    fn popcount_kernel_matches_scalar_count() {
+        let mut rng = Rng::seed_from_u64(9);
+        for b in SUPPORTED_BITS {
+            for k in [1usize, 7, 16, 63, 64, 100, 129] {
+                let va: Vec<u32> = (0..k).map(|_| rng.range_u32(0, 1 << 20)).collect();
+                // correlate half the slots so collisions actually occur
+                let vb: Vec<u32> = va
+                    .iter()
+                    .map(|&v| {
+                        if rng.bool_with(0.5) {
+                            v
+                        } else {
+                            rng.range_u32(0, 1 << 20)
+                        }
+                    })
+                    .collect();
+                let sa = BBitSketch::compress(&va, b);
+                let sb = BBitSketch::compress(&vb, b);
+                let scalar =
+                    (0..k).filter(|&i| sa.get(i) == sb.get(i)).count();
+                assert_eq!(
+                    collision_count(sa.words(), sb.words(), k, b),
+                    scalar,
+                    "b={b} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn thirty_two_bit_estimate_is_the_raw_collision_fraction() {
+        // bits = 32 discards nothing: corrected == raw == estimate(),
+        // exactly (no correction term, no float drift).
+        let va: Vec<u32> = (0..128).map(|i| i * 31 % 512).collect();
+        let vb: Vec<u32> = va
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| if i % 3 == 0 { v } else { v + 1 })
+            .collect();
+        let sa = BBitSketch::compress(&va, 32);
+        let sb = BBitSketch::compress(&vb, 32);
+        assert_eq!(sa.estimate(&sb), crate::sketch::estimate(&va, &vb));
     }
 
     #[test]
@@ -210,6 +424,16 @@ mod tests {
         let raw = a.collision_fraction(&b);
         assert!(raw > 0.3, "raw 1-bit collisions should be ~0.5, got {raw}");
         assert!(a.estimate(&b) < 0.15, "corrected estimate near 0");
+    }
+
+    #[test]
+    fn check_sketch_bits_accepts_exactly_the_supported_widths() {
+        for b in SUPPORTED_BITS {
+            check_sketch_bits(b).unwrap();
+        }
+        for b in [0u8, 3, 5, 6, 7, 9, 12, 24, 31, 33, 64] {
+            assert!(check_sketch_bits(b).is_err(), "b={b}");
+        }
     }
 
     #[test]

@@ -118,15 +118,17 @@ mod tests {
 
     #[test]
     fn estimator_tracks_true_jaccard() {
+        // The shared structured-pair generator is the one corpus all
+        // statistical gates (tests *and* benches) measure against.
         let d = 512;
         let h = CMinHasher::new(d, 512, 3);
-        let v = SparseVec::new(d as u32, (0..64).collect()).unwrap();
-        let w = SparseVec::new(d as u32, (32..96).collect()).unwrap();
+        let (v, w, truth) =
+            crate::util::testutil::overlap_pair(d as u32, 64, 64, 32); // J = 1/3
+        assert_eq!(truth, v.jaccard(&w));
         let est = estimate(
             &h.sketch_sparse(v.indices()),
             &h.sketch_sparse(w.indices()),
         );
-        let truth = v.jaccard(&w); // 32/96 = 1/3
         assert!((est - truth).abs() < 0.12, "est={est} truth={truth}");
     }
 }

@@ -31,7 +31,10 @@ mod perm;
 mod scheme;
 mod sparse;
 
-pub use bbit::{BBitSketch, BBitSketcher};
+pub use bbit::{
+    check_sketch_bits, collision_count, corrected_estimate, pack_row, packed_words,
+    unpack_row, BBitSketch, BBitSketcher, SUPPORTED_BITS,
+};
 pub use cminhash::{CMinHasher, ZeroPiHasher};
 pub use estimate::{estimate, estimate_batch_mae, mean_absolute_error, mean_squared_error};
 pub use minhash::ClassicMinHasher;

@@ -46,6 +46,11 @@ pub struct StoreStats {
     pub shards: Vec<usize>,
     /// Bytes on disk (snapshot + WAL); 0 without persistence.
     pub persisted_bytes: u64,
+    /// Bits stored per hash (32 = full width, < 32 = packed plane).
+    pub bits: u8,
+    /// Resident bytes per stored sketch (truthful across storage
+    /// modes: K·4 full-width, K·bits/8 rounded up to words packed).
+    pub sketch_bytes: u64,
 }
 
 struct PersistState {
@@ -82,9 +87,12 @@ impl PersistentIndex {
     /// before the WAL accepts its first record, so every durable
     /// directory knows its scheme from birth — which makes a
     /// record-bearing WAL without a snapshot provably a legacy
-    /// pre-scheme store (necessarily `cmh`; any other configured
-    /// scheme is refused).  With `dir = None` the store is purely
-    /// in-memory.
+    /// pre-scheme store (necessarily `cmh` at full width; any other
+    /// configured scheme or width is refused).  With `dir = None` the
+    /// store is purely in-memory.
+    ///
+    /// Equivalent to [`PersistentIndex::open_with_bits`] at
+    /// `bits = 32` (full-width rows).
     pub fn open(
         k: usize,
         scheme: SketchScheme,
@@ -92,7 +100,26 @@ impl PersistentIndex {
         num_shards: usize,
         dir: Option<&Path>,
     ) -> crate::Result<Self> {
-        let index = ShardedIndex::new(k, cfg, num_shards)?;
+        Self::open_with_bits(k, scheme, 32, cfg, num_shards, dir)
+    }
+
+    /// [`PersistentIndex::open`] with an explicit sketch width:
+    /// `bits = 32` keeps full `u32` rows and the exact pre-b-bit
+    /// on-disk formats; `bits < 32` stores, snapshots, and WAL-logs
+    /// bit-packed rows.  The width is stamped into the snapshot
+    /// alongside K and the scheme, and a mismatched width refuses to
+    /// open with an error naming both — packed lanes from different
+    /// widths are incomparable bytes, exactly like sketches from
+    /// different schemes.
+    pub fn open_with_bits(
+        k: usize,
+        scheme: SketchScheme,
+        bits: u8,
+        cfg: IndexConfig,
+        num_shards: usize,
+        dir: Option<&Path>,
+    ) -> crate::Result<Self> {
+        let index = ShardedIndex::with_bits(k, cfg, bits, num_shards)?;
         let Some(dir) = dir else {
             return Ok(PersistentIndex {
                 index,
@@ -137,7 +164,19 @@ impl PersistentIndex {
                     data.scheme
                 )));
             }
-            if data.k == k && data.scheme == scheme {
+            if data.bits != bits && !empty_stamp {
+                return Err(crate::Error::Invalid(format!(
+                    "snapshot in {} was written at bits={} but the service \
+                     is configured for bits={bits}; packed lanes from \
+                     different widths are incomparable — serve this \
+                     directory with --bits {}, or re-ingest the corpus \
+                     into a fresh directory under the new width",
+                    dir.display(),
+                    data.bits,
+                    data.bits
+                )));
+            }
+            if data.k == k && data.scheme == scheme && data.bits == bits {
                 for (id, sketch) in &data.items {
                     index.insert_with_id(*id, sketch)?;
                 }
@@ -145,22 +184,25 @@ impl PersistentIndex {
                 snapshot_bytes = Some(std::fs::metadata(&snap_path)?.len());
             }
             // else: a mismatched but empty stamp — fall through and
-            // re-stamp under the configured (K, scheme) after replay.
-        } else if wal_has_records && scheme != SketchScheme::Cmh {
+            // re-stamp under the configured (K, scheme, bits) after
+            // replay.
+        } else if wal_has_records && (scheme != SketchScheme::Cmh || bits != 32) {
             // No snapshot but a record-bearing WAL.  This build stamps
             // a directory at its first successful open, before any
             // record can be appended, so this state can only be a
             // legacy pre-scheme store — necessarily written by the
-            // cmh-only era.  Refusing any other scheme here closes the
-            // gap where a WAL-only store would silently replay
-            // incomparable sketches under a freshly-configured scheme
-            // and then be re-stamped wrongly later.
+            // cmh-only, full-width era.  Refusing any other scheme or
+            // width here closes the gap where a WAL-only store would
+            // silently replay incomparable sketches under a
+            // freshly-configured scheme/width and then be re-stamped
+            // wrongly later.
             return Err(crate::Error::Invalid(format!(
                 "{} holds WAL records but no snapshot: a legacy \
-                 pre-scheme store, necessarily written under 'cmh', \
-                 which cannot be served as '{scheme}' — open it with \
-                 --scheme cmh, or re-ingest the corpus into a fresh \
-                 directory under the new scheme",
+                 pre-stamp store, necessarily written under 'cmh' at \
+                 full width, which cannot be served as '{scheme}' at \
+                 bits={bits} — open it with --scheme cmh --bits 32, or \
+                 re-ingest the corpus into a fresh directory under the \
+                 new configuration",
                 dir.display()
             )));
         }
@@ -177,6 +219,26 @@ impl PersistentIndex {
                         index.insert_with_id(id, &sketch)?;
                     }
                 }
+                WalRecord::InsertPacked {
+                    bits: rec_bits,
+                    items,
+                } => {
+                    // A packed record can only postdate this build's
+                    // width stamp; its width disagreeing with the
+                    // configuration means the directory was tampered
+                    // with or mixed — refuse rather than remask lanes.
+                    if rec_bits != bits {
+                        return Err(crate::Error::Invalid(format!(
+                            "WAL in {} holds packed rows at bits={rec_bits} \
+                             but the service is configured for bits={bits}",
+                            dir.display()
+                        )));
+                    }
+                    for (id, sketch) in items {
+                        let _ = index.delete(id);
+                        index.insert_with_id(id, &sketch)?;
+                    }
+                }
                 WalRecord::Delete { id } => {
                     let _ = index.delete(id);
                 }
@@ -185,10 +247,10 @@ impl PersistentIndex {
         // Replay succeeded: stamp the directory if it still needs one
         // (fresh dir, legacy cmh store, or an abandoned empty stamp
         // being re-stamped).  From here on every record the WAL ever
-        // holds postdates a scheme-carrying snapshot.
+        // holds postdates a scheme- and width-carrying snapshot.
         let snapshot_bytes = match snapshot_bytes {
             Some(bytes) => bytes,
-            None => Snapshot::write(&snap_path, k, scheme, 0, &[])?,
+            None => Snapshot::write(&snap_path, k, scheme, bits, 0, &[])?,
         };
         Ok(PersistentIndex {
             index,
@@ -216,6 +278,26 @@ impl PersistentIndex {
         self.persist.is_some()
     }
 
+    /// The WAL record for freshly inserted `(id, sketch)` rows: the
+    /// full-width record family at `bits = 32` (byte-identical to the
+    /// pre-b-bit log), one packed record otherwise.  Packed rows need
+    /// no pre-masking here: the codec's `pack_row` masks every lane on
+    /// encode, so the logged bytes are exactly what the store serves
+    /// and a replay reconstructs resident state bit-for-bit.
+    fn insert_record(&self, mut items: Vec<(u64, Vec<u32>)>) -> WalRecord {
+        let bits = self.index.bits();
+        if bits == 32 {
+            if items.len() == 1 {
+                let (id, sketch) = items.pop().expect("one item");
+                WalRecord::Insert { id, sketch }
+            } else {
+                WalRecord::InsertBatch { items }
+            }
+        } else {
+            WalRecord::InsertPacked { bits, items }
+        }
+    }
+
     /// Insert a sketch under a fresh id, WAL-logging it first-class.
     /// If the log append fails (disk full, I/O error) the in-memory
     /// insert is rolled back, so memory and log never diverge; the
@@ -226,7 +308,8 @@ impl PersistentIndex {
             Some(m) => {
                 let mut st = m.lock().unwrap();
                 let id = self.index.insert(&sketch)?;
-                if let Err(e) = st.wal.append(&WalRecord::Insert { id, sketch }) {
+                let rec = self.insert_record(vec![(id, sketch)]);
+                if let Err(e) = st.wal.append(&rec) {
                     let _ = self.index.delete(id);
                     return Err(e);
                 }
@@ -249,13 +332,12 @@ impl PersistentIndex {
             Some(m) => {
                 let mut st = m.lock().unwrap();
                 let ids = self.index.insert_many(sketches)?;
-                let rec = WalRecord::InsertBatch {
-                    items: ids
-                        .iter()
+                let rec = self.insert_record(
+                    ids.iter()
                         .zip(sketches)
                         .map(|(&id, sketch)| (id, sketch.clone()))
                         .collect(),
-                };
+                );
                 if let Err(e) = st.wal.append(&rec) {
                     for &id in &ids {
                         let _ = self.index.delete(id);
@@ -300,13 +382,29 @@ impl PersistentIndex {
             ));
         };
         let mut st = m.lock().unwrap();
-        let bytes = Snapshot::write(
-            &st.dir.join(SNAPSHOT_FILE),
-            self.index.num_hashes(),
-            self.scheme,
-            self.index.next_id(),
-            &self.index.items(),
-        )?;
+        let snap_path = st.dir.join(SNAPSHOT_FILE);
+        // Packed stores snapshot their rows as the words they already
+        // hold — widening every lane to u32 first would transiently
+        // cost 32/b× the packed footprint, exactly when the corpus is
+        // big enough for that to hurt.
+        let bytes = match self.index.packed_items() {
+            Some(items) => Snapshot::write_packed(
+                &snap_path,
+                self.index.num_hashes(),
+                self.scheme,
+                self.index.bits(),
+                self.index.next_id(),
+                &items,
+            )?,
+            None => Snapshot::write(
+                &snap_path,
+                self.index.num_hashes(),
+                self.scheme,
+                self.index.bits(),
+                self.index.next_id(),
+                &self.index.items(),
+            )?,
+        };
         // The snapshot is durable (fsynced file + directory entry);
         // make the truncation durable too so a reboot never replays a
         // stale pre-compaction log on top of the new snapshot (replay
@@ -370,6 +468,8 @@ impl PersistentIndex {
             stored: self.index.len(),
             shards: self.index.shard_sizes(),
             persisted_bytes,
+            bits: self.index.bits(),
+            sketch_bytes: self.index.sketch_bytes_per_item() as u64,
         }
     }
 }
@@ -472,6 +572,137 @@ mod tests {
         let batched = store.query_many(&probes, 2).unwrap();
         assert_eq!(batched[0], store.query(&sk(1), 2).unwrap());
         assert_eq!(batched[1], store.query(&sk(3), 2).unwrap());
+    }
+
+    #[test]
+    fn packed_store_recovers_from_wal_and_snapshot() {
+        // The packed plane's crash-recovery contract: WAL-tail replay,
+        // compaction, and reopen all reconstruct the same masked rows.
+        let dir = TempDir::new().unwrap();
+        let open8 = |d: &std::path::Path| {
+            PersistentIndex::open_with_bits(8, SketchScheme::Cmh, 8, cfg(), 2, Some(d))
+        };
+        let masked = |s: &[u32]| s.iter().map(|&v| v & 0xff).collect::<Vec<u32>>();
+        let (a, b, c);
+        {
+            let store = open8(dir.path()).unwrap();
+            assert_eq!(store.stats().bits, 8);
+            assert_eq!(store.stats().sketch_bytes, 8, "8 lanes × 8 bits = 1 word");
+            a = store.insert(sk(1)).unwrap();
+            let ids = store.insert_many(&[sk(2), sk(3)]).unwrap();
+            b = ids[0];
+            c = ids[1];
+            store.delete(a).unwrap();
+            // dropped without compacting: recovery is pure WAL replay
+        }
+        {
+            let store = open8(dir.path()).unwrap();
+            assert_eq!(store.len(), 2);
+            assert!(store.sketch(a).is_none());
+            assert_eq!(store.sketch(b), Some(masked(&sk(2))));
+            assert_eq!(store.sketch(c), Some(masked(&sk(3))));
+            assert_eq!(store.estimate(b, b).unwrap(), 1.0);
+            // compact folds the packed rows into a CMHSNAP3 image
+            assert!(store.compact().unwrap() > 0);
+            store.insert(sk(4)).unwrap(); // WAL tail on top of the snapshot
+        }
+        let store = open8(dir.path()).unwrap();
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.sketch(3), Some(masked(&sk(4))));
+        // a self-probe through the recovered packed index is exact
+        let hits = store.query(&sk(2), 1).unwrap();
+        assert_eq!(hits[0].id, b);
+        assert_eq!(hits[0].score, 1.0);
+    }
+
+    #[test]
+    fn mismatched_bits_is_rejected_on_open() {
+        let dir = TempDir::new().unwrap();
+        {
+            let store = PersistentIndex::open_with_bits(
+                8,
+                SketchScheme::Cmh,
+                4,
+                cfg(),
+                1,
+                Some(dir.path()),
+            )
+            .unwrap();
+            store.insert(sk(1)).unwrap();
+            store.compact().unwrap();
+        }
+        // wrong width refuses with an error naming both widths
+        match PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path())) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("bits=4") && msg.contains("bits=32"), "{msg}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        // ...and so does a different packed width
+        assert!(PersistentIndex::open_with_bits(
+            8,
+            SketchScheme::Cmh,
+            8,
+            cfg(),
+            1,
+            Some(dir.path())
+        )
+        .is_err());
+        // the stamped width still opens
+        let store = PersistentIndex::open_with_bits(
+            8,
+            SketchScheme::Cmh,
+            4,
+            cfg(),
+            1,
+            Some(dir.path()),
+        )
+        .unwrap();
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn legacy_full_width_dirs_refuse_packed_service() {
+        // A store persisted at full width (today's default) must not
+        // silently serve as a packed store: CMHSNAP2 loads as bits=32
+        // and the mismatch is refused.
+        let dir = TempDir::new().unwrap();
+        {
+            let store =
+                PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(dir.path()))
+                    .unwrap();
+            store.insert(sk(1)).unwrap();
+            store.compact().unwrap();
+        }
+        match PersistentIndex::open_with_bits(
+            8,
+            SketchScheme::Cmh,
+            1,
+            cfg(),
+            1,
+            Some(dir.path()),
+        ) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("bits=32") && msg.contains("bits=1"), "{msg}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        // an abandoned *empty* full-width stamp re-stamps instead
+        let fresh = TempDir::new().unwrap();
+        drop(
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 1, Some(fresh.path()))
+                .unwrap(),
+        );
+        let store = PersistentIndex::open_with_bits(
+            8,
+            SketchScheme::Cmh,
+            2,
+            cfg(),
+            1,
+            Some(fresh.path()),
+        )
+        .unwrap();
+        assert_eq!(store.stats().bits, 2);
     }
 
     #[test]

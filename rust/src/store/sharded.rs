@@ -10,7 +10,7 @@
 //! global top-k).
 
 use crate::index::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};
-use crate::sketch::estimate;
+use crate::sketch::{corrected_estimate, packed_words};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
 
@@ -55,6 +55,7 @@ const PARALLEL_QUERY_MIN_ITEMS: usize = 8192;
 pub struct ShardedIndex {
     k: usize,
     cfg: IndexConfig,
+    bits: u8,
     next_id: AtomicU64,
     // Resident-item count maintained on insert/delete so hot read
     // paths (len, the fan-out threshold, stats) never have to sweep
@@ -64,19 +65,33 @@ pub struct ShardedIndex {
 }
 
 impl ShardedIndex {
-    /// Create an index over sketches of length `k`, partitioned into
-    /// `num_shards` (≥ 1) shards.
+    /// Create a full-width index over sketches of length `k`,
+    /// partitioned into `num_shards` (≥ 1) shards (equivalent to
+    /// [`ShardedIndex::with_bits`] at `bits = 32`).
     pub fn new(k: usize, cfg: IndexConfig, num_shards: usize) -> crate::Result<Self> {
+        Self::with_bits(k, cfg, 32, num_shards)
+    }
+
+    /// Create an index over sketches of length `k` storing `bits` bits
+    /// per hash in every shard (32 = full width, smaller = packed
+    /// bit-matrix rows scored by the popcount kernel).
+    pub fn with_bits(
+        k: usize,
+        cfg: IndexConfig,
+        bits: u8,
+        num_shards: usize,
+    ) -> crate::Result<Self> {
         if num_shards == 0 {
             return Err(crate::Error::Invalid("need at least one shard".into()));
         }
         let mut shards = Vec::with_capacity(num_shards);
         for _ in 0..num_shards {
-            shards.push(RwLock::new(BandingIndex::new(k, cfg)?));
+            shards.push(RwLock::new(BandingIndex::with_bits(k, cfg, bits)?));
         }
         Ok(ShardedIndex {
             k,
             cfg,
+            bits,
             next_id: AtomicU64::new(0),
             resident: AtomicUsize::new(0),
             shards,
@@ -86,6 +101,21 @@ impl ShardedIndex {
     /// Sketch length K.
     pub fn num_hashes(&self) -> usize {
         self.k
+    }
+
+    /// Bits stored per hash (32 = full width).
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Resident bytes per stored sketch row (truthful across storage
+    /// modes: K·4 full-width, one packed row of u64 words otherwise).
+    pub fn sketch_bytes_per_item(&self) -> usize {
+        if self.bits == 32 {
+            self.k * 4
+        } else {
+            packed_words(self.k, self.bits) * 8
+        }
     }
 
     /// Band configuration (shared by every shard).
@@ -193,16 +223,16 @@ impl ShardedIndex {
         Ok(removed)
     }
 
-    /// Stored sketch for an id (cloned out of the owning shard).
+    /// Stored sketch for an id (cloned out of the owning shard;
+    /// values are masked to the stored width in packed mode).
     pub fn sketch(&self, id: u64) -> Option<Vec<u32>> {
-        self.shards[self.shard_of(id)]
-            .read()
-            .unwrap()
-            .sketch(id)
-            .map(|s| s.to_vec())
+        self.shards[self.shard_of(id)].read().unwrap().sketch(id)
     }
 
-    /// Estimate J between two stored ids.
+    /// Estimate J between two stored ids.  In packed storage mode the
+    /// stored rows only keep b bits per lane, so the raw collision
+    /// fraction is fed through the unbiased b-bit correction; at
+    /// `bits = 32` this is exactly the plain collision estimator.
     pub fn estimate(&self, a: u64, b: u64) -> crate::Result<f64> {
         let sa = self
             .sketch(a)
@@ -210,7 +240,8 @@ impl ShardedIndex {
         let sb = self
             .sketch(b)
             .ok_or_else(|| crate::Error::Invalid(format!("unknown id {b}")))?;
-        Ok(estimate(&sa, &sb))
+        let collisions = sa.iter().zip(&sb).filter(|(x, y)| x == y).count();
+        Ok(corrected_estimate(collisions, self.k, self.bits))
     }
 
     /// Top-k neighbors of a query sketch across all shards.
@@ -330,17 +361,34 @@ impl ShardedIndex {
         let mut out = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let guard = shard.read().unwrap();
-            out.extend(guard.iter().map(|(id, s)| (id, s.to_vec())));
+            out.extend(guard.iter());
         }
         out.sort_unstable_by_key(|(id, _)| *id);
         out
+    }
+
+    /// All `(id, packed row words)` pairs sorted by id when in packed
+    /// mode, `None` at full width — the snapshot path that copies rows
+    /// as stored words instead of widening every lane (see
+    /// [`BandingIndex::packed_items`]).
+    pub fn packed_items(&self) -> Option<Vec<(u64, Vec<u64>)>> {
+        if self.bits == 32 {
+            return None;
+        }
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            out.extend(guard.packed_items().expect("packed shards"));
+        }
+        out.sort_unstable_by_key(|(id, _)| *id);
+        Some(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sketch::{CMinHasher, Sketcher};
+    use crate::sketch::{estimate, CMinHasher, Sketcher};
 
     fn cfg() -> IndexConfig {
         IndexConfig {
@@ -485,6 +533,39 @@ mod tests {
         }
         // length validation covers every row
         assert!(idx.query_many(&[vec![0u32; 63]], 5).is_err());
+    }
+
+    #[test]
+    fn packed_shards_route_query_and_estimate_like_full_width() {
+        // The packed plane through the sharded layer: same routing,
+        // self-probes exact, estimates corrected, memory accounting
+        // truthful.
+        let full = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let packed = ShardedIndex::with_bits(64, cfg(), 8, 4).unwrap();
+        assert_eq!(packed.bits(), 8);
+        assert_eq!(packed.sketch_bytes_per_item(), 64);
+        assert_eq!(full.sketch_bytes_per_item(), 256);
+        let sks = sketches(12);
+        for sk in &sks {
+            full.insert(sk).unwrap();
+            packed.insert(sk).unwrap();
+        }
+        for (i, sk) in sks.iter().enumerate() {
+            let hits = packed.query(sk, 1).unwrap();
+            assert_eq!(hits[0].id, i as u64, "self probe row {i}");
+            assert_eq!(hits[0].score, 1.0);
+        }
+        // self-estimate is exactly 1 even after the b-bit correction
+        assert_eq!(packed.estimate(3, 3).unwrap(), 1.0);
+        // cross estimates stay probabilities
+        let jhat = packed.estimate(0, 1).unwrap();
+        assert!((0.0..=1.0).contains(&jhat));
+        // delete + reinsert keeps working through the packed shards
+        let removed = packed.delete(3).unwrap();
+        assert_eq!(removed, sks[3].iter().map(|&v| v & 0xff).collect::<Vec<u32>>());
+        assert!(packed.query(&sks[3], 8).unwrap().iter().all(|n| n.id != 3));
+        packed.insert_with_id(3, &sks[3]).unwrap();
+        assert_eq!(packed.query(&sks[3], 1).unwrap()[0].id, 3);
     }
 
     #[test]

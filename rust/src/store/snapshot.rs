@@ -1,9 +1,14 @@
 //! Compact binary snapshot of the whole sketch store.
 //!
 //! ```text
-//! snapshot := magic "CMHSNAP2" | k:u32le | scheme:u32le | next_id:u64le
-//!           | count:u64le | count × (id:u64le | k × u32le)
-//!           | crc:u64le                     (FNV-1a 64 over all prior bytes)
+//! snapshot  := v2 | v3
+//! v2        := magic "CMHSNAP2" | k:u32le | scheme:u32le | next_id:u64le
+//!            | count:u64le | count × (id:u64le | k × u32le)
+//!            | crc:u64le                    (FNV-1a 64 over all prior bytes)
+//! v3        := magic "CMHSNAP3" | k:u32le | scheme:u32le | bits:u32le
+//!            | next_id:u64le | count:u64le
+//!            | count × (id:u64le | W × u64le)   W = ceil(K·bits / 64)
+//!            | crc:u64le
 //! ```
 //!
 //! Written to a temp file, fsynced, then renamed into place, so a
@@ -13,18 +18,22 @@
 //!
 //! **Versioning / migration.**  `CMHSNAP2` added the `scheme` field
 //! (the [`SketchScheme`] code) so a store built under one hashing
-//! scheme refuses to load under another — sketches from different
-//! schemes are incomparable bytes, and silently mixing them would
-//! corrupt every estimate.  Legacy `CMHSNAP1` snapshots (which predate
-//! scheme selection and were only ever produced by the `cmh` scheme)
-//! still load, reporting `scheme = cmh`; the next compaction rewrites
-//! them as `CMHSNAP2`.
+//! scheme refuses to load under another.  `CMHSNAP3` adds the sketch
+//! width: packed stores (`sketch.bits` < 32) persist their rows as
+//! the same bit-packed words they serve from, shrinking the snapshot
+//! by ≈ 32/b×.  A full-width store (`bits = 32`) still writes
+//! byte-identical `CMHSNAP2` images — the on-disk format only changes
+//! when the storage mode does.  Legacy `CMHSNAP1` (no scheme) and
+//! `CMHSNAP2` (no width) snapshots load as `scheme = cmh` /
+//! `bits = 32` respectively; a packed store refuses them (mismatched
+//! width) with an error naming both widths, same as the scheme stamp.
 
-use crate::sketch::SketchScheme;
+use crate::sketch::{pack_row, packed_words, unpack_row, SketchScheme};
 use crate::util::fnv::fnv1a64;
 use std::io::Write;
 use std::path::Path;
 
+const MAGIC_V3: &[u8; 8] = b"CMHSNAP3";
 const MAGIC_V2: &[u8; 8] = b"CMHSNAP2";
 const MAGIC_V1: &[u8; 8] = b"CMHSNAP1";
 
@@ -40,33 +49,81 @@ pub struct SnapshotData {
     /// Hashing scheme the sketches were produced by (`cmh` for legacy
     /// v1 snapshots, which predate scheme selection).
     pub scheme: SketchScheme,
+    /// Bits stored per hash (32 for v1/v2 snapshots, which predate
+    /// packed storage).
+    pub bits: u8,
     /// Fresh-id floor at snapshot time.
     pub next_id: u64,
-    /// All `(id, sketch)` pairs, sorted by id.
+    /// All `(id, sketch)` pairs, sorted by id (values masked to
+    /// `bits` in packed snapshots).
     pub items: Vec<(u64, Vec<u32>)>,
 }
 
 /// Snapshot codec (see the module docs for the byte format).
 pub struct Snapshot;
 
+/// The shared header prefix (`magic … count`) of both formats.
+fn header(k: usize, scheme: SketchScheme, bits: u8, next_id: u64, count: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    if bits != 32 {
+        buf.extend_from_slice(MAGIC_V3);
+        buf.extend_from_slice(&(k as u32).to_le_bytes());
+        buf.extend_from_slice(&scheme.code().to_le_bytes());
+        buf.extend_from_slice(&u32::from(bits).to_le_bytes());
+    } else {
+        buf.extend_from_slice(MAGIC_V2);
+        buf.extend_from_slice(&(k as u32).to_le_bytes());
+        buf.extend_from_slice(&scheme.code().to_le_bytes());
+    }
+    buf.extend_from_slice(&next_id.to_le_bytes());
+    buf.extend_from_slice(&(count as u64).to_le_bytes());
+    buf
+}
+
+/// Append the trailing checksum and land `buf` at `path` atomically
+/// (temp file + fsync + rename + directory fsync).
+fn finish(path: &Path, mut buf: Vec<u8>) -> crate::Result<u64> {
+    let crc = fnv1a64(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    // The rename itself is directory metadata: fsync the directory
+    // so the new snapshot is durable before the caller truncates
+    // the WAL — otherwise power loss could keep the truncation but
+    // drop the rename, losing every folded record.
+    #[cfg(unix)]
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::File::open(parent)?.sync_all()?;
+    }
+    Ok(buf.len() as u64)
+}
+
 impl Snapshot {
     /// Serialize `items` (each sketch of length `k`, produced by
-    /// `scheme`) to `path` atomically (temp file + fsync + rename).
-    /// Returns the snapshot size in bytes.
+    /// `scheme`, stored at `bits` per hash) to `path` atomically
+    /// (temp file + fsync + rename).  `bits = 32` emits the v2
+    /// format byte-for-byte; narrower widths emit v3 with bit-packed
+    /// rows.  Returns the snapshot size in bytes.
     pub fn write(
         path: &Path,
         k: usize,
         scheme: SketchScheme,
+        bits: u8,
         next_id: u64,
         items: &[(u64, Vec<u32>)],
     ) -> crate::Result<u64> {
-        let mut buf =
-            Vec::with_capacity(8 + 4 + 4 + 8 + 8 + items.len() * (8 + 4 * k) + 8);
-        buf.extend_from_slice(MAGIC_V2);
-        buf.extend_from_slice(&(k as u32).to_le_bytes());
-        buf.extend_from_slice(&scheme.code().to_le_bytes());
-        buf.extend_from_slice(&next_id.to_le_bytes());
-        buf.extend_from_slice(&(items.len() as u64).to_le_bytes());
+        let packed = bits != 32;
+        let wpr = packed_words(k, bits);
+        let row_bytes = if packed { 8 * wpr } else { 4 * k };
+        let mut buf = header(k, scheme, bits, next_id, items.len());
+        buf.reserve(items.len() * (8 + row_bytes) + 8);
+        let mut row = vec![0u64; wpr];
         for (id, sketch) in items {
             if sketch.len() != k {
                 return Err(bad(format!(
@@ -75,34 +132,58 @@ impl Snapshot {
                 )));
             }
             buf.extend_from_slice(&id.to_le_bytes());
-            for v in sketch {
-                buf.extend_from_slice(&v.to_le_bytes());
+            if packed {
+                pack_row(sketch, bits, &mut row);
+                for w in &row {
+                    buf.extend_from_slice(&w.to_le_bytes());
+                }
+            } else {
+                for v in sketch {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
             }
         }
-        let crc = fnv1a64(&buf);
-        buf.extend_from_slice(&crc.to_le_bytes());
+        finish(path, buf)
+    }
 
-        let tmp = path.with_extension("tmp");
-        {
-            let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(&buf)?;
-            f.sync_all()?;
+    /// [`Snapshot::write`] for rows that are *already* bit-packed
+    /// (`bits` < 32 only): emits byte-identical `CMHSNAP3` images
+    /// without widening a single lane — the compaction path of a
+    /// packed store, whose transient memory stays proportional to the
+    /// packed footprint instead of 32/b× larger.
+    pub fn write_packed(
+        path: &Path,
+        k: usize,
+        scheme: SketchScheme,
+        bits: u8,
+        next_id: u64,
+        items: &[(u64, Vec<u64>)],
+    ) -> crate::Result<u64> {
+        if bits == 32 {
+            return Err(bad("write_packed needs a packed width (bits < 32)"));
         }
-        std::fs::rename(&tmp, path)?;
-        // The rename itself is directory metadata: fsync the directory
-        // so the new snapshot is durable before the caller truncates
-        // the WAL — otherwise power loss could keep the truncation but
-        // drop the rename, losing every folded record.
-        #[cfg(unix)]
-        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
-            std::fs::File::open(parent)?.sync_all()?;
+        let wpr = packed_words(k, bits);
+        let mut buf = header(k, scheme, bits, next_id, items.len());
+        buf.reserve(items.len() * (8 + 8 * wpr) + 8);
+        for (id, row) in items {
+            if row.len() != wpr {
+                return Err(bad(format!(
+                    "id {id} has {} packed words, K={k} at bits={bits} needs {wpr}",
+                    row.len()
+                )));
+            }
+            buf.extend_from_slice(&id.to_le_bytes());
+            for w in row {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
         }
-        Ok(buf.len() as u64)
+        finish(path, buf)
     }
 
     /// Load and validate a snapshot (magic, checksum, exact framing).
-    /// Accepts the current `CMHSNAP2` format and legacy `CMHSNAP1`
-    /// (no scheme field; decoded as `cmh` — see the module docs).
+    /// Accepts the current `CMHSNAP3` packed format, full-width
+    /// `CMHSNAP2`, and legacy `CMHSNAP1` (no scheme field; decoded as
+    /// `cmh` — see the module docs).
     pub fn load(path: &Path) -> crate::Result<SnapshotData> {
         let bytes = std::fs::read(path)?;
         if bytes.len() < 8 + 8 {
@@ -115,30 +196,45 @@ impl Snapshot {
             return Err(bad("checksum mismatch"));
         }
         let magic: &[u8] = &body[..8];
-        let (scheme_field_len, version) = if magic == MAGIC_V2 {
-            (4usize, 2u32)
+        // Bytes between the scheme field (if any) and next_id.
+        let (version, extra_fields) = if magic == MAGIC_V3 {
+            (3u32, 8usize) // scheme + bits
+        } else if magic == MAGIC_V2 {
+            (2u32, 4usize) // scheme
         } else if magic == MAGIC_V1 {
-            (0usize, 1u32)
+            (1u32, 0usize)
         } else {
             return Err(bad("bad magic"));
         };
-        let header = 8 + 4 + scheme_field_len + 8 + 8;
+        let header = 8 + 4 + extra_fields + 8 + 8;
         if body.len() < header {
             return Err(bad("file too short"));
         }
         let k = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
-        let scheme = if version == 2 {
+        let scheme = if version >= 2 {
             let code = u32::from_le_bytes(body[12..16].try_into().unwrap());
             SketchScheme::from_code(code)?
         } else {
             SketchScheme::Cmh
         };
-        let off0 = 12 + scheme_field_len;
+        let bits = if version >= 3 {
+            let raw = u32::from_le_bytes(body[16..20].try_into().unwrap());
+            let bits = u8::try_from(raw)
+                .map_err(|_| bad(format!("bad bits field {raw}")))?;
+            crate::sketch::check_sketch_bits(bits).map_err(|e| bad(e.to_string()))?;
+            bits
+        } else {
+            32
+        };
+        let off0 = 12 + extra_fields;
         let next_id = u64::from_le_bytes(body[off0..off0 + 8].try_into().unwrap());
         let count =
             u64::from_le_bytes(body[off0 + 8..off0 + 16].try_into().unwrap()) as usize;
+        let packed = version >= 3 && bits != 32;
+        let wpr = packed_words(k, bits);
+        let row_bytes = if packed { 8 * wpr } else { 4 * k };
         let item_bytes = count
-            .checked_mul(8 + 4 * k)
+            .checked_mul(8 + row_bytes)
             .ok_or_else(|| bad("count overflow"))?;
         if body.len() - header != item_bytes {
             return Err(bad(format!(
@@ -148,19 +244,32 @@ impl Snapshot {
         }
         let mut items = Vec::with_capacity(count);
         let mut off = header;
+        let mut row = vec![0u64; wpr];
         for _ in 0..count {
             let id = u64::from_le_bytes(body[off..off + 8].try_into().unwrap());
             off += 8;
-            let mut sketch = Vec::with_capacity(k);
-            for _ in 0..k {
-                sketch.push(u32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
-                off += 4;
-            }
+            let sketch = if packed {
+                for w in row.iter_mut() {
+                    *w = u64::from_le_bytes(body[off..off + 8].try_into().unwrap());
+                    off += 8;
+                }
+                unpack_row(&row, k, bits)
+            } else {
+                let mut sketch = Vec::with_capacity(k);
+                for _ in 0..k {
+                    sketch.push(u32::from_le_bytes(
+                        body[off..off + 4].try_into().unwrap(),
+                    ));
+                    off += 4;
+                }
+                sketch
+            };
             items.push((id, sketch));
         }
         Ok(SnapshotData {
             k,
             scheme,
+            bits,
             next_id,
             items,
         })
@@ -185,13 +294,119 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
         let bytes =
-            Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
+            Snapshot::write(&path, 3, SketchScheme::Cmh, 32, 10, &sample_items())
+                .unwrap();
         assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
         let data = Snapshot::load(&path).unwrap();
         assert_eq!(data.k, 3);
         assert_eq!(data.scheme, SketchScheme::Cmh);
+        assert_eq!(data.bits, 32);
         assert_eq!(data.next_id, 10);
         assert_eq!(data.items, sample_items());
+    }
+
+    #[test]
+    fn full_width_snapshots_stay_byte_identical_v2() {
+        // bits = 32 must keep emitting exactly the pre-b-bit CMHSNAP2
+        // image: hand-roll it and compare whole files.
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        let k = 3usize;
+        let items = sample_items();
+        Snapshot::write(&path, k, SketchScheme::Oph, 32, 7, &items).unwrap();
+        let mut expect = Vec::new();
+        expect.extend_from_slice(b"CMHSNAP2");
+        expect.extend_from_slice(&(k as u32).to_le_bytes());
+        expect.extend_from_slice(&SketchScheme::Oph.code().to_le_bytes());
+        expect.extend_from_slice(&7u64.to_le_bytes());
+        expect.extend_from_slice(&(items.len() as u64).to_le_bytes());
+        for (id, sketch) in &items {
+            expect.extend_from_slice(&id.to_le_bytes());
+            for v in sketch {
+                expect.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crate::util::fnv::fnv1a64(&expect);
+        expect.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(std::fs::read(&path).unwrap(), expect);
+    }
+
+    #[test]
+    fn packed_snapshots_roundtrip_and_shrink() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("snapshot.bin");
+        // K = 100 at b = 4 → 400 bits → 7 words/row (partial last word)
+        let k = 100usize;
+        let items: Vec<(u64, Vec<u32>)> = (0..5u64)
+            .map(|id| {
+                (
+                    id * 3,
+                    (0..k as u32).map(|i| (id as u32 * 31 + i * 7) % 16).collect(),
+                )
+            })
+            .collect();
+        for bits in [1u8, 2, 4, 8, 16] {
+            let bytes =
+                Snapshot::write(&path, k, SketchScheme::Coph, bits, 40, &items)
+                    .unwrap();
+            let data = Snapshot::load(&path).unwrap();
+            assert_eq!(data.bits, bits);
+            assert_eq!(data.k, k);
+            assert_eq!(data.scheme, SketchScheme::Coph);
+            assert_eq!(data.next_id, 40);
+            // values < 16 survive every width ≥ 4 exactly; narrower
+            // widths keep the masked lanes
+            let mask = (1u32 << bits) - 1;
+            for ((id, got), (want_id, want)) in data.items.iter().zip(&items) {
+                assert_eq!(id, want_id);
+                let masked: Vec<u32> = want.iter().map(|&v| v & mask).collect();
+                assert_eq!(got, &masked, "bits={bits}");
+            }
+            // packed rows shrink the image vs full width
+            let full =
+                Snapshot::write(&path, k, SketchScheme::Coph, 32, 40, &items)
+                    .unwrap();
+            assert!(bytes < full, "bits={bits}: {bytes} !< {full}");
+        }
+    }
+
+    #[test]
+    fn write_packed_is_byte_identical_to_write() {
+        // The words-level compaction path must emit exactly the bytes
+        // the lane-level path does — one format, two producers.
+        let dir = TempDir::new().unwrap();
+        let a = dir.path().join("a.bin");
+        let b = dir.path().join("b.bin");
+        let k = 37usize;
+        let bits = 4u8;
+        let items: Vec<(u64, Vec<u32>)> = (0..4u64)
+            .map(|id| (id * 2, (0..k as u32).map(|i| (i + id as u32) % 16).collect()))
+            .collect();
+        let packed: Vec<(u64, Vec<u64>)> = items
+            .iter()
+            .map(|(id, sk)| {
+                let mut row = vec![0u64; crate::sketch::packed_words(k, bits)];
+                pack_row(sk, bits, &mut row);
+                (*id, row)
+            })
+            .collect();
+        Snapshot::write(&a, k, SketchScheme::Cmh, bits, 9, &items).unwrap();
+        Snapshot::write_packed(&b, k, SketchScheme::Cmh, bits, 9, &packed).unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        // and it validates its inputs
+        assert!(
+            Snapshot::write_packed(&b, k, SketchScheme::Cmh, 32, 9, &packed).is_err(),
+            "full width has no packed rows"
+        );
+        assert!(Snapshot::write_packed(
+            &b,
+            k,
+            SketchScheme::Cmh,
+            8,
+            9,
+            &packed
+        )
+        .is_err(), "word count must match the width");
     }
 
     #[test]
@@ -199,7 +414,7 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
         for scheme in SketchScheme::ALL {
-            Snapshot::write(&path, 3, scheme, 7, &sample_items()).unwrap();
+            Snapshot::write(&path, 3, scheme, 32, 7, &sample_items()).unwrap();
             assert_eq!(Snapshot::load(&path).unwrap().scheme, scheme);
         }
     }
@@ -208,17 +423,23 @@ mod tests {
     fn empty_snapshot_roundtrips() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 64, SketchScheme::Coph, 0, &[]).unwrap();
+        Snapshot::write(&path, 64, SketchScheme::Coph, 32, 0, &[]).unwrap();
         let data = Snapshot::load(&path).unwrap();
         assert!(data.items.is_empty());
         assert_eq!(data.k, 64);
         assert_eq!(data.scheme, SketchScheme::Coph);
+        // an empty packed stamp also roundtrips, carrying its width
+        Snapshot::write(&path, 64, SketchScheme::Cmh, 8, 0, &[]).unwrap();
+        let data = Snapshot::load(&path).unwrap();
+        assert!(data.items.is_empty());
+        assert_eq!(data.bits, 8);
     }
 
     #[test]
     fn legacy_v1_snapshot_loads_as_cmh() {
         // Hand-roll a CMHSNAP1 image (the pre-scheme format): the
-        // migration contract is that it decodes with scheme = cmh.
+        // migration contract is that it decodes with scheme = cmh and
+        // bits = 32.
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
         let k = 3usize;
@@ -240,6 +461,7 @@ mod tests {
 
         let data = Snapshot::load(&path).unwrap();
         assert_eq!(data.scheme, SketchScheme::Cmh, "v1 predates schemes");
+        assert_eq!(data.bits, 32, "v1 predates packed storage");
         assert_eq!(data.k, k);
         assert_eq!(data.next_id, 10);
         assert_eq!(data.items, items);
@@ -249,8 +471,9 @@ mod tests {
     fn rewrite_is_atomic_replacement() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 3, SketchScheme::Cmh, 5, &sample_items()).unwrap();
-        Snapshot::write(&path, 3, SketchScheme::Cmh, 6, &sample_items()[..1]).unwrap();
+        Snapshot::write(&path, 3, SketchScheme::Cmh, 32, 5, &sample_items()).unwrap();
+        Snapshot::write(&path, 3, SketchScheme::Cmh, 32, 6, &sample_items()[..1])
+            .unwrap();
         let data = Snapshot::load(&path).unwrap();
         assert_eq!(data.next_id, 6);
         assert_eq!(data.items.len(), 1);
@@ -261,21 +484,29 @@ mod tests {
     fn corruption_is_detected() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("snapshot.bin");
-        Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
-        bytes[30] ^= 0x01;
-        std::fs::write(&path, &bytes).unwrap();
-        assert!(Snapshot::load(&path).is_err(), "checksum must catch flips");
-        // truncation is also caught
-        let good = {
-            Snapshot::write(&path, 3, SketchScheme::Cmh, 10, &sample_items()).unwrap();
-            std::fs::read(&path).unwrap()
-        };
-        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
-        assert!(Snapshot::load(&path).is_err());
+        for bits in [32u8, 4] {
+            Snapshot::write(&path, 3, SketchScheme::Cmh, bits, 10, &sample_items())
+                .unwrap();
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes[30] ^= 0x01;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(
+                Snapshot::load(&path).is_err(),
+                "bits={bits}: checksum must catch flips"
+            );
+            // truncation is also caught
+            let good = {
+                Snapshot::write(&path, 3, SketchScheme::Cmh, bits, 10, &sample_items())
+                    .unwrap();
+                std::fs::read(&path).unwrap()
+            };
+            std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+            assert!(Snapshot::load(&path).is_err(), "bits={bits}");
+        }
         // wrong-length sketches are rejected at write time
         assert!(
-            Snapshot::write(&path, 4, SketchScheme::Cmh, 0, &sample_items()).is_err()
+            Snapshot::write(&path, 4, SketchScheme::Cmh, 32, 0, &sample_items())
+                .is_err()
         );
     }
 }

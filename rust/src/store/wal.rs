@@ -7,7 +7,9 @@
 //! payload := 0x01 | id:u64le | k:u32le | k × u32le   (insert)
 //!          | 0x02 | id:u64le                          (delete)
 //!          | 0x03 | n:u32le | n × item                (insert batch)
+//!          | 0x04 | bits:u8 | n:u32le | n × pitem     (packed insert)
 //! item    := id:u64le | k:u32le | k × u32le
+//! pitem   := id:u64le | k:u32le | W × u64le           W = ceil(k·bits/64)
 //! ```
 //!
 //! A batched insert is **one** record under **one** checksum, which is
@@ -24,6 +26,7 @@
 //! power-loss durability is provided by [`super::Snapshot`] at
 //! compaction time, which fsyncs.
 
+use crate::sketch::{pack_row, packed_words, unpack_row};
 use crate::util::fnv::fnv1a32;
 use std::fs::OpenOptions;
 use std::io::{Seek, SeekFrom, Write};
@@ -51,11 +54,24 @@ pub enum WalRecord {
         /// `(id, sketch)` per row.
         items: Vec<(u64, Vec<u32>)>,
     },
+    /// The packed-plane insert record: rows are logged as the same
+    /// `bits`-wide bit-packed words the store serves from (≈ 32/b×
+    /// smaller than [`WalRecord::InsertBatch`]).  Sketch values here
+    /// are the *masked* low-`bits` lanes — the codec packs on encode
+    /// and unpacks on decode.  Same single-checksum atomicity as the
+    /// full-width batch record; a singleton insert is an n = 1 batch.
+    InsertPacked {
+        /// Bits stored per hash (< 32; must divide 64).
+        bits: u8,
+        /// `(id, masked sketch)` per row.
+        items: Vec<(u64, Vec<u32>)>,
+    },
 }
 
 const TAG_INSERT: u8 = 1;
 const TAG_DELETE: u8 = 2;
 const TAG_INSERT_BATCH: u8 = 3;
+const TAG_INSERT_PACKED: u8 = 4;
 
 fn push_item(payload: &mut Vec<u8>, id: u64, sketch: &[u32]) {
     payload.extend_from_slice(&id.to_le_bytes());
@@ -81,6 +97,20 @@ fn encode(rec: &WalRecord) -> Vec<u8> {
             payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
             for (id, sketch) in items {
                 push_item(&mut payload, *id, sketch);
+            }
+        }
+        WalRecord::InsertPacked { bits, items } => {
+            payload.push(TAG_INSERT_PACKED);
+            payload.push(*bits);
+            payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for (id, sketch) in items {
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&(sketch.len() as u32).to_le_bytes());
+                let mut row = vec![0u64; packed_words(sketch.len(), *bits)];
+                pack_row(sketch, *bits, &mut row);
+                for w in &row {
+                    payload.extend_from_slice(&w.to_le_bytes());
+                }
             }
         }
     }
@@ -115,6 +145,24 @@ fn read_item(p: &[u8], off: usize) -> Option<((u64, Vec<u32>), usize)> {
     }
     let sketch = (0..k).map(|i| read_u32(p, off + 12 + 4 * i)).collect();
     Some(((id, sketch), end))
+}
+
+/// Decode one `id | k | W×u64` packed item at `off`; returns the item
+/// (lanes unpacked to masked values) and the offset just past it, or
+/// `None` on a short buffer.
+fn read_packed_item(p: &[u8], off: usize, bits: u8) -> Option<((u64, Vec<u32>), usize)> {
+    if p.len() < off + 8 + 4 {
+        return None;
+    }
+    let id = read_u64(p, off);
+    let k = read_u32(p, off + 8) as usize;
+    let wpr = packed_words(k, bits);
+    let end = off.checked_add(12)?.checked_add(8usize.checked_mul(wpr)?)?;
+    if p.len() < end {
+        return None;
+    }
+    let row: Vec<u64> = (0..wpr).map(|i| read_u64(p, off + 12 + 8 * i)).collect();
+    Some(((id, unpack_row(&row, k, bits)), end))
 }
 
 fn decode_payload(p: &[u8]) -> Option<WalRecord> {
@@ -154,6 +202,35 @@ fn decode_payload(p: &[u8]) -> Option<WalRecord> {
                 return None;
             }
             Some(WalRecord::InsertBatch { items })
+        }
+        &TAG_INSERT_PACKED => {
+            if p.len() < 1 + 1 + 4 {
+                return None;
+            }
+            let bits = p[1];
+            // Only the packed widths are legal on disk; anything else
+            // is corruption (a full-width insert uses tags 1/3).
+            if crate::sketch::check_sketch_bits(bits).is_err() || bits == 32 {
+                return None;
+            }
+            let n = read_u32(p, 2) as usize;
+            // Every packed item needs at least 12 bytes; a count the
+            // payload cannot possibly hold is corruption — reject it
+            // before trusting it as an allocation size.
+            if n > (p.len() - 6) / 12 {
+                return None;
+            }
+            let mut items = Vec::with_capacity(n);
+            let mut off = 6;
+            for _ in 0..n {
+                let (item, next) = read_packed_item(p, off, bits)?;
+                items.push(item);
+                off = next;
+            }
+            if p.len() != off {
+                return None;
+            }
+            Some(WalRecord::InsertPacked { bits, items })
         }
         _ => None,
     }
@@ -371,6 +448,85 @@ mod tests {
                 "cut at {cut}: partial batch must not replay"
             );
         }
+    }
+
+    #[test]
+    fn insert_packed_record_roundtrips_and_shrinks() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        // masked values (lanes already < 2^bits) roundtrip exactly
+        let rows: Vec<(u64, Vec<u32>)> = (0..4u64)
+            .map(|id| (id, (0..37u32).map(|i| (id as u32 + i) % 16).collect()))
+            .collect();
+        let packed = WalRecord::InsertPacked {
+            bits: 4,
+            items: rows.clone(),
+        };
+        let full = WalRecord::InsertBatch { items: rows };
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(&packed).unwrap();
+            let packed_bytes = wal.bytes();
+            wal.append(&full).unwrap();
+            let full_bytes = wal.bytes() - packed_bytes;
+            assert!(
+                packed_bytes < full_bytes,
+                "packed record {packed_bytes} B must beat full {full_bytes} B"
+            );
+        }
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs[0], packed);
+        // encoding masks: unmasked input decodes to its masked lanes
+        let noisy = WalRecord::InsertPacked {
+            bits: 4,
+            items: vec![(9, vec![0xffu32, 3, 16, 15])],
+        };
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(&noisy).unwrap();
+        drop(wal);
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(
+            *recs.last().unwrap(),
+            WalRecord::InsertPacked {
+                bits: 4,
+                items: vec![(9, vec![15, 3, 0, 15])],
+            }
+        );
+    }
+
+    #[test]
+    fn torn_packed_record_is_atomic_and_bad_bits_stop_replay() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        let packed = WalRecord::InsertPacked {
+            bits: 8,
+            items: vec![(0, vec![1; 16]), (1, vec![2; 16])],
+        };
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(&WalRecord::Delete { id: 5 }).unwrap();
+            wal.append(&packed).unwrap();
+        }
+        let original = std::fs::read(&path).unwrap();
+        // any cut inside the packed record keeps none of its rows
+        for cut in [original.len() - 1, original.len() - 9, original.len() - 20] {
+            std::fs::write(&path, &original[..cut]).unwrap();
+            let (_, recs) = Wal::open(&path).unwrap();
+            assert_eq!(recs, vec![WalRecord::Delete { id: 5 }], "cut at {cut}");
+        }
+        // a corrupt bits byte fails the CRC; and even with a recomputed
+        // CRC an illegal width is rejected by the decoder
+        let mut bytes = original.clone();
+        let first_len = 8 + read_u32(&bytes, 0) as usize;
+        let bits_at = first_len + 8 + 1; // second record: len|crc|tag|bits
+        assert_eq!(bytes[bits_at], 8);
+        bytes[bits_at] = 7; // 7 is not a legal width
+        let payload_len = read_u32(&bytes, first_len) as usize;
+        let crc = fnv1a32(&bytes[first_len + 8..first_len + 8 + payload_len]);
+        bytes[first_len + 4..first_len + 8].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs) = Wal::open(&path).unwrap();
+        assert_eq!(recs, vec![WalRecord::Delete { id: 5 }], "bad width rejected");
     }
 
     #[test]

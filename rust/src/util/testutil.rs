@@ -1,6 +1,10 @@
-//! Test helpers: unique temp directories (tempfile replacement) and a
-//! seeded-randomized property-test driver (proptest replacement).
+//! Test helpers: unique temp directories (tempfile replacement), a
+//! seeded-randomized property-test driver (proptest replacement), and
+//! the one shared generator of structured exact-Jaccard pairs that
+//! every statistical suite and bench gates against — so a bench gate
+//! and its acceptance test are guaranteed to measure the same corpus.
 
+use crate::sketch::SparseVec;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -39,6 +43,41 @@ impl Drop for TempDir {
     }
 }
 
+/// Build a *structured* pair of contiguous-run sparse vectors with an
+/// exactly known Jaccard similarity — the shared corpus generator
+/// behind the statistical acceptance suites (`scheme_consistency`,
+/// `bbit_stats`) and the bench gates (`hasher_hotpath`, `bbit_query`),
+/// so tests and benches measure identical data.
+///
+/// `a` is the index run `[0, a_len)`, `b` is `[a_len − inter,
+/// a_len − inter + b_len)`: they intersect in exactly `inter` indices
+/// and their union spans `a_len + b_len − inter`, so
+/// J = inter / (a_len + b_len − inter) with no sampling error.
+/// Contiguous runs are deliberate: schemes or widths that mishandle
+/// structure (the reason σ exists) are biased on exactly this data.
+///
+/// ```
+/// use cminhash::util::testutil::overlap_pair;
+/// let (a, b, j) = overlap_pair(64, 24, 24, 12);
+/// assert_eq!(j, 12.0 / 36.0);
+/// assert_eq!(a.jaccard(&b), j);
+/// ```
+pub fn overlap_pair(
+    dim: u32,
+    a_len: u32,
+    b_len: u32,
+    inter: u32,
+) -> (SparseVec, SparseVec, f64) {
+    assert!(inter <= a_len && inter <= b_len, "inter exceeds a set size");
+    assert!(a_len > 0 && b_len > 0, "empty sets have no Jaccard");
+    let union = a_len + b_len - inter;
+    assert!(a_len - inter + b_len <= dim, "union spills past dim");
+    let a = SparseVec::new(dim, (0..a_len).collect()).unwrap();
+    let b = SparseVec::new(dim, (a_len - inter..a_len - inter + b_len).collect())
+        .unwrap();
+    (a, b, f64::from(inter) / f64::from(union))
+}
+
 /// Run `f` across `cases` seeded RNGs; panics with the failing seed so
 /// a failure is reproducible with `check_with_seed`.
 pub fn property(cases: u64, f: impl Fn(&mut crate::util::rng::Rng)) {
@@ -71,6 +110,26 @@ mod tests {
             std::fs::write(p.join("x"), "y").unwrap();
         }
         assert!(!p.exists());
+    }
+
+    #[test]
+    fn overlap_pair_matches_exact_jaccard() {
+        // the canonical J levels used across suites and benches
+        for (a_len, b_len, inter, want) in [
+            (22u32, 22u32, 4u32, 0.1),
+            (24, 24, 12, 1.0 / 3.0),
+            (30, 30, 20, 0.5),
+            (38, 38, 36, 0.9),
+            (32, 32, 32, 1.0),
+            (16, 16, 0, 0.0),
+            (40, 34, 10, 10.0 / 64.0), // unequal sizes work too
+        ] {
+            let (a, b, j) = overlap_pair(64, a_len, b_len, inter);
+            assert_eq!(j, want, "a={a_len} b={b_len} inter={inter}");
+            assert_eq!(a.jaccard(&b), want);
+            assert_eq!(a.nnz() as u32, a_len);
+            assert_eq!(b.nnz() as u32, b_len);
+        }
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Property-test suite for the packed b-bit plane's row codec and
+//! scoring kernel: pack→unpack identity across widths, exact
+//! equivalence of `bits = 32` packed scoring with the unpacked
+//! estimator, cross-word-boundary lane layouts, and the packed
+//! [`PackedRows`]/[`BandingIndex`] storage semantics.
+
+use cminhash::index::{BandingIndex, IndexConfig, PackedRows};
+use cminhash::sketch::{
+    collision_count, corrected_estimate, estimate, pack_row, packed_words, unpack_row,
+    BBitSketch, CMinHasher, Sketcher, SUPPORTED_BITS,
+};
+use cminhash::util::rng::Rng;
+use cminhash::util::testutil::property;
+
+/// Random full-width sketch values in the realistic `0..D` range.
+fn random_sketch(rng: &mut Rng, k: usize) -> Vec<u32> {
+    (0..k).map(|_| rng.range_u32(0, 1 << 20)).collect()
+}
+
+#[test]
+fn pack_unpack_is_the_identity_on_masked_lanes_for_all_widths() {
+    // For every width (including the scalar-path widths 3/5/12 the
+    // serving plane rejects but the codec supports), unpack(pack(x))
+    // must equal x masked to b bits — on random sketches of random
+    // lengths, including K = 1 and K not a multiple of the lane count.
+    property(25, |rng: &mut Rng| {
+        let k = rng.range_usize(1, 300);
+        let full = random_sketch(rng, k);
+        for b in [1u8, 2, 3, 4, 5, 8, 12, 16, 32] {
+            let mask = if b == 32 { u32::MAX } else { (1u32 << b) - 1 };
+            let masked: Vec<u32> = full.iter().map(|&v| v & mask).collect();
+            let mut words = vec![0u64; packed_words(k, b)];
+            pack_row(&full, b, &mut words);
+            assert_eq!(unpack_row(&words, k, b), masked, "b={b} k={k}");
+            // packing the already-masked row is byte-identical
+            let mut words2 = vec![0u64; packed_words(k, b)];
+            pack_row(&masked, b, &mut words2);
+            assert_eq!(words, words2, "b={b} k={k}: packing is canonical");
+        }
+    });
+}
+
+#[test]
+fn thirty_two_bit_packed_scoring_equals_unpacked_estimate_exactly() {
+    // bits = 32 is the no-loss width: the packed kernel's collision
+    // count and corrected estimate must equal the unpacked estimator
+    // bit for bit (f64 ==, not approximately).
+    property(25, |rng: &mut Rng| {
+        let k = rng.range_usize(1, 200);
+        let a = random_sketch(rng, k);
+        // correlate some slots so collisions occur
+        let b: Vec<u32> = a
+            .iter()
+            .map(|&v| if rng.bool_with(0.4) { v } else { rng.range_u32(0, 1 << 20) })
+            .collect();
+        let sa = BBitSketch::compress(&a, 32);
+        let sb = BBitSketch::compress(&b, 32);
+        let scalar = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert_eq!(collision_count(sa.words(), sb.words(), k, 32), scalar);
+        assert_eq!(corrected_estimate(scalar, k, 32), estimate(&a, &b));
+        assert_eq!(sa.estimate(&sb), estimate(&a, &b), "k={k}");
+    });
+}
+
+#[test]
+fn kernel_matches_scalar_scoring_for_every_supported_width() {
+    property(25, |rng: &mut Rng| {
+        let k = rng.range_usize(1, 200);
+        let a = random_sketch(rng, k);
+        let b: Vec<u32> = a
+            .iter()
+            .map(|&v| if rng.bool_with(0.5) { v } else { rng.range_u32(0, 1 << 20) })
+            .collect();
+        for bits in SUPPORTED_BITS {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let scalar = a
+                .iter()
+                .zip(&b)
+                .filter(|(&x, &y)| x & mask == y & mask)
+                .count();
+            let sa = BBitSketch::compress(&a, bits);
+            let sb = BBitSketch::compress(&b, bits);
+            assert_eq!(
+                collision_count(sa.words(), sb.words(), k, bits),
+                scalar,
+                "bits={bits} k={k}"
+            );
+        }
+    });
+}
+
+#[test]
+fn cross_word_boundary_slots_roundtrip() {
+    // The satellite cases: b = 4 with K not a multiple of 16 (the last
+    // word is partially filled) and b = 16 lanes at word seams (lane 4
+    // of K = 5 starts exactly at bit 64).  Also b = 12, whose lanes
+    // genuinely straddle word boundaries (the scalar codec path).
+    for (k, b) in [
+        (100usize, 4u8), // 400 bits → 6¼ words
+        (17, 4),
+        (5, 16), // lane 4 begins at the word seam
+        (9, 16),
+        (21, 12), // 252 bits, lanes straddle words
+        (65, 1),  // one bit spills into a second word
+    ] {
+        let full: Vec<u32> = (0..k as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let sk = BBitSketch::compress(&full, b);
+        assert_eq!(sk.words().len(), packed_words(k, b), "k={k} b={b}");
+        let mask = (1u64 << b) - 1;
+        for (i, &h) in full.iter().enumerate() {
+            assert_eq!(sk.get(i), u64::from(h) & mask, "k={k} b={b} slot {i}");
+        }
+        let masked: Vec<u32> = full.iter().map(|&v| (u64::from(v) & mask) as u32).collect();
+        assert_eq!(unpack_row(sk.words(), k, b), masked, "k={k} b={b}");
+        // a reconstructed sketch scores identically against itself
+        let back = BBitSketch::from_words(b, k, sk.words().to_vec()).unwrap();
+        assert_eq!(back.estimate(&sk), 1.0, "k={k} b={b}");
+    }
+}
+
+#[test]
+fn packed_rows_roundtrip_under_churn() {
+    // Insert/remove/reinsert churn over the arena: every resident row
+    // stays retrievable and masked correctly; slots recycle without
+    // growing the arena.
+    property(10, |rng: &mut Rng| {
+        let k = 48usize;
+        let bits = 8u8;
+        let mut rows = PackedRows::new(k, bits);
+        let mut shadow: std::collections::HashMap<u64, Vec<u32>> =
+            std::collections::HashMap::new();
+        for step in 0..200u64 {
+            let id = rng.below(40);
+            if shadow.contains_key(&id) {
+                let want = shadow.remove(&id).unwrap();
+                assert_eq!(rows.remove(id), Some(want), "step {step}");
+            } else {
+                let full = random_sketch(rng, k);
+                let masked: Vec<u32> = full.iter().map(|&v| v & 0xff).collect();
+                rows.insert(id, &full);
+                shadow.insert(id, masked);
+            }
+            assert_eq!(rows.len(), shadow.len());
+        }
+        for (&id, want) in &shadow {
+            assert_eq!(rows.get(id).as_ref(), Some(want));
+        }
+        // arena never exceeds the high-water mark of 40 live ids
+        assert!(rows.arena_bytes() <= 40 * rows.words_per_row() * 8);
+    });
+}
+
+#[test]
+fn packed_index_scores_match_the_bbit_estimator() {
+    // The packed BandingIndex's query scores must equal what the
+    // BBitSketch estimator computes for the same (query, stored) pair
+    // — the index is a faster layout, not a different statistic.
+    let d = 2048usize;
+    let k = 64usize;
+    let h = CMinHasher::new(d, k, 17);
+    let cfg = IndexConfig {
+        bands: 4,
+        rows_per_band: 16,
+    };
+    let docs: Vec<Vec<u32>> = (0..30u32)
+        .map(|i| (i * 13..i * 13 + 120).collect())
+        .collect();
+    for bits in [1u8, 2, 4, 8, 16] {
+        let mut idx = BandingIndex::with_bits(k, cfg, bits).unwrap();
+        let sketches: Vec<Vec<u32>> = docs.iter().map(|nz| h.sketch_sparse(nz)).collect();
+        for (i, sk) in sketches.iter().enumerate() {
+            idx.insert(i as u64, sk).unwrap();
+        }
+        let probe = h.sketch_sparse(&docs[0]);
+        let qb = BBitSketch::compress(&probe, bits);
+        for n in idx.query(&probe, 30) {
+            let want = qb.estimate(&BBitSketch::compress(&sketches[n.id as usize], bits));
+            assert_eq!(n.score, want, "bits={bits} id={}", n.id);
+        }
+    }
+}

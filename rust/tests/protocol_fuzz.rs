@@ -1,0 +1,250 @@
+//! Fuzz-style property test for the wire protocol: random mutations
+//! of valid request lines (truncations, wrong types, huge ints, bad
+//! unicode escapes, garbage splices) must each yield exactly one
+//! clean response line — `ok:true` if the mutation stayed valid,
+//! `ok:false` otherwise — and must never panic a worker or drop the
+//! connection.  This turns PR 3's `catch_unwind` containment from a
+//! safety net into a tested property: the net is there, but nothing
+//! in the parser should ever hit it.
+
+use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::protocol::Request;
+use cminhash::server::Server;
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+const DIM: u32 = 256;
+
+fn start_server() -> (Server, Arc<Coordinator>) {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM as usize,
+        num_hashes: 64,
+        seed: 5,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (server, svc)
+}
+
+/// Valid request lines covering every op — the fuzz seeds.
+fn valid_lines() -> Vec<String> {
+    vec![
+        r#"{"op":"ping"}"#.into(),
+        format!(r#"{{"op":"sketch","vec":{{"dim":{DIM},"indices":[3,17,90]}}}}"#),
+        format!(r#"{{"op":"insert","vec":{{"dim":{DIM},"indices":[1,2,3]}}}}"#),
+        format!(r#"{{"op":"query","vec":{{"dim":{DIM},"indices":[1,2,3]}},"topk":5}}"#),
+        format!(
+            r#"{{"op":"query_above","vec":{{"dim":{DIM},"indices":[4,5]}},"threshold":0.5}}"#
+        ),
+        format!(
+            r#"{{"op":"sketch_batch","vecs":[{{"dim":{DIM},"indices":[7]}},{{"dim":{DIM},"indices":[8]}}]}}"#
+        ),
+        format!(r#"{{"op":"insert_batch","vecs":[{{"dim":{DIM},"indices":[9,10]}}]}}"#),
+        format!(
+            r#"{{"op":"query_batch","vecs":[{{"dim":{DIM},"indices":[1]}}],"topk":2}}"#
+        ),
+        r#"{"op":"estimate","a":0,"b":0}"#.into(),
+        format!(
+            r#"{{"op":"estimate_vecs","v":{{"dim":{DIM},"indices":[1]}},"w":{{"dim":{DIM},"indices":[2]}}}}"#
+        ),
+        r#"{"op":"delete","id":12345}"#.into(),
+        r#"{"op":"save"}"#.into(),
+        r#"{"op":"stats"}"#.into(),
+    ]
+}
+
+/// Hand-picked adversarial lines: the classic parser killers.
+fn nasty_lines() -> Vec<String> {
+    let deep_open = "[".repeat(300);
+    vec![
+        // truncations mid-structure / mid-string
+        r#"{"op":"ping""#.into(),
+        r#"{"op":"pi"#.into(),
+        r#"{"#.into(),
+        // wrong types everywhere
+        r#"{"op":42}"#.into(),
+        r#"{"op":"sketch","vec":"not an object"}"#.into(),
+        format!(r#"{{"op":"sketch","vec":{{"dim":{DIM},"indices":"nope"}}}}"#),
+        format!(r#"{{"op":"sketch","vec":{{"dim":"{DIM}","indices":[1]}}}}"#),
+        r#"{"op":"delete","id":3.5}"#.into(),
+        r#"{"op":"delete","id":-1}"#.into(),
+        r#"{"op":"estimate","a":"x","b":2}"#.into(),
+        format!(r#"{{"op":"query","vec":{{"dim":{DIM},"indices":[0]}},"topk":"five"}}"#),
+        r#"{"op":"sketch_batch","vecs":{"dim":4}}"#.into(),
+        // huge / degenerate numbers
+        format!(
+            r#"{{"op":"query","vec":{{"dim":{DIM},"indices":[0]}},"topk":99999999999999999999999999}}"#
+        ),
+        r#"{"op":"sketch","vec":{"dim":1e308,"indices":[0]}}"#.into(),
+        r#"{"op":"sketch","vec":{"dim":1e999,"indices":[0]}}"#.into(),
+        format!(r#"{{"op":"sketch","vec":{{"dim":{DIM},"indices":[4294967296]}}}}"#),
+        format!(r#"{{"op":"query","vec":{{"dim":{DIM},"indices":[0]}},"topk":-3}}"#),
+        // bad unicode escapes (valid UTF-8 on the wire, broken inside)
+        r#"{"op":"\ud800"}"#.into(),
+        r#"{"op":"ping","x":"\uZZZZ"}"#.into(),
+        r#"{"op":"ping","x":"\ud800A"}"#.into(),
+        r#"{"op":"\q"}"#.into(),
+        // non-object documents
+        "[1,2,3]".into(),
+        "null".into(),
+        "true".into(),
+        "\"just a string\"".into(),
+        "12345".into(),
+        // pathological nesting (the parser's depth cap must answer,
+        // not blow the stack)
+        format!(r#"{{"op":{deep_open}"#),
+        format!("{}{}", "[".repeat(200), "]".repeat(200)),
+        // trailing garbage
+        r#"{"op":"ping"} extra"#.into(),
+        r#"{"op":"ping"}{"op":"ping"}"#.into(),
+    ]
+}
+
+/// Apply 1–3 random structure-agnostic mutations to a line, keeping
+/// it a single non-blank line of valid UTF-8.
+fn mutate(rng: &mut Rng, line: &str) -> String {
+    const POOL: &[char] = &[
+        '{', '}', '[', ']', '"', ':', ',', 'x', '9', '-', '.', 'e', '\\', 'u', ' ',
+    ];
+    let mut chars: Vec<char> = line.chars().collect();
+    for _ in 0..rng.range_usize(1, 4) {
+        match rng.below(4) {
+            0 => {
+                // truncate (keep at least one char)
+                let keep = rng.range_usize(1, chars.len().max(2));
+                chars.truncate(keep);
+            }
+            1 => {
+                // replace one char
+                let at = rng.range_usize(0, chars.len());
+                chars[at] = POOL[rng.range_usize(0, POOL.len())];
+            }
+            2 => {
+                // insert one char
+                let at = rng.range_usize(0, chars.len() + 1);
+                chars.insert(at, POOL[rng.range_usize(0, POOL.len())]);
+            }
+            _ => {
+                // duplicate a chunk (stutter)
+                let start = rng.range_usize(0, chars.len());
+                let end = rng.range_usize(start, chars.len() + 1).min(start + 12);
+                let chunk: Vec<char> = chars[start..end].to_vec();
+                for (i, c) in chunk.into_iter().enumerate() {
+                    chars.insert(start + i, c);
+                }
+            }
+        }
+        if chars.is_empty() {
+            chars.push('{');
+        }
+    }
+    let out: String = chars.into_iter().collect();
+    if out.trim().is_empty() {
+        "{".to_string() // blank lines are skipped by design; force a response
+    } else {
+        out
+    }
+}
+
+#[test]
+fn parser_survives_mutated_lines_in_process() {
+    // The codec layer alone: no input may panic Json::parse or
+    // Request::from_json; outcomes are Ok or a typed error, nothing
+    // else.  (A panic fails this test directly.)
+    let mut rng = Rng::seed_from_u64(0xf022);
+    let seeds = valid_lines();
+    for line in nasty_lines() {
+        let _ = Json::parse(&line).map(|j| Request::from_json(&j));
+    }
+    for trial in 0..2000u64 {
+        let base = &seeds[(trial % seeds.len() as u64) as usize];
+        let mutated = mutate(&mut rng, base);
+        let _ = Json::parse(&mutated).map(|j| Request::from_json(&j));
+    }
+}
+
+#[test]
+fn every_mutated_line_gets_one_response_and_the_connection_lives() {
+    let (server, svc) = start_server();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let send_and_check = |writer: &mut TcpStream,
+                              reader: &mut BufReader<TcpStream>,
+                              line: &str| {
+        assert!(!line.contains('\n') && !line.contains('\r'), "{line:?}");
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp).unwrap();
+        assert!(n > 0, "connection dropped after {line:?}");
+        let parsed = Json::parse(resp.trim_end())
+            .unwrap_or_else(|e| panic!("non-JSON response to {line:?}: {e}"));
+        parsed
+            .get("ok")
+            .and_then(|v| v.as_bool())
+            .unwrap_or_else(|_| panic!("response to {line:?} lacks ok: {resp}"));
+    };
+
+    // the hand-picked killers first
+    for line in nasty_lines() {
+        send_and_check(&mut writer, &mut reader, &line);
+    }
+
+    // then seeded random mutations, with a live-ness ping every 10
+    let mut rng = Rng::seed_from_u64(0xbeef);
+    let seeds = valid_lines();
+    for trial in 0..300u64 {
+        let base = &seeds[(trial % seeds.len() as u64) as usize];
+        let mutated = mutate(&mut rng, base);
+        send_and_check(&mut writer, &mut reader, &mutated);
+        if trial % 10 == 9 {
+            writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            let mut resp = String::new();
+            assert!(reader.read_line(&mut resp).unwrap() > 0, "ping dropped");
+            assert!(resp.contains("\"pong\":true"), "out of sync: {resp}");
+        }
+    }
+
+    // the connection still does real work afterwards
+    writer
+        .write_all(
+            format!(r#"{{"op":"insert","vec":{{"dim":{DIM},"indices":[1,2,3]}}}}"#)
+                .as_bytes(),
+        )
+        .unwrap();
+    writer.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+
+    // and no worker was lost: a second connection is admitted and serves
+    let stream2 = TcpStream::connect(server.addr()).unwrap();
+    let mut writer2 = stream2.try_clone().unwrap();
+    let mut reader2 = BufReader::new(stream2);
+    writer2.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut resp2 = String::new();
+    assert!(reader2.read_line(&mut resp2).unwrap() > 0);
+    assert!(resp2.contains("\"pong\":true"), "{resp2}");
+
+    let (snap, _) = svc.stats();
+    assert!(snap.errors > 0, "the fuzz run must have exercised error paths");
+}

@@ -10,23 +10,24 @@ use cminhash::coordinator::Coordinator;
 use cminhash::server::protocol::Request;
 use cminhash::server::{BlockingClient, Server};
 use cminhash::sketch::{estimate, SketchScheme, Sketcher, SparseVec};
-use cminhash::util::testutil::TempDir;
+use cminhash::util::testutil::{overlap_pair, TempDir};
 use std::path::PathBuf;
 
 const DIM: usize = 64;
 const K: usize = 16;
 
-/// Seeded overlapping-range pairs spanning several J levels.  Ranges
-/// are deliberately *structured* (contiguous index runs): schemes that
+/// Seeded overlapping-range pairs spanning several J levels, drawn
+/// from the one shared structured-pair generator
+/// ([`overlap_pair`], also behind the bench gates).  Ranges are
+/// deliberately *structured* (contiguous index runs): schemes that
 /// skip their scrambling permutation would be biased on exactly this
 /// data, so unbiasedness here exercises the σ machinery too.
 fn pairs() -> Vec<(SparseVec, SparseVec, f64)> {
-    let mk = |lo: u32, hi: u32| SparseVec::new(DIM as u32, (lo..hi).collect()).unwrap();
     vec![
-        (mk(0, 24), mk(12, 36), 12.0 / 36.0),
-        (mk(0, 40), mk(30, 64), 10.0 / 64.0),
-        (mk(0, 32), mk(0, 32), 1.0),
-        (mk(0, 16), mk(16, 32), 0.0),
+        overlap_pair(DIM as u32, 24, 24, 12), // J = 1/3
+        overlap_pair(DIM as u32, 40, 34, 10), // J = 10/64
+        overlap_pair(DIM as u32, 32, 32, 32), // J = 1
+        overlap_pair(DIM as u32, 16, 16, 0),  // J = 0
     ]
 }
 

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Offline bench-output gate (stdlib only).
+
+Parses the machine-readable ``BENCH_*.json`` files the bench harnesses
+emit and enforces the packed b-bit plane's perf contract from
+``BENCH_bbit_query.json``:
+
+* at every K, packed query throughput must not regress below the
+  unpacked (bits = 32) baseline for b <= 8 — the popcount kernel must
+  actually win where it claims to;
+* memory per item must shrink by at least (32/b) * 0.9 — packing that
+  doesn't pack is a bug.
+
+Any other ``BENCH_*.json`` present is checked for being valid JSON
+with a ``bench`` tag (schema drift in an emitter fails fast here
+rather than in a downstream dashboard).
+
+When no ``BENCH_bbit_query.json`` exists (benches not run — e.g. a
+plain ``make verify`` before ``make bench``), the gate SKIPS with exit
+0 so verify stays runnable from a fresh clone; CI runs the bench first
+and then this gate, making the skip path impossible there.
+
+Exit status: 0 = pass or skip, 1 = regression (one line per failure).
+
+Usage: python3 tools/check_bench.py [ROOT]
+"""
+import glob
+import json
+import os
+import sys
+
+# b <= 8 widths must beat (or match) the unpacked baseline.
+PACKED_WIN_BITS = (1, 2, 4, 8)
+# Noise floor for the throughput comparison: single-run wall-clock
+# numbers on shared CI runners jitter a few percent, and a gate that
+# fails on scheduler noise trains people to ignore it.  A genuine
+# kernel regression shows up far below this.
+QPS_MARGIN = 0.95
+# Required memory shrink: 90% of the ideal 32/b ratio (word-rounding
+# at small K legitimately eats a little).
+MEM_MARGIN = 0.9
+
+
+def fail(msgs):
+    for m in msgs:
+        print(f"check_bench: FAIL: {m}")
+    return 1
+
+
+def check_bbit_query(path):
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("results", [])
+    failures = []
+    by_k = {}
+    for row in rows:
+        by_k.setdefault(int(row["k"]), []).append(row)
+    if not by_k:
+        return [f"{path}: no results rows"]
+    for k, krows in sorted(by_k.items()):
+        base = [r for r in krows if int(r["bits"]) == 32]
+        if not base:
+            failures.append(f"{path}: K={k} has no bits=32 baseline row")
+            continue
+        base = base[0]
+        base_qps = float(base["query_per_s"])
+        base_bytes = float(base["bytes_per_item"])
+        for row in krows:
+            bits = int(row["bits"])
+            if bits == 32:
+                continue
+            qps = float(row["query_per_s"])
+            bpi = float(row["bytes_per_item"])
+            if bits in PACKED_WIN_BITS and qps < QPS_MARGIN * base_qps:
+                failures.append(
+                    f"K={k} bits={bits}: packed query throughput "
+                    f"{qps:.0f}/s regresses below unpacked "
+                    f"{base_qps:.0f}/s (margin {QPS_MARGIN})"
+                )
+            want_ratio = (32.0 / bits) * MEM_MARGIN
+            got_ratio = base_bytes / bpi if bpi else 0.0
+            if got_ratio < want_ratio:
+                failures.append(
+                    f"K={k} bits={bits}: memory/item shrank only "
+                    f"{got_ratio:.2f}x (need >= {want_ratio:.2f}x: "
+                    f"{base_bytes:.0f} B -> {bpi:.0f} B)"
+                )
+            print(
+                f"check_bench: K={k} bits={bits}: {qps:.0f} q/s "
+                f"(unpacked {base_qps:.0f}), {bpi:.0f} B/item "
+                f"({got_ratio:.1f}x smaller)"
+            )
+    return failures
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    bench_files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    gate = os.path.join(root, "BENCH_bbit_query.json")
+
+    # every emitted bench file must at least be well-formed
+    failures = []
+    for path in bench_files:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if "bench" not in data:
+                failures.append(f"{path}: missing 'bench' tag")
+        except (OSError, ValueError) as e:
+            failures.append(f"{path}: unreadable ({e})")
+
+    if os.path.exists(gate):
+        failures.extend(check_bbit_query(gate))
+    elif not failures:
+        print(
+            "check_bench: no BENCH_bbit_query.json found (benches not "
+            "run); skipping the packed-plane gate"
+        )
+        return 0
+
+    if failures:
+        return fail(failures)
+    print("check_bench: all bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
