@@ -8,10 +8,12 @@
 //! recorded in `BENCH_serving_batch.json`.
 
 use cminhash::bench::Harness;
-use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
+use cminhash::config::{
+    BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig, SketchSettings,
+};
 use cminhash::coordinator::Coordinator;
 use cminhash::server::{BlockingClient, Server};
-use cminhash::sketch::{CMinHasher, Sketcher};
+use cminhash::sketch::{pack_row, packed_words, CMinHasher, SketchScheme, Sketcher};
 use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
 use std::path::Path;
@@ -85,13 +87,23 @@ fn drive_batched(
     (requests as f64) / t0.elapsed().as_secs_f64()
 }
 
-fn start(engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) -> Option<(Arc<Coordinator>, Server)> {
+fn start(
+    engine: EngineKind,
+    policy: BatchPolicy,
+    dim: usize,
+    k: usize,
+    bits: u8,
+) -> Option<(Arc<Coordinator>, Server)> {
     let cfg = ServeConfig {
         engine,
         artifacts_dir: Path::new("artifacts").to_path_buf(),
         dim,
         num_hashes: k,
         seed: 42,
+        sketch: SketchSettings {
+            scheme: SketchScheme::Cmh,
+            bits,
+        },
         batch: BatchConfig {
             max_batch: 64,
             max_delay_us: 1_000,
@@ -116,7 +128,7 @@ fn start(engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) -> Optio
 }
 
 fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usize, k: usize) {
-    let Some((svc, server)) = start(engine, policy, dim, k) else {
+    let Some((svc, server)) = start(engine, policy, dim, k, 32) else {
         return;
     };
     let addr = server.addr().to_string();
@@ -141,8 +153,8 @@ fn run_engine(h: &mut Harness, engine: EngineKind, policy: BatchPolicy, dim: usi
 /// Per-item vs batched wire ops over the same row budget; returns the
 /// JSON record for `BENCH_serving_batch.json`.
 fn run_batch_comparison(h: &mut Harness, dim: usize, k: usize, rows: usize) -> Json {
-    let (svc, server) =
-        start(EngineKind::Rust, BatchPolicy::Eager, dim, k).expect("rust engine always starts");
+    let (svc, server) = start(EngineKind::Rust, BatchPolicy::Eager, dim, k, 32)
+        .expect("rust engine always starts");
     let addr = server.addr().to_string();
     let conns = 8usize;
 
@@ -214,6 +226,97 @@ fn run_batch_comparison(h: &mut Harness, dim: usize, k: usize, rows: usize) -> J
     ])
 }
 
+/// JSON-lines vs `bin1` wire format over the same row budget; returns
+/// the JSON record for `BENCH_wire_format.json`.
+///
+/// The comparison is the offline-sketch ingest shape: the binary side
+/// packs its rows BEFORE the timed region (that work happens in an
+/// offline sketching job, or amortised across `cminhash load` client
+/// cores) and ships `insert_packed` frames the server memcpys into the
+/// packed arena; the JSON side ships raw indices the server must
+/// parse and sketch inline.  That asymmetry is the point of bin1.
+fn run_wire_format_comparison(h: &mut Harness, dim: usize, k: usize, rows: usize) -> Json {
+    let bits = 8u8;
+    let (_svc, server) = start(EngineKind::Rust, BatchPolicy::Eager, dim, k, bits)
+        .expect("rust engine always starts");
+    let addr = server.addr().to_string();
+    let raw = rand_rows(dim as u32, 64, rows, 123);
+    let chunk = 256usize;
+
+    // JSON-lines ingest: raw indices, server-side sketch + pack.
+    let mut cj = BlockingClient::connect(&addr).unwrap();
+    cj.insert_batch(dim as u32, raw[..chunk.min(rows)].to_vec())
+        .unwrap(); // warmup
+    let t0 = Instant::now();
+    for c in raw.chunks(chunk) {
+        cj.insert_batch(dim as u32, c.to_vec()).unwrap();
+    }
+    let json_ingest = rows as f64 / t0.elapsed().as_secs_f64();
+    h.report(&format!("ingest jsonl insert_batch x{rows}"), t0.elapsed(), rows as u64);
+
+    // bin1 ingest: rows sketched and packed outside the timed region,
+    // shipped as checksummed insert_packed frames.
+    let hasher = CMinHasher::new(dim, k, 42);
+    let wpr = packed_words(k, bits);
+    let packed: Vec<Vec<u64>> = raw
+        .iter()
+        .map(|idx| {
+            let mut row = vec![0u64; wpr];
+            pack_row(&hasher.sketch_sparse(idx), bits, &mut row);
+            row
+        })
+        .collect();
+    let mut cb = BlockingClient::connect(&addr).unwrap();
+    cb.binary().unwrap();
+    cb.insert_packed(packed[..chunk.min(rows)].to_vec()).unwrap(); // warmup
+    let t0 = Instant::now();
+    for c in packed.chunks(chunk) {
+        cb.insert_packed(c.to_vec()).unwrap();
+    }
+    let bin_ingest = rows as f64 / t0.elapsed().as_secs_f64();
+    h.report(&format!("ingest bin1 insert_packed x{rows}"), t0.elapsed(), rows as u64);
+    println!(
+        "  -> ingest: jsonl {json_ingest:.0} rows/s, bin1 {bin_ingest:.0} rows/s \
+         ({:.2}x)",
+        bin_ingest / json_ingest
+    );
+
+    // Query path, same query set in both formats.
+    let nq = rows.min(1024);
+    let queries = raw[..nq].to_vec();
+    let t0 = Instant::now();
+    for c in queries.chunks(64) {
+        let got = cj.query_batch(dim as u32, c.to_vec(), 10).unwrap();
+        assert_eq!(got.len(), c.len());
+    }
+    let json_query = nq as f64 / t0.elapsed().as_secs_f64();
+    h.report(&format!("query jsonl query_batch x{nq}"), t0.elapsed(), nq as u64);
+    let t0 = Instant::now();
+    for c in queries.chunks(64) {
+        let got = cb.query_batch(dim as u32, c.to_vec(), 10).unwrap();
+        assert_eq!(got.len(), c.len());
+    }
+    let bin_query = nq as f64 / t0.elapsed().as_secs_f64();
+    h.report(&format!("query bin1 query_batch x{nq}"), t0.elapsed(), nq as u64);
+    println!(
+        "  -> query: jsonl {json_query:.0} rows/s, bin1 {bin_query:.0} rows/s \
+         ({:.2}x)",
+        bin_query / json_query
+    );
+
+    Json::obj(vec![
+        ("bench", Json::str("wire_format")),
+        ("dim", Json::Num(dim as f64)),
+        ("k", Json::Num(k as f64)),
+        ("bits", Json::Num(f64::from(bits))),
+        ("rows", Json::Num(rows as f64)),
+        ("json_insert_rows_per_s", Json::Num(json_ingest)),
+        ("bin_insert_rows_per_s", Json::Num(bin_ingest)),
+        ("json_query_rows_per_s", Json::Num(json_query)),
+        ("bin_query_rows_per_s", Json::Num(bin_query)),
+    ])
+}
+
 fn main() {
     let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
     let mut h = Harness::new("serving_throughput");
@@ -238,6 +341,12 @@ fn main() {
     let record = run_batch_comparison(&mut h, dim, k, rows);
     std::fs::write("BENCH_serving_batch.json", record.to_string()).unwrap();
     println!("wrote BENCH_serving_batch.json");
+
+    // JSON-lines vs bin1 framing (the PROTOCOL.md binary-wins claim).
+    let wire_rows = if fast { 2048 } else { 8192 };
+    let record = run_wire_format_comparison(&mut h, dim, k, wire_rows);
+    std::fs::write("BENCH_wire_format.json", record.to_string()).unwrap();
+    println!("wrote BENCH_wire_format.json");
 
     println!(
         "PAPER-CHECK L3 overhead: bare hash = {:.1} µs/sketch; serving adds \

@@ -279,6 +279,43 @@ impl Coordinator {
         Ok(ids.into_iter().zip(sks).collect())
     }
 
+    /// Store and index a batch of *already-packed* sketch rows — the
+    /// binary wire's zero-copy ingest: the client (or an offline
+    /// sketching job) ran the scheme's hasher and `pack_row` itself,
+    /// so the bytes go straight into the packed arena with no
+    /// sketching, no per-lane parse, and no repack.  Rows must be
+    /// exactly [`crate::sketch::packed_words`]`(K, bits)` words with
+    /// every padding bit past K·b zero (nonzero padding would corrupt
+    /// popcount scoring for the row's whole lifetime, so it is
+    /// rejected here at the boundary).  Returns fresh consecutive ids
+    /// in row order.
+    pub fn insert_packed_many(&self, rows: Vec<Vec<u64>>) -> crate::Result<Vec<u64>> {
+        if rows.is_empty() {
+            return Err(crate::Error::Invalid("empty batch".into()));
+        }
+        let k = self.cfg.num_hashes;
+        let bits = self.cfg.sketch.bits;
+        let wpr = crate::sketch::packed_words(k, bits);
+        let used_in_last = k * bits as usize - (wpr - 1) * 64;
+        for (row, words) in rows.iter().enumerate() {
+            if words.len() != wpr {
+                return Err(crate::Error::ShapeMismatch {
+                    what: "packed row words",
+                    expected: wpr,
+                    got: words.len(),
+                });
+            }
+            if used_in_last < 64 && (words[wpr - 1] >> used_in_last) != 0 {
+                return Err(crate::Error::Invalid(format!(
+                    "packed row {row} has nonzero padding bits past lane \
+                     K={k} at bits={bits} (rows must come from pack_row, \
+                     which zeroes the tail)"
+                )));
+            }
+        }
+        self.store.insert_packed_many(&rows)
+    }
+
     /// Delete a stored id (error on unknown ids); the deletion is
     /// WAL-logged and the id never resurfaces in query results.
     pub fn delete(&self, id: u64) -> crate::Result<()> {
@@ -966,6 +1003,79 @@ mod tests {
         let mut bad = rust_cfg();
         bad.sketch.bits = 5;
         assert!(Coordinator::start(bad).is_err());
+    }
+
+    #[test]
+    fn insert_packed_many_matches_client_side_sketching() {
+        use crate::sketch::{pack_row, packed_words};
+        // A client that sketches + packs locally and ships words must
+        // land in exactly the state server-side sketching produces —
+        // at a packed width and at full width.
+        let vs: Vec<SparseVec> = (0..5u32)
+            .map(|i| SparseVec::new(512, (i * 20..i * 20 + 50).collect()).unwrap())
+            .collect();
+        for bits in [8u8, 32] {
+            let mut cfg = rust_cfg();
+            cfg.sketch.bits = bits;
+            let server_side = Coordinator::start(cfg.clone()).unwrap();
+            let client_side = Coordinator::start(cfg.clone()).unwrap();
+            server_side.insert_many(vs.clone()).unwrap();
+            let hasher = cfg
+                .sketch
+                .scheme
+                .build(cfg.dim, cfg.num_hashes, cfg.seed)
+                .unwrap();
+            let wpr = packed_words(cfg.num_hashes, bits);
+            let rows: Vec<Vec<u64>> = vs
+                .iter()
+                .map(|v| {
+                    let mut row = vec![0u64; wpr];
+                    pack_row(&hasher.sketch_sparse(v.indices()), bits, &mut row);
+                    row
+                })
+                .collect();
+            let ids = client_side.insert_packed_many(rows.clone()).unwrap();
+            assert_eq!(ids, (0..5).collect::<Vec<u64>>(), "bits={bits}");
+            for v in &vs {
+                assert_eq!(
+                    client_side.query(v.clone(), 3).unwrap(),
+                    server_side.query(v.clone(), 3).unwrap(),
+                    "bits={bits}"
+                );
+            }
+            // boundary validation: empty batch, bad width, dirty padding
+            assert!(client_side.insert_packed_many(vec![]).is_err());
+            assert!(client_side
+                .insert_packed_many(vec![vec![0u64; wpr + 1]])
+                .is_err());
+            if bits == 8 {
+                let mut dirty = rows[0].clone();
+                *dirty.last_mut().unwrap() |= 1u64 << 63; // K*8=512 bits fill 8 words exactly… use a width that has padding
+                // 64 lanes × 8 bits = 512 bits = 8 words exactly: no
+                // padding exists, so the high bit is a legal lane bit
+                // and the row must be accepted.
+                assert!(client_side.insert_packed_many(vec![dirty]).is_ok());
+            }
+        }
+        // a width with real padding: K=64 at bits=1 → 64 bits, still
+        // exact… use K from a custom config to get a ragged tail
+        let mut cfg = rust_cfg();
+        cfg.dim = 512;
+        cfg.num_hashes = 48; // 48 lanes × 8 bits = 384 bits → 6 words, no tail
+        cfg.sketch.bits = 2; // 48 × 2 = 96 bits → 2 words, 32 padding bits
+        cfg.index.bands = 12;
+        cfg.index.rows_per_band = 4;
+        let svc = Coordinator::start(cfg).unwrap();
+        let mut dirty = vec![0u64; 2];
+        dirty[1] = 1u64 << 40; // inside the 32 padding bits
+        match svc.insert_packed_many(vec![dirty]) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("padding"), "{msg}")
+            }
+            other => panic!("expected Invalid(padding), got {other:?}"),
+        }
+        let (_, store) = svc.stats();
+        assert_eq!(store.stored, 0, "dirty row never landed");
     }
 
     #[test]

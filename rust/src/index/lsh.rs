@@ -257,6 +257,49 @@ impl BandingIndex {
         Ok(())
     }
 
+    /// Insert an item's *already-packed* row under `id` — the binary
+    /// wire's zero-copy ingest path.  The words must be exactly what
+    /// [`crate::sketch::pack_row`] produces for this index's K and
+    /// width (length [`crate::sketch::packed_words`]`(K, bits)`, zero
+    /// padding bits); the wire boundary validates both before calling.
+    /// In packed storage mode the row is memcpy'd into the arena and
+    /// band signatures are hashed straight off the packed bits; at
+    /// full width (`bits = 32`) the lanes are widened back out and the
+    /// ordinary insert runs, so callers need not special-case the
+    /// storage mode.
+    pub fn insert_packed(&mut self, id: u64, packed: &[u64]) -> crate::Result<()> {
+        let want = packed_words(self.k, self.bits);
+        if packed.len() != want {
+            return Err(crate::Error::ShapeMismatch {
+                what: "packed row words",
+                expected: want,
+                got: packed.len(),
+            });
+        }
+        let r = self.cfg.rows_per_band;
+        match &mut self.rows {
+            Rows::Full(_) => {
+                let lanes = crate::sketch::unpack_row(packed, self.k, self.bits);
+                self.insert(id, &lanes)
+            }
+            Rows::Packed(rows) => {
+                if rows.contains(id) {
+                    return Err(crate::Error::Invalid(format!("duplicate id {id}")));
+                }
+                let slot = rows.insert_packed(id, packed);
+                let sigs = packed_band_sigs(
+                    rows.row(slot),
+                    self.cfg.bands,
+                    r * self.bits as usize,
+                );
+                for (table, sig) in self.tables.iter_mut().zip(sigs) {
+                    table.entry(sig).or_default().push(slot as u64);
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Remove an id, erasing its band postings in place (tombstone
     /// free: the posting lists shrink immediately, so a deleted item
     /// can never resurface as a candidate).  Returns the removed
@@ -571,6 +614,37 @@ mod tests {
         assert!(hits.iter().all(|n| n.id != 42));
         assert_eq!(idx.sketch(43), Some(sk43.iter().map(|&v| v & 0xff).collect()));
         assert_eq!(idx.iter().count(), 2);
+    }
+
+    #[test]
+    fn insert_packed_is_indistinguishable_from_insert() {
+        // the zero-copy ingest path must build identical postings and
+        // score identically, in packed AND full storage modes
+        let h = CMinHasher::new(1024, 64, 11);
+        let docs: Vec<Vec<u32>> = (0..4)
+            .map(|i| (i * 50..i * 50 + 120).collect())
+            .collect();
+        for bits in [4u8, 8, 32] {
+            let mut via_lanes = BandingIndex::with_bits(64, cfg(), bits).unwrap();
+            let mut via_words = BandingIndex::with_bits(64, cfg(), bits).unwrap();
+            for (i, d) in docs.iter().enumerate() {
+                let sk = h.sketch_sparse(d);
+                via_lanes.insert(i as u64, &sk).unwrap();
+                let mut packed = vec![0u64; packed_words(64, bits)];
+                pack_row(&sk, bits, &mut packed);
+                via_words.insert_packed(i as u64, &packed).unwrap();
+            }
+            let probe = h.sketch_sparse(&docs[1]);
+            assert_eq!(
+                via_lanes.query(&probe, 4),
+                via_words.query(&probe, 4),
+                "bits={bits}"
+            );
+            // width and duplicate validation hold on this path too
+            assert!(via_words.insert_packed(0, &[0u64; 1]).is_err());
+            let dup = vec![0u64; packed_words(64, bits)];
+            assert!(via_words.insert_packed(0, &dup).is_err(), "duplicate id");
+        }
     }
 
     #[test]

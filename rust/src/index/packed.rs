@@ -112,6 +112,33 @@ impl PackedRows {
         slot
     }
 
+    /// Store an already-packed row (exactly [`words_per_row`] words,
+    /// as produced by [`crate::sketch::pack_row`]) under `id` and
+    /// return the slot — the binary-ingest path: one `copy_from_slice`
+    /// into the arena, no per-lane unpack/repack.  The caller
+    /// guarantees `id` is not already resident, the width matches, and
+    /// padding bits beyond K·b are zero (enforced at the wire
+    /// boundary; nonzero padding would corrupt popcount scoring).
+    ///
+    /// [`words_per_row`]: PackedRows::words_per_row
+    pub fn insert_packed(&mut self, id: u64, packed: &[u64]) -> usize {
+        debug_assert_eq!(packed.len(), self.wpr);
+        debug_assert!(!self.slot_of.contains_key(&id), "duplicate id {id}");
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.id_of.len();
+                self.id_of.push(0);
+                self.words.resize(self.words.len() + self.wpr, 0);
+                s
+            }
+        };
+        self.words[slot * self.wpr..(slot + 1) * self.wpr].copy_from_slice(packed);
+        self.id_of[slot] = id;
+        self.slot_of.insert(id, slot);
+        slot
+    }
+
     /// Remove `id`'s row, returning its masked lane values (what
     /// [`PackedRows::get`] would have returned) and recycling the
     /// slot.  `None` if the id is not resident.
@@ -185,6 +212,23 @@ mod tests {
         let mut ids: Vec<u64> = rows.iter().map(|(id, _)| id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn insert_packed_matches_insert() {
+        // shipping pre-packed words must land bit-identically to
+        // packing the lanes server-side
+        let full: Vec<u32> = (0..12).map(|i| i * 41 % 256).collect();
+        let mut via_lanes = PackedRows::new(12, 8);
+        let mut via_words = PackedRows::new(12, 8);
+        let slot = via_lanes.insert(5, &full);
+        let packed = via_lanes.row(slot).to_vec();
+        let slot2 = via_words.insert_packed(5, &packed);
+        assert_eq!(via_words.row(slot2), &packed[..]);
+        assert_eq!(via_words.get(5), via_lanes.get(5));
+        // freed slots are recycled on this path too
+        via_words.remove(5).unwrap();
+        assert_eq!(via_words.insert_packed(6, &packed), slot2);
     }
 
     #[test]

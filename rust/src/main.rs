@@ -21,9 +21,8 @@ use cminhash::data::{BinaryDataset, CorpusKind};
 use cminhash::index::IndexConfig;
 use cminhash::runtime::Manifest;
 use cminhash::store::{resolve_shards, PersistentIndex};
-use cminhash::server::protocol::Request;
 use cminhash::server::{BlockingClient, Server};
-use cminhash::sketch::{SketchScheme, Sketcher, SparseVec};
+use cminhash::sketch::{SketchScheme, Sketcher};
 use cminhash::util::rng::Rng;
 use cminhash::{Error, Result};
 use std::collections::HashMap;
@@ -39,9 +38,11 @@ USAGE:
                    [--bits 1|2|4|8|16|32]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
                    [--shards N] [--persist DIR] [--max-conns N]
-  cminhash load    FILE.jsonl [--addr A] [--batch N]
+  cminhash load    FILE.jsonl [--addr A] [--batch N] [--binary]
                    (bulk-ingest: one {\"dim\":D,\"indices\":[...]} object
-                   per line, streamed through insert_batch)
+                   per line, streamed through insert_batch; --binary
+                   negotiates bin1 framing and ships client-sketched
+                   packed rows instead)
   cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
                    [--scheme S] [--bits B] [--shards N]
                    (offline only — use the `save` wire op to compact
@@ -52,6 +53,7 @@ USAGE:
   cminhash sketch  --input FILE.json --out FILE.json
                    [--num-hashes K] [--seed S] [--scheme S] [--bits B]
   cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
+                   [--binary]   (drive sketch ops over bin1 frames)
   cminhash info    [--artifacts DIR]
   cminhash theory  --d D --f F [--a A] [--k K]
 ";
@@ -73,7 +75,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let is_bool = matches!(name, "stats" | "fast" | "all");
+                let is_bool = matches!(name, "stats" | "fast" | "all" | "binary");
                 if is_bool {
                     flags.insert(name.to_string(), "true".to_string());
                     i += 1;
@@ -250,14 +252,20 @@ fn cmd_load(args: &Args, positional: Option<String>) -> Result<()> {
     if batch == 0 {
         return Err(usage_err("--batch must be > 0"));
     }
+    let binary = args.has("binary");
     println!(
-        "loading {} into {addr} ({batch} rows per insert_batch)",
-        file.display()
+        "loading {} into {addr} ({batch} rows per {})",
+        file.display(),
+        if binary {
+            "insert_packed frame (bin1)"
+        } else {
+            "insert_batch"
+        }
     );
     // Print a progress line roughly every 8 batches so multi-million
     // row ingests show a heartbeat without drowning the terminal.
     let mut last_printed = 0u64;
-    let report = cminhash::server::load_jsonl(&addr, &file, batch, |r| {
+    let progress = |r: &cminhash::server::LoadReport| {
         if r.batches - last_printed >= 8 {
             last_printed = r.batches;
             println!(
@@ -267,7 +275,12 @@ fn cmd_load(args: &Args, positional: Option<String>) -> Result<()> {
                 r.rows_per_sec()
             );
         }
-    })?;
+    };
+    let report = if binary {
+        cminhash::server::load_jsonl_binary(&addr, &file, batch, progress)?
+    } else {
+        cminhash::server::load_jsonl(&addr, &file, batch, progress)?
+    };
     println!(
         "loaded {} rows in {} batches over {:.2}s -> {:.0} rows/s",
         report.rows,
@@ -443,6 +456,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let dim = args.get_parsed::<u32>("dim")?.unwrap_or(4096);
     let nnz = args.get_parsed::<u32>("nnz")?.unwrap_or(64);
     let conns = args.get_parsed::<usize>("conns")?.unwrap_or(4);
+    let binary = args.has("binary");
     let per_conn = requests / conns.max(1);
     if per_conn == 0 {
         return Err(usage_err(format!(
@@ -455,13 +469,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
             let mut client = BlockingClient::connect(&addr)?;
+            if binary {
+                client.binary()?;
+            }
             let mut rng = Rng::seed_from_u64(c as u64);
             let mut lats = Vec::with_capacity(per_conn);
             for _ in 0..per_conn {
                 let idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
-                let vec = SparseVec::new(dim, idx)?;
                 let t = Instant::now();
-                let _ = client.call(&Request::Sketch { vec })?;
+                let _ = client.sketch(dim, idx)?;
                 lats.push(t.elapsed().as_secs_f64() * 1e3);
             }
             Ok(lats)
@@ -475,8 +491,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     lats.sort_by(|a, b| a.total_cmp(b));
     let q = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
     println!(
-        "{} requests over {conns} conns in {wall:.2}s -> {:.0} req/s; \
+        "{} {} requests over {conns} conns in {wall:.2}s -> {:.0} req/s; \
          latency ms p50={:.2} p90={:.2} p99={:.2} max={:.2}",
+        if binary { "bin1" } else { "jsonl" },
         lats.len(),
         lats.len() as f64 / wall,
         q(0.50),

@@ -117,6 +117,12 @@ pub struct Metrics {
     pub deletes: AtomicU64,
     /// Requests rejected with an error.
     pub errors: AtomicU64,
+    /// Malformed binary frames (bad checksum, truncated mid-frame,
+    /// oversized declared length, unknown op, undecodable payload) on
+    /// `bin1`-negotiated connections.  Kept separate from `errors` so
+    /// wire corruption is distinguishable from semantically invalid
+    /// requests.
+    pub frame_errors: AtomicU64,
     /// Connections turned away with a `busy` error (pool saturated).
     pub busy_rejections: AtomicU64,
     /// Transient accept() failures survived by the accept loop.
@@ -148,6 +154,8 @@ pub struct MetricsSnapshot {
     pub deletes: u64,
     /// Errors returned.
     pub errors: u64,
+    /// Malformed binary frames survived.
+    pub frame_errors: u64,
     /// Connections rejected busy.
     pub busy_rejections: u64,
     /// Accept failures survived.
@@ -184,6 +192,7 @@ impl MetricsSnapshot {
             ("estimates", Json::Num(self.estimates as f64)),
             ("deletes", Json::Num(self.deletes as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("frame_errors", Json::Num(self.frame_errors as f64)),
             ("busy_rejections", Json::Num(self.busy_rejections as f64)),
             ("accept_errors", Json::Num(self.accept_errors as f64)),
             ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
@@ -208,6 +217,7 @@ impl Metrics {
             estimates: self.estimates.load(Ordering::Relaxed),
             deletes: self.deletes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            frame_errors: self.frame_errors.load(Ordering::Relaxed),
             busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
             mean_batch_fill: if batches == 0 {

@@ -1,0 +1,866 @@
+//! Binary wire framing (`bin1`) for the serving protocol.
+//!
+//! JSON-lines (see [`super::protocol`]) stays the default dialect; a
+//! client that sends `{"op":"hello","proto":"bin1"}` as its first line
+//! switches the connection to length-prefixed binary frames:
+//!
+//! ```text
+//! | len: u32 LE | crc: u32 LE | op: u8 | payload: (len - 1) bytes |
+//! ```
+//!
+//! `len` counts the op byte plus the payload (so a bare op frame has
+//! `len = 1`; `len = 0` is malformed), and `crc` is the FNV-1a32
+//! checksum of the op byte followed by the payload (see
+//! [`crate::util::fnv`]).  All multi-byte integers on the wire are
+//! little-endian.  The frame body is bounded by [`MAX_FRAME_BYTES`] so
+//! a corrupt or hostile length prefix cannot make the server buffer
+//! unbounded memory.
+//!
+//! The payoff is the ingest path: a binary `insert_packed` frame
+//! carries [`crate::sketch::pack_row`] output byte-for-byte, so the
+//! server verifies the checksum and copies words straight into the
+//! packed arena — no JSON parse, no re-sketch, no per-lane widening.
+//!
+//! ## Error recovery
+//!
+//! [`FrameError`] distinguishes faults that leave the stream **synced**
+//! (the full declared body was consumed, so the next byte starts the
+//! next frame: bad checksum, unknown op, malformed payload) from faults
+//! where the byte position is unknowable or the peer is gone (truncated
+//! stream, oversized declared length, I/O).  Servers answer synced
+//! faults with one [`BinResponse::Err`] frame and keep the connection;
+//! unsynced faults close it.  Both increment the `frame_errors` metric.
+//!
+//! The operator-facing byte-layout reference is the "Binary framing"
+//! section of `docs/PROTOCOL.md`; this module is the codec it
+//! describes.
+
+use crate::server::protocol::{WireNeighbor, MAX_WIRE_BATCH};
+use crate::sketch::SparseVec;
+use crate::util::fnv::{fnv1a32_more, FNV32_INIT};
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// The protocol name clients put in the hello line (`"proto":"bin1"`)
+/// and servers echo back when the switch is accepted.
+pub const PROTO_NAME: &str = "bin1";
+
+/// Hard cap on one frame body (op byte + payload).  Large enough for a
+/// [`MAX_WIRE_BATCH`]-row packed batch at any supported width; small
+/// enough that a corrupt length prefix cannot balloon the read buffer.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Request op codes (client → server).  Kept in a distinct numeric
+/// range from response ops so a desynced peer cannot mistake one for
+/// the other.
+pub mod op {
+    /// Liveness check; empty payload.
+    pub const PING: u8 = 0x01;
+    /// Sketch one sparse vector (stateless).
+    pub const SKETCH: u8 = 0x02;
+    /// Sketch many sparse vectors in one frame (stateless).
+    pub const SKETCH_BATCH: u8 = 0x03;
+    /// Ingest pre-packed sketch rows (the zero-copy path).
+    pub const INSERT_PACKED: u8 = 0x04;
+    /// Top-k near neighbors for many query vectors in one frame.
+    pub const QUERY_BATCH: u8 = 0x05;
+    /// Delete a stored id.
+    pub const DELETE: u8 = 0x06;
+    /// Estimate J between two stored ids.
+    pub const ESTIMATE: u8 = 0x07;
+    /// Failure reply; payload is the UTF-8 error message.
+    pub const R_ERR: u8 = 0x80;
+    /// Ping reply; empty payload.
+    pub const R_PONG: u8 = 0x81;
+    /// Sketch reply: K lanes.
+    pub const R_SKETCH: u8 = 0x82;
+    /// Batched sketch reply.
+    pub const R_SKETCH_BATCH: u8 = 0x83;
+    /// Insert reply: assigned ids.
+    pub const R_IDS: u8 = 0x84;
+    /// Batched query reply: per-row neighbor lists.
+    pub const R_RESULTS: u8 = 0x85;
+    /// Delete reply: the removed id.
+    pub const R_DELETED: u8 = 0x86;
+    /// Estimate reply: Ĵ.
+    pub const R_ESTIMATE: u8 = 0x87;
+}
+
+/// Everything that can go wrong reading, writing, or decoding a frame.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The stream ended mid-header or mid-body.
+    Truncated,
+    /// A length prefix larger than [`MAX_FRAME_BYTES`]; the body was
+    /// not read, so the stream position is unusable afterwards.
+    Oversized {
+        /// The declared body length.
+        len: usize,
+    },
+    /// The body checksum did not match the header.
+    BadChecksum {
+        /// The checksum the header declared.
+        want: u32,
+        /// The checksum computed over the received body.
+        got: u32,
+    },
+    /// An op byte this codec does not know.
+    UnknownOp(u8),
+    /// The payload did not decode under its op's layout.
+    Malformed(String),
+    /// Transport failure.
+    Io(io::Error),
+}
+
+impl FrameError {
+    /// True iff the fault left the stream positioned at the next frame
+    /// boundary (the full declared body was consumed), so the server
+    /// may answer with one error frame and keep reading.  False means
+    /// the byte position is unknowable or the peer is gone: close.
+    pub fn stream_synced(&self) -> bool {
+        matches!(
+            self,
+            FrameError::BadChecksum { .. }
+                | FrameError::UnknownOp(_)
+                | FrameError::Malformed(_)
+        )
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "frame truncated: stream ended mid-frame"),
+            FrameError::Oversized { len } => write!(
+                f,
+                "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+            ),
+            FrameError::BadChecksum { want, got } => write!(
+                f,
+                "frame checksum mismatch: header says {want:#010x}, body hashes to {got:#010x}"
+            ),
+            FrameError::UnknownOp(op) => write!(f, "unknown frame op {op:#04x}"),
+            FrameError::Malformed(msg) => write!(f, "malformed frame payload: {msg}"),
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl From<FrameError> for crate::Error {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Io(io) => crate::Error::Io(io),
+            other => crate::Error::Protocol(other.to_string()),
+        }
+    }
+}
+
+/// Reads `len | crc | op | payload` frames off a byte stream.
+#[derive(Debug)]
+pub struct FrameReader<R> {
+    inner: R,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a readable transport (callers hand in their own
+    /// `BufReader` if the transport benefits from one).
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner }
+    }
+
+    /// Read one frame.  `Ok(None)` is a clean end-of-stream at a frame
+    /// boundary; EOF anywhere inside a frame is
+    /// [`FrameError::Truncated`].  On [`FrameError::BadChecksum`] the
+    /// full body was consumed, so the caller may answer and keep
+    /// reading from the same stream.
+    pub fn read_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, FrameError> {
+        let mut hdr = [0u8; 8];
+        let mut filled = 0;
+        while filled < hdr.len() {
+            match self.inner.read(&mut hdr[filled..]) {
+                Ok(0) if filled == 0 => return Ok(None),
+                Ok(0) => return Err(FrameError::Truncated),
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        let want = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]);
+        if len == 0 {
+            // no body was declared, so the stream stays synced
+            return Err(FrameError::Malformed("zero-length frame".into()));
+        }
+        if len > MAX_FRAME_BYTES {
+            return Err(FrameError::Oversized { len });
+        }
+        let mut body = vec![0u8; len];
+        self.inner.read_exact(&mut body).map_err(|e| {
+            if e.kind() == io::ErrorKind::UnexpectedEof {
+                FrameError::Truncated
+            } else {
+                FrameError::Io(e)
+            }
+        })?;
+        let got = fnv1a32_more(FNV32_INIT, &body);
+        if got != want {
+            return Err(FrameError::BadChecksum { want, got });
+        }
+        let payload = body.split_off(1);
+        Ok(Some((body[0], payload)))
+    }
+}
+
+/// Writes `len | crc | op | payload` frames onto a byte stream, one
+/// `write_all` + flush per frame.
+#[derive(Debug)]
+pub struct FrameWriter<W> {
+    inner: W,
+}
+
+impl<W: Write> FrameWriter<W> {
+    /// Wrap a writable transport.
+    pub fn new(inner: W) -> Self {
+        FrameWriter { inner }
+    }
+
+    /// Frame and send `op` + `payload`, flushing afterwards.
+    pub fn write_frame(&mut self, op: u8, payload: &[u8]) -> Result<(), FrameError> {
+        let len = 1 + payload.len();
+        if len > MAX_FRAME_BYTES {
+            return Err(FrameError::Oversized { len });
+        }
+        let crc = fnv1a32_more(fnv1a32_more(FNV32_INIT, &[op]), payload);
+        let mut buf = Vec::with_capacity(8 + len);
+        buf.extend_from_slice(&(len as u32).to_le_bytes());
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.push(op);
+        buf.extend_from_slice(payload);
+        self.inner.write_all(&buf)?;
+        self.inner.flush()?;
+        Ok(())
+    }
+}
+
+// ---- payload cursor -------------------------------------------------
+
+/// Bounds-checked little-endian reader over a decoded payload.  Every
+/// multi-byte read verifies the remaining length first, so a hostile
+/// count field fails with [`FrameError::Malformed`] instead of an
+/// allocation blow-up or a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<(), FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(FrameError::Malformed(format!(
+                "payload ends early: need {n} more bytes at offset {}",
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        self.need(4)?;
+        let b = &self.buf[self.pos..self.pos + 4];
+        self.pos += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        self.need(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// All remaining bytes (used by ops whose tail is one blob).
+    fn rest(&mut self) -> &'a [u8] {
+        let r = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        r
+    }
+
+    /// Decode must consume the payload exactly; trailing garbage means
+    /// the peer and this codec disagree about the layout.
+    fn finish(self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(FrameError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Batch counts share [`MAX_WIRE_BATCH`] with the JSON dialect; zero
+/// rows is legal at the codec layer (the dispatch layer owns the
+/// empty-batch policy, mirroring JSON's `vecs_field`).
+fn batch_count(c: &mut Cursor<'_>, what: &str) -> Result<usize, FrameError> {
+    let n = c.u32()? as usize;
+    if n > MAX_WIRE_BATCH {
+        return Err(FrameError::Malformed(format!(
+            "{what} with {n} rows exceeds the {MAX_WIRE_BATCH}-row cap"
+        )));
+    }
+    Ok(n)
+}
+
+fn put_vec(out: &mut Vec<u8>, v: &SparseVec) {
+    put_u32(out, v.dim());
+    put_u32(out, v.nnz() as u32);
+    for &i in v.indices() {
+        put_u32(out, i);
+    }
+}
+
+fn take_vec(c: &mut Cursor<'_>) -> Result<SparseVec, FrameError> {
+    let dim = c.u32()?;
+    let nnz = c.u32()? as usize;
+    c.need(nnz * 4)?;
+    let indices = (0..nnz).map(|_| c.u32()).collect::<Result<Vec<_>, _>>()?;
+    SparseVec::new(dim, indices).map_err(|e| FrameError::Malformed(e.to_string()))
+}
+
+fn put_lanes(out: &mut Vec<u8>, lanes: &[u32]) {
+    put_u32(out, lanes.len() as u32);
+    for &v in lanes {
+        put_u32(out, v);
+    }
+}
+
+fn take_lanes(c: &mut Cursor<'_>) -> Result<Vec<u32>, FrameError> {
+    let k = c.u32()? as usize;
+    c.need(k * 4)?;
+    (0..k).map(|_| c.u32()).collect()
+}
+
+// ---- requests -------------------------------------------------------
+
+/// Client → server binary requests.  The deliberate subset of the JSON
+/// [`super::protocol::Request`] surface that benefits from framing:
+/// batch ingest/query plus the cheap singletons a loader or health
+/// check needs.  Everything else (save, stats, query_above, raw
+/// insert_batch) stays on JSON lines — negotiation is per-connection,
+/// so a client opens a second JSON connection for those.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BinRequest {
+    /// Liveness check.
+    Ping,
+    /// Sketch one vector (stateless).
+    Sketch(SparseVec),
+    /// Sketch many vectors in one frame (stateless).
+    SketchBatch(Vec<SparseVec>),
+    /// Ingest pre-packed rows: each row is exactly `words_per_row`
+    /// words of [`crate::sketch::pack_row`] output.
+    InsertPacked {
+        /// Words per packed row (must match the server's K·b).
+        words_per_row: usize,
+        /// The rows, in id-assignment order.
+        rows: Vec<Vec<u64>>,
+    },
+    /// Top-k near neighbors for many query vectors.
+    QueryBatch {
+        /// The query vectors, in response order.
+        vecs: Vec<SparseVec>,
+        /// Result bound per row.
+        topk: usize,
+    },
+    /// Delete a stored id.
+    Delete(u64),
+    /// Estimate J between two stored ids.
+    Estimate(u64, u64),
+}
+
+impl BinRequest {
+    /// Serialize to `(op, payload)` for [`FrameWriter::write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut p = Vec::new();
+        let op = match self {
+            BinRequest::Ping => op::PING,
+            BinRequest::Sketch(v) => {
+                put_vec(&mut p, v);
+                op::SKETCH
+            }
+            BinRequest::SketchBatch(vs) => {
+                put_u32(&mut p, vs.len() as u32);
+                for v in vs {
+                    put_vec(&mut p, v);
+                }
+                op::SKETCH_BATCH
+            }
+            BinRequest::InsertPacked {
+                words_per_row,
+                rows,
+            } => {
+                put_u32(&mut p, rows.len() as u32);
+                put_u32(&mut p, *words_per_row as u32);
+                for row in rows {
+                    debug_assert_eq!(row.len(), *words_per_row);
+                    for &w in row {
+                        put_u64(&mut p, w);
+                    }
+                }
+                op::INSERT_PACKED
+            }
+            BinRequest::QueryBatch { vecs, topk } => {
+                put_u32(&mut p, vecs.len() as u32);
+                put_u32(&mut p, *topk as u32);
+                for v in vecs {
+                    put_vec(&mut p, v);
+                }
+                op::QUERY_BATCH
+            }
+            BinRequest::Delete(id) => {
+                put_u64(&mut p, *id);
+                op::DELETE
+            }
+            BinRequest::Estimate(a, b) => {
+                put_u64(&mut p, *a);
+                put_u64(&mut p, *b);
+                op::ESTIMATE
+            }
+        };
+        (op, p)
+    }
+
+    /// Decode a received frame (server side).
+    pub fn decode(op: u8, payload: &[u8]) -> Result<Self, FrameError> {
+        let mut c = Cursor::new(payload);
+        let req = match op {
+            op::PING => BinRequest::Ping,
+            op::SKETCH => BinRequest::Sketch(take_vec(&mut c)?),
+            op::SKETCH_BATCH => {
+                let n = batch_count(&mut c, "sketch_batch")?;
+                BinRequest::SketchBatch(
+                    (0..n).map(|_| take_vec(&mut c)).collect::<Result<_, _>>()?,
+                )
+            }
+            op::INSERT_PACKED => {
+                let n = batch_count(&mut c, "insert_packed")?;
+                let wpr = c.u32()? as usize;
+                if n > 0 && wpr == 0 {
+                    return Err(FrameError::Malformed(
+                        "insert_packed with zero words per row".into(),
+                    ));
+                }
+                c.need(n * wpr * 8)?;
+                let rows = (0..n)
+                    .map(|_| (0..wpr).map(|_| c.u64()).collect())
+                    .collect::<Result<_, _>>()?;
+                BinRequest::InsertPacked {
+                    words_per_row: wpr,
+                    rows,
+                }
+            }
+            op::QUERY_BATCH => {
+                let n = batch_count(&mut c, "query_batch")?;
+                let topk = c.u32()? as usize;
+                BinRequest::QueryBatch {
+                    vecs: (0..n).map(|_| take_vec(&mut c)).collect::<Result<_, _>>()?,
+                    topk,
+                }
+            }
+            op::DELETE => BinRequest::Delete(c.u64()?),
+            op::ESTIMATE => BinRequest::Estimate(c.u64()?, c.u64()?),
+            other => return Err(FrameError::UnknownOp(other)),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+// ---- responses ------------------------------------------------------
+
+/// Server → client binary responses, one per request frame, in request
+/// order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BinResponse {
+    /// Failure; the payload is the UTF-8 error message.
+    Err(String),
+    /// Ping reply.
+    Pong,
+    /// Sketch result: K lanes.
+    Sketch(Vec<u32>),
+    /// Batched sketch result, in request order.
+    SketchBatch(Vec<Vec<u32>>),
+    /// Insert result: assigned (consecutive) ids.
+    Ids(Vec<u64>),
+    /// Batched query result: per-row scored neighbors, best first.
+    Results(Vec<Vec<WireNeighbor>>),
+    /// Delete result: the removed id.
+    Deleted(u64),
+    /// Estimate result: Ĵ.
+    Estimate(f64),
+}
+
+impl BinResponse {
+    /// Serialize to `(op, payload)` for [`FrameWriter::write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut p = Vec::new();
+        let op = match self {
+            BinResponse::Err(msg) => {
+                p.extend_from_slice(msg.as_bytes());
+                op::R_ERR
+            }
+            BinResponse::Pong => op::R_PONG,
+            BinResponse::Sketch(lanes) => {
+                put_lanes(&mut p, lanes);
+                op::R_SKETCH
+            }
+            BinResponse::SketchBatch(rows) => {
+                put_u32(&mut p, rows.len() as u32);
+                for lanes in rows {
+                    put_lanes(&mut p, lanes);
+                }
+                op::R_SKETCH_BATCH
+            }
+            BinResponse::Ids(ids) => {
+                put_u32(&mut p, ids.len() as u32);
+                for &id in ids {
+                    put_u64(&mut p, id);
+                }
+                op::R_IDS
+            }
+            BinResponse::Results(rows) => {
+                put_u32(&mut p, rows.len() as u32);
+                for ns in rows {
+                    put_u32(&mut p, ns.len() as u32);
+                    for n in ns {
+                        put_u64(&mut p, n.id);
+                        put_f64(&mut p, n.score);
+                    }
+                }
+                op::R_RESULTS
+            }
+            BinResponse::Deleted(id) => {
+                put_u64(&mut p, *id);
+                op::R_DELETED
+            }
+            BinResponse::Estimate(jhat) => {
+                put_f64(&mut p, *jhat);
+                op::R_ESTIMATE
+            }
+        };
+        (op, p)
+    }
+
+    /// Decode a received frame (client side).
+    pub fn decode(op: u8, payload: &[u8]) -> Result<Self, FrameError> {
+        let mut c = Cursor::new(payload);
+        let resp = match op {
+            op::R_ERR => BinResponse::Err(
+                String::from_utf8(c.rest().to_vec())
+                    .map_err(|_| FrameError::Malformed("error message is not UTF-8".into()))?,
+            ),
+            op::R_PONG => BinResponse::Pong,
+            op::R_SKETCH => BinResponse::Sketch(take_lanes(&mut c)?),
+            op::R_SKETCH_BATCH => {
+                let n = batch_count(&mut c, "sketch_batch reply")?;
+                BinResponse::SketchBatch(
+                    (0..n)
+                        .map(|_| take_lanes(&mut c))
+                        .collect::<Result<_, _>>()?,
+                )
+            }
+            op::R_IDS => {
+                let n = batch_count(&mut c, "ids reply")?;
+                c.need(n * 8)?;
+                BinResponse::Ids((0..n).map(|_| c.u64()).collect::<Result<_, _>>()?)
+            }
+            op::R_RESULTS => {
+                let n = batch_count(&mut c, "results reply")?;
+                let rows = (0..n)
+                    .map(|_| -> Result<Vec<WireNeighbor>, FrameError> {
+                        let m = c.u32()? as usize;
+                        c.need(m * 16)?;
+                        (0..m)
+                            .map(|_| {
+                                Ok(WireNeighbor {
+                                    id: c.u64()?,
+                                    score: c.f64()?,
+                                })
+                            })
+                            .collect()
+                    })
+                    .collect::<Result<_, _>>()?;
+                BinResponse::Results(rows)
+            }
+            op::R_DELETED => BinResponse::Deleted(c.u64()?),
+            op::R_ESTIMATE => BinResponse::Estimate(c.f64()?),
+            other => return Err(FrameError::UnknownOp(other)),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor as IoCursor;
+
+    fn vec_of(dim: u32, idx: &[u32]) -> SparseVec {
+        SparseVec::new(dim, idx.to_vec()).unwrap()
+    }
+
+    fn roundtrip_req(req: BinRequest) -> BinRequest {
+        let (op, payload) = req.encode();
+        BinRequest::decode(op, &payload).unwrap()
+    }
+
+    fn roundtrip_resp(resp: BinResponse) -> BinResponse {
+        let (op, payload) = resp.encode();
+        BinResponse::decode(op, &payload).unwrap()
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        for req in [
+            BinRequest::Ping,
+            BinRequest::Sketch(vec_of(64, &[1, 5, 63])),
+            BinRequest::SketchBatch(vec![vec_of(64, &[0]), vec_of(64, &[])]),
+            BinRequest::InsertPacked {
+                words_per_row: 2,
+                rows: vec![vec![u64::MAX, 7], vec![0, 1]],
+            },
+            BinRequest::QueryBatch {
+                vecs: vec![vec_of(32, &[3, 4])],
+                topk: 5,
+            },
+            BinRequest::Delete(u64::MAX),
+            BinRequest::Estimate(3, 9),
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        for resp in [
+            BinResponse::Err("busy: retry later".into()),
+            BinResponse::Pong,
+            BinResponse::Sketch(vec![1, 2, u32::MAX]),
+            BinResponse::SketchBatch(vec![vec![7], vec![]]),
+            BinResponse::Ids(vec![0, u64::MAX]),
+            BinResponse::Results(vec![
+                vec![WireNeighbor { id: 3, score: 0.75 }],
+                vec![],
+            ]),
+            BinResponse::Deleted(12),
+            BinResponse::Estimate(0.4921875),
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn zero_row_batches_roundtrip_at_the_codec_layer() {
+        // empty-batch policy belongs to dispatch, not the codec
+        assert_eq!(
+            roundtrip_req(BinRequest::SketchBatch(vec![])),
+            BinRequest::SketchBatch(vec![])
+        );
+        let req = BinRequest::InsertPacked {
+            words_per_row: 4,
+            rows: vec![],
+        };
+        assert_eq!(roundtrip_req(req.clone()), req);
+        let req = BinRequest::QueryBatch {
+            vecs: vec![],
+            topk: 1,
+        };
+        assert_eq!(roundtrip_req(req.clone()), req);
+    }
+
+    #[test]
+    fn over_cap_batches_are_rejected_on_decode() {
+        let mut p = Vec::new();
+        put_u32(&mut p, (MAX_WIRE_BATCH + 1) as u32);
+        put_u32(&mut p, 1); // words_per_row
+        match BinRequest::decode(op::INSERT_PACKED, &p) {
+            Err(FrameError::Malformed(msg)) => assert!(msg.contains("cap"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        let mut p = Vec::new();
+        put_u32(&mut p, (MAX_WIRE_BATCH + 1) as u32);
+        put_u32(&mut p, 3); // topk
+        assert!(BinRequest::decode(op::QUERY_BATCH, &p).is_err());
+    }
+
+    #[test]
+    fn hostile_counts_fail_without_allocating() {
+        // nnz claims 4 billion indices but the payload is 12 bytes
+        let mut p = Vec::new();
+        put_u32(&mut p, 64); // dim
+        put_u32(&mut p, u32::MAX); // nnz
+        put_u32(&mut p, 1);
+        match BinRequest::decode(op::SKETCH, &p) {
+            Err(FrameError::Malformed(msg)) => assert!(msg.contains("ends early"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // insert_packed claiming more words than the payload holds
+        let mut p = Vec::new();
+        put_u32(&mut p, 8); // rows
+        put_u32(&mut p, 1 << 20); // words per row
+        match BinRequest::decode(op::INSERT_PACKED, &p) {
+            Err(FrameError::Malformed(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let (opc, mut payload) = BinRequest::Delete(7).encode();
+        payload.push(0xAA);
+        match BinRequest::decode(opc, &payload) {
+            Err(FrameError::Malformed(msg)) => assert!(msg.contains("trailing"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_ops_are_rejected() {
+        assert!(matches!(
+            BinRequest::decode(0x7F, &[]),
+            Err(FrameError::UnknownOp(0x7F))
+        ));
+        // a request op arriving where a response is expected is unknown
+        assert!(matches!(
+            BinResponse::decode(op::PING, &[]),
+            Err(FrameError::UnknownOp(_))
+        ));
+    }
+
+    #[test]
+    fn frame_reader_writer_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = FrameWriter::new(&mut buf);
+            w.write_frame(op::PING, &[]).unwrap();
+            w.write_frame(op::DELETE, &7u64.to_le_bytes()).unwrap();
+        }
+        let mut r = FrameReader::new(IoCursor::new(buf));
+        assert_eq!(r.read_frame().unwrap(), Some((op::PING, vec![])));
+        let (opc, payload) = r.read_frame().unwrap().unwrap();
+        assert_eq!(opc, op::DELETE);
+        assert_eq!(BinRequest::decode(opc, &payload).unwrap(), BinRequest::Delete(7));
+        // clean EOF at a frame boundary
+        assert!(r.read_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_layout_is_pinned() {
+        // ping: len=1, crc=fnv1a32([0x01]), op=0x01, no payload
+        let mut buf = Vec::new();
+        FrameWriter::new(&mut buf).write_frame(op::PING, &[]).unwrap();
+        let crc = fnv1a32_more(FNV32_INIT, &[op::PING]);
+        let mut want = vec![1, 0, 0, 0];
+        want.extend_from_slice(&crc.to_le_bytes());
+        want.push(op::PING);
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn corrupt_body_is_a_synced_checksum_error() {
+        let mut buf = Vec::new();
+        {
+            let mut w = FrameWriter::new(&mut buf);
+            w.write_frame(op::DELETE, &7u64.to_le_bytes()).unwrap();
+            w.write_frame(op::PING, &[]).unwrap();
+        }
+        buf[10] ^= 0xFF; // flip a body byte of the first frame
+        let mut r = FrameReader::new(IoCursor::new(buf));
+        match r.read_frame() {
+            Err(e @ FrameError::BadChecksum { .. }) => assert!(e.stream_synced()),
+            other => panic!("{other:?}"),
+        }
+        // the reader consumed the whole corrupt body: next frame is intact
+        assert_eq!(r.read_frame().unwrap(), Some((op::PING, vec![])));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_close_the_stream() {
+        // header declares 100 bytes, stream carries 3
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut r = FrameReader::new(IoCursor::new(buf));
+        match r.read_frame() {
+            Err(e @ FrameError::Truncated) => assert!(!e.stream_synced()),
+            other => panic!("{other:?}"),
+        }
+        // partial header
+        let mut r = FrameReader::new(IoCursor::new(vec![9u8, 0, 0]));
+        assert!(matches!(r.read_frame(), Err(FrameError::Truncated)));
+        // oversized declared length never allocates the body
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let mut r = FrameReader::new(IoCursor::new(buf));
+        match r.read_frame() {
+            Err(e @ FrameError::Oversized { .. }) => assert!(!e.stream_synced()),
+            other => panic!("{other:?}"),
+        }
+        // zero-length frame is malformed but synced
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let mut r = FrameReader::new(IoCursor::new(buf));
+        match r.read_frame() {
+            Err(e @ FrameError::Malformed(_)) => assert!(e.stream_synced()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_errors_convert_into_protocol_errors() {
+        let e: crate::Error = FrameError::UnknownOp(0x55).into();
+        assert!(matches!(e, crate::Error::Protocol(_)), "{e}");
+        let e: crate::Error =
+            FrameError::Io(io::Error::new(io::ErrorKind::BrokenPipe, "gone")).into();
+        assert!(matches!(e, crate::Error::Io(_)), "{e}");
+    }
+}

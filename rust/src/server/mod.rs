@@ -2,6 +2,16 @@
 //! pool**, plus a small blocking client used by examples, benches and
 //! tests, and a JSONL bulk loader streaming through `insert_batch`.
 //!
+//! Every connection starts on JSON lines; a client may send one
+//! `{"op":"hello","proto":"bin1"}` line to switch the rest of the
+//! stream to the length-prefixed binary framing in [`frame`] (unknown
+//! `proto` values answer `{"ok":true,"proto":"jsonl"}` and stay on
+//! JSON, so probing an old server is always safe).  The binary dialect
+//! shares [`dispatch`] with JSON — identical corpora produce identical
+//! results on either framing — and adds `insert_packed`, which carries
+//! [`crate::sketch::pack_row`] output byte-for-byte so ingest becomes
+//! a checksum-verified copy into the packed arena.
+//!
 //! Connection admission: `server.max_connections` worker threads are
 //! spawned up front; the accept loop tracks how many are serving via a
 //! shared counter and hands accepted sockets over a rendezvous
@@ -16,6 +26,7 @@
 //! listening; only a listener-is-gone class error (`EBADF`/`EINVAL`)
 //! stops it.
 
+pub mod frame;
 pub mod protocol;
 
 use crate::coordinator::Coordinator;
@@ -187,33 +198,184 @@ fn busy_reject(mut socket: TcpStream, max_connections: usize) {
     // Dropping the socket closes the connection.
 }
 
+/// Serve one connection.  Starts on JSON lines; a successful `hello`
+/// negotiation (see [`handle_hello`]) may hand the rest of the stream
+/// to [`serve_binary`].  Lines are read as raw bytes so a client that
+/// sends invalid UTF-8 gets one clean JSON error line instead of
+/// killing the read loop; a final line without a trailing newline is
+/// still processed.
 fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
     socket.set_nodelay(true)?;
     let mut writer = socket.try_clone()?;
-    let reader = BufReader::new(socket);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(socket);
+    let mut hello_done = false;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        if reader.read_until(b'\n', &mut buf)? == 0 {
+            return Ok(()); // clean EOF at a line boundary
         }
-        let resp = match Json::parse(&line) {
-            Ok(j) => match Request::from_json(&j) {
-                Ok(req) => dispatch(&svc, req),
-                Err(e) => {
-                    Metrics::inc(&svc.metrics().errors);
-                    Response::err(&e)
-                }
-            },
-            Err(e) => {
+        let resp = match std::str::from_utf8(&buf) {
+            Err(_) => {
                 Metrics::inc(&svc.metrics().errors);
-                Response::err(&crate::Error::Protocol(e.to_string()))
+                Response::err(&crate::Error::Protocol(
+                    "request line is not valid UTF-8".into(),
+                ))
+            }
+            Ok(line) => {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match Json::parse(line) {
+                    Ok(j) => {
+                        let is_hello =
+                            matches!(j.get_opt("op").map(|o| o.as_str()), Some(Ok("hello")));
+                        if is_hello {
+                            match handle_hello(&svc, &j, &mut hello_done, &mut writer)? {
+                                HelloOutcome::SwitchToBinary => {
+                                    return serve_binary(&svc, reader, writer);
+                                }
+                                HelloOutcome::StayJson => continue,
+                            }
+                        }
+                        match Request::from_json(&j) {
+                            Ok(req) => dispatch(&svc, req),
+                            Err(e) => {
+                                Metrics::inc(&svc.metrics().errors);
+                                Response::err(&e)
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        Metrics::inc(&svc.metrics().errors);
+                        Response::err(&crate::Error::Protocol(e.to_string()))
+                    }
+                }
             }
         };
         let mut out = resp.to_json().to_string();
         out.push('\n');
         writer.write_all(out.as_bytes())?;
     }
-    Ok(())
+}
+
+/// What a `hello` line decided for the rest of the connection.
+enum HelloOutcome {
+    /// Negotiation succeeded: switch this connection to `bin1` frames.
+    SwitchToBinary,
+    /// Stay on JSON lines (fallback, repeat hello, or malformed hello).
+    StayJson,
+}
+
+/// Answer one `{"op":"hello",...}` line.  `"proto":"bin1"` switches
+/// the connection to binary frames and advertises the sketch
+/// parameters (`scheme`/`dim`/`k`/`seed`/`bits`) a client needs to
+/// build the identical hasher locally, plus `max_batch`; any other
+/// proto answers `{"ok":true,"proto":"jsonl"}` and stays on JSON, so
+/// new clients can probe old servers safely.  `hello_done` is only set
+/// by a successful answer — a malformed hello (missing `proto`) leaves
+/// the connection able to retry — and a second hello after it is a
+/// protocol error.
+fn handle_hello(
+    svc: &Arc<Coordinator>,
+    j: &Json,
+    hello_done: &mut bool,
+    writer: &mut TcpStream,
+) -> crate::Result<HelloOutcome> {
+    fn send(writer: &mut TcpStream, json: &Json) -> crate::Result<()> {
+        let mut out = json.to_string();
+        out.push('\n');
+        writer.write_all(out.as_bytes())?;
+        Ok(())
+    }
+    if *hello_done {
+        Metrics::inc(&svc.metrics().errors);
+        let e = crate::Error::Protocol("hello already negotiated on this connection".into());
+        send(writer, &Response::err(&e).to_json())?;
+        return Ok(HelloOutcome::StayJson);
+    }
+    let proto = match j.get("proto").and_then(|p| p.as_str()) {
+        Ok(p) => p,
+        Err(e) => {
+            Metrics::inc(&svc.metrics().errors);
+            send(writer, &Response::err(&e).to_json())?;
+            return Ok(HelloOutcome::StayJson);
+        }
+    };
+    if proto == frame::PROTO_NAME {
+        let cfg = svc.config();
+        send(
+            writer,
+            &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("proto", Json::str(frame::PROTO_NAME)),
+                ("scheme", Json::str(cfg.sketch.scheme.as_str())),
+                ("dim", Json::Num(cfg.dim as f64)),
+                ("k", Json::Num(cfg.num_hashes as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("bits", Json::Num(f64::from(cfg.sketch.bits))),
+                ("max_batch", Json::Num(protocol::MAX_WIRE_BATCH as f64)),
+            ]),
+        )?;
+        *hello_done = true;
+        Ok(HelloOutcome::SwitchToBinary)
+    } else {
+        *hello_done = true;
+        send(
+            writer,
+            &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("proto", Json::str("jsonl")),
+            ]),
+        )?;
+        Ok(HelloOutcome::StayJson)
+    }
+}
+
+/// The binary half of a negotiated connection: one `bin1` frame in,
+/// one frame out, until clean EOF.  Synced faults (bad checksum,
+/// unknown op, malformed payload — the declared body was fully
+/// consumed) get one error frame and the loop continues; a truncated
+/// stream or I/O failure closes without a reply (the peer is gone);
+/// an oversized length prefix answers then closes, because the stream
+/// position is no longer trustworthy.  Every fault increments
+/// `frame_errors`, keeping binary corruption distinguishable from
+/// JSON-level `errors` in `stats`.
+fn serve_binary(
+    svc: &Arc<Coordinator>,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+) -> crate::Result<()> {
+    let mut fr = frame::FrameReader::new(reader);
+    let mut fw = frame::FrameWriter::new(writer);
+    loop {
+        match fr.read_frame() {
+            Ok(None) => return Ok(()),
+            Ok(Some((op, payload))) => {
+                let resp = match frame::BinRequest::decode(op, &payload) {
+                    Ok(req) => dispatch_binary(svc, req),
+                    Err(e) => {
+                        Metrics::inc(&svc.metrics().frame_errors);
+                        frame::BinResponse::Err(e.to_string())
+                    }
+                };
+                let (rop, rpay) = resp.encode();
+                fw.write_frame(rop, &rpay).map_err(crate::Error::from)?;
+            }
+            Err(e) => {
+                Metrics::inc(&svc.metrics().frame_errors);
+                if matches!(e, frame::FrameError::Truncated | frame::FrameError::Io(_)) {
+                    return Err(e.into());
+                }
+                let (rop, rpay) = frame::BinResponse::Err(e.to_string()).encode();
+                fw.write_frame(rop, &rpay).map_err(crate::Error::from)?;
+                if !e.stream_synced() {
+                    return Err(e.into());
+                }
+            }
+        }
+    }
 }
 
 fn wire_neighbors(ns: Vec<crate::index::Neighbor>) -> Vec<WireNeighbor> {
@@ -291,23 +453,184 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
     }
 }
 
-/// A minimal blocking client for examples/benches/tests.
+/// Map an internal JSON-dialect response onto its binary twin.  Both
+/// dialects share [`dispatch`], so results (and error strings) are
+/// identical no matter which framing carried the request.
+fn bin_of(resp: Response) -> frame::BinResponse {
+    use frame::BinResponse as B;
+    match resp {
+        Response::Err { error } => B::Err(error),
+        Response::Pong => B::Pong,
+        Response::Sketch { sketch } => B::Sketch(sketch),
+        Response::SketchBatch { sketches } => B::SketchBatch(sketches),
+        Response::Deleted { id } => B::Deleted(id),
+        Response::Estimate { jhat } => B::Estimate(jhat),
+        Response::QueryBatch { results } => B::Results(results),
+        // the remaining variants have no binary request that produces
+        // them; reaching this arm is a server-side dispatch bug
+        other => B::Err(format!("unexpected internal response {other:?}")),
+    }
+}
+
+/// Execute one decoded binary request.  Everything with a JSON twin is
+/// converted and routed through [`dispatch`] (sharing its semantics
+/// and error accounting); `insert_packed` — binary-only — goes straight
+/// to [`Coordinator::insert_packed_many`], the zero-copy path.  Batch
+/// emptiness is policed here to mirror the JSON parser's empty-`vecs`
+/// rejection, since the frame codec deliberately lets zero-row batches
+/// roundtrip.
+fn dispatch_binary(svc: &Arc<Coordinator>, req: frame::BinRequest) -> frame::BinResponse {
+    use frame::BinRequest as B;
+    let reject_empty = |what: &str| {
+        Metrics::inc(&svc.metrics().errors);
+        frame::BinResponse::Err(
+            crate::Error::Protocol(format!("{what} with zero rows")).to_string(),
+        )
+    };
+    match req {
+        B::Ping => bin_of(dispatch(svc, Request::Ping)),
+        B::Sketch(vec) => bin_of(dispatch(svc, Request::Sketch { vec })),
+        B::SketchBatch(vecs) if vecs.is_empty() => reject_empty("sketch_batch"),
+        B::SketchBatch(vecs) => bin_of(dispatch(svc, Request::SketchBatch { vecs })),
+        B::QueryBatch { vecs, .. } if vecs.is_empty() => reject_empty("query_batch"),
+        B::QueryBatch { vecs, topk } => {
+            bin_of(dispatch(svc, Request::QueryBatch { vecs, topk }))
+        }
+        B::Delete(id) => bin_of(dispatch(svc, Request::Delete { id })),
+        B::Estimate(a, b) => bin_of(dispatch(svc, Request::Estimate { a, b })),
+        B::InsertPacked { rows, .. } => match svc.insert_packed_many(rows) {
+            Ok(ids) => frame::BinResponse::Ids(ids),
+            Err(e) => {
+                Metrics::inc(&svc.metrics().errors);
+                frame::BinResponse::Err(e.to_string())
+            }
+        },
+    }
+}
+
+/// Everything a binary-mode client needs to sketch locally: a hasher
+/// rebuilt from the server's advertised scheme/dim/K/seed (schemes are
+/// deterministic, so lanes match the server bit-for-bit — the same
+/// guarantee offline sketching jobs rely on) plus the packing
+/// geometry.
+struct BinInfo {
+    hasher: Arc<dyn crate::sketch::Sketcher>,
+    dim: u32,
+    k: usize,
+    bits: u8,
+}
+
+impl BinInfo {
+    /// Sketch + mask + pack one vector exactly as the server would
+    /// have on a JSON insert.
+    fn pack(&self, v: &SparseVec) -> crate::Result<Vec<u64>> {
+        if v.dim() != self.dim {
+            return Err(crate::Error::ShapeMismatch {
+                what: "vector dim",
+                expected: self.dim as usize,
+                got: v.dim() as usize,
+            });
+        }
+        if v.nnz() == 0 {
+            return Err(crate::Error::Invalid("empty vector".into()));
+        }
+        let full = self.hasher.sketch_sparse(v.indices());
+        let mut out = vec![0u64; crate::sketch::packed_words(self.k, self.bits)];
+        crate::sketch::pack_row(&full, self.bits, &mut out);
+        Ok(out)
+    }
+}
+
+/// A minimal blocking client for examples/benches/tests.  Speaks JSON
+/// lines by default; [`BlockingClient::binary`] negotiates `bin1` and
+/// reroutes the conveniences through binary frames — inserts are
+/// sketched **client-side** with the hasher the server advertised and
+/// shipped as packed rows (the zero-copy ingest path).
 pub struct BlockingClient {
     reader: BufReader<TcpStream>,
+    bin: Option<BinInfo>,
 }
 
 impl BlockingClient {
-    /// Connect to a running server.
+    /// Connect to a running server (JSON-lines mode).
     pub fn connect(addr: &str) -> crate::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         Ok(BlockingClient {
             reader: BufReader::new(stream),
+            bin: None,
         })
     }
 
-    /// Send one request and read one response.
+    /// Negotiate `bin1` framing on this connection and build the local
+    /// hasher from the parameters the server advertised.  Errors if
+    /// the server declines (it stays on JSON and the connection
+    /// remains usable) or if negotiation already happened.
+    pub fn binary(&mut self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return Err(crate::Error::Invalid(
+                "connection is already in binary mode".into(),
+            ));
+        }
+        let hello = Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("proto", Json::str(frame::PROTO_NAME)),
+        ]);
+        let mut line = hello.to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        let j = Json::parse(&resp)?;
+        if !j.get("ok")?.as_bool()? {
+            return Err(crate::Error::Protocol(j.get("error")?.as_str()?.to_string()));
+        }
+        let proto = j.get("proto")?.as_str()?;
+        if proto != frame::PROTO_NAME {
+            return Err(crate::Error::Protocol(format!(
+                "server declined binary mode (answered proto {proto:?})"
+            )));
+        }
+        let scheme = crate::sketch::SketchScheme::parse(j.get("scheme")?.as_str()?)?;
+        let dim = j.get("dim")?.as_u32()?;
+        let k = j.get("k")?.as_usize()?;
+        let seed = j.get("seed")?.as_u64()?;
+        let bits = u8::try_from(j.get("bits")?.as_u32()?)
+            .map_err(|_| crate::Error::Protocol("advertised bits out of range".into()))?;
+        crate::sketch::check_sketch_bits(bits)?;
+        let hasher = scheme.build(dim as usize, k, seed)?;
+        self.bin = Some(BinInfo {
+            hasher,
+            dim,
+            k,
+            bits,
+        });
+        Ok(())
+    }
+
+    /// True once [`BlockingClient::binary`] has negotiated `bin1`.
+    pub fn is_binary(&self) -> bool {
+        self.bin.is_some()
+    }
+
+    /// Guard for the raw JSON entry points after a `bin1` switch.
+    fn reject_json_mode(&self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return Err(crate::Error::Invalid(
+                "connection negotiated bin1; raw JSON ops are unavailable (open \
+                 a second JSON connection for save/stats)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Send one request and read one response (JSON mode only).
     pub fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        self.reject_json_mode()?;
         let mut line = req.to_json().to_string();
         line.push('\n');
         self.reader.get_mut().write_all(line.as_bytes())?;
@@ -320,8 +643,9 @@ impl BlockingClient {
     }
 
     /// Send one request and return the raw JSON response line
-    /// (used for `stats`).
+    /// (used for `stats`; JSON mode only).
     pub fn call_raw(&mut self, req: &Request) -> crate::Result<Json> {
+        self.reject_json_mode()?;
         let mut line = req.to_json().to_string();
         line.push('\n');
         self.reader.get_mut().write_all(line.as_bytes())?;
@@ -333,19 +657,64 @@ impl BlockingClient {
         Ok(Json::parse(&resp)?)
     }
 
+    /// Send one binary request frame and read one response frame.
+    fn bin_call(&mut self, req: &frame::BinRequest) -> crate::Result<frame::BinResponse> {
+        debug_assert!(self.bin.is_some());
+        let (op, payload) = req.encode();
+        frame::FrameWriter::new(self.reader.get_mut())
+            .write_frame(op, &payload)
+            .map_err(crate::Error::from)?;
+        match frame::FrameReader::new(&mut self.reader)
+            .read_frame()
+            .map_err(crate::Error::from)?
+        {
+            None => Err(crate::Error::Shutdown),
+            Some((op, payload)) => {
+                frame::BinResponse::decode(op, &payload).map_err(crate::Error::from)
+            }
+        }
+    }
+
     fn vecs(dim: u32, rows: Vec<Vec<u32>>) -> crate::Result<Vec<SparseVec>> {
         rows.into_iter().map(|r| SparseVec::new(dim, r)).collect()
+    }
+
+    fn unexpected<T>(resp: impl std::fmt::Debug) -> crate::Result<T> {
+        Err(crate::Error::Protocol(format!(
+            "unexpected response {resp:?}"
+        )))
+    }
+
+    /// Convenience: liveness check (either mode).
+    pub fn ping(&mut self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Ping)? {
+                frame::BinResponse::Pong => Ok(()),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
     }
 
     /// Convenience: sketch a sparse vector.
     pub fn sketch(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<Vec<u32>> {
         let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Sketch(vec))? {
+                frame::BinResponse::Sketch(lanes) => Ok(lanes),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
         match self.call(&Request::Sketch { vec })? {
             Response::Sketch { sketch } => Ok(sketch),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 
@@ -356,24 +725,37 @@ impl BlockingClient {
         rows: Vec<Vec<u32>>,
     ) -> crate::Result<Vec<Vec<u32>>> {
         let vecs = Self::vecs(dim, rows)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::SketchBatch(vecs))? {
+                frame::BinResponse::SketchBatch(sketches) => Ok(sketches),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
         match self.call(&Request::SketchBatch { vecs })? {
             Response::SketchBatch { sketches } => Ok(sketches),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 
-    /// Convenience: insert a sparse vector.
+    /// Convenience: insert a sparse vector.  In binary mode the row is
+    /// sketched and packed locally, then shipped as a one-row
+    /// `insert_packed` frame.
     pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
         let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            let row = self.bin.as_ref().expect("checked").pack(&vec)?;
+            let mut ids = self.insert_packed(vec![row])?;
+            return match ids.pop() {
+                Some(id) if ids.is_empty() => Ok(id),
+                _ => Self::unexpected("insert_packed id count != 1"),
+            };
+        }
         match self.call(&Request::Insert { vec })? {
             Response::Insert { id, .. } => Ok(id),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 
@@ -384,28 +766,66 @@ impl BlockingClient {
         dim: u32,
         rows: Vec<Vec<u32>>,
     ) -> crate::Result<Vec<u64>> {
-        let vecs = Self::vecs(dim, rows)?;
+        self.insert_batch_vecs(Self::vecs(dim, rows)?)
+    }
+
+    /// Insert pre-validated vectors as one unit.  JSON mode sends
+    /// `insert_batch` (the server sketches); binary mode sketches and
+    /// packs every row locally and ships one `insert_packed` frame.
+    pub fn insert_batch_vecs(&mut self, vecs: Vec<SparseVec>) -> crate::Result<Vec<u64>> {
+        if self.bin.is_some() {
+            let bin = self.bin.as_ref().expect("checked");
+            let rows = vecs
+                .iter()
+                .map(|v| bin.pack(v))
+                .collect::<crate::Result<Vec<_>>>()?;
+            return self.insert_packed(rows);
+        }
         match self.call(&Request::InsertBatch { vecs })? {
             Response::InsertBatch { ids } => Ok(ids),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Ship pre-packed sketch rows ([`crate::sketch::pack_row`] output
+    /// at the server's K and b, e.g. from an offline sketching job)
+    /// down the zero-copy ingest path.  Binary mode only.
+    pub fn insert_packed(&mut self, rows: Vec<Vec<u64>>) -> crate::Result<Vec<u64>> {
+        if self.bin.is_none() {
+            return Err(crate::Error::Invalid(
+                "insert_packed requires binary mode (call binary() first)".into(),
+            ));
+        }
+        let words_per_row = rows.first().map_or(0, Vec::len);
+        match self.bin_call(&frame::BinRequest::InsertPacked {
+            words_per_row,
+            rows,
+        })? {
+            frame::BinResponse::Ids(ids) => Ok(ids),
+            frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
         }
     }
 
     /// Convenience: delete a stored id.
     pub fn delete(&mut self, id: u64) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Delete(id))? {
+                frame::BinResponse::Deleted(_) => Ok(()),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
         match self.call(&Request::Delete { id })? {
             Response::Deleted { .. } => Ok(()),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 
-    /// Convenience: top-k query.
+    /// Convenience: top-k query (a one-row `query_batch` in binary
+    /// mode — binary keeps the batch surface only).
     pub fn query(
         &mut self,
         dim: u32,
@@ -413,12 +833,26 @@ impl BlockingClient {
         topk: usize,
     ) -> crate::Result<Vec<WireNeighbor>> {
         let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            let mut results = match self.bin_call(&frame::BinRequest::QueryBatch {
+                vecs: vec![vec],
+                topk,
+            })? {
+                frame::BinResponse::Results(results) => results,
+                frame::BinResponse::Err(error) => {
+                    return Err(crate::Error::Protocol(error))
+                }
+                other => return Self::unexpected(other),
+            };
+            return match results.pop() {
+                Some(ns) if results.is_empty() => Ok(ns),
+                _ => Self::unexpected("query result row count != 1"),
+            };
+        }
         match self.call(&Request::Query { vec, topk })? {
             Response::Query { neighbors } => Ok(neighbors),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 
@@ -431,12 +865,17 @@ impl BlockingClient {
         topk: usize,
     ) -> crate::Result<Vec<Vec<WireNeighbor>>> {
         let vecs = Self::vecs(dim, rows)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::QueryBatch { vecs, topk })? {
+                frame::BinResponse::Results(results) => Ok(results),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
         match self.call(&Request::QueryBatch { vecs, topk })? {
             Response::QueryBatch { results } => Ok(results),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Err(crate::Error::Protocol(format!(
-                "unexpected response {other:?}"
-            ))),
+            other => Self::unexpected(other),
         }
     }
 }
@@ -474,6 +913,31 @@ pub fn load_jsonl(
     addr: &str,
     path: &std::path::Path,
     batch_size: usize,
+    progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    load_jsonl_with(addr, path, batch_size, false, progress)
+}
+
+/// Same as [`load_jsonl`], but negotiates `bin1` first: every batch is
+/// sketched and packed **client-side** and shipped as one
+/// `insert_packed` frame, so the server's ingest work per row is a
+/// checksum verification plus a copy into the packed arena.  Results
+/// are identical to the JSON path — the client's hasher is rebuilt
+/// from the parameters the server advertised at negotiation.
+pub fn load_jsonl_binary(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    load_jsonl_with(addr, path, batch_size, true, progress)
+}
+
+fn load_jsonl_with(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    binary: bool,
     mut progress: impl FnMut(&LoadReport),
 ) -> crate::Result<LoadReport> {
     if batch_size == 0 {
@@ -489,6 +953,9 @@ pub fn load_jsonl(
     let file = std::fs::File::open(path)?;
     let reader = BufReader::new(file);
     let mut client = BlockingClient::connect(addr)?;
+    if binary {
+        client.binary()?;
+    }
     let t0 = Instant::now();
     let mut report = LoadReport {
         rows: 0,
@@ -506,27 +973,18 @@ pub fn load_jsonl(
             return Ok(());
         }
         let n = pending.len();
-        match client.call(&Request::InsertBatch {
-            vecs: std::mem::take(pending),
-        })? {
-            Response::InsertBatch { ids } => {
-                if ids.len() != n {
-                    return Err(crate::Error::Protocol(format!(
-                        "insert_batch returned {} ids for {n} rows",
-                        ids.len()
-                    )));
-                }
-            }
-            Response::Err { error } => {
-                return Err(crate::Error::Protocol(format!(
-                    "batch starting at line {first_line} rejected: {error}"
-                )));
-            }
-            other => {
-                return Err(crate::Error::Protocol(format!(
-                    "unexpected response {other:?}"
-                )));
-            }
+        let ids = client
+            .insert_batch_vecs(std::mem::take(pending))
+            .map_err(|e| {
+                crate::Error::Protocol(format!(
+                    "batch starting at line {first_line} rejected: {e}"
+                ))
+            })?;
+        if ids.len() != n {
+            return Err(crate::Error::Protocol(format!(
+                "insert returned {} ids for {n} rows",
+                ids.len()
+            )));
         }
         report.rows += n as u64;
         report.batches += 1;
@@ -585,6 +1043,31 @@ mod tests {
             std::io::Error::new(std::io::ErrorKind::InvalidInput, "bad listener"),
         ] {
             assert!(accept_error_is_fatal(&e), "{e} must stop the loop");
+        }
+    }
+
+    #[test]
+    fn bin_of_maps_shared_variants() {
+        assert_eq!(bin_of(Response::Pong), frame::BinResponse::Pong);
+        assert_eq!(
+            bin_of(Response::Sketch { sketch: vec![3] }),
+            frame::BinResponse::Sketch(vec![3])
+        );
+        assert_eq!(
+            bin_of(Response::Deleted { id: 9 }),
+            frame::BinResponse::Deleted(9)
+        );
+        assert_eq!(
+            bin_of(Response::Err {
+                error: "nope".into()
+            }),
+            frame::BinResponse::Err("nope".into())
+        );
+        // a variant with no binary twin surfaces as an error frame,
+        // not a panic
+        match bin_of(Response::Saved { persisted_bytes: 1 }) {
+            frame::BinResponse::Err(msg) => assert!(msg.contains("unexpected"), "{msg}"),
+            other => panic!("{other:?}"),
         }
     }
 

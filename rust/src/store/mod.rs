@@ -349,6 +349,42 @@ impl PersistentIndex {
         }
     }
 
+    /// Insert a batch of *already-packed* rows (words as produced by
+    /// [`crate::sketch::pack_row`] at this store's K and width) under
+    /// fresh consecutive ids — the binary wire's ingest path.  The
+    /// in-memory side is a pure memcpy per row; with a persist
+    /// directory the rows are widened back to lanes **only for the WAL
+    /// record**, because [`WalRecord::InsertPacked`] stores lane items
+    /// so replay can reuse the ordinary upsert path.  Same
+    /// all-or-nothing and rollback contract as
+    /// [`PersistentIndex::insert_many`].
+    pub fn insert_packed_many(&self, rows: &[Vec<u64>]) -> crate::Result<Vec<u64>> {
+        match &self.persist {
+            None => self.index.insert_packed_many(rows),
+            Some(m) => {
+                let mut st = m.lock().unwrap();
+                let ids = self.index.insert_packed_many(rows)?;
+                let k = self.index.num_hashes();
+                let bits = self.index.bits();
+                let rec = self.insert_record(
+                    ids.iter()
+                        .zip(rows)
+                        .map(|(&id, words)| {
+                            (id, crate::sketch::unpack_row(words, k, bits))
+                        })
+                        .collect(),
+                );
+                if let Err(e) = st.wal.append(&rec) {
+                    for &id in &ids {
+                        let _ = self.index.delete(id);
+                    }
+                    return Err(e);
+                }
+                Ok(ids)
+            }
+        }
+    }
+
     /// Delete an id (error on unknown ids), WAL-logging the removal.
     /// If the log append fails the in-memory delete is rolled back
     /// (re-inserted under the same id), so a delete the client saw
@@ -572,6 +608,61 @@ mod tests {
         let batched = store.query_many(&probes, 2).unwrap();
         assert_eq!(batched[0], store.query(&sk(1), 2).unwrap());
         assert_eq!(batched[1], store.query(&sk(3), 2).unwrap());
+    }
+
+    #[test]
+    fn insert_packed_many_is_durable_and_recovers() {
+        use crate::sketch::{pack_row, packed_words};
+        // Pre-packed binary ingest must survive a crash exactly like
+        // lane ingest: the WAL widens rows for the log, replay rebuilds
+        // the same masked state, at packed and full widths alike.
+        for bits in [8u8, 32] {
+            let dir = TempDir::new().unwrap();
+            let pack = |s: &[u32]| {
+                let mut row = vec![0u64; packed_words(8, bits)];
+                pack_row(s, bits, &mut row);
+                row
+            };
+            let masked = |s: &[u32]| {
+                s.iter()
+                    .map(|&v| (u64::from(v) & ((1u64 << bits) - 1)) as u32)
+                    .collect::<Vec<u32>>()
+            };
+            let ids;
+            {
+                let store = PersistentIndex::open_with_bits(
+                    8,
+                    SketchScheme::Cmh,
+                    bits,
+                    cfg(),
+                    2,
+                    Some(dir.path()),
+                )
+                .unwrap();
+                ids = store
+                    .insert_packed_many(&[pack(&sk(1)), pack(&sk(2))])
+                    .unwrap();
+                assert_eq!(ids, vec![0, 1], "bits={bits}");
+                // dropped without compacting: recovery is pure WAL replay
+            }
+            let store = PersistentIndex::open_with_bits(
+                8,
+                SketchScheme::Cmh,
+                bits,
+                cfg(),
+                2,
+                Some(dir.path()),
+            )
+            .unwrap();
+            assert_eq!(store.len(), 2, "bits={bits}");
+            assert_eq!(store.sketch(ids[0]), Some(masked(&sk(1))), "bits={bits}");
+            assert_eq!(store.sketch(ids[1]), Some(masked(&sk(2))), "bits={bits}");
+            // the recovered rows score like lane-inserted ones
+            assert_eq!(store.estimate(ids[0], ids[0]).unwrap(), 1.0);
+            // width validation happens before any mutation
+            assert!(store.insert_packed_many(&[vec![0u64; 99]]).is_err());
+            assert_eq!(store.len(), 2, "bits={bits}: all-or-nothing");
+        }
     }
 
     #[test]

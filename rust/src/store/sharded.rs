@@ -198,6 +198,46 @@ impl ShardedIndex {
         Ok((base..base + n as u64).collect())
     }
 
+    /// Insert a batch of *already-packed* rows under fresh ids — the
+    /// binary wire's zero-copy ingest: each row is memcpy'd into its
+    /// shard's arena with band signatures hashed off the packed bits,
+    /// no per-lane unpack/repack.  Row widths are validated before any
+    /// insert (all-or-nothing, like [`ShardedIndex::insert_many`]),
+    /// each shard's write lock is taken once per batch, and ids come
+    /// back consecutive in row order.
+    pub fn insert_packed_many(&self, rows: &[Vec<u64>]) -> crate::Result<Vec<u64>> {
+        let want = packed_words(self.k, self.bits);
+        for row in rows {
+            if row.len() != want {
+                return Err(crate::Error::ShapeMismatch {
+                    what: "packed row words",
+                    expected: want,
+                    got: row.len(),
+                });
+            }
+        }
+        let n = rows.len();
+        let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
+        let mut by_shard: Vec<Vec<(u64, &[u64])>> = vec![Vec::new(); self.shards.len()];
+        for (row, words) in rows.iter().enumerate() {
+            let id = base + row as u64;
+            by_shard[self.shard_of(id)].push((id, words.as_slice()));
+        }
+        for (shard, rows) in self.shards.iter().zip(&by_shard) {
+            if rows.is_empty() {
+                continue;
+            }
+            let mut guard = shard.write().unwrap();
+            for &(id, words) in rows {
+                // Fresh ids cannot collide, and widths were validated
+                // above, so this insert is infallible here.
+                guard.insert_packed(id, words)?;
+            }
+        }
+        self.resident.fetch_add(n, Ordering::Relaxed);
+        Ok((base..base + n as u64).collect())
+    }
+
     /// Insert under a caller-chosen id (WAL replay, snapshot load,
     /// re-insert after delete).  Keeps the fresh-id counter ahead of
     /// every explicit id; rejects occupied ids.
@@ -514,6 +554,40 @@ mod tests {
         let mixed = vec![sks[0].clone(), vec![0u32; 63]];
         assert!(batched.insert_many(&mixed).is_err());
         assert_eq!(batched.len(), 18, "all-or-nothing: nothing inserted");
+    }
+
+    #[test]
+    fn insert_packed_many_matches_insert_many() {
+        use crate::sketch::pack_row;
+        let sks = sketches(17);
+        for bits in [8u8, 32] {
+            let via_lanes = ShardedIndex::with_bits(64, cfg(), bits, 4).unwrap();
+            let via_words = ShardedIndex::with_bits(64, cfg(), bits, 4).unwrap();
+            via_lanes.insert_many(&sks).unwrap();
+            let packed: Vec<Vec<u64>> = sks
+                .iter()
+                .map(|sk| {
+                    let mut row = vec![0u64; packed_words(64, bits)];
+                    pack_row(sk, bits, &mut row);
+                    row
+                })
+                .collect();
+            let ids = via_words.insert_packed_many(&packed).unwrap();
+            assert_eq!(ids, (0..17).collect::<Vec<u64>>(), "bits={bits}");
+            assert_eq!(via_words.items(), via_lanes.items(), "bits={bits}");
+            // queries agree end to end
+            for probe in sks.iter().take(4) {
+                assert_eq!(
+                    via_words.query(probe, 5).unwrap(),
+                    via_lanes.query(probe, 5).unwrap(),
+                    "bits={bits}"
+                );
+            }
+            // a bad row width poisons the whole batch up front
+            let mixed = vec![packed[0].clone(), vec![0u64; packed[0].len() + 1]];
+            assert!(via_words.insert_packed_many(&mixed).is_err());
+            assert_eq!(via_words.len(), 17, "bits={bits}: all-or-nothing");
+        }
     }
 
     #[test]

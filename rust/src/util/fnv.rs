@@ -13,14 +13,26 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// The 32-bit FNV-1a offset basis — the initial state for
+/// [`fnv1a32_more`] when checksumming incrementally.
+pub const FNV32_INIT: u32 = 0x811c_9dc5;
+
 /// 32-bit FNV-1a.
 pub fn fnv1a32(bytes: &[u8]) -> u32 {
-    let mut h: u32 = 0x811c_9dc5;
+    fnv1a32_more(FNV32_INIT, bytes)
+}
+
+/// Fold more bytes into a running 32-bit FNV-1a state, so a checksum
+/// can span discontiguous buffers (e.g. a frame's op byte followed by
+/// its payload) without concatenating them first.  Start from
+/// [`FNV32_INIT`]; `fnv1a32_more(fnv1a32_more(FNV32_INIT, a), b)` ==
+/// `fnv1a32(a ++ b)`.
+pub fn fnv1a32_more(mut state: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
-        h ^= u32::from(b);
-        h = h.wrapping_mul(0x0100_0193);
+        state ^= u32::from(b);
+        state = state.wrapping_mul(0x0100_0193);
     }
-    h
+    state
 }
 
 #[cfg(test)]
@@ -34,5 +46,19 @@ mod tests {
         assert_eq!(fnv1a32(b"a"), 0xe40c_292c);
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn resumable_state_matches_one_shot() {
+        assert_eq!(fnv1a32_more(FNV32_INIT, b""), fnv1a32(b""));
+        let whole = fnv1a32(b"hello, frame");
+        let split = fnv1a32_more(fnv1a32_more(FNV32_INIT, b"hello, "), b"frame");
+        assert_eq!(split, whole);
+        // byte-at-a-time folding also agrees
+        let mut h = FNV32_INIT;
+        for b in b"hello, frame" {
+            h = fnv1a32_more(h, &[*b]);
+        }
+        assert_eq!(h, whole);
     }
 }

@@ -6,16 +6,25 @@
 //! connection.  This turns PR 3's `catch_unwind` containment from a
 //! safety net into a tested property: the net is there, but nothing
 //! in the parser should ever hit it.
+//!
+//! The second half applies the same treatment to `bin1` framing:
+//! single-byte corruptions on a live connection must each earn exactly
+//! one `R_ERR` frame (the CRC resynchronises the stream), and header
+//! mutations — truncations, oversized lengths, raw garbage — must end
+//! in error frames and/or a clean close, never a hung or dead worker.
 
 use cminhash::config::{BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig};
 use cminhash::coordinator::Coordinator;
+use cminhash::server::frame::{op, BinRequest, BinResponse, FrameReader, FrameWriter};
 use cminhash::server::protocol::Request;
-use cminhash::server::Server;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::SparseVec;
 use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 const DIM: u32 = 256;
 
@@ -247,4 +256,192 @@ fn every_mutated_line_gets_one_response_and_the_connection_lives() {
 
     let (snap, _) = svc.stats();
     assert!(snap.errors > 0, "the fuzz run must have exercised error paths");
+}
+
+// ===================================================== binary framing
+
+/// Valid `bin1` frames covering every request op — the binary fuzz
+/// seeds, as complete wire images (header + body).
+fn valid_frames() -> Vec<Vec<u8>> {
+    let sv = |idx: Vec<u32>| SparseVec::new(DIM, idx).unwrap();
+    let reqs = vec![
+        BinRequest::Ping,
+        BinRequest::Sketch(sv(vec![3, 17, 90])),
+        BinRequest::SketchBatch(vec![sv(vec![7]), sv(vec![8])]),
+        BinRequest::InsertPacked {
+            words_per_row: 2,
+            rows: vec![vec![0xdead_beef, 0x0123], vec![1, 2]],
+        },
+        BinRequest::QueryBatch {
+            vecs: vec![sv(vec![1, 2, 3])],
+            topk: 5,
+        },
+        BinRequest::Delete(12345),
+        BinRequest::Estimate(0, 1),
+    ];
+    reqs.iter()
+        .map(|r| {
+            let (op, payload) = r.encode();
+            let mut wire = Vec::new();
+            FrameWriter::new(&mut wire).write_frame(op, &payload).unwrap();
+            wire
+        })
+        .collect()
+}
+
+/// Open a connection and negotiate `bin1` over the JSON hello.
+fn bin_conn(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(b"{\"op\":\"hello\",\"proto\":\"bin1\"}\n")
+        .unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.contains("\"bin1\""), "hello failed: {resp}");
+    (writer, reader)
+}
+
+fn read_bin(reader: &mut BufReader<TcpStream>) -> Option<(u8, Vec<u8>)> {
+    FrameReader::new(reader).read_frame().unwrap()
+}
+
+/// Pass 1: 400 single-byte corruptions (CRC field, op byte, or body)
+/// with the length prefix left intact, all down ONE connection.  Each
+/// must earn exactly one `R_ERR` frame and leave the stream in sync —
+/// proven by a binary ping every tenth trial.
+#[test]
+fn corrupt_frame_bodies_each_get_one_error_frame_on_a_live_connection() {
+    let (server, svc) = start_server();
+    let (mut writer, mut reader) = bin_conn(&server);
+    let seeds = valid_frames();
+    let mut rng = Rng::seed_from_u64(0xb11);
+
+    for trial in 0..400u64 {
+        let mut frame = seeds[(trial % seeds.len() as u64) as usize].clone();
+        // corrupt one byte anywhere past the length prefix: the CRC
+        // (bytes 4..8), the op byte (8), or the payload (9..)
+        let at = rng.range_usize(4, frame.len());
+        frame[at] ^= (rng.range_u32(1, 256)) as u8;
+        writer.write_all(&frame).unwrap();
+
+        let (op_byte, payload) = read_bin(&mut reader).expect("connection died");
+        assert_eq!(op_byte, op::R_ERR, "trial {trial}: wanted an error frame");
+        let msg = String::from_utf8(payload).unwrap();
+        assert!(
+            msg.contains("checksum") || msg.contains("unknown frame op"),
+            "trial {trial}: msg={msg}"
+        );
+
+        if trial % 10 == 9 {
+            let (o, p) = BinRequest::Ping.encode();
+            FrameWriter::new(&mut writer).write_frame(o, &p).unwrap();
+            let (op_byte, payload) = read_bin(&mut reader).expect("ping died");
+            let resp = BinResponse::decode(op_byte, &payload).unwrap();
+            assert!(
+                matches!(resp, BinResponse::Pong),
+                "trial {trial}: stream out of sync: {resp:?}"
+            );
+        }
+    }
+
+    // the connection still does real work afterwards
+    let (o, p) = BinRequest::QueryBatch {
+        vecs: vec![SparseVec::new(DIM, vec![1, 2, 3]).unwrap()],
+        topk: 2,
+    }
+    .encode();
+    FrameWriter::new(&mut writer).write_frame(o, &p).unwrap();
+    let (op_byte, _) = read_bin(&mut reader).unwrap();
+    assert_eq!(op_byte, op::R_RESULTS);
+
+    let (snap, _) = svc.stats();
+    assert!(snap.frame_errors >= 400, "frame_errors={}", snap.frame_errors);
+}
+
+/// Pass 2: 150 header-level mutations — truncated frames, corrupted or
+/// oversized length prefixes, zero lengths, raw garbage — on fresh
+/// negotiated connections.  Legal outcomes are error frames and/or a
+/// clean close; illegal ones are hangs, partial response frames, or a
+/// poisoned worker pool (checked at the end).
+#[test]
+fn hostile_frame_headers_end_in_error_frames_or_a_clean_close() {
+    let (server, svc) = start_server();
+    let seeds = valid_frames();
+    let mut rng = Rng::seed_from_u64(0xb12);
+
+    for trial in 0..150u64 {
+        let (mut writer, mut reader) = bin_conn(&server);
+        let base = seeds[(trial % seeds.len() as u64) as usize].clone();
+        let bytes: Vec<u8> = match rng.below(5) {
+            0 => {
+                // truncate mid-frame (at least one byte short)
+                let keep = rng.range_usize(1, base.len());
+                base[..keep].to_vec()
+            }
+            1 => {
+                // oversized declared length, a few garbage body bytes
+                let len = rng.range_u32((64 << 20) + 1, u32::MAX);
+                let mut b = len.to_le_bytes().to_vec();
+                b.extend_from_slice(&[0xAA; 7]);
+                b
+            }
+            2 => {
+                // zero-length frame (header full of zeros, no body)
+                vec![0u8; 8]
+            }
+            3 => {
+                // corrupt one byte of the length prefix
+                let mut b = base;
+                let at = rng.range_usize(0, 4);
+                b[at] ^= (rng.range_u32(1, 256)) as u8;
+                b
+            }
+            _ => {
+                // raw garbage of random length
+                (0..rng.range_usize(8, 64)).map(|_| rng.next_u64() as u8).collect()
+            }
+        };
+        writer.write_all(&bytes).unwrap();
+        writer.shutdown(Shutdown::Write).unwrap();
+
+        // Drain: any complete frames the server answers must be R_ERR,
+        // then the server must close (EOF) rather than hang.  A raw
+        // read_to_end guards against the server emitting a torn frame.
+        let mut leftover = Vec::new();
+        loop {
+            match FrameReader::new(&mut reader).read_frame() {
+                Ok(None) => break,
+                Ok(Some((op_byte, _payload))) => {
+                    assert_eq!(op_byte, op::R_ERR, "trial {trial}");
+                }
+                Err(e) => {
+                    // a torn response frame would surface here
+                    panic!("trial {trial}: server sent a broken frame: {e}");
+                }
+            }
+        }
+        reader.read_to_end(&mut leftover).unwrap();
+        assert!(leftover.is_empty(), "trial {trial}: bytes after EOF");
+    }
+
+    // No worker was lost to any of the 150 kills: a fresh binary
+    // connection negotiates and serves...
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    c.binary().unwrap();
+    c.ping().unwrap();
+    let id = c.insert(DIM, vec![1, 2, 3]).unwrap();
+    let hits = c.query(DIM, vec![1, 2, 3], 1).unwrap();
+    assert_eq!(hits[0].id, id);
+    // ...and so does a fresh JSON one.
+    let mut cj = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    cj.ping().unwrap();
+
+    let (snap, _) = svc.stats();
+    assert!(snap.frame_errors > 0, "binary fuzz never hit the frame path");
 }

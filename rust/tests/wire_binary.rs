@@ -1,0 +1,595 @@
+//! Binary wire protocol (`bin1`) test pass: codec roundtrip properties,
+//! a golden byte-layout pin, hello negotiation edge cases, and an
+//! end-to-end TCP check that binary and JSON clients produce identical
+//! results on an identical corpus.  The hostile-input side (mutated
+//! frames) lives in `protocol_fuzz.rs`.
+
+use cminhash::config::{
+    BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig, SketchSettings,
+};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::frame::{op, BinRequest, BinResponse, FrameReader, FrameWriter};
+use cminhash::server::protocol::{Request, WireNeighbor, MAX_WIRE_BATCH};
+use cminhash::server::{BlockingClient, Server};
+use cminhash::sketch::{SketchScheme, SparseVec};
+use cminhash::util::rng::Rng;
+use cminhash::util::testutil::{overlap_pair, property};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn start_server(bits: u8) -> (Server, Arc<Coordinator>, ServeConfig) {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 512,
+        num_hashes: 64,
+        seed: 9,
+        sketch: SketchSettings {
+            scheme: SketchScheme::Cmh,
+            bits,
+        },
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg.clone()).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (server, svc, cfg)
+}
+
+fn random_vec(rng: &mut Rng, dim: u32) -> SparseVec {
+    let nnz = rng.range_usize(1, 24);
+    let idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+    SparseVec::new(dim, idx).unwrap()
+}
+
+fn roundtrip_request(req: &BinRequest) -> BinRequest {
+    let (op, payload) = req.encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(op, &payload).unwrap();
+    let (op2, payload2) = FrameReader::new(wire.as_slice())
+        .read_frame()
+        .unwrap()
+        .expect("one frame");
+    assert_eq!(op, op2);
+    BinRequest::decode(op2, &payload2).unwrap()
+}
+
+fn roundtrip_response(resp: &BinResponse) -> BinResponse {
+    let (op, payload) = resp.encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(op, &payload).unwrap();
+    let (op2, payload2) = FrameReader::new(wire.as_slice())
+        .read_frame()
+        .unwrap()
+        .expect("one frame");
+    BinResponse::decode(op2, &payload2).unwrap()
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn random_requests_roundtrip_through_the_frame_layer() {
+    property(60, |rng| {
+        let dim = rng.range_u32(32, 4096);
+        let req = match rng.below(7) {
+            0 => BinRequest::Ping,
+            1 => BinRequest::Sketch(random_vec(rng, dim)),
+            2 => {
+                let n = rng.range_usize(0, 9);
+                BinRequest::SketchBatch((0..n).map(|_| random_vec(rng, dim)).collect())
+            }
+            3 => {
+                let wpr = rng.range_usize(1, 9);
+                let n = rng.range_usize(0, 6);
+                BinRequest::InsertPacked {
+                    words_per_row: wpr,
+                    rows: (0..n)
+                        .map(|_| (0..wpr).map(|_| rng.next_u64()).collect())
+                        .collect(),
+                }
+            }
+            4 => BinRequest::QueryBatch {
+                vecs: (0..rng.range_usize(0, 5))
+                    .map(|_| random_vec(rng, dim))
+                    .collect(),
+                topk: rng.range_usize(1, 50),
+            },
+            5 => BinRequest::Delete(rng.next_u64()),
+            _ => BinRequest::Estimate(rng.next_u64(), rng.next_u64()),
+        };
+        assert_eq!(roundtrip_request(&req), req);
+    });
+}
+
+#[test]
+fn random_responses_roundtrip_through_the_frame_layer() {
+    property(60, |rng| {
+        let resp = match rng.below(8) {
+            0 => BinResponse::Pong,
+            1 => BinResponse::Err(format!("error #{:x}", rng.next_u64())),
+            2 => BinResponse::Sketch(
+                (0..rng.range_usize(0, 64)).map(|_| rng.range_u32(0, 512)).collect(),
+            ),
+            3 => BinResponse::SketchBatch(
+                (0..rng.range_usize(0, 5))
+                    .map(|_| (0..8).map(|_| rng.range_u32(0, 512)).collect())
+                    .collect(),
+            ),
+            4 => BinResponse::Ids((0..rng.range_usize(0, 9)).map(|_| rng.next_u64()).collect()),
+            5 => BinResponse::Results(
+                (0..rng.range_usize(0, 4))
+                    .map(|_| {
+                        (0..rng.range_usize(0, 4))
+                            .map(|_| WireNeighbor {
+                                id: rng.next_u64(),
+                                score: rng.next_f64(),
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            ),
+            6 => BinResponse::Deleted(rng.next_u64()),
+            _ => BinResponse::Estimate(rng.next_f64()),
+        };
+        assert_eq!(roundtrip_response(&resp), resp);
+    });
+}
+
+#[test]
+fn zero_row_and_cap_sized_batches_roundtrip() {
+    // Zero rows is legal at the codec layer (the dispatcher rejects it,
+    // mirroring the JSON policy) and the cap itself is inclusive.
+    let empty = BinRequest::InsertPacked {
+        words_per_row: 4,
+        rows: Vec::new(),
+    };
+    assert_eq!(roundtrip_request(&empty), empty);
+
+    let full = BinRequest::InsertPacked {
+        words_per_row: 1,
+        rows: vec![vec![7u64]; MAX_WIRE_BATCH],
+    };
+    assert_eq!(roundtrip_request(&full), full);
+
+    let queries = BinRequest::QueryBatch {
+        vecs: vec![SparseVec::new(8, vec![1]).unwrap(); MAX_WIRE_BATCH],
+        topk: 3,
+    };
+    assert_eq!(roundtrip_request(&queries), queries);
+}
+
+/// Pins the bin1 byte layout against independently computed values
+/// (FNV-1a32 literals were derived outside this codebase).  If this
+/// test breaks, the wire format changed: bump the protocol name.
+#[test]
+fn golden_bin1_byte_layout() {
+    // ping: len=1 | crc=fnv1a32([0x01]) | op
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(op::PING, &[]).unwrap();
+    let mut want = vec![0x01, 0x00, 0x00, 0x00];
+    want.extend_from_slice(&0x040c_5b8cu32.to_le_bytes());
+    want.push(0x01);
+    assert_eq!(wire, want);
+
+    // pong: same shape on the response plane
+    let (o, p) = BinResponse::Pong.encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(o, &p).unwrap();
+    let mut want = vec![0x01, 0x00, 0x00, 0x00];
+    want.extend_from_slice(&0x840b_920cu32.to_le_bytes());
+    want.push(0x81);
+    assert_eq!(wire, want);
+
+    // delete(7): u64le payload
+    let (o, p) = BinRequest::Delete(7).encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(o, &p).unwrap();
+    let mut want = vec![0x09, 0x00, 0x00, 0x00];
+    want.extend_from_slice(&0x593a_dbbeu32.to_le_bytes());
+    want.push(0x06);
+    want.extend_from_slice(&7u64.to_le_bytes());
+    assert_eq!(wire, want);
+
+    // sketch({dim:16, indices:[1,5]}): dim, nnz, then indices, all u32le
+    let (o, p) = BinRequest::Sketch(SparseVec::new(16, vec![1, 5]).unwrap()).encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(o, &p).unwrap();
+    let hex: String = wire.iter().map(|b| format!("{b:02x}")).collect();
+    assert_eq!(
+        hex,
+        "11000000a36379ee0210000000020000000100000005000000"
+    );
+
+    // insert_packed, 1 row x 2 words: count, wpr u32le then u64le words
+    let (o, p) = BinRequest::InsertPacked {
+        words_per_row: 2,
+        rows: vec![vec![0x0123_4567_89ab_cdef, 0xff]],
+    }
+    .encode();
+    let mut wire = Vec::new();
+    FrameWriter::new(&mut wire).write_frame(o, &p).unwrap();
+    let mut want = vec![0x19, 0x00, 0x00, 0x00];
+    want.extend_from_slice(&0xd2bc_f58fu32.to_le_bytes());
+    want.push(0x04);
+    want.extend_from_slice(&1u32.to_le_bytes());
+    want.extend_from_slice(&2u32.to_le_bytes());
+    want.extend_from_slice(&0x0123_4567_89ab_cdefu64.to_le_bytes());
+    want.extend_from_slice(&0xffu64.to_le_bytes());
+    assert_eq!(wire, want);
+
+    // op-code table is part of the contract
+    assert_eq!(
+        [
+            op::PING,
+            op::SKETCH,
+            op::SKETCH_BATCH,
+            op::INSERT_PACKED,
+            op::QUERY_BATCH,
+            op::DELETE,
+            op::ESTIMATE,
+            op::R_ERR,
+            op::R_PONG,
+            op::R_SKETCH,
+            op::R_SKETCH_BATCH,
+            op::R_IDS,
+            op::R_RESULTS,
+            op::R_DELETED,
+            op::R_ESTIMATE,
+        ],
+        [
+            0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x80, 0x81, 0x82, 0x83, 0x84,
+            0x85, 0x86, 0x87,
+        ]
+    );
+}
+
+// ----------------------------------------------------------- negotiation
+
+fn send_line(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp
+}
+
+fn raw_conn(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+#[test]
+fn hello_bin1_advertises_the_sketch_parameters() {
+    let (server, _svc, cfg) = start_server(8);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"bin1"}"#,
+    );
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(j.get("proto").unwrap().as_str().unwrap(), "bin1");
+    assert_eq!(j.get("scheme").unwrap().as_str().unwrap(), "cmh");
+    assert_eq!(j.get("dim").unwrap().as_usize().unwrap(), cfg.dim);
+    assert_eq!(j.get("k").unwrap().as_usize().unwrap(), cfg.num_hashes);
+    assert_eq!(j.get("seed").unwrap().as_u64().unwrap(), cfg.seed);
+    assert_eq!(j.get("bits").unwrap().as_u64().unwrap(), 8);
+    assert_eq!(
+        j.get("max_batch").unwrap().as_usize().unwrap(),
+        MAX_WIRE_BATCH
+    );
+}
+
+#[test]
+fn unknown_proto_falls_back_to_jsonl_and_the_connection_stays_usable() {
+    let (server, _svc, _cfg) = start_server(32);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"msgpack9000"}"#,
+    );
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(j.get("proto").unwrap().as_str().unwrap(), "jsonl");
+
+    // still a JSON-lines connection
+    let resp = send_line(&mut stream, &mut reader, r#"{"op":"ping"}"#);
+    assert!(resp.contains("\"pong\""), "resp={resp}");
+}
+
+#[test]
+fn second_hello_is_an_error_but_not_fatal() {
+    let (server, _svc, _cfg) = start_server(32);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    // first hello settles on jsonl
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"nope"}"#,
+    );
+    assert!(resp.contains("\"jsonl\""), "resp={resp}");
+    // a second attempt (even for bin1) is rejected...
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"bin1"}"#,
+    );
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(!j.get("ok").unwrap().as_bool().unwrap());
+    assert!(
+        j.get("error").unwrap().as_str().unwrap().contains("hello"),
+        "resp={resp}"
+    );
+    // ...without killing the connection
+    let resp = send_line(&mut stream, &mut reader, r#"{"op":"ping"}"#);
+    assert!(resp.contains("\"pong\""), "resp={resp}");
+}
+
+#[test]
+fn malformed_hello_leaves_negotiation_open() {
+    let (server, _svc, _cfg) = start_server(32);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    // hello without a proto field is an error...
+    let resp = send_line(&mut stream, &mut reader, r#"{"op":"hello"}"#);
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(!j.get("ok").unwrap().as_bool().unwrap());
+    // ...but does not burn the one negotiation slot
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"bin1"}"#,
+    );
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(j.get("proto").unwrap().as_str().unwrap(), "bin1");
+}
+
+#[test]
+fn binary_frame_before_hello_is_rejected_cleanly() {
+    let (server, _svc, _cfg) = start_server(32);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    // A raw bin1 ping with no preceding hello.  The line reader never
+    // sees a newline, so close the write half to flush it through.
+    let mut frame = Vec::new();
+    FrameWriter::new(&mut frame).write_frame(op::PING, &[]).unwrap();
+    stream.write_all(&frame).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let j = cminhash::util::json::Json::parse(&resp).unwrap();
+    assert!(!j.get("ok").unwrap().as_bool().unwrap(), "resp={resp}");
+
+    // the server itself is unharmed
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    c.ping().unwrap();
+}
+
+// -------------------------------------------------- JSON/binary parity
+
+fn corpus(dim: u32, rows: usize) -> Vec<SparseVec> {
+    let mut rng = Rng::seed_from_u64(0xb1_b1);
+    let (a, b, _j) = overlap_pair(dim, 40, 40, 20);
+    let mut vecs = vec![a, b];
+    while vecs.len() < rows {
+        vecs.push(random_vec(&mut rng, dim));
+    }
+    vecs
+}
+
+fn parity_at(bits: u8) {
+    // Two identically configured servers; one ingests over JSON (the
+    // server sketches), one over bin1 (the client sketches and packs,
+    // the server memcpys).  Every downstream answer must be identical.
+    let (srv_json, _svc_j, cfg) = start_server(bits);
+    let (srv_bin, _svc_b, _) = start_server(bits);
+    let dim = cfg.dim as u32;
+    let docs = corpus(dim, 40);
+
+    let mut cj = BlockingClient::connect(&srv_json.addr().to_string()).unwrap();
+    let mut cb = BlockingClient::connect(&srv_bin.addr().to_string()).unwrap();
+    cb.binary().unwrap();
+    assert!(cb.is_binary() && !cj.is_binary());
+
+    let ids_json = cj.insert_batch_vecs(docs.clone()).unwrap();
+    let ids_bin = cb.insert_batch_vecs(docs.clone()).unwrap();
+    assert_eq!(ids_json, ids_bin, "id assignment must match at bits={bits}");
+
+    // sketches agree lane-for-lane (binary sketches locally on insert,
+    // but the sketch op itself still round-trips to the server)
+    let probe: Vec<u32> = vec![3, 9, 100, 257];
+    assert_eq!(
+        cj.sketch(dim, probe.clone()).unwrap(),
+        cb.sketch(dim, probe.clone()).unwrap()
+    );
+
+    // batch queries: corpus members and fresh probes
+    let mut queries: Vec<Vec<u32>> = docs[..6].iter().map(|v| v.indices().to_vec()).collect();
+    queries.push(probe);
+    queries.push((100..160).collect());
+    let rj = cj.query_batch(dim, queries.clone(), 5).unwrap();
+    let rb = cb.query_batch(dim, queries.clone(), 5).unwrap();
+    assert_eq!(rj, rb, "query results must match at bits={bits}");
+    // self-queries really found something
+    assert_eq!(rj[0][0].id, ids_json[0]);
+    assert_eq!(rj[0][0].score, 1.0);
+
+    // a JSON connection to the binary-fed server sees the same index:
+    // binary ingest landed byte-identical rows
+    let mut cj2 = BlockingClient::connect(&srv_bin.addr().to_string()).unwrap();
+    assert_eq!(rj, cj2.query_batch(dim, queries.clone(), 5).unwrap());
+
+    // deletes propagate identically in both modes
+    cj.delete(ids_json[1]).unwrap();
+    cb.delete(ids_bin[1]).unwrap();
+    let rj = cj.query_batch(dim, queries.clone(), 5).unwrap();
+    let rb = cb.query_batch(dim, queries, 5).unwrap();
+    assert_eq!(rj, rb, "post-delete results must match at bits={bits}");
+    assert!(rj[1].iter().all(|n| n.id != ids_json[1]));
+}
+
+#[test]
+fn binary_and_json_results_are_identical_at_bits_8() {
+    parity_at(8);
+}
+
+#[test]
+fn binary_and_json_results_are_identical_at_bits_32() {
+    parity_at(32);
+}
+
+#[test]
+fn binary_mode_fences_json_entry_points_and_vice_versa() {
+    let (server, _svc, _cfg) = start_server(8);
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    // insert_packed before negotiation is refused with a hint
+    let err = c.insert_packed(vec![vec![0u64]]).unwrap_err().to_string();
+    assert!(err.contains("binary mode"), "err={err}");
+    c.binary().unwrap();
+    // negotiating twice is a local error, connection still fine
+    let err = c.binary().unwrap_err().to_string();
+    assert!(err.contains("already"), "err={err}");
+    // raw JSON calls are fenced off after the switch
+    let err = c.call(&Request::Ping).unwrap_err().to_string();
+    assert!(err.contains("bin1"), "err={err}");
+    c.ping().unwrap();
+
+    // zero-row batches are rejected by the dispatcher, not the codec
+    let err = c.insert_packed(Vec::new()).unwrap_err().to_string();
+    assert!(err.contains("zero rows"), "err={err}");
+    let err = c.query_batch(512, Vec::new(), 3).unwrap_err().to_string();
+    assert!(err.contains("zero rows"), "err={err}");
+    c.ping().unwrap();
+}
+
+#[test]
+fn bad_packed_rows_are_rejected_with_specific_errors() {
+    // K=40 at bits=4 is 160 bits: three words with 32 bits of padding
+    // in the last one, so both the width check and the dirty-padding
+    // check are reachable.
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 512,
+        num_hashes: 40,
+        seed: 9,
+        sketch: SketchSettings {
+            scheme: SketchScheme::Cmh,
+            bits: 4,
+        },
+        index: IndexSettings {
+            bands: 10,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc, "127.0.0.1:0").unwrap();
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    c.binary().unwrap();
+
+    // wrong width: server expects ceil(40 * 4 / 64) = 3 words
+    let err = c.insert_packed(vec![vec![0u64; 2]]).unwrap_err().to_string();
+    assert!(err.contains("packed row words"), "err={err}");
+
+    // right width but garbage in the padding bits of the last word
+    let dirty = vec![0u64, 0, 1u64 << 63];
+    let err = c.insert_packed(vec![dirty]).unwrap_err().to_string();
+    assert!(err.contains("padding"), "err={err}");
+
+    // an honest all-zero row is accepted, and the connection lives
+    let ids = c.insert_packed(vec![vec![0u64; 3]]).unwrap();
+    assert_eq!(ids.len(), 1);
+    c.ping().unwrap();
+}
+
+// ------------------------------------------------ frame_errors metric
+
+#[test]
+fn mid_frame_death_counts_as_a_frame_error_not_a_json_error() {
+    let (server, svc, _cfg) = start_server(8);
+    let (errors_before, _) = {
+        let (m, s) = svc.stats();
+        (m.errors, s)
+    };
+
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"bin1"}"#,
+    );
+    assert!(resp.contains("\"bin1\""), "resp={resp}");
+    // Header declares a 64-byte frame; send only 3 payload bytes and die.
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&64u32.to_le_bytes());
+    partial.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+    partial.extend_from_slice(&[0x01, 0x02, 0x03]);
+    stream.write_all(&partial).unwrap();
+    drop(stream);
+    drop(reader);
+
+    // the worker notices asynchronously; poll the metric
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let (m, _) = svc.stats();
+        if m.frame_errors >= 1 {
+            // a dead binary peer is a frame error, not a JSON parse error
+            assert_eq!(m.errors, errors_before, "json errors moved: {m:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "frame_errors never incremented");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the pool worker survived
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    c.ping().unwrap();
+}
+
+#[test]
+fn oversized_frame_gets_an_error_frame_then_close() {
+    let (server, svc, _cfg) = start_server(8);
+    let (mut stream, mut reader) = raw_conn(&server.addr().to_string());
+    let resp = send_line(
+        &mut stream,
+        &mut reader,
+        r#"{"op":"hello","proto":"bin1"}"#,
+    );
+    assert!(resp.contains("\"bin1\""), "resp={resp}");
+
+    // length prefix far past MAX_FRAME_BYTES
+    stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    stream.write_all(&[0u8; 5]).unwrap();
+    stream.flush().unwrap();
+
+    // one R_ERR frame, then EOF
+    let (op_byte, payload) = FrameReader::new(&mut reader)
+        .read_frame()
+        .unwrap()
+        .expect("an error frame before close");
+    assert_eq!(op_byte, op::R_ERR);
+    let msg = String::from_utf8(payload).unwrap();
+    assert!(msg.contains("cap"), "msg={msg}");
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "expected close after error frame");
+
+    let (m, _) = svc.stats();
+    assert!(m.frame_errors >= 1);
+}

@@ -11,14 +11,21 @@ emit and enforces the packed b-bit plane's perf contract from
 * memory per item must shrink by at least (32/b) * 0.9 — packing that
   doesn't pack is a bug.
 
+It also enforces the binary wire format's contract from
+``BENCH_wire_format.json`` (emitted by the serving_throughput bench):
+at b <= 8, pre-packed ``bin1`` ingest must beat JSON-lines ingest by
+at least 1.3x rows/s — if shipping ready-made bytes is not clearly
+faster than parse-and-sketch, the zero-copy path has regressed.
+
 Any other ``BENCH_*.json`` present is checked for being valid JSON
 with a ``bench`` tag (schema drift in an emitter fails fast here
 rather than in a downstream dashboard).
 
-When no ``BENCH_bbit_query.json`` exists (benches not run — e.g. a
-plain ``make verify`` before ``make bench``), the gate SKIPS with exit
-0 so verify stays runnable from a fresh clone; CI runs the bench first
-and then this gate, making the skip path impossible there.
+When no ``BENCH_bbit_query.json`` / ``BENCH_wire_format.json`` exists
+(benches not run — e.g. a plain ``make verify`` before ``make bench``),
+the corresponding gate SKIPS with exit 0 so verify stays runnable from
+a fresh clone; CI runs the benches first and then this gate, making
+the skip path impossible there.
 
 Exit status: 0 = pass or skip, 1 = regression (one line per failure).
 
@@ -39,6 +46,11 @@ QPS_MARGIN = 0.95
 # Required memory shrink: 90% of the ideal 32/b ratio (word-rounding
 # at small K legitimately eats a little).
 MEM_MARGIN = 0.9
+# Pre-packed bin1 ingest must beat JSON-lines ingest by this factor at
+# b <= 8.  The binary side skips JSON parsing AND the server-side
+# sketch, so a healthy implementation clears this with a wide margin;
+# 1.3x is the regression floor, not the target.
+WIRE_SPEEDUP = 1.3
 
 
 def fail(msgs):
@@ -93,10 +105,37 @@ def check_bbit_query(path):
     return failures
 
 
+def check_wire_format(path):
+    with open(path) as f:
+        data = json.load(f)
+    try:
+        bits = int(data["bits"])
+        json_ins = float(data["json_insert_rows_per_s"])
+        bin_ins = float(data["bin_insert_rows_per_s"])
+        json_q = float(data["json_query_rows_per_s"])
+        bin_q = float(data["bin_query_rows_per_s"])
+    except (KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed wire_format record ({e})"]
+    ratio = bin_ins / json_ins if json_ins else 0.0
+    print(
+        f"check_bench: wire b={bits}: ingest jsonl {json_ins:.0f} rows/s, "
+        f"bin1 {bin_ins:.0f} rows/s ({ratio:.2f}x); query jsonl "
+        f"{json_q:.0f}, bin1 {bin_q:.0f} rows/s"
+    )
+    if bits <= 8 and ratio < WIRE_SPEEDUP:
+        return [
+            f"bits={bits}: bin1 ingest {bin_ins:.0f} rows/s is only "
+            f"{ratio:.2f}x the jsonl {json_ins:.0f} rows/s "
+            f"(need >= {WIRE_SPEEDUP}x)"
+        ]
+    return []
+
+
 def main():
     root = sys.argv[1] if len(sys.argv) > 1 else "."
     bench_files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
     gate = os.path.join(root, "BENCH_bbit_query.json")
+    wire = os.path.join(root, "BENCH_wire_format.json")
 
     # every emitted bench file must at least be well-formed
     failures = []
@@ -109,12 +148,17 @@ def main():
         except (OSError, ValueError) as e:
             failures.append(f"{path}: unreadable ({e})")
 
+    ran_gate = False
     if os.path.exists(gate):
         failures.extend(check_bbit_query(gate))
-    elif not failures:
+        ran_gate = True
+    if os.path.exists(wire):
+        failures.extend(check_wire_format(wire))
+        ran_gate = True
+    if not ran_gate and not failures:
         print(
-            "check_bench: no BENCH_bbit_query.json found (benches not "
-            "run); skipping the packed-plane gate"
+            "check_bench: no BENCH_bbit_query.json / BENCH_wire_format"
+            ".json found (benches not run); skipping the perf gates"
         )
         return 0
 
