@@ -1,0 +1,169 @@
+//! Observability overhead gate: the always-on tracing path (request
+//! guard + per-stage spans + per-shard counters) must cost under 3% of
+//! hot-path throughput versus the same stack with tracing disabled
+//! (`obs.trace_ring = 0` — counters stay on either way; they are not a
+//! knob).  Both sides run in-process through the same dispatch shape
+//! the server uses (begin → stage spans inside the coordinator →
+//! finish), so the measured delta is exactly what a production `serve`
+//! pays for `trace` being available.
+//!
+//! Writes `BENCH_obs_overhead.json`; `tools/check_bench.py` fails CI
+//! when the instrumented/uninstrumented ratio drops below 0.97.
+
+use cminhash::bench::Harness;
+use cminhash::config::{EngineKind, IndexSettings, ObsSettings, ServeConfig, SketchSettings};
+use cminhash::coordinator::Coordinator;
+use cminhash::obs::OpKind;
+use cminhash::sketch::{SketchScheme, SparseVec};
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const DIM: usize = 4096;
+const K: usize = 256;
+const NNZ: usize = 64;
+
+fn rand_vecs(n: usize, seed: u64) -> Vec<SparseVec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = (0..NNZ).map(|_| rng.range_u32(0, DIM as u32)).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            SparseVec::new(DIM as u32, idx).unwrap()
+        })
+        .collect()
+}
+
+fn start(trace_ring: usize) -> Arc<Coordinator> {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        artifacts_dir: Path::new("artifacts").to_path_buf(),
+        dim: DIM,
+        num_hashes: K,
+        seed: 42,
+        sketch: SketchSettings {
+            scheme: SketchScheme::Cmh,
+            bits: 32,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        obs: ObsSettings {
+            trace_ring,
+            // Effectively never trips, so the pinned deque stays empty
+            // and both sides do identical publish work per request.
+            slow_threshold_us: u64::MAX,
+            pinned: 32,
+        },
+        ..ServeConfig::default()
+    };
+    Coordinator::start(cfg).expect("rust engine always starts")
+}
+
+/// Drive `queries` through the coordinator wrapped exactly as the
+/// server wraps them (request guard + finish), returning rows/s.  The
+/// inner `svc.query` drops BandLookup/Score stage guards and bumps
+/// shard counters on both sides; only the `trace_ring` knob differs.
+fn drive_queries(svc: &Arc<Coordinator>, queries: &[SparseVec], topk: usize) -> f64 {
+    let t0 = Instant::now();
+    for q in queries {
+        let mut guard = svc.obs().begin_at(OpKind::Query, Instant::now());
+        let got = svc.query(q.clone(), topk).unwrap();
+        std::hint::black_box(&got);
+        guard.finish(1);
+    }
+    queries.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Same shape for the ingest path (insert → sketch + WAL-less store).
+fn drive_inserts(svc: &Arc<Coordinator>, rows: &[SparseVec]) -> f64 {
+    let t0 = Instant::now();
+    for r in rows {
+        let mut guard = svc.obs().begin_at(OpKind::Insert, Instant::now());
+        let got = svc.insert(r.clone()).unwrap();
+        std::hint::black_box(&got);
+        guard.finish(1);
+    }
+    rows.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
+    let mut h = Harness::new("obs_overhead");
+    let corpus = if fast { 2_000 } else { 8_000 };
+    let n_queries = if fast { 2_000 } else { 8_000 };
+
+    let seed_rows = rand_vecs(corpus, 7);
+    let queries = rand_vecs(n_queries, 8);
+
+    // Two identical stacks; only `obs.trace_ring` differs.
+    let on = start(256);
+    let off = start(0);
+    assert!(on.obs().enabled());
+    assert!(!off.obs().enabled());
+
+    for r in &seed_rows {
+        on.insert(r.clone()).unwrap();
+        off.insert(r.clone()).unwrap();
+    }
+
+    // Warm both paths (allocator, page cache, branch predictors).
+    let _ = drive_queries(&on, &queries[..queries.len() / 4], 10);
+    let _ = drive_queries(&off, &queries[..queries.len() / 4], 10);
+
+    // Interleave measurement rounds so ambient machine noise (thermal
+    // drift, a background task) hits both sides evenly instead of
+    // biasing whichever ran second.
+    let rounds = 4usize;
+    let per_round = queries.len() / rounds;
+    let (mut qps_on, mut qps_off) = (0.0f64, 0.0f64);
+    let t_all = Instant::now();
+    for r in 0..rounds {
+        let slice = &queries[r * per_round..(r + 1) * per_round];
+        qps_on += drive_queries(&on, slice, 10) / rounds as f64;
+        qps_off += drive_queries(&off, slice, 10) / rounds as f64;
+    }
+    h.report("query tracing on+off interleaved", t_all.elapsed(), (2 * queries.len()) as u64);
+
+    let extra = rand_vecs(if fast { 1_000 } else { 4_000 }, 9);
+    let ins_on = drive_inserts(&on, &extra);
+    let ins_off = drive_inserts(&off, &extra);
+
+    let ratio = qps_on / qps_off;
+    let ins_ratio = ins_on / ins_off;
+    println!(
+        "query: tracing-on {qps_on:.0} q/s vs tracing-off {qps_off:.0} q/s \
+         -> ratio {ratio:.4}"
+    );
+    println!(
+        "insert: tracing-on {ins_on:.0} rows/s vs tracing-off {ins_off:.0} rows/s \
+         -> ratio {ins_ratio:.4}"
+    );
+
+    // Sanity: the instrumented side actually captured traces and the
+    // uninstrumented side captured none, so the ratio compares what it
+    // claims to compare.
+    assert!(!on.obs().recent(1).is_empty(), "tracing-on produced no traces");
+    assert!(off.obs().recent(1).is_empty(), "tracing-off produced traces");
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("obs_overhead")),
+        ("dim", Json::Num(DIM as f64)),
+        ("k", Json::Num(K as f64)),
+        ("corpus", Json::Num(corpus as f64)),
+        ("queries", Json::Num(queries.len() as f64)),
+        ("qps_on", Json::Num(qps_on)),
+        ("qps_off", Json::Num(qps_off)),
+        ("ratio", Json::Num(ratio)),
+        ("insert_rows_per_s_on", Json::Num(ins_on)),
+        ("insert_rows_per_s_off", Json::Num(ins_off)),
+        ("insert_ratio", Json::Num(ins_ratio)),
+    ]);
+    std::fs::write("BENCH_obs_overhead.json", record.to_string()).unwrap();
+    println!("wrote BENCH_obs_overhead.json");
+    h.write_csv().unwrap();
+}

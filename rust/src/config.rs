@@ -154,6 +154,32 @@ impl Default for ServerSettings {
     }
 }
 
+/// Observability settings (per-request tracing knobs; see
+/// `docs/OBSERVABILITY.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsSettings {
+    /// Trace ring capacity: the last N completed requests keep their
+    /// per-stage spans for the `trace` wire op.  `0` disables trace
+    /// capture entirely (per-op counters still count) — the bench
+    /// baseline for the `obs_overhead` gate.
+    pub trace_ring: usize,
+    /// Requests whose total latency reaches this many microseconds are
+    /// flagged `slow` and pinned past ring churn.
+    pub slow_threshold_us: u64,
+    /// How many slow traces stay pinned (FIFO eviction beyond this).
+    pub pinned: usize,
+}
+
+impl Default for ObsSettings {
+    fn default() -> Self {
+        ObsSettings {
+            trace_ring: 256,
+            slow_threshold_us: 10_000,
+            pinned: 32,
+        }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -179,6 +205,8 @@ pub struct ServeConfig {
     pub store: StoreSettings,
     /// Server connection admission.
     pub server: ServerSettings,
+    /// Observability (request tracing).
+    pub obs: ObsSettings,
 }
 
 impl Default for ServeConfig {
@@ -198,6 +226,7 @@ impl Default for ServeConfig {
             index: IndexSettings::default(),
             store: StoreSettings::default(),
             server: ServerSettings::default(),
+            obs: ObsSettings::default(),
         }
     }
 }
@@ -278,6 +307,17 @@ impl ServeConfig {
                 cfg.server.max_connections = v.as_usize()?;
             }
         }
+        if let Some(ob) = j.get_opt("obs") {
+            if let Some(v) = ob.get_opt("trace_ring") {
+                cfg.obs.trace_ring = v.as_usize()?;
+            }
+            if let Some(v) = ob.get_opt("slow_threshold_us") {
+                cfg.obs.slow_threshold_us = v.as_u64()?;
+            }
+            if let Some(v) = ob.get_opt("pinned") {
+                cfg.obs.pinned = v.as_usize()?;
+            }
+        }
         Ok(cfg)
     }
 
@@ -318,6 +358,19 @@ impl ServeConfig {
                 "server.max_connections = {} is absurd (max 16384; each \
                  connection holds one pool worker)",
                 self.server.max_connections
+            )));
+        }
+        if self.obs.trace_ring > 65_536 {
+            return Err(crate::Error::Invalid(format!(
+                "obs.trace_ring = {} is absurd (max 65536; each slot \
+                 preallocates a trace)",
+                self.obs.trace_ring
+            )));
+        }
+        if self.obs.pinned > 4_096 {
+            return Err(crate::Error::Invalid(format!(
+                "obs.pinned = {} is absurd (max 4096)",
+                self.obs.pinned
             )));
         }
         Ok(())
@@ -481,6 +534,29 @@ mod tests {
         }
         c.sketch.scheme = SketchScheme::Cmh;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_settings_parse_and_validate() {
+        let c = ServeConfig::default();
+        assert_eq!(c.obs.trace_ring, 256, "tracing on by default");
+        assert_eq!(c.obs.slow_threshold_us, 10_000);
+        assert_eq!(c.obs.pinned, 32);
+        let j = crate::util::json::Json::parse(
+            r#"{"obs": {"trace_ring": 0, "slow_threshold_us": 500, "pinned": 8}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.obs.trace_ring, 0, "0 turns tracing off");
+        assert_eq!(c.obs.slow_threshold_us, 500);
+        assert_eq!(c.obs.pinned, 8);
+        c.validate().unwrap();
+        let mut c = ServeConfig::default();
+        c.obs.trace_ring = 1_000_000;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.obs.pinned = 1_000_000;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::config::{EngineKind, ServeConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::index::{IndexConfig, Neighbor};
 use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::obs::{stage, Obs, Stage};
 use crate::runtime::{EngineHandle, HostTensor};
 use crate::sketch::{Perm, Role, SketchScheme, Sketcher, SparseVec};
 use crate::store::{resolve_shards, PersistentIndex, StoreStats};
@@ -71,6 +72,7 @@ pub struct Coordinator {
     tx: mpsc::Sender<SketchJob>,
     store: PersistentIndex,
     metrics: Arc<Metrics>,
+    obs: Arc<Obs>,
 }
 
 impl Coordinator {
@@ -93,11 +95,17 @@ impl Coordinator {
             resolve_shards(cfg.store.shards),
             cfg.store.persist_dir.as_deref(),
         )?;
+        let obs = Arc::new(Obs::new(
+            cfg.obs.trace_ring,
+            cfg.obs.slow_threshold_us,
+            cfg.obs.pinned,
+        ));
         let svc = Arc::new(Coordinator {
             cfg: cfg.clone(),
             tx,
             store,
             metrics: metrics.clone(),
+            obs,
         });
         let pump_metrics = metrics;
         let (dim, k) = (cfg.dim, cfg.num_hashes);
@@ -182,6 +190,12 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Request-tracing observability plane (trace ring, per-op
+    /// counters, slow-request pinning).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
     /// Validate a request vector: the dimension must match the service
     /// and the vector must have at least one nonzero.  An empty vector
     /// has no minimum — its sketch would be the all-sentinel value,
@@ -230,6 +244,10 @@ impl Coordinator {
         }
         let n = vs.len();
         let start = Instant::now();
+        // The whole submit→wait window is the request's "sketch" span:
+        // queueing, pump batching, and engine execution all happen
+        // while this thread blocks on the response channel.
+        let _span = stage(Stage::Sketch);
         // Capacity n: the pump can deliver every row without blocking
         // even before this thread starts receiving.
         let (resp, rx) = mpsc::sync_channel(n);
@@ -329,7 +347,11 @@ impl Coordinator {
     /// estimate is the unbiased b-bit–corrected one; at the default
     /// full width it is the plain collision fraction.
     pub fn estimate_ids(&self, a: u64, b: u64) -> crate::Result<f64> {
+        let start = Instant::now();
         let jhat = self.store.estimate(a, b)?;
+        self.metrics
+            .estimate_latency
+            .record(start.elapsed().as_micros() as u64);
         Metrics::inc(&self.metrics.estimates);
         Ok(jhat)
     }
@@ -338,7 +360,11 @@ impl Coordinator {
     /// two-row batch through the pump).  Always full-width: inline
     /// vectors never touch the packed store, so nothing is truncated.
     pub fn estimate_vecs(&self, v: SparseVec, w: SparseVec) -> crate::Result<f64> {
+        let start = Instant::now();
         let sks = self.sketch_many(vec![v, w])?;
+        self.metrics
+            .estimate_latency
+            .record(start.elapsed().as_micros() as u64);
         Metrics::inc(&self.metrics.estimates);
         Ok(crate::sketch::estimate(&sks[0], &sks[1]))
     }
@@ -917,6 +943,24 @@ mod tests {
             snap.query_latency.count, 2,
             "query_above must contribute a query_latency sample"
         );
+    }
+
+    #[test]
+    fn estimates_record_latency_like_queries() {
+        let svc = Coordinator::start(rust_cfg()).unwrap();
+        let v = SparseVec::new(512, (0..60).collect()).unwrap();
+        let w = SparseVec::new(512, (30..90).collect()).unwrap();
+        let (ia, _) = svc.insert(v.clone()).unwrap();
+        let (ib, _) = svc.insert(w.clone()).unwrap();
+        svc.estimate_ids(ia, ib).unwrap();
+        svc.estimate_vecs(v, w).unwrap();
+        let (snap, _) = svc.stats();
+        assert_eq!(snap.estimates, 2);
+        assert_eq!(
+            snap.estimate_latency.count, 2,
+            "both estimate paths must contribute an estimate_latency sample"
+        );
+        assert!(snap.uptime_s >= 0.0);
     }
 
     #[test]

@@ -18,11 +18,13 @@
 //!   XOR + popcount kernel fed through the unbiased b-bit correction.
 
 use crate::index::packed::PackedRows;
+use crate::obs::{stage, Stage};
 use crate::sketch::{
     check_sketch_bits, collision_count, corrected_estimate, estimate, pack_row,
     packed_words,
 };
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Band configuration.  `bands * rows_per_band` must be ≤ K.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +89,9 @@ pub struct BandingIndex {
     bits: u8,
     tables: Vec<HashMap<u64, Vec<u64>>>,
     rows: Rows,
+    /// Candidates collected (post-dedup) across this index's lifetime —
+    /// an atomic so read-locked query paths can count.
+    candidates: AtomicU64,
 }
 
 /// FNV-1a over a band's u32 values — cheap, deterministic, dependency
@@ -174,6 +179,7 @@ impl BandingIndex {
             bits,
             tables: vec![HashMap::new(); cfg.bands],
             rows,
+            candidates: AtomicU64::new(0),
         })
     }
 
@@ -354,7 +360,28 @@ impl BandingIndex {
         }
         out.sort_unstable();
         out.dedup();
+        self.candidates.fetch_add(out.len() as u64, Ordering::Relaxed);
         out
+    }
+
+    /// Candidates collected (post-dedup) across this index's lifetime.
+    pub fn candidates_collected(&self) -> u64 {
+        self.candidates.load(Ordering::Relaxed)
+    }
+
+    /// `(occupied band buckets, largest posting list)` — band-table
+    /// occupancy for the observability surface: a pathological
+    /// collision hot spot shows up as a huge max bucket long before it
+    /// shows up as latency.
+    pub fn bucket_stats(&self) -> (usize, usize) {
+        let buckets = self.tables.iter().map(HashMap::len).sum();
+        let max = self
+            .tables
+            .iter()
+            .flat_map(|t| t.values().map(Vec::len))
+            .max()
+            .unwrap_or(0);
+        (buckets, max)
     }
 
     /// Raw candidate set for a query sketch (ids colliding in ≥1 band).
@@ -378,24 +405,38 @@ impl BandingIndex {
         }
     }
 
-    /// Score every candidate of `sketch` (unsorted).
+    /// Score every candidate of `sketch` (unsorted).  Band hashing +
+    /// posting collection spans [`Stage::BandLookup`]; candidate
+    /// scoring spans [`Stage::Score`] (inert outside a traced request).
     fn scored(&self, sketch: &[u32]) -> Vec<Neighbor> {
         let r = self.cfg.rows_per_band;
         match &self.rows {
-            Rows::Full(map) => self
-                .collect_postings(
-                    (0..self.cfg.bands).map(|b| band_hash(&sketch[b * r..(b + 1) * r])),
-                )
-                .into_iter()
-                .map(|id| Neighbor {
-                    id,
-                    score: estimate(sketch, &map[&id]),
-                })
-                .collect(),
+            Rows::Full(map) => {
+                let postings = {
+                    let _span = stage(Stage::BandLookup);
+                    self.collect_postings(
+                        (0..self.cfg.bands)
+                            .map(|b| band_hash(&sketch[b * r..(b + 1) * r])),
+                    )
+                };
+                let _span = stage(Stage::Score);
+                postings
+                    .into_iter()
+                    .map(|id| Neighbor {
+                        id,
+                        score: estimate(sketch, &map[&id]),
+                    })
+                    .collect()
+            }
             Rows::Packed(rows) => {
                 let mut q = vec![0u64; packed_words(self.k, self.bits)];
-                pack_row(sketch, self.bits, &mut q);
-                self.collect_postings(self.packed_sigs(&q).into_iter())
+                let postings = {
+                    let _span = stage(Stage::BandLookup);
+                    pack_row(sketch, self.bits, &mut q);
+                    self.collect_postings(self.packed_sigs(&q).into_iter())
+                };
+                let _span = stage(Stage::Score);
+                postings
                     .into_iter()
                     .map(|slot| {
                         let slot = slot as usize;
@@ -645,6 +686,27 @@ mod tests {
             let dup = vec![0u64; packed_words(64, bits)];
             assert!(via_words.insert_packed(0, &dup).is_err(), "duplicate id");
         }
+    }
+
+    #[test]
+    fn bucket_stats_and_candidate_counter_track_activity() {
+        let mut idx =
+            BandingIndex::new(8, IndexConfig { bands: 4, rows_per_band: 2 }).unwrap();
+        assert_eq!(idx.bucket_stats(), (0, 0), "empty index");
+        assert_eq!(idx.candidates_collected(), 0);
+        let sk = vec![1u32; 8];
+        idx.insert(7, &sk).unwrap();
+        idx.insert(8, &sk).unwrap();
+        let (buckets, max) = idx.bucket_stats();
+        assert_eq!(buckets, 4, "identical rows share one bucket per band");
+        assert_eq!(max, 2, "both items in each bucket");
+        idx.query(&sk, 10);
+        assert_eq!(idx.candidates_collected(), 2, "post-dedup candidate count");
+        idx.query(&[9u32; 8], 10);
+        assert_eq!(idx.candidates_collected(), 2, "miss adds no candidates");
+        idx.remove(8);
+        let (buckets, max) = idx.bucket_stats();
+        assert_eq!((buckets, max), (4, 1), "postings shrink with deletes");
     }
 
     #[test]

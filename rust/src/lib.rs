@@ -45,6 +45,7 @@ pub mod data;
 pub mod error;
 pub mod index;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sketch;

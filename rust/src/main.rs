@@ -8,6 +8,8 @@
 //! * `dataset`  — generate the §4.2 corpus stand-ins
 //! * `sketch`   — offline batch sketching of a dataset file
 //! * `loadgen`  — drive a running server and report latency/throughput
+//! * `stats`    — fetch a running server's stats (JSON or Prometheus text)
+//! * `top`      — live dashboard: per-op request rates + latency percentiles
 //! * `info`     — list compiled artifact variants
 //! * `theory`   — evaluate the paper's exact variance formulas
 //!
@@ -54,6 +56,13 @@ USAGE:
                    [--num-hashes K] [--seed S] [--scheme S] [--bits B]
   cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
                    [--binary]   (drive sketch ops over bin1 frames)
+  cminhash stats   [--addr A] [--prom]
+                   (one stats snapshot: JSON by default, --prom prints
+                   the Prometheus text exposition)
+  cminhash top     [--addr A] [--interval-ms MS] [--iters N]
+                   (poll a running server: per-op request-rate deltas
+                   and latency percentiles, one line per tick;
+                   --iters 0 = run until interrupted)
   cminhash info    [--artifacts DIR]
   cminhash theory  --d D --f F [--a A] [--k K]
 ";
@@ -75,7 +84,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let is_bool = matches!(name, "stats" | "fast" | "all" | "binary");
+                let is_bool = matches!(name, "stats" | "fast" | "all" | "binary" | "prom");
                 if is_bool {
                     flags.insert(name.to_string(), "true".to_string());
                     i += 1;
@@ -162,6 +171,8 @@ fn run() -> Result<()> {
         "dataset" => cmd_dataset(&args),
         "sketch" => cmd_sketch(&args),
         "loadgen" => cmd_loadgen(&args),
+        "stats" => cmd_stats(&args),
+        "top" => cmd_top(&args),
         "info" => cmd_info(&args),
         "theory" => cmd_theory(&args),
         "help" | "--help" | "-h" => {
@@ -501,7 +512,135 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         q(0.99),
         lats[lats.len() - 1],
     );
+    // Server-side view of the same run: the sketch-latency histogram
+    // excludes the network, so the gap between these numbers and the
+    // client percentiles above is transport + queueing cost.
+    match BlockingClient::connect(&addr)
+        .and_then(|mut c| c.call_raw(&cminhash::server::protocol::Request::Stats))
+    {
+        Ok(raw) => {
+            if let Ok(lat) = raw
+                .get("metrics")
+                .and_then(|m| m.get("sketch_latency"))
+            {
+                let f = |k: &str| lat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                println!(
+                    "server-side sketch latency µs: count={:.0} mean={:.1} \
+                     p50={:.0} p99={:.0} max={:.0}",
+                    f("count"),
+                    f("mean_us"),
+                    f("p50_us"),
+                    f("p99_us"),
+                    f("max_us"),
+                );
+            }
+        }
+        Err(e) => eprintln!("note: could not fetch server-side stats: {e}"),
+    }
     Ok(())
+}
+
+/// Fetch one stats snapshot from a running server.  Default output is
+/// the raw JSON `stats` line (full histograms, per-shard counters, WAL
+/// telemetry); `--prom` prints the Prometheus text exposition instead,
+/// ready to pipe into a scrape file or `promtool check metrics`.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let mut client = BlockingClient::connect(addr)?;
+    if args.has("prom") {
+        print!("{}", client.metrics_text()?);
+    } else {
+        let raw = client.call_raw(&cminhash::server::protocol::Request::Stats)?;
+        println!("{}", raw.to_string());
+    }
+    Ok(())
+}
+
+/// Live dashboard: poll a running server's `stats` every
+/// `--interval-ms` and print one line per tick with per-op request
+/// **rates** (deltas between polls divided by the poll gap — the
+/// server only exports cumulative counters) plus current sketch/query
+/// latency percentiles.  `--iters N` stops after N ticks (0 = run
+/// until interrupted).  The first tick has no predecessor, so it
+/// prints cumulative totals instead of rates.
+fn cmd_top(args: &Args) -> Result<()> {
+    use cminhash::util::json::Json;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let interval_ms = args.get_parsed::<u64>("interval-ms")?.unwrap_or(1000).max(1);
+    let iters = args.get_parsed::<u64>("iters")?.unwrap_or(0);
+    let mut client = BlockingClient::connect(addr)?;
+    let mut prev: Option<(Instant, HashMap<String, f64>)> = None;
+    let mut tick = 0u64;
+    loop {
+        let raw = client.call_raw(&cminhash::server::protocol::Request::Stats)?;
+        let now = Instant::now();
+        let counts: HashMap<String, f64> = match raw.get("requests")? {
+            Json::Obj(m) => m
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().ok().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => {
+                return Err(Error::Protocol(
+                    "stats response lacks a requests object".into(),
+                ))
+            }
+        };
+        let metrics = raw.get("metrics")?;
+        let lat = |hist: &str, field: &str| -> f64 {
+            metrics
+                .get(hist)
+                .and_then(|h| h.get(field))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        let uptime = metrics.get("uptime_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let errors = metrics.get("errors").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let stored = raw.get("stored").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let ops_col = match &prev {
+            Some((t_prev, prev_counts)) => {
+                let dt = now.duration_since(*t_prev).as_secs_f64().max(1e-9);
+                let mut parts: Vec<String> = counts
+                    .iter()
+                    .filter_map(|(op, n)| {
+                        let d = n - prev_counts.get(op).copied().unwrap_or(0.0);
+                        (d > 0.0).then(|| format!("{op}={:.0}/s", d / dt))
+                    })
+                    .collect();
+                parts.sort();
+                if parts.is_empty() {
+                    "idle".to_string()
+                } else {
+                    parts.join(" ")
+                }
+            }
+            None => {
+                let mut parts: Vec<String> = counts
+                    .iter()
+                    .filter_map(|(op, n)| (*n > 0.0).then(|| format!("{op}={n:.0}")))
+                    .collect();
+                parts.sort();
+                if parts.is_empty() {
+                    "no requests yet".to_string()
+                } else {
+                    format!("totals: {}", parts.join(" "))
+                }
+            }
+        };
+        println!(
+            "up {uptime:.0}s stored={stored:.0} | {ops_col} | sketch µs \
+             p50={:.0} p99={:.0} | query µs p50={:.0} p99={:.0} | errors={errors:.0}",
+            lat("sketch_latency", "p50_us"),
+            lat("sketch_latency", "p99_us"),
+            lat("query_latency", "p50_us"),
+            lat("query_latency", "p99_us"),
+        );
+        prev = Some((now, counts));
+        tick += 1;
+        if iters > 0 && tick >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
 }
 
 /// Print the paper's exact variance theory for a (D, f, a, K) point —

@@ -1,11 +1,15 @@
 //! Lightweight serving metrics: atomic counters and a log-bucketed
-//! latency histogram, snapshotted to JSON by the `/stats` endpoint.
+//! latency histogram, snapshotted to JSON by the `/stats` endpoint and
+//! rendered as Prometheus text by [`crate::obs::prom`].
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
-/// Number of log2 latency buckets (1us … ~17min).
-const BUCKETS: usize = 30;
+/// Number of log2 latency buckets (1us … ~17min).  Bucket `i` counts
+/// observations in `[2^i, 2^(i+1))` µs (bucket 0 also holds 0 µs; the
+/// last bucket holds everything above its lower bound).
+pub const BUCKETS: usize = 30;
 
 /// A log2-bucketed histogram of microsecond latencies.
 #[derive(Debug, Default)]
@@ -31,6 +35,46 @@ impl LatencyHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of all observations in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// The raw bucket counts (bucket `i` = observations in
+    /// `[2^i, 2^(i+1))` µs) — the full distribution, exported by
+    /// `stats` and the Prometheus surface.
+    pub fn buckets(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket boundaries: the upper bound of
+    /// the bucket containing the q-quantile, clamped to the observed
+    /// maximum (a bucket's nominal upper bound can exceed any value
+    /// actually recorded — e.g. one 100000µs sample lands in the
+    /// [65536, 131072) bucket, and an unclamped p99 would report
+    /// 131072µs, above every observation).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let max = self.max_us.load(Ordering::Relaxed);
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)).min(max);
+            }
+        }
+        max
+    }
+
+    /// Maximum observed latency.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
     /// Mean latency in microseconds (0 if empty).
     pub fn mean_us(&self) -> f64 {
         let n = self.count();
@@ -40,33 +84,10 @@ impl LatencyHistogram {
             self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
         }
     }
-
-    /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the q-quantile).
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        self.max_us.load(Ordering::Relaxed)
-    }
-
-    /// Maximum observed latency.
-    pub fn max_us(&self) -> u64 {
-        self.max_us.load(Ordering::Relaxed)
-    }
 }
 
 /// Snapshot of one histogram for JSON export.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LatencySnapshot {
     /// Observation count.
     pub count: u64,
@@ -78,6 +99,18 @@ pub struct LatencySnapshot {
     pub p99_us: u64,
     /// Max microseconds.
     pub max_us: u64,
+    /// Sum of all observations (µs) — with `count`, the Prometheus
+    /// `_sum`/`_count` pair.
+    pub sum_us: u64,
+    /// Raw log2 bucket counts ([`BUCKETS`] entries; bucket `i` counts
+    /// `[2^i, 2^(i+1))` µs).
+    pub buckets: Vec<u64>,
+}
+
+impl Default for LatencySnapshot {
+    fn default() -> Self {
+        (&LatencyHistogram::default()).into()
+    }
 }
 
 impl From<&LatencyHistogram> for LatencySnapshot {
@@ -88,12 +121,14 @@ impl From<&LatencyHistogram> for LatencySnapshot {
             p50_us: h.quantile_us(0.5),
             p99_us: h.quantile_us(0.99),
             max_us: h.max_us(),
+            sum_us: h.sum_us(),
+            buckets: h.buckets().to_vec(),
         }
     }
 }
 
 /// All serving metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// End-to-end sketch request latency.
     pub sketch_latency: LatencyHistogram,
@@ -101,6 +136,8 @@ pub struct Metrics {
     pub batch_latency: LatencyHistogram,
     /// Query latency.
     pub query_latency: LatencyHistogram,
+    /// Estimate latency (`estimate` and `estimate_vecs` ops).
+    pub estimate_latency: LatencyHistogram,
     /// Total sketch requests served.
     pub sketches: AtomicU64,
     /// Total batches executed.
@@ -127,6 +164,31 @@ pub struct Metrics {
     pub busy_rejections: AtomicU64,
     /// Transient accept() failures survived by the accept loop.
     pub accept_errors: AtomicU64,
+    /// When this metrics registry was created (service start).
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            sketch_latency: LatencyHistogram::default(),
+            batch_latency: LatencyHistogram::default(),
+            query_latency: LatencyHistogram::default(),
+            estimate_latency: LatencyHistogram::default(),
+            sketches: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            sparse_batches: AtomicU64::new(0),
+            pad_rows: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            estimates: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            frame_errors: AtomicU64::new(0),
+            busy_rejections: AtomicU64::new(0),
+            accept_errors: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
 }
 
 /// JSON-serializable snapshot of [`Metrics`].
@@ -138,6 +200,8 @@ pub struct MetricsSnapshot {
     pub batch_latency: LatencySnapshot,
     /// Query latency stats.
     pub query_latency: LatencySnapshot,
+    /// Estimate latency stats.
+    pub estimate_latency: LatencySnapshot,
     /// Counter values.
     pub sketches: u64,
     /// Batches executed.
@@ -162,6 +226,8 @@ pub struct MetricsSnapshot {
     pub accept_errors: u64,
     /// Mean rows per executed batch.
     pub mean_batch_fill: f64,
+    /// Seconds since service start.
+    pub uptime_s: f64,
 }
 
 impl LatencySnapshot {
@@ -173,6 +239,16 @@ impl LatencySnapshot {
             ("p50_us", Json::Num(self.p50_us as f64)),
             ("p99_us", Json::Num(self.p99_us as f64)),
             ("max_us", Json::Num(self.max_us as f64)),
+            ("sum_us", Json::Num(self.sum_us as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -184,6 +260,7 @@ impl MetricsSnapshot {
             ("sketch_latency", self.sketch_latency.to_json()),
             ("batch_latency", self.batch_latency.to_json()),
             ("query_latency", self.query_latency.to_json()),
+            ("estimate_latency", self.estimate_latency.to_json()),
             ("sketches", Json::Num(self.sketches as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("sparse_batches", Json::Num(self.sparse_batches as f64)),
@@ -196,6 +273,7 @@ impl MetricsSnapshot {
             ("busy_rejections", Json::Num(self.busy_rejections as f64)),
             ("accept_errors", Json::Num(self.accept_errors as f64)),
             ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("uptime_s", Json::Num(self.uptime_s)),
         ])
     }
 }
@@ -209,6 +287,7 @@ impl Metrics {
             sketch_latency: (&self.sketch_latency).into(),
             batch_latency: (&self.batch_latency).into(),
             query_latency: (&self.query_latency).into(),
+            estimate_latency: (&self.estimate_latency).into(),
             sketches,
             batches,
             sparse_batches: self.sparse_batches.load(Ordering::Relaxed),
@@ -225,6 +304,7 @@ impl Metrics {
             } else {
                 sketches as f64 / batches as f64
             },
+            uptime_s: self.started.elapsed().as_secs_f64(),
         }
     }
 
@@ -253,10 +333,56 @@ mod tests {
     }
 
     #[test]
+    fn quantile_never_exceeds_observed_max() {
+        // Regression: 100000µs lands in the [65536, 131072) bucket and
+        // the unclamped quantile reported the bucket's upper bound
+        // 131072µs — above every value ever recorded.
+        let h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record(100_000);
+        }
+        assert_eq!(h.quantile_us(0.99), 100_000);
+        assert_eq!(h.quantile_us(0.5), 100_000);
+        assert_eq!(h.max_us(), 100_000);
+        // mixed distribution: every quantile stays within [0, max]
+        h.record(3);
+        h.record(700);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile_us(q) <= h.max_us(), "q={q}");
+        }
+        // low quantiles of small values are unaffected by the clamp
+        let h2 = LatencyHistogram::default();
+        h2.record(1);
+        h2.record(1_000_000);
+        assert_eq!(h2.quantile_us(0.5), 2, "bucket bound, not the max");
+    }
+
+    #[test]
     fn empty_histogram_is_zero() {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile_us(0.5), 0);
         assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.sum_us(), 0);
+        assert!(h.buckets().iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn buckets_export_the_full_distribution() {
+        let h = LatencyHistogram::default();
+        h.record(0); // bucket 0 (us.max(1))
+        h.record(1); // bucket 0
+        h.record(2); // bucket 1
+        h.record(1024); // bucket 10
+        h.record(u64::MAX); // clamped into the last bucket
+        let b = h.buckets();
+        assert_eq!(b[0], 2);
+        assert_eq!(b[1], 1);
+        assert_eq!(b[10], 1);
+        assert_eq!(b[BUCKETS - 1], 1);
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        let snap = LatencySnapshot::from(&h);
+        assert_eq!(snap.buckets, b.to_vec());
+        assert_eq!(snap.sum_us, h.sum_us());
     }
 
     #[test]
@@ -266,12 +392,14 @@ mod tests {
         m.batches.store(25, Ordering::Relaxed);
         let s = m.snapshot();
         assert!((s.mean_batch_fill - 4.0).abs() < 1e-12);
+        assert!(s.uptime_s >= 0.0);
     }
 
     #[test]
     fn snapshot_to_json_parses_back() {
         let m = Metrics::default();
         m.sketch_latency.record(123);
+        m.estimate_latency.record(7);
         let j = m.snapshot().to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(
@@ -284,5 +412,24 @@ mod tests {
                 .unwrap(),
             1
         );
+        assert_eq!(
+            parsed
+                .get("estimate_latency")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            1
+        );
+        let buckets = parsed
+            .get("sketch_latency")
+            .unwrap()
+            .get("buckets")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(buckets.len(), BUCKETS);
+        assert!(parsed.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

@@ -1,0 +1,621 @@
+//! The observability plane: per-request traces with per-stage spans,
+//! per-op request counters, and the Prometheus text renderer.
+//!
+//! Design constraints (this is on every request's hot path):
+//!
+//! * **Always-on-cheap.**  Span state lives in a preallocated
+//!   thread-local array; counters are relaxed atomics; the trace ring
+//!   is a fixed vector of slots, each behind its own tiny mutex, so
+//!   two finishing requests only contend when they hash to the same
+//!   slot.  With tracing disabled (`obs.trace_ring = 0`) every guard
+//!   is inert: one relaxed counter bump per request, nothing else.
+//! * **Zero dependencies**, like the rest of the crate.
+//!
+//! A request trace is captured by the server layer: it calls
+//! [`Obs::begin_at`] once the op is known (passing the instant the
+//! raw bytes arrived, so decode time is inside the total), the layers
+//! underneath drop [`stage`] guards around their work (sketch, WAL
+//! append, shard routing, band lookup, scoring), and the server calls
+//! [`RequestGuard::finish`] after the response bytes are written.
+//! Stage spans are attributed through a thread-local sink, so they are
+//! exact on the inline paths; shard fan-out that crosses into scoped
+//! worker threads (large batches) executes outside the sink and its
+//! band/score time shows up in the request total but not in a stage —
+//! documented in `docs/OBSERVABILITY.md`.
+//!
+//! Slow requests (total ≥ `obs.slow_threshold_us`) are additionally
+//! **pinned** into a small bounded deque so they survive ring churn
+//! under high traffic; the `trace` wire op can read either view.
+
+pub mod prom;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Number of per-request pipeline stages.
+pub const NUM_STAGES: usize = 7;
+
+/// A request pipeline stage.  The stages are non-overlapping by
+/// construction (no stage guard wraps another), so a trace's stage
+/// spans are disjoint slices of its total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Wire read + parse (JSON line or binary frame → request).
+    Decode = 0,
+    /// Sketch computation through the batch pump (includes queue wait).
+    Sketch = 1,
+    /// Write-ahead-log append (durable stores only).
+    WalAppend = 2,
+    /// Shard routing: batch grouping on ingest, result merge on query.
+    ShardRoute = 3,
+    /// Band-signature hashing + posting-list collection.
+    BandLookup = 4,
+    /// Candidate scoring (estimate / popcount kernel).
+    Score = 5,
+    /// Response serialization + socket write.
+    Encode = 6,
+}
+
+impl Stage {
+    /// All stages, in pipeline order.
+    pub const ALL: [Stage; NUM_STAGES] = [
+        Stage::Decode,
+        Stage::Sketch,
+        Stage::WalAppend,
+        Stage::ShardRoute,
+        Stage::BandLookup,
+        Stage::Score,
+        Stage::Encode,
+    ];
+
+    /// Stable wire/display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::Sketch => "sketch",
+            Stage::WalAppend => "wal_append",
+            Stage::ShardRoute => "shard_route",
+            Stage::BandLookup => "band_lookup",
+            Stage::Score => "score",
+            Stage::Encode => "encode",
+        }
+    }
+}
+
+/// Number of request kinds ([`OpKind`] variants).
+pub const NUM_OPS: usize = 16;
+
+/// Every request kind the wire protocols can carry — the label set for
+/// the per-op request counters and the `op` field of a trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// `ping`
+    Ping = 0,
+    /// `sketch`
+    Sketch = 1,
+    /// `sketch_batch`
+    SketchBatch = 2,
+    /// `insert`
+    Insert = 3,
+    /// `insert_batch`
+    InsertBatch = 4,
+    /// `insert_packed` (binary wire only)
+    InsertPacked = 5,
+    /// `delete`
+    Delete = 6,
+    /// `estimate` (by stored ids)
+    Estimate = 7,
+    /// `estimate_vecs` (by inline vectors)
+    EstimateVecs = 8,
+    /// `query`
+    Query = 9,
+    /// `query_batch`
+    QueryBatch = 10,
+    /// `query_above`
+    QueryAbove = 11,
+    /// `save`
+    Save = 12,
+    /// `stats`
+    Stats = 13,
+    /// `trace`
+    Trace = 14,
+    /// `metrics`
+    Metrics = 15,
+}
+
+impl OpKind {
+    /// All ops, in wire-op order.
+    pub const ALL: [OpKind; NUM_OPS] = [
+        OpKind::Ping,
+        OpKind::Sketch,
+        OpKind::SketchBatch,
+        OpKind::Insert,
+        OpKind::InsertBatch,
+        OpKind::InsertPacked,
+        OpKind::Delete,
+        OpKind::Estimate,
+        OpKind::EstimateVecs,
+        OpKind::Query,
+        OpKind::QueryBatch,
+        OpKind::QueryAbove,
+        OpKind::Save,
+        OpKind::Stats,
+        OpKind::Trace,
+        OpKind::Metrics,
+    ];
+
+    /// Stable wire/display name (matches the JSON protocol op strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Ping => "ping",
+            OpKind::Sketch => "sketch",
+            OpKind::SketchBatch => "sketch_batch",
+            OpKind::Insert => "insert",
+            OpKind::InsertBatch => "insert_batch",
+            OpKind::InsertPacked => "insert_packed",
+            OpKind::Delete => "delete",
+            OpKind::Estimate => "estimate",
+            OpKind::EstimateVecs => "estimate_vecs",
+            OpKind::Query => "query",
+            OpKind::QueryBatch => "query_batch",
+            OpKind::QueryAbove => "query_above",
+            OpKind::Save => "save",
+            OpKind::Stats => "stats",
+            OpKind::Trace => "trace",
+            OpKind::Metrics => "metrics",
+        }
+    }
+
+    /// Inverse of [`OpKind::name`].
+    pub fn from_name(s: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|op| op.name() == s)
+    }
+
+    /// The op at discriminant `i` (the binary wire encodes ops as u8).
+    pub fn from_index(i: u8) -> Option<OpKind> {
+        OpKind::ALL.get(i as usize).copied()
+    }
+}
+
+/// One completed request: identity, size, wall time, and per-stage
+/// spans (µs).  Stage spans are disjoint and sum to ≤ `total_us`
+/// (scheduling gaps and un-instrumented glue make up the rest).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    /// Completion sequence number (monotonic per server).
+    pub seq: u64,
+    /// Request kind.
+    pub op: OpKind,
+    /// Rows in the request (1 for singleton ops).
+    pub items: u32,
+    /// Wall-clock µs from first request byte to response written.
+    pub total_us: u64,
+    /// True iff `total_us` ≥ the configured slow threshold
+    /// (such traces are pinned past ring churn).
+    pub slow: bool,
+    /// Per-stage µs, indexed by [`Stage`] discriminant.
+    pub stages_us: [u64; NUM_STAGES],
+}
+
+impl Trace {
+    /// JSON form served by the `trace` wire op.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let stages: Vec<(&str, Json)> = Stage::ALL
+            .iter()
+            .map(|&s| (s.name(), Json::Num(self.stages_us[s as usize] as f64)))
+            .collect();
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("op", Json::str(self.op.name())),
+            ("items", Json::Num(f64::from(self.items))),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("slow", Json::Bool(self.slow)),
+            ("stages", Json::obj(stages)),
+        ])
+    }
+
+    /// Parse the [`Trace::to_json`] form (client side of the wire).
+    pub fn from_json(j: &crate::util::json::Json) -> crate::Result<Trace> {
+        let op_name = j.get("op")?.as_str()?;
+        let op = OpKind::from_name(op_name).ok_or_else(|| {
+            crate::Error::Invalid(format!("unknown trace op {op_name:?}"))
+        })?;
+        let stages = j.get("stages")?;
+        let mut stages_us = [0u64; NUM_STAGES];
+        for s in Stage::ALL {
+            stages_us[s as usize] = stages.get(s.name())?.as_u64()?;
+        }
+        Ok(Trace {
+            seq: j.get("seq")?.as_u64()?,
+            op,
+            items: j.get("items")?.as_u64()? as u32,
+            total_us: j.get("total_us")?.as_u64()?,
+            slow: j.get("slow")?.as_bool()?,
+            stages_us,
+        })
+    }
+}
+
+/// Per-thread span sink.  Inactive outside a traced request, so stage
+/// guards dropped by background work (batch pump, recovery) are no-ops.
+struct StageSink {
+    active: bool,
+    us: [u64; NUM_STAGES],
+}
+
+thread_local! {
+    static SINK: RefCell<StageSink> = const {
+        RefCell::new(StageSink {
+            active: false,
+            us: [0; NUM_STAGES],
+        })
+    };
+}
+
+/// Times one pipeline stage of the current thread's active request;
+/// inert (no clock read) when no traced request is active on this
+/// thread.  Obtain via [`stage`]; the span is recorded on drop.
+pub struct StageGuard {
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Drop for StageGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let us = t0.elapsed().as_micros() as u64;
+            SINK.with(|s| s.borrow_mut().us[self.stage as usize] += us);
+        }
+    }
+}
+
+/// Open a span for `st` covering the guard's lifetime.
+pub fn stage(st: Stage) -> StageGuard {
+    let active = SINK.with(|s| s.borrow().active);
+    StageGuard {
+        stage: st,
+        start: active.then(Instant::now),
+    }
+}
+
+/// Credit `us` microseconds to `st` directly — for spans measured
+/// before the request's op was known (wire decode happens before
+/// [`Obs::begin_at`] can run).  No-op when no request is active.
+pub fn add_stage_us(st: Stage, us: u64) {
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.active {
+            s.us[st as usize] += us;
+        }
+    });
+}
+
+/// Tracks one in-flight request; created by [`Obs::begin_at`].  Call
+/// [`RequestGuard::finish`] after the response is written; a guard
+/// dropped unfinished (worker error path) deactivates the thread's
+/// sink without recording a trace.
+pub struct RequestGuard<'a> {
+    obs: &'a Obs,
+    op: OpKind,
+    start: Instant,
+    active: bool,
+    done: bool,
+}
+
+impl RequestGuard<'_> {
+    /// Complete the request: capture the thread's stage spans, stamp a
+    /// sequence number, and publish the trace into the ring (and the
+    /// pinned deque when slow).  `items` is the request's row count.
+    pub fn finish(&mut self, items: u32) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        if !self.active {
+            return;
+        }
+        let stages_us = SINK.with(|s| {
+            let mut s = s.borrow_mut();
+            s.active = false;
+            s.us
+        });
+        let total_us = self.start.elapsed().as_micros() as u64;
+        let seq = self.obs.seq.fetch_add(1, Ordering::Relaxed);
+        let t = Trace {
+            seq,
+            op: self.op,
+            items,
+            total_us,
+            slow: total_us >= self.obs.slow_threshold_us,
+            stages_us,
+        };
+        self.obs.publish(t);
+    }
+}
+
+impl Drop for RequestGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done && self.active {
+            SINK.with(|s| s.borrow_mut().active = false);
+        }
+    }
+}
+
+/// The per-server observability state: trace ring, pinned slow traces,
+/// and per-op request counters.  One instance per [`crate::coordinator::Coordinator`].
+pub struct Obs {
+    slow_threshold_us: u64,
+    /// Completion sequence; also the ring write cursor.
+    seq: AtomicU64,
+    /// The trace ring: slot `seq % len`.  Empty = tracing disabled.
+    slots: Vec<Mutex<Option<Trace>>>,
+    /// Slow traces pinned past ring churn (bounded, FIFO eviction).
+    pinned: Mutex<VecDeque<Trace>>,
+    pinned_cap: usize,
+    /// Requests begun, by [`OpKind`] discriminant.
+    ops: [AtomicU64; NUM_OPS],
+}
+
+impl Obs {
+    /// Build with an explicit ring size (`0` disables tracing — per-op
+    /// counters still count), slow threshold, and pinned capacity.
+    pub fn new(trace_ring: usize, slow_threshold_us: u64, pinned_cap: usize) -> Obs {
+        Obs {
+            slow_threshold_us,
+            seq: AtomicU64::new(0),
+            slots: (0..trace_ring).map(|_| Mutex::new(None)).collect(),
+            pinned: Mutex::new(VecDeque::new()),
+            pinned_cap,
+            ops: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// True iff traces are being captured (`trace_ring > 0`).
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    /// The configured slow-request threshold (µs).
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us
+    }
+
+    /// Begin a request of kind `op` whose bytes started arriving at
+    /// `start` (so decode time counts toward the total).  Always bumps
+    /// the per-op counter; activates span capture only when tracing is
+    /// enabled.
+    pub fn begin_at(&self, op: OpKind, start: Instant) -> RequestGuard<'_> {
+        self.ops[op as usize].fetch_add(1, Ordering::Relaxed);
+        let active = self.enabled();
+        if active {
+            SINK.with(|s| {
+                let mut s = s.borrow_mut();
+                s.active = true;
+                s.us = [0; NUM_STAGES];
+            });
+        }
+        RequestGuard {
+            obs: self,
+            op,
+            start,
+            active,
+            done: false,
+        }
+    }
+
+    fn publish(&self, t: Trace) {
+        if t.slow && self.pinned_cap > 0 {
+            let mut p = self.pinned.lock().unwrap();
+            if p.len() == self.pinned_cap {
+                p.pop_front();
+            }
+            p.push_back(t.clone());
+        }
+        let slot = (t.seq as usize) % self.slots.len();
+        *self.slots[slot].lock().unwrap() = Some(t);
+    }
+
+    /// The most recent `n` completed traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Trace> {
+        let mut out: Vec<Trace> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        out.sort_by(|a, b| b.seq.cmp(&a.seq));
+        out.truncate(n);
+        out
+    }
+
+    /// The pinned slow traces (up to the configured capacity), newest
+    /// first, capped at `n`.
+    pub fn pinned(&self, n: usize) -> Vec<Trace> {
+        let p = self.pinned.lock().unwrap();
+        let mut out: Vec<Trace> = p.iter().rev().take(n).cloned().collect();
+        out.sort_by(|a, b| b.seq.cmp(&a.seq));
+        out
+    }
+
+    /// `(op name, requests begun)` for every op, in [`OpKind::ALL`]
+    /// order (zero rows included, so scrape series never appear and
+    /// disappear).
+    pub fn op_counts(&self) -> Vec<(&'static str, u64)> {
+        OpKind::ALL
+            .iter()
+            .map(|&op| (op.name(), self.ops[op as usize].load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_request(obs: &Obs, op: OpKind, spans: &[(Stage, u64)]) {
+        let mut g = obs.begin_at(op, Instant::now());
+        for &(st, us) in spans {
+            add_stage_us(st, us);
+        }
+        g.finish(1);
+    }
+
+    #[test]
+    fn disabled_obs_counts_ops_but_keeps_no_traces() {
+        let obs = Obs::new(0, 10, 4);
+        assert!(!obs.enabled());
+        run_request(&obs, OpKind::Query, &[(Stage::Score, 5)]);
+        run_request(&obs, OpKind::Query, &[]);
+        run_request(&obs, OpKind::Insert, &[]);
+        assert!(obs.recent(10).is_empty());
+        assert!(obs.pinned(10).is_empty());
+        let counts: std::collections::HashMap<_, _> =
+            obs.op_counts().into_iter().collect();
+        assert_eq!(counts["query"], 2);
+        assert_eq!(counts["insert"], 1);
+        assert_eq!(counts["ping"], 0, "unused ops report zero, not absent");
+        assert_eq!(obs.op_counts().len(), NUM_OPS);
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n_traces_newest_first() {
+        let obs = Obs::new(4, u64::MAX, 4);
+        for i in 0..10 {
+            run_request(
+                &obs,
+                OpKind::Ping,
+                &[(Stage::Decode, u64::from(i) + 1)],
+            );
+        }
+        let recent = obs.recent(16);
+        assert_eq!(recent.len(), 4, "ring capacity bounds retention");
+        let seqs: Vec<u64> = recent.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![9, 8, 7, 6], "newest first");
+        assert_eq!(recent[0].stages_us[Stage::Decode as usize], 10);
+        assert_eq!(recent[0].op, OpKind::Ping);
+        assert_eq!(obs.recent(2).len(), 2, "n caps the answer");
+    }
+
+    #[test]
+    fn slow_traces_pin_past_ring_churn() {
+        // threshold 0: every request is "slow" (total_us >= 0).
+        let obs = Obs::new(2, 0, 3);
+        for _ in 0..8 {
+            run_request(&obs, OpKind::Query, &[]);
+        }
+        assert_eq!(obs.recent(16).len(), 2, "ring churned down to 2");
+        let pinned = obs.pinned(16);
+        assert_eq!(pinned.len(), 3, "pinned deque holds the cap");
+        assert!(pinned.iter().all(|t| t.slow));
+        let seqs: Vec<u64> = pinned.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![7, 6, 5], "FIFO eviction keeps the newest");
+        // an impossible threshold pins nothing
+        let quiet = Obs::new(2, u64::MAX, 3);
+        run_request(&quiet, OpKind::Query, &[]);
+        assert!(quiet.pinned(16).is_empty());
+        assert!(!quiet.recent(1)[0].slow);
+    }
+
+    #[test]
+    fn stage_guards_are_inert_without_an_active_request() {
+        let obs = Obs::new(4, u64::MAX, 0);
+        // no begin_at: guards and add_stage_us must not leak into the
+        // next request's trace
+        {
+            let _g = stage(Stage::Score);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        add_stage_us(Stage::Score, 1_000_000);
+        run_request(&obs, OpKind::Ping, &[]);
+        let t = &obs.recent(1)[0];
+        assert_eq!(t.stages_us[Stage::Score as usize], 0);
+    }
+
+    #[test]
+    fn stage_guard_measures_inside_an_active_request() {
+        let obs = Obs::new(4, u64::MAX, 0);
+        let mut g = obs.begin_at(OpKind::Sketch, Instant::now());
+        {
+            let _s = stage(Stage::Sketch);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        g.finish(3);
+        let t = &obs.recent(1)[0];
+        assert_eq!(t.op, OpKind::Sketch);
+        assert_eq!(t.items, 3);
+        assert!(
+            t.stages_us[Stage::Sketch as usize] >= 1_000,
+            "span {}µs too short",
+            t.stages_us[Stage::Sketch as usize]
+        );
+        assert!(t.total_us >= t.stages_us[Stage::Sketch as usize]);
+    }
+
+    #[test]
+    fn unfinished_guard_deactivates_the_sink() {
+        let obs = Obs::new(4, u64::MAX, 0);
+        {
+            let _g = obs.begin_at(OpKind::Query, Instant::now());
+            // dropped without finish (error path)
+        }
+        assert!(obs.recent(4).is_empty(), "no trace recorded");
+        add_stage_us(Stage::Score, 999);
+        run_request(&obs, OpKind::Ping, &[]);
+        assert_eq!(
+            obs.recent(1)[0].stages_us[Stage::Score as usize],
+            0,
+            "sink was deactivated; stray spans don't leak forward"
+        );
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = Trace {
+            seq: 41,
+            op: OpKind::QueryBatch,
+            items: 128,
+            total_us: 2_250,
+            slow: true,
+            stages_us: [1, 2, 3, 4, 5, 6, 7],
+        };
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
+        // op names and indices roundtrip for every op
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::from_name(op.name()), Some(op));
+            assert_eq!(OpKind::from_index(op as u8), Some(op));
+        }
+        assert_eq!(OpKind::from_index(NUM_OPS as u8), None);
+        assert!(OpKind::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn concurrent_requests_all_land() {
+        let obs = std::sync::Arc::new(Obs::new(64, u64::MAX, 0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let obs = obs.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    let mut g = obs.begin_at(OpKind::Query, Instant::now());
+                    add_stage_us(Stage::Score, 1);
+                    g.finish(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(obs.recent(64).len(), 32);
+        let counts: std::collections::HashMap<_, _> =
+            obs.op_counts().into_iter().collect();
+        assert_eq!(counts["query"], 32);
+        // every seq 0..32 appears exactly once
+        let mut seqs: Vec<u64> = obs.recent(64).iter().map(|t| t.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..32).collect::<Vec<u64>>());
+    }
+}

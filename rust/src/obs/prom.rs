@@ -1,0 +1,367 @@
+//! Prometheus text exposition (version 0.0.4) for the serving
+//! metrics — the `metrics` wire op and `cminhash stats --prom`.
+//!
+//! The renderer consumes the **same** snapshot structs the JSON
+//! `stats` op serializes ([`MetricsSnapshot`], [`StoreStats`], the
+//! per-op counters), so the two surfaces can never drift: a field
+//! added to one is a field added to both, and the round-trip test in
+//! `rust/tests/observability.rs` compares them value-for-value.
+//!
+//! Naming follows the Prometheus conventions: `_total` suffix on
+//! counters, base-unit-suffixed gauges, classic `_bucket`/`_sum`/
+//! `_count` histogram triplets with cumulative `le` labels.  Our log2
+//! histogram buckets cover `[2^i, 2^(i+1))` µs, so the exported `le`
+//! bounds are the powers of two `2^(i+1)`.
+
+use crate::metrics::{LatencySnapshot, MetricsSnapshot, BUCKETS};
+use crate::sketch::SketchScheme;
+use crate::store::StoreStats;
+use std::fmt::Write;
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    header(out, name, "counter", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    header(out, name, "gauge", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// One latency histogram as the classic cumulative-`le` triplet.
+fn histogram(out: &mut String, name: &str, help: &str, h: &LatencySnapshot) {
+    header(out, name, "histogram", help);
+    let mut acc = 0u64;
+    for (i, &b) in h.buckets.iter().enumerate() {
+        acc += b;
+        let le = 1u128 << (i + 1);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {acc}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum {}", h.sum_us);
+    let _ = writeln!(out, "{name}_count {}", h.count);
+}
+
+/// Render the full metrics surface as Prometheus text.  `ops` is the
+/// per-op request counter table from [`crate::obs::Obs::op_counts`].
+pub fn render(
+    scheme: SketchScheme,
+    m: &MetricsSnapshot,
+    s: &StoreStats,
+    ops: &[(&'static str, u64)],
+) -> String {
+    debug_assert_eq!(m.query_latency.buckets.len(), BUCKETS);
+    let mut out = String::with_capacity(8192);
+
+    header(
+        &mut out,
+        "cminhash_build_info",
+        "gauge",
+        "Build/config identity (value is always 1).",
+    );
+    let _ = writeln!(
+        out,
+        "cminhash_build_info{{version=\"{}\",scheme=\"{scheme}\",bits=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION"),
+        s.bits
+    );
+    gauge(
+        &mut out,
+        "cminhash_uptime_seconds",
+        "Seconds since service start.",
+        m.uptime_s,
+    );
+
+    // Per-op request counters (every op, zeros included, so series
+    // never appear/disappear between scrapes).
+    header(
+        &mut out,
+        "cminhash_requests_total",
+        "counter",
+        "Requests received, by wire op.",
+    );
+    for &(op, n) in ops {
+        let _ = writeln!(out, "cminhash_requests_total{{op=\"{op}\"}} {n}");
+    }
+
+    counter(
+        &mut out,
+        "cminhash_sketches_total",
+        "Sketch rows computed.",
+        m.sketches,
+    );
+    counter(
+        &mut out,
+        "cminhash_batches_total",
+        "Engine batches executed.",
+        m.batches,
+    );
+    counter(
+        &mut out,
+        "cminhash_sparse_batches_total",
+        "Batches routed to the sparse artifact.",
+        m.sparse_batches,
+    );
+    counter(
+        &mut out,
+        "cminhash_pad_rows_total",
+        "Padding rows added to partial batches.",
+        m.pad_rows,
+    );
+    counter(
+        &mut out,
+        "cminhash_queries_total",
+        "Query requests served.",
+        m.queries,
+    );
+    counter(
+        &mut out,
+        "cminhash_estimates_total",
+        "Estimate requests served.",
+        m.estimates,
+    );
+    counter(
+        &mut out,
+        "cminhash_deletes_total",
+        "Deletes applied.",
+        m.deletes,
+    );
+    counter(
+        &mut out,
+        "cminhash_errors_total",
+        "Requests rejected with an error.",
+        m.errors,
+    );
+    counter(
+        &mut out,
+        "cminhash_frame_errors_total",
+        "Malformed binary frames survived.",
+        m.frame_errors,
+    );
+    counter(
+        &mut out,
+        "cminhash_busy_rejections_total",
+        "Connections rejected busy (pool saturated).",
+        m.busy_rejections,
+    );
+    counter(
+        &mut out,
+        "cminhash_accept_errors_total",
+        "Transient accept() failures survived.",
+        m.accept_errors,
+    );
+    gauge(
+        &mut out,
+        "cminhash_mean_batch_fill",
+        "Mean rows per executed engine batch.",
+        m.mean_batch_fill,
+    );
+
+    histogram(
+        &mut out,
+        "cminhash_sketch_latency_us",
+        "End-to-end sketch request latency (µs).",
+        &m.sketch_latency,
+    );
+    histogram(
+        &mut out,
+        "cminhash_batch_latency_us",
+        "Engine execute latency per batch (µs).",
+        &m.batch_latency,
+    );
+    histogram(
+        &mut out,
+        "cminhash_query_latency_us",
+        "Query latency (µs).",
+        &m.query_latency,
+    );
+    histogram(
+        &mut out,
+        "cminhash_estimate_latency_us",
+        "Estimate latency (µs).",
+        &m.estimate_latency,
+    );
+    histogram(
+        &mut out,
+        "cminhash_fsync_latency_us",
+        "Snapshot+WAL durability fsync latency at compaction (µs).",
+        &s.fsync,
+    );
+
+    gauge(
+        &mut out,
+        "cminhash_stored_items",
+        "Sketches resident in the store.",
+        s.stored as f64,
+    );
+    header(
+        &mut out,
+        "cminhash_shard_items",
+        "gauge",
+        "Sketches resident, by shard.",
+    );
+    for (i, &n) in s.shards.iter().enumerate() {
+        let _ = writeln!(out, "cminhash_shard_items{{shard=\"{i}\"}} {n}");
+    }
+    header(
+        &mut out,
+        "cminhash_shard_ops_total",
+        "counter",
+        "Store operations, by shard and kind.",
+    );
+    for (i, ops) in s.shard_ops.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "cminhash_shard_ops_total{{shard=\"{i}\",kind=\"insert\"}} {}",
+            ops.inserts
+        );
+        let _ = writeln!(
+            out,
+            "cminhash_shard_ops_total{{shard=\"{i}\",kind=\"delete\"}} {}",
+            ops.deletes
+        );
+        let _ = writeln!(
+            out,
+            "cminhash_shard_ops_total{{shard=\"{i}\",kind=\"query\"}} {}",
+            ops.queries
+        );
+    }
+    counter(
+        &mut out,
+        "cminhash_candidates_scored_total",
+        "LSH candidates scored across all queries.",
+        s.candidates,
+    );
+    gauge(
+        &mut out,
+        "cminhash_band_buckets",
+        "Occupied band-signature buckets across all shards.",
+        s.band_buckets as f64,
+    );
+    gauge(
+        &mut out,
+        "cminhash_band_max_bucket",
+        "Largest band posting list (collision hot spot).",
+        s.band_max_bucket as f64,
+    );
+    gauge(
+        &mut out,
+        "cminhash_persisted_bytes",
+        "Bytes on disk (snapshot + WAL); 0 without persistence.",
+        s.persisted_bytes as f64,
+    );
+    counter(
+        &mut out,
+        "cminhash_wal_appended_bytes_total",
+        "WAL bytes appended since service start.",
+        s.wal_appended_bytes,
+    );
+    gauge(
+        &mut out,
+        "cminhash_sketch_bytes",
+        "Resident bytes per stored sketch.",
+        s.sketch_bytes as f64,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    fn sample() -> (MetricsSnapshot, StoreStats) {
+        let m = Metrics::default();
+        m.query_latency.record(100);
+        m.query_latency.record(200_000);
+        m.estimate_latency.record(9);
+        m.queries.store(2, std::sync::atomic::Ordering::Relaxed);
+        let s = StoreStats {
+            stored: 5,
+            shards: vec![2, 3],
+            persisted_bytes: 77,
+            bits: 8,
+            sketch_bytes: 16,
+            wal_appended_bytes: 1234,
+            fsync: LatencySnapshot::default(),
+            shard_ops: vec![
+                crate::store::ShardOps {
+                    inserts: 2,
+                    deletes: 0,
+                    queries: 4,
+                },
+                crate::store::ShardOps {
+                    inserts: 3,
+                    deletes: 1,
+                    queries: 4,
+                },
+            ],
+            band_buckets: 40,
+            band_max_bucket: 3,
+            candidates: 17,
+        };
+        (m.snapshot(), s)
+    }
+
+    #[test]
+    fn renders_well_formed_exposition_text() {
+        let (m, s) = sample();
+        let ops = vec![("query", 2u64), ("ping", 0u64)];
+        let text = render(SketchScheme::Cmh, &m, &s, &ops);
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "{line}"
+                );
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect(line);
+            assert!(!series.is_empty(), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "unparsable value: {line}");
+        }
+        // spot-check the key series
+        assert!(text.contains("cminhash_requests_total{op=\"query\"} 2"));
+        assert!(text.contains("cminhash_requests_total{op=\"ping\"} 0"));
+        assert!(text.contains("cminhash_queries_total 2"));
+        assert!(text.contains("cminhash_query_latency_us_count 2"));
+        assert!(text.contains(&format!(
+            "cminhash_query_latency_us_sum {}",
+            100 + 200_000
+        )));
+        assert!(text.contains("cminhash_query_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("cminhash_shard_items{shard=\"1\"} 3"));
+        assert!(text
+            .contains("cminhash_shard_ops_total{shard=\"1\",kind=\"delete\"} 1"));
+        assert!(text.contains("cminhash_candidates_scored_total 17"));
+        assert!(text.contains("scheme=\"cmh\""));
+        assert!(text.contains("bits=\"8\""));
+        // cumulative le buckets are monotone and end at count
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("cminhash_query_latency_us_bucket{le=\"") {
+                let v: u64 = rest.rsplit_once(' ').unwrap().1.parse().unwrap();
+                assert!(v >= last, "{line}");
+                last = v;
+            }
+        }
+        assert_eq!(last, 2);
+    }
+
+    #[test]
+    fn bucket_count_matches_histogram_width() {
+        let (m, s) = sample();
+        let text = render(SketchScheme::Oph, &m, &s, &[]);
+        let n = text
+            .lines()
+            .filter(|l| l.starts_with("cminhash_query_latency_us_bucket{le=\""))
+            .count();
+        assert_eq!(n, BUCKETS + 1, "every bucket plus +Inf");
+    }
+}

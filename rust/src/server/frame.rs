@@ -68,6 +68,10 @@ pub mod op {
     pub const DELETE: u8 = 0x06;
     /// Estimate J between two stored ids.
     pub const ESTIMATE: u8 = 0x07;
+    /// Fetch recent (or pinned) request traces.
+    pub const TRACE: u8 = 0x08;
+    /// Fetch the Prometheus text exposition.
+    pub const METRICS: u8 = 0x09;
     /// Failure reply; payload is the UTF-8 error message.
     pub const R_ERR: u8 = 0x80;
     /// Ping reply; empty payload.
@@ -84,6 +88,10 @@ pub mod op {
     pub const R_DELETED: u8 = 0x86;
     /// Estimate reply: Ĵ.
     pub const R_ESTIMATE: u8 = 0x87;
+    /// Trace reply: per-stage span breakdowns, newest first.
+    pub const R_TRACE: u8 = 0x88;
+    /// Metrics reply: UTF-8 Prometheus exposition text.
+    pub const R_METRICS: u8 = 0x89;
 }
 
 /// Everything that can go wrong reading, writing, or decoding a frame.
@@ -283,6 +291,13 @@ impl<'a> Cursor<'a> {
         Ok(())
     }
 
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        self.need(1)?;
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
     fn u32(&mut self) -> Result<u32, FrameError> {
         self.need(4)?;
         let b = &self.buf[self.pos..self.pos + 4];
@@ -380,10 +395,12 @@ fn take_lanes(c: &mut Cursor<'_>) -> Result<Vec<u32>, FrameError> {
 
 /// Client → server binary requests.  The deliberate subset of the JSON
 /// [`super::protocol::Request`] surface that benefits from framing:
-/// batch ingest/query plus the cheap singletons a loader or health
-/// check needs.  Everything else (save, stats, query_above, raw
-/// insert_batch) stays on JSON lines — negotiation is per-connection,
-/// so a client opens a second JSON connection for those.
+/// batch ingest/query plus the cheap singletons a loader, health
+/// check, or observability poller needs (`trace`/`metrics` are carried
+/// so a bin1 loadgen can introspect without reconnecting).  Everything
+/// else (save, stats, query_above, raw insert_batch) stays on JSON
+/// lines — negotiation is per-connection, so a client opens a second
+/// JSON connection for those.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BinRequest {
     /// Liveness check.
@@ -411,6 +428,15 @@ pub enum BinRequest {
     Delete(u64),
     /// Estimate J between two stored ids.
     Estimate(u64, u64),
+    /// Fetch up to `n` recent (or pinned-slow) request traces.
+    Trace {
+        /// Maximum traces to return (newest first).
+        n: usize,
+        /// Return the pinned slow-trace FIFO instead of the ring.
+        pinned: bool,
+    },
+    /// Fetch the Prometheus text exposition.
+    Metrics,
 }
 
 impl BinRequest {
@@ -461,6 +487,12 @@ impl BinRequest {
                 put_u64(&mut p, *b);
                 op::ESTIMATE
             }
+            BinRequest::Trace { n, pinned } => {
+                put_u32(&mut p, *n as u32);
+                p.push(u8::from(*pinned));
+                op::TRACE
+            }
+            BinRequest::Metrics => op::METRICS,
         };
         (op, p)
     }
@@ -504,6 +536,11 @@ impl BinRequest {
             }
             op::DELETE => BinRequest::Delete(c.u64()?),
             op::ESTIMATE => BinRequest::Estimate(c.u64()?, c.u64()?),
+            op::TRACE => BinRequest::Trace {
+                n: c.u32()? as usize,
+                pinned: c.u8()? != 0,
+            },
+            op::METRICS => BinRequest::Metrics,
             other => return Err(FrameError::UnknownOp(other)),
         };
         c.finish()?;
@@ -533,6 +570,10 @@ pub enum BinResponse {
     Deleted(u64),
     /// Estimate result: Ĵ.
     Estimate(f64),
+    /// Trace result: per-stage span breakdowns, newest first.
+    Trace(Vec<crate::obs::Trace>),
+    /// Metrics result: the UTF-8 Prometheus exposition text.
+    Metrics(String),
 }
 
 impl BinResponse {
@@ -582,6 +623,24 @@ impl BinResponse {
                 put_f64(&mut p, *jhat);
                 op::R_ESTIMATE
             }
+            BinResponse::Trace(traces) => {
+                put_u32(&mut p, traces.len() as u32);
+                for t in traces {
+                    put_u64(&mut p, t.seq);
+                    p.push(t.op as u8);
+                    put_u32(&mut p, t.items);
+                    p.push(u8::from(t.slow));
+                    put_u64(&mut p, t.total_us);
+                    for &us in &t.stages_us {
+                        put_u64(&mut p, us);
+                    }
+                }
+                op::R_TRACE
+            }
+            BinResponse::Metrics(text) => {
+                p.extend_from_slice(text.as_bytes());
+                op::R_METRICS
+            }
         };
         (op, p)
     }
@@ -629,6 +688,41 @@ impl BinResponse {
             }
             op::R_DELETED => BinResponse::Deleted(c.u64()?),
             op::R_ESTIMATE => BinResponse::Estimate(c.f64()?),
+            op::R_TRACE => {
+                let n = batch_count(&mut c, "trace reply")?;
+                // fixed-size trace record: seq(8) + op(1) + items(4) +
+                // slow(1) + total(8) + stages(7×8)
+                c.need(n * (22 + crate::obs::NUM_STAGES * 8))?;
+                let traces = (0..n)
+                    .map(|_| -> Result<crate::obs::Trace, FrameError> {
+                        let seq = c.u64()?;
+                        let op_byte = c.u8()?;
+                        let op = crate::obs::OpKind::from_index(op_byte).ok_or_else(|| {
+                            FrameError::Malformed(format!("unknown trace op index {op_byte}"))
+                        })?;
+                        let items = c.u32()?;
+                        let slow = c.u8()? != 0;
+                        let total_us = c.u64()?;
+                        let mut stages_us = [0u64; crate::obs::NUM_STAGES];
+                        for us in &mut stages_us {
+                            *us = c.u64()?;
+                        }
+                        Ok(crate::obs::Trace {
+                            seq,
+                            op,
+                            items,
+                            total_us,
+                            slow,
+                            stages_us,
+                        })
+                    })
+                    .collect::<Result<_, _>>()?;
+                BinResponse::Trace(traces)
+            }
+            op::R_METRICS => BinResponse::Metrics(
+                String::from_utf8(c.rest().to_vec())
+                    .map_err(|_| FrameError::Malformed("metrics text is not UTF-8".into()))?,
+            ),
             other => return Err(FrameError::UnknownOp(other)),
         };
         c.finish()?;
@@ -671,6 +765,15 @@ mod tests {
             },
             BinRequest::Delete(u64::MAX),
             BinRequest::Estimate(3, 9),
+            BinRequest::Trace {
+                n: 16,
+                pinned: true,
+            },
+            BinRequest::Trace {
+                n: 0,
+                pinned: false,
+            },
+            BinRequest::Metrics,
         ] {
             assert_eq!(roundtrip_req(req.clone()), req);
         }
@@ -690,8 +793,46 @@ mod tests {
             ]),
             BinResponse::Deleted(12),
             BinResponse::Estimate(0.4921875),
+            BinResponse::Trace(vec![
+                crate::obs::Trace {
+                    seq: 41,
+                    op: crate::obs::OpKind::QueryBatch,
+                    items: 128,
+                    total_us: 15_000,
+                    slow: true,
+                    stages_us: [10, 0, 0, 40, 9_000, 5_000, 50],
+                },
+                crate::obs::Trace {
+                    seq: 42,
+                    op: crate::obs::OpKind::Ping,
+                    items: 1,
+                    total_us: 3,
+                    slow: false,
+                    stages_us: [0; crate::obs::NUM_STAGES],
+                },
+            ]),
+            BinResponse::Trace(vec![]),
+            BinResponse::Metrics("# TYPE cminhash_requests_total counter\n".into()),
         ] {
             assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn trace_replies_with_unknown_op_indices_are_malformed() {
+        let (opc, mut payload) = BinResponse::Trace(vec![crate::obs::Trace {
+            seq: 1,
+            op: crate::obs::OpKind::Query,
+            items: 1,
+            total_us: 5,
+            slow: false,
+            stages_us: [0; crate::obs::NUM_STAGES],
+        }])
+        .encode();
+        payload[4 + 8] = 0xEE; // corrupt the op index (count:u32 then seq:u64)
+        match BinResponse::decode(opc, &payload) {
+            Err(FrameError::Malformed(msg)) => assert!(msg.contains("op index"), "{msg}"),
+            other => panic!("{other:?}"),
         }
     }
 

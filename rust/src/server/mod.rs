@@ -31,6 +31,7 @@ pub mod protocol;
 
 use crate::coordinator::Coordinator;
 use crate::metrics::Metrics;
+use crate::obs::{add_stage_us, stage, OpKind, RequestGuard, Stage};
 use crate::sketch::SparseVec;
 use crate::util::json::Json;
 use protocol::{Request, Response, WireNeighbor};
@@ -204,6 +205,15 @@ fn busy_reject(mut socket: TcpStream, max_connections: usize) {
 /// sends invalid UTF-8 gets one clean JSON error line instead of
 /// killing the read loop; a final line without a trailing newline is
 /// still processed.
+///
+/// Every successfully decoded request is traced: the clock starts when
+/// its line arrives, the parse cost is credited to the `decode` stage,
+/// inner layers record their own spans, serialization + socket write
+/// are the `encode` stage, and the trace publishes only after the
+/// response bytes are handed to the kernel — so `total_us` is what the
+/// client actually waited, minus network.  Undecodable lines are
+/// counted in `errors` but not traced (there is no op to label them
+/// with).
 fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
     socket.set_nodelay(true)?;
     let mut writer = socket.try_clone()?;
@@ -215,6 +225,8 @@ fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
         if reader.read_until(b'\n', &mut buf)? == 0 {
             return Ok(()); // clean EOF at a line boundary
         }
+        let t0 = Instant::now();
+        let mut tracked: Option<(RequestGuard<'_>, u32)> = None;
         let resp = match std::str::from_utf8(&buf) {
             Err(_) => {
                 Metrics::inc(&svc.metrics().errors);
@@ -240,7 +252,17 @@ fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
                             }
                         }
                         match Request::from_json(&j) {
-                            Ok(req) => dispatch(&svc, req),
+                            Ok(req) => {
+                                let guard = svc.obs().begin_at(op_kind(&req), t0);
+                                add_stage_us(
+                                    Stage::Decode,
+                                    t0.elapsed().as_micros() as u64,
+                                );
+                                let items = item_count(&req);
+                                let r = dispatch(&svc, req);
+                                tracked = Some((guard, items));
+                                r
+                            }
                             Err(e) => {
                                 Metrics::inc(&svc.metrics().errors);
                                 Response::err(&e)
@@ -254,9 +276,47 @@ fn handle_conn(svc: Arc<Coordinator>, socket: TcpStream) -> crate::Result<()> {
                 }
             }
         };
-        let mut out = resp.to_json().to_string();
-        out.push('\n');
-        writer.write_all(out.as_bytes())?;
+        {
+            let _span = stage(Stage::Encode);
+            let mut out = resp.to_json().to_string();
+            out.push('\n');
+            writer.write_all(out.as_bytes())?;
+        }
+        if let Some((mut guard, items)) = tracked {
+            guard.finish(items);
+        }
+    }
+}
+
+/// The [`OpKind`] label for a decoded JSON request.
+fn op_kind(req: &Request) -> OpKind {
+    match req {
+        Request::Ping => OpKind::Ping,
+        Request::Sketch { .. } => OpKind::Sketch,
+        Request::SketchBatch { .. } => OpKind::SketchBatch,
+        Request::Insert { .. } => OpKind::Insert,
+        Request::InsertBatch { .. } => OpKind::InsertBatch,
+        Request::Delete { .. } => OpKind::Delete,
+        Request::Save => OpKind::Save,
+        Request::Estimate { .. } => OpKind::Estimate,
+        Request::EstimateVecs { .. } => OpKind::EstimateVecs,
+        Request::Query { .. } => OpKind::Query,
+        Request::QueryBatch { .. } => OpKind::QueryBatch,
+        Request::QueryAbove { .. } => OpKind::QueryAbove,
+        Request::Stats => OpKind::Stats,
+        Request::Trace { .. } => OpKind::Trace,
+        Request::Metrics => OpKind::Metrics,
+    }
+}
+
+/// Row count of a JSON request (1 for singleton ops), for the trace's
+/// `items` field.
+fn item_count(req: &Request) -> u32 {
+    match req {
+        Request::SketchBatch { vecs }
+        | Request::InsertBatch { vecs }
+        | Request::QueryBatch { vecs, .. } => vecs.len() as u32,
+        _ => 1,
     }
 }
 
@@ -350,18 +410,38 @@ fn serve_binary(
     let mut fr = frame::FrameReader::new(reader);
     let mut fw = frame::FrameWriter::new(writer);
     loop {
-        match fr.read_frame() {
+        let read = fr.read_frame();
+        // Trace clock starts once the frame is fully off the wire
+        // (mirroring the JSON path, whose clock starts after its line
+        // is read), so blocking in `read_frame` between requests never
+        // counts against a request.
+        let t0 = Instant::now();
+        match read {
             Ok(None) => return Ok(()),
             Ok(Some((op, payload))) => {
+                let mut tracked: Option<(RequestGuard<'_>, u32)> = None;
                 let resp = match frame::BinRequest::decode(op, &payload) {
-                    Ok(req) => dispatch_binary(svc, req),
+                    Ok(req) => {
+                        let guard = svc.obs().begin_at(bin_op_kind(&req), t0);
+                        add_stage_us(Stage::Decode, t0.elapsed().as_micros() as u64);
+                        let items = bin_item_count(&req);
+                        let r = dispatch_binary(svc, req);
+                        tracked = Some((guard, items));
+                        r
+                    }
                     Err(e) => {
                         Metrics::inc(&svc.metrics().frame_errors);
                         frame::BinResponse::Err(e.to_string())
                     }
                 };
-                let (rop, rpay) = resp.encode();
-                fw.write_frame(rop, &rpay).map_err(crate::Error::from)?;
+                {
+                    let _span = stage(Stage::Encode);
+                    let (rop, rpay) = resp.encode();
+                    fw.write_frame(rop, &rpay).map_err(crate::Error::from)?;
+                }
+                if let Some((mut guard, items)) = tracked {
+                    guard.finish(items);
+                }
             }
             Err(e) => {
                 Metrics::inc(&svc.metrics().frame_errors);
@@ -440,6 +520,31 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
                     scheme: svc.config().sketch.scheme,
                     metrics,
                     store,
+                    ops: svc.obs().op_counts(),
+                }
+            }
+            Request::Trace { n, pinned } => {
+                // Cap replies at the shared wire-batch row limit so a huge
+                // trace ring can never produce a bin1 reply the reference
+                // client's own batch-count guard would reject.
+                let n = n.min(protocol::MAX_WIRE_BATCH);
+                Response::Trace {
+                    traces: if pinned {
+                        svc.obs().pinned(n)
+                    } else {
+                        svc.obs().recent(n)
+                    },
+                }
+            }
+            Request::Metrics => {
+                let (metrics, store) = svc.stats();
+                Response::Metrics {
+                    text: crate::obs::prom::render(
+                        svc.config().sketch.scheme,
+                        &metrics,
+                        &store,
+                        &svc.obs().op_counts(),
+                    ),
                 }
             }
         })
@@ -466,9 +571,38 @@ fn bin_of(resp: Response) -> frame::BinResponse {
         Response::Deleted { id } => B::Deleted(id),
         Response::Estimate { jhat } => B::Estimate(jhat),
         Response::QueryBatch { results } => B::Results(results),
+        Response::Trace { traces } => B::Trace(traces),
+        Response::Metrics { text } => B::Metrics(text),
         // the remaining variants have no binary request that produces
         // them; reaching this arm is a server-side dispatch bug
         other => B::Err(format!("unexpected internal response {other:?}")),
+    }
+}
+
+/// The [`OpKind`] label for a decoded binary request.
+fn bin_op_kind(req: &frame::BinRequest) -> OpKind {
+    use frame::BinRequest as B;
+    match req {
+        B::Ping => OpKind::Ping,
+        B::Sketch(_) => OpKind::Sketch,
+        B::SketchBatch(_) => OpKind::SketchBatch,
+        B::InsertPacked { .. } => OpKind::InsertPacked,
+        B::QueryBatch { .. } => OpKind::QueryBatch,
+        B::Delete(_) => OpKind::Delete,
+        B::Estimate(..) => OpKind::Estimate,
+        B::Trace { .. } => OpKind::Trace,
+        B::Metrics => OpKind::Metrics,
+    }
+}
+
+/// Row count of a binary request (1 for singleton ops).
+fn bin_item_count(req: &frame::BinRequest) -> u32 {
+    use frame::BinRequest as B;
+    match req {
+        B::SketchBatch(vecs) => vecs.len() as u32,
+        B::InsertPacked { rows, .. } => rows.len() as u32,
+        B::QueryBatch { vecs, .. } => vecs.len() as u32,
+        _ => 1,
     }
 }
 
@@ -498,6 +632,8 @@ fn dispatch_binary(svc: &Arc<Coordinator>, req: frame::BinRequest) -> frame::Bin
         }
         B::Delete(id) => bin_of(dispatch(svc, Request::Delete { id })),
         B::Estimate(a, b) => bin_of(dispatch(svc, Request::Estimate { a, b })),
+        B::Trace { n, pinned } => bin_of(dispatch(svc, Request::Trace { n, pinned })),
+        B::Metrics => bin_of(dispatch(svc, Request::Metrics)),
         B::InsertPacked { rows, .. } => match svc.insert_packed_many(rows) {
             Ok(ids) => frame::BinResponse::Ids(ids),
             Err(e) => {
@@ -851,6 +987,45 @@ impl BlockingClient {
         }
         match self.call(&Request::Query { vec, topk })? {
             Response::Query { neighbors } => Ok(neighbors),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: fetch up to `n` recent request traces, newest
+    /// first — or the pinned slow-trace FIFO when `pinned` is true
+    /// (either mode).
+    pub fn trace(
+        &mut self,
+        n: usize,
+        pinned: bool,
+    ) -> crate::Result<Vec<crate::obs::Trace>> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Trace { n, pinned })? {
+                frame::BinResponse::Trace(traces) => Ok(traces),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Trace { n, pinned })? {
+            Response::Trace { traces } => Ok(traces),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: fetch the server's Prometheus text exposition
+    /// (either mode).
+    pub fn metrics_text(&mut self) -> crate::Result<String> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Metrics)? {
+                frame::BinResponse::Metrics(text) => Ok(text),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
             other => Self::unexpected(other),
         }

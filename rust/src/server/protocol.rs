@@ -125,6 +125,15 @@ pub enum Request {
     Save,
     /// Metrics snapshot.
     Stats,
+    /// Recent (or pinned-slow) request traces with per-stage spans.
+    Trace {
+        /// Maximum traces to return (newest first).
+        n: usize,
+        /// Return the pinned slow-trace FIFO instead of the ring.
+        pinned: bool,
+    },
+    /// Prometheus text exposition of the full metrics surface.
+    Metrics,
 }
 
 /// Upper bound on rows per batch op.  One request line must not be
@@ -197,6 +206,17 @@ impl Request {
             },
             "save" => Request::Save,
             "stats" => Request::Stats,
+            "trace" => Request::Trace {
+                n: match j.get_opt("n") {
+                    Some(v) => v.as_usize()?,
+                    None => 16,
+                },
+                pinned: match j.get_opt("pinned") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                },
+            },
+            "metrics" => Request::Metrics,
             other => {
                 return Err(crate::Error::Protocol(format!("unknown op {other:?}")))
             }
@@ -254,6 +274,12 @@ impl Request {
             ]),
             Request::Save => Json::obj(vec![("op", Json::str("save"))]),
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+            Request::Trace { n, pinned } => Json::obj(vec![
+                ("op", Json::str("trace")),
+                ("n", Json::Num(*n as f64)),
+                ("pinned", Json::Bool(*pinned)),
+            ]),
+            Request::Metrics => Json::obj(vec![("op", Json::str("metrics"))]),
         }
     }
 }
@@ -338,6 +364,18 @@ pub enum Response {
         metrics: MetricsSnapshot,
         /// Store occupancy + durability.
         store: StoreStats,
+        /// Per-op request counters (every op, zeros included).
+        ops: Vec<(&'static str, u64)>,
+    },
+    /// Trace result: recent (or pinned) request traces, newest first.
+    Trace {
+        /// The traces, each with its per-stage span breakdown.
+        traces: Vec<crate::obs::Trace>,
+    },
+    /// Prometheus text exposition.
+    Metrics {
+        /// The rendered exposition (text format 0.0.4).
+        text: String,
     },
 }
 
@@ -438,12 +476,21 @@ impl Response {
                 scheme,
                 metrics,
                 store,
+                ops,
             } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("scheme", Json::str(scheme.as_str())),
                 ("bits", Json::Num(f64::from(store.bits))),
                 ("sketch_bytes", Json::Num(store.sketch_bytes as f64)),
                 ("metrics", metrics.to_json()),
+                (
+                    "requests",
+                    Json::obj(
+                        ops.iter()
+                            .map(|&(op, n)| (op, Json::Num(n as f64)))
+                            .collect(),
+                    ),
+                ),
                 ("stored", Json::Num(store.stored as f64)),
                 (
                     "shards",
@@ -455,7 +502,42 @@ impl Response {
                             .collect(),
                     ),
                 ),
+                (
+                    "shard_ops",
+                    Json::Arr(
+                        store
+                            .shard_ops
+                            .iter()
+                            .map(|o| {
+                                Json::obj(vec![
+                                    ("inserts", Json::Num(o.inserts as f64)),
+                                    ("deletes", Json::Num(o.deletes as f64)),
+                                    ("queries", Json::Num(o.queries as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("band_buckets", Json::Num(store.band_buckets as f64)),
+                ("band_max_bucket", Json::Num(store.band_max_bucket as f64)),
+                ("candidates", Json::Num(store.candidates as f64)),
                 ("persisted_bytes", Json::Num(store.persisted_bytes as f64)),
+                (
+                    "wal_appended_bytes",
+                    Json::Num(store.wal_appended_bytes as f64),
+                ),
+                ("fsync_latency", store.fsync.to_json()),
+            ]),
+            Response::Trace { traces } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "traces",
+                    Json::Arr(traces.iter().map(|t| t.to_json()).collect()),
+                ),
+            ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("text", Json::str(text)),
             ]),
         }
     }
@@ -526,6 +608,20 @@ impl Response {
                 neighbors: neighbors_from_json(ns)?,
             });
         }
+        if let Some(ts) = j.get_opt("traces") {
+            return Ok(Response::Trace {
+                traces: ts
+                    .as_arr()?
+                    .iter()
+                    .map(crate::obs::Trace::from_json)
+                    .collect::<crate::Result<_>>()?,
+            });
+        }
+        if let Some(t) = j.get_opt("text") {
+            return Ok(Response::Metrics {
+                text: t.as_str()?.to_string(),
+            });
+        }
         if j.get_opt("metrics").is_some() {
             // Clients mostly print stats verbatim; re-parsing the full
             // snapshot is not needed, so surface a protocol error if a
@@ -574,6 +670,9 @@ mod tests {
             r#"{"op":"insert_batch","vecs":[{"dim":4,"indices":[0]},{"dim":4,"indices":[1]}]}"#,
             r#"{"op":"query_batch","vecs":[{"dim":4,"indices":[0]}],"topk":3}"#,
             r#"{"op":"stats"}"#,
+            r#"{"op":"trace"}"#,
+            r#"{"op":"trace","n":5,"pinned":true}"#,
+            r#"{"op":"metrics"}"#,
         ] {
             Request::from_json(&Json::parse(line).unwrap())
                 .unwrap_or_else(|e| panic!("{line}: {e}"));
@@ -716,7 +815,25 @@ mod tests {
                 persisted_bytes: 77,
                 bits: 8,
                 sketch_bytes: 16,
+                wal_appended_bytes: 900,
+                fsync: crate::metrics::LatencySnapshot::default(),
+                shard_ops: vec![
+                    crate::store::ShardOps {
+                        inserts: 4,
+                        deletes: 1,
+                        queries: 6,
+                    },
+                    crate::store::ShardOps {
+                        inserts: 3,
+                        deletes: 0,
+                        queries: 6,
+                    },
+                ],
+                band_buckets: 12,
+                band_max_bucket: 3,
+                candidates: 42,
             },
+            ops: vec![("ping", 1), ("query", 6)],
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.get("scheme").unwrap().as_str().unwrap(), "coph");
@@ -728,6 +845,58 @@ mod tests {
             j.get("shards").unwrap().as_u32_vec().unwrap(),
             vec![2u32, 3]
         );
+        // the observability extensions ride the same response
+        assert_eq!(j.get("wal_appended_bytes").unwrap().as_u64().unwrap(), 900);
+        assert_eq!(j.get("band_buckets").unwrap().as_u64().unwrap(), 12);
+        assert_eq!(j.get("band_max_bucket").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("candidates").unwrap().as_u64().unwrap(), 42);
+        let shard_ops = j.get("shard_ops").unwrap().as_arr().unwrap();
+        assert_eq!(shard_ops.len(), 2);
+        assert_eq!(shard_ops[0].get("inserts").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(shard_ops[1].get("queries").unwrap().as_u64().unwrap(), 6);
+        let reqs = j.get("requests").unwrap();
+        assert_eq!(reqs.get("ping").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(reqs.get("query").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(
+            j.get("fsync_latency").unwrap().get("count").unwrap().as_u64().unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn trace_and_metrics_responses_roundtrip() {
+        let t = crate::obs::Trace {
+            seq: 9,
+            op: crate::obs::OpKind::Query,
+            items: 2,
+            total_us: 1500,
+            slow: false,
+            stages_us: [10, 900, 0, 40, 300, 200, 50],
+        };
+        let r = Response::Trace {
+            traces: vec![t.clone()],
+        };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            Response::Trace { traces } => assert_eq!(traces, vec![t]),
+            other => panic!("{other:?}"),
+        }
+        let r = Response::Metrics {
+            text: "# TYPE cminhash_uptime_seconds gauge\n".into(),
+        };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            Response::Metrics { text } => {
+                assert!(text.contains("cminhash_uptime_seconds"))
+            }
+            other => panic!("{other:?}"),
+        }
+        // trace request defaults: n=16, pinned=false
+        match Request::from_json(&Json::parse(r#"{"op":"trace"}"#).unwrap()).unwrap() {
+            Request::Trace { n, pinned } => {
+                assert_eq!(n, 16);
+                assert!(!pinned);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

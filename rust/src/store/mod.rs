@@ -22,14 +22,18 @@ mod sharded;
 mod snapshot;
 mod wal;
 
-pub use sharded::{resolve_shards, ShardedIndex};
+pub use sharded::{resolve_shards, ShardOps, ShardedIndex};
 pub use snapshot::{Snapshot, SnapshotData};
 pub use wal::{Wal, WalRecord};
 
 use crate::index::{IndexConfig, Neighbor};
+use crate::metrics::{LatencyHistogram, LatencySnapshot};
+use crate::obs::{stage, Stage};
 use crate::sketch::SketchScheme;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Snapshot file name inside the persist directory.
 pub const SNAPSHOT_FILE: &str = "snapshot.bin";
@@ -38,7 +42,7 @@ pub const WAL_FILE: &str = "wal.log";
 
 /// Occupancy and durability snapshot of the store subsystem
 /// (the store half of the `stats` wire response).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StoreStats {
     /// Total sketches resident.
     pub stored: usize,
@@ -51,6 +55,20 @@ pub struct StoreStats {
     /// Resident bytes per stored sketch (truthful across storage
     /// modes: K·4 full-width, K·bits/8 rounded up to words packed).
     pub sketch_bytes: u64,
+    /// WAL bytes appended since service start (monotone; unlike
+    /// `persisted_bytes` it never shrinks at compaction).
+    pub wal_appended_bytes: u64,
+    /// Durability fsync latency at compaction (snapshot write + WAL
+    /// truncation, the store's only fsync site).
+    pub fsync: LatencySnapshot,
+    /// Insert/delete/probe counts, by shard.
+    pub shard_ops: Vec<ShardOps>,
+    /// Occupied band-signature buckets across all shards.
+    pub band_buckets: usize,
+    /// Largest single band posting list (collision hot spot).
+    pub band_max_bucket: usize,
+    /// LSH candidates scored across all queries since start.
+    pub candidates: u64,
 }
 
 struct PersistState {
@@ -74,6 +92,10 @@ pub struct PersistentIndex {
     /// from different schemes are incomparable bytes.
     scheme: SketchScheme,
     persist: Option<Mutex<PersistState>>,
+    /// Compaction durability latency (the only fsync site).
+    fsync_us: LatencyHistogram,
+    /// WAL bytes appended since open (monotone across compactions).
+    wal_appended: AtomicU64,
 }
 
 impl PersistentIndex {
@@ -125,6 +147,8 @@ impl PersistentIndex {
                 index,
                 scheme,
                 persist: None,
+                fsync_us: LatencyHistogram::default(),
+                wal_appended: AtomicU64::new(0),
             });
         };
         std::fs::create_dir_all(dir)?;
@@ -260,7 +284,20 @@ impl PersistentIndex {
                 wal,
                 snapshot_bytes,
             })),
+            fsync_us: LatencyHistogram::default(),
+            wal_appended: AtomicU64::new(0),
         })
+    }
+
+    /// Append `rec` under an active [`Stage::WalAppend`] span and
+    /// credit the appended bytes to the monotone WAL byte counter.
+    fn wal_append(&self, st: &mut PersistState, rec: &WalRecord) -> crate::Result<()> {
+        let _span = stage(Stage::WalAppend);
+        let before = st.wal.bytes();
+        st.wal.append(rec)?;
+        self.wal_appended
+            .fetch_add(st.wal.bytes() - before, Ordering::Relaxed);
+        Ok(())
     }
 
     /// The underlying sharded index.
@@ -309,7 +346,7 @@ impl PersistentIndex {
                 let mut st = m.lock().unwrap();
                 let id = self.index.insert(&sketch)?;
                 let rec = self.insert_record(vec![(id, sketch)]);
-                if let Err(e) = st.wal.append(&rec) {
+                if let Err(e) = self.wal_append(&mut st, &rec) {
                     let _ = self.index.delete(id);
                     return Err(e);
                 }
@@ -338,7 +375,7 @@ impl PersistentIndex {
                         .map(|(&id, sketch)| (id, sketch.clone()))
                         .collect(),
                 );
-                if let Err(e) = st.wal.append(&rec) {
+                if let Err(e) = self.wal_append(&mut st, &rec) {
                     for &id in &ids {
                         let _ = self.index.delete(id);
                     }
@@ -374,7 +411,7 @@ impl PersistentIndex {
                         })
                         .collect(),
                 );
-                if let Err(e) = st.wal.append(&rec) {
+                if let Err(e) = self.wal_append(&mut st, &rec) {
                     for &id in &ids {
                         let _ = self.index.delete(id);
                     }
@@ -399,7 +436,7 @@ impl PersistentIndex {
             Some(m) => {
                 let mut st = m.lock().unwrap();
                 let removed = self.index.delete(id)?;
-                if let Err(e) = st.wal.append(&WalRecord::Delete { id }) {
+                if let Err(e) = self.wal_append(&mut st, &WalRecord::Delete { id }) {
                     let _ = self.index.insert_with_id(id, &removed);
                     return Err(e);
                 }
@@ -419,6 +456,7 @@ impl PersistentIndex {
         };
         let mut st = m.lock().unwrap();
         let snap_path = st.dir.join(SNAPSHOT_FILE);
+        let durable_start = Instant::now();
         // Packed stores snapshot their rows as the words they already
         // hold — widening every lane to u32 first would transiently
         // cost 32/b× the packed footprint, exactly when the corpus is
@@ -447,6 +485,11 @@ impl PersistentIndex {
         // is idempotent, but a long stale log costs startup time).
         st.wal.reset()?;
         st.wal.sync()?;
+        // One observation per compaction covering the whole durable
+        // sequence (snapshot fsyncs + WAL truncation fsync) — the
+        // latency a caller actually waits on for durability.
+        self.fsync_us
+            .record(durable_start.elapsed().as_micros() as u64);
         st.snapshot_bytes = bytes;
         Ok(bytes)
     }
@@ -500,12 +543,19 @@ impl PersistentIndex {
                 st.snapshot_bytes + st.wal.bytes()
             }
         };
+        let (band_buckets, band_max_bucket) = self.index.band_stats();
         StoreStats {
             stored: self.index.len(),
             shards: self.index.shard_sizes(),
             persisted_bytes,
             bits: self.index.bits(),
             sketch_bytes: self.index.sketch_bytes_per_item() as u64,
+            wal_appended_bytes: self.wal_appended.load(Ordering::Relaxed),
+            fsync: (&self.fsync_us).into(),
+            shard_ops: self.index.shard_ops(),
+            band_buckets,
+            band_max_bucket,
+            candidates: self.index.candidates_collected(),
         }
     }
 }
@@ -583,6 +633,41 @@ mod tests {
         // compaction shrinks the footprint to snapshot-only
         let compacted = store.compact().unwrap();
         assert_eq!(store.stats().persisted_bytes, compacted);
+    }
+
+    #[test]
+    fn stats_expose_wal_fsync_and_shard_op_telemetry() {
+        let dir = TempDir::new().unwrap();
+        let store =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(dir.path()))
+                .unwrap();
+        let before = store.stats();
+        assert_eq!(before.wal_appended_bytes, 0);
+        assert_eq!(before.fsync.count, 0);
+        assert_eq!(before.candidates, 0);
+        let a = store.insert(sk(1)).unwrap();
+        store.insert_many(&[sk(2), sk(3)]).unwrap();
+        store.delete(a).unwrap();
+        store.query(&sk(2), 2).unwrap();
+        store.compact().unwrap();
+        let after = store.stats();
+        // the monotone WAL byte counter survives the compaction that
+        // resets the live log to zero bytes
+        assert!(after.wal_appended_bytes > 0);
+        assert_eq!(after.fsync.count, 1, "one compaction, one observation");
+        assert_eq!(after.shard_ops.len(), 2);
+        assert_eq!(after.shard_ops.iter().map(|o| o.inserts).sum::<u64>(), 3);
+        assert_eq!(after.shard_ops.iter().map(|o| o.deletes).sum::<u64>(), 1);
+        assert!(after.shard_ops.iter().all(|o| o.queries == 1));
+        assert!(after.band_buckets > 0);
+        assert!(after.band_max_bucket >= 1);
+        assert!(after.candidates >= 1, "the self-probe scored itself");
+        // in-memory stores report zeros for the durability telemetry
+        let mem = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, None).unwrap();
+        mem.insert(sk(1)).unwrap();
+        let s = mem.stats();
+        assert_eq!(s.wal_appended_bytes, 0);
+        assert_eq!(s.fsync.count, 0);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! global top-k).
 
 use crate::index::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};
+use crate::obs::{stage, Stage};
 use crate::sketch::{corrected_estimate, packed_words};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
@@ -46,6 +47,29 @@ pub fn resolve_shards(requested: usize) -> usize {
 /// the calling thread instead of spawning per-shard threads.
 const PARALLEL_QUERY_MIN_ITEMS: usize = 8192;
 
+/// Point-in-time operation counts for one shard (`/stats`,
+/// `cminhash_shard_ops_total`).  `queries` counts shard *probes*: a
+/// batch of P probes against S shards adds P to every shard it
+/// touches, so a hot shard shows up as a hot row, not an average.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardOps {
+    /// Rows inserted into this shard (fresh-id, explicit-id, batched
+    /// and packed ingest all count).
+    pub inserts: u64,
+    /// Rows removed from this shard.
+    pub deletes: u64,
+    /// Probe evaluations routed through this shard.
+    pub queries: u64,
+}
+
+/// Live atomic mirror of [`ShardOps`], one per shard.
+#[derive(Debug, Default)]
+struct ShardCounters {
+    inserts: AtomicU64,
+    deletes: AtomicU64,
+    queries: AtomicU64,
+}
+
 /// A sharded, concurrently accessible banding index over sketches.
 ///
 /// Each shard owns its own [`BandingIndex`] (band postings + sketch
@@ -62,6 +86,9 @@ pub struct ShardedIndex {
     // every shard lock.
     resident: AtomicUsize,
     shards: Vec<RwLock<BandingIndex>>,
+    // One counter triple per shard, bumped with relaxed atomics so the
+    // observability surface never contends with the data path.
+    ops: Vec<ShardCounters>,
 }
 
 impl ShardedIndex {
@@ -88,6 +115,7 @@ impl ShardedIndex {
         for _ in 0..num_shards {
             shards.push(RwLock::new(BandingIndex::with_bits(k, cfg, bits)?));
         }
+        let ops = (0..num_shards).map(|_| ShardCounters::default()).collect();
         Ok(ShardedIndex {
             k,
             cfg,
@@ -95,6 +123,7 @@ impl ShardedIndex {
             next_id: AtomicU64::new(0),
             resident: AtomicUsize::new(0),
             shards,
+            ops,
         })
     }
 
@@ -158,11 +187,10 @@ impl ShardedIndex {
     pub fn insert(&self, sketch: &[u32]) -> crate::Result<u64> {
         self.check_len(sketch)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.shards[self.shard_of(id)]
-            .write()
-            .unwrap()
-            .insert(id, sketch)?;
+        let shard = self.shard_of(id);
+        self.shards[shard].write().unwrap().insert(id, sketch)?;
         self.resident.fetch_add(1, Ordering::Relaxed);
+        self.ops[shard].inserts.fetch_add(1, Ordering::Relaxed);
         Ok(id)
     }
 
@@ -179,11 +207,14 @@ impl ShardedIndex {
         let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
         // Group rows by owning shard so each lock is taken exactly once.
         let mut by_shard: Vec<Vec<(u64, &[u32])>> = vec![Vec::new(); self.shards.len()];
-        for (row, sk) in sketches.iter().enumerate() {
-            let id = base + row as u64;
-            by_shard[self.shard_of(id)].push((id, sk.as_slice()));
+        {
+            let _span = stage(Stage::ShardRoute);
+            for (row, sk) in sketches.iter().enumerate() {
+                let id = base + row as u64;
+                by_shard[self.shard_of(id)].push((id, sk.as_slice()));
+            }
         }
-        for (shard, rows) in self.shards.iter().zip(&by_shard) {
+        for (i, (shard, rows)) in self.shards.iter().zip(&by_shard).enumerate() {
             if rows.is_empty() {
                 continue;
             }
@@ -193,6 +224,7 @@ impl ShardedIndex {
                 // above, so this insert is infallible here.
                 guard.insert(id, sk)?;
             }
+            self.ops[i].inserts.fetch_add(rows.len() as u64, Ordering::Relaxed);
         }
         self.resident.fetch_add(n, Ordering::Relaxed);
         Ok((base..base + n as u64).collect())
@@ -219,11 +251,14 @@ impl ShardedIndex {
         let n = rows.len();
         let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
         let mut by_shard: Vec<Vec<(u64, &[u64])>> = vec![Vec::new(); self.shards.len()];
-        for (row, words) in rows.iter().enumerate() {
-            let id = base + row as u64;
-            by_shard[self.shard_of(id)].push((id, words.as_slice()));
+        {
+            let _span = stage(Stage::ShardRoute);
+            for (row, words) in rows.iter().enumerate() {
+                let id = base + row as u64;
+                by_shard[self.shard_of(id)].push((id, words.as_slice()));
+            }
         }
-        for (shard, rows) in self.shards.iter().zip(&by_shard) {
+        for (i, (shard, rows)) in self.shards.iter().zip(&by_shard).enumerate() {
             if rows.is_empty() {
                 continue;
             }
@@ -233,6 +268,7 @@ impl ShardedIndex {
                 // above, so this insert is infallible here.
                 guard.insert_packed(id, words)?;
             }
+            self.ops[i].inserts.fetch_add(rows.len() as u64, Ordering::Relaxed);
         }
         self.resident.fetch_add(n, Ordering::Relaxed);
         Ok((base..base + n as u64).collect())
@@ -243,23 +279,24 @@ impl ShardedIndex {
     /// every explicit id; rejects occupied ids.
     pub fn insert_with_id(&self, id: u64, sketch: &[u32]) -> crate::Result<()> {
         self.check_len(sketch)?;
-        self.shards[self.shard_of(id)]
-            .write()
-            .unwrap()
-            .insert(id, sketch)?;
+        let shard = self.shard_of(id);
+        self.shards[shard].write().unwrap().insert(id, sketch)?;
         self.resident.fetch_add(1, Ordering::Relaxed);
+        self.ops[shard].inserts.fetch_add(1, Ordering::Relaxed);
         self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
         Ok(())
     }
 
     /// Delete an id, returning its sketch; unknown ids are an error.
     pub fn delete(&self, id: u64) -> crate::Result<Vec<u32>> {
-        let removed = self.shards[self.shard_of(id)]
+        let shard = self.shard_of(id);
+        let removed = self.shards[shard]
             .write()
             .unwrap()
             .remove(id)
             .ok_or_else(|| crate::Error::Invalid(format!("unknown id {id}")))?;
         self.resident.fetch_sub(1, Ordering::Relaxed);
+        self.ops[shard].deletes.fetch_add(1, Ordering::Relaxed);
         Ok(removed)
     }
 
@@ -291,10 +328,12 @@ impl ShardedIndex {
     /// are merged under the global order.
     pub fn query(&self, sketch: &[u32], topk: usize) -> crate::Result<Vec<Neighbor>> {
         self.check_len(sketch)?;
+        self.note_probes(1);
         if self.shards.len() == 1 {
             return Ok(self.shards[0].read().unwrap().query(sketch, topk));
         }
         let mut merged = self.fan_out(|shard| shard.query(sketch, topk));
+        let _span = stage(Stage::ShardRoute);
         sort_neighbors(&mut merged);
         merged.truncate(topk);
         Ok(merged)
@@ -314,6 +353,7 @@ impl ShardedIndex {
         for sk in sketches {
             self.check_len(sk)?;
         }
+        self.note_probes(sketches.len() as u64);
         if self.shards.len() == 1 {
             let guard = self.shards[0].read().unwrap();
             return Ok(sketches.iter().map(|sk| guard.query(sk, topk)).collect());
@@ -324,6 +364,7 @@ impl ShardedIndex {
                 .map(|sk| shard.query(sk, topk))
                 .collect::<Vec<_>>()
         });
+        let _span = stage(Stage::ShardRoute);
         let mut out: Vec<Vec<Neighbor>> = vec![Vec::new(); sketches.len()];
         for shard_rows in per_shard {
             for (row, hits) in shard_rows.into_iter().enumerate() {
@@ -340,12 +381,23 @@ impl ShardedIndex {
     /// All neighbors with estimate ≥ `threshold`, across all shards.
     pub fn query_above(&self, sketch: &[u32], threshold: f64) -> crate::Result<Vec<Neighbor>> {
         self.check_len(sketch)?;
+        self.note_probes(1);
         if self.shards.len() == 1 {
             return Ok(self.shards[0].read().unwrap().query_above(sketch, threshold));
         }
         let mut merged = self.fan_out(|shard| shard.query_above(sketch, threshold));
+        let _span = stage(Stage::ShardRoute);
         sort_neighbors(&mut merged);
         Ok(merged)
+    }
+
+    /// Credit `n` probe evaluations to every shard (each probe is
+    /// scored against each shard, inline or fanned out).
+    #[inline]
+    fn note_probes(&self, n: u64) {
+        for c in &self.ops {
+            c.queries.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Run `f` against every shard and concatenate.  The caller
@@ -394,6 +446,40 @@ impl ShardedIndex {
     /// Items per shard (occupancy, for `/stats`).
     pub fn shard_sizes(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.read().unwrap().len()).collect()
+    }
+
+    /// Per-shard insert/delete/probe counts since construction.
+    pub fn shard_ops(&self) -> Vec<ShardOps> {
+        self.ops
+            .iter()
+            .map(|c| ShardOps {
+                inserts: c.inserts.load(Ordering::Relaxed),
+                deletes: c.deletes.load(Ordering::Relaxed),
+                queries: c.queries.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Band-table occupancy across all shards: `(total occupied
+    /// buckets, largest single posting list)`.
+    pub fn band_stats(&self) -> (usize, usize) {
+        let mut buckets = 0usize;
+        let mut max = 0usize;
+        for shard in &self.shards {
+            let (b, m) = shard.read().unwrap().bucket_stats();
+            buckets += b;
+            max = max.max(m);
+        }
+        (buckets, max)
+    }
+
+    /// Total LSH candidates scored across all shards since
+    /// construction (post-dedup, pre-top-k).
+    pub fn candidates_collected(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().candidates_collected())
+            .sum()
     }
 
     /// All `(id, sketch)` pairs, sorted by id (snapshotting, tests).
@@ -640,6 +726,31 @@ mod tests {
         assert!(packed.query(&sks[3], 8).unwrap().iter().all(|n| n.id != 3));
         packed.insert_with_id(3, &sks[3]).unwrap();
         assert_eq!(packed.query(&sks[3], 1).unwrap()[0].id, 3);
+    }
+
+    #[test]
+    fn shard_ops_and_band_stats_track_activity() {
+        let idx = ShardedIndex::new(64, cfg(), 4).unwrap();
+        let sks = sketches(10);
+        idx.insert_many(&sks[..8]).unwrap();
+        idx.insert(&sks[8]).unwrap();
+        idx.insert_with_id(100, &sks[9]).unwrap();
+        idx.delete(100).unwrap();
+        idx.query(&sks[0], 3).unwrap();
+        idx.query_many(&sks[..3], 3).unwrap();
+        idx.query_above(&sks[1], 0.5).unwrap();
+        let ops = idx.shard_ops();
+        assert_eq!(ops.len(), 4);
+        assert_eq!(ops.iter().map(|o| o.inserts).sum::<u64>(), 10);
+        assert_eq!(ops.iter().map(|o| o.deletes).sum::<u64>(), 1);
+        // every probe touches every shard: 1 + 3 + 1 each
+        for (i, o) in ops.iter().enumerate() {
+            assert_eq!(o.queries, 5, "shard {i}");
+        }
+        // aggregates are consistent with per-shard reality
+        let (buckets, max) = idx.band_stats();
+        assert!(buckets > 0 && max >= 1);
+        assert!(idx.candidates_collected() >= 1, "self-probes hit");
     }
 
     #[test]

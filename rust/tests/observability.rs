@@ -1,0 +1,374 @@
+//! End-to-end observability-plane tests: metrics correctness under
+//! concurrency, exact bucket boundaries, the Prometheus text ↔ JSON
+//! `stats` consistency contract, and the `trace` op over both wire
+//! dialects (JSON lines and `bin1`), including slow-trace pinning.
+
+use cminhash::config::{
+    BatchConfig, BatchPolicy, EngineKind, IndexSettings, ObsSettings, ServeConfig,
+};
+use cminhash::coordinator::Coordinator;
+use cminhash::metrics::{LatencyHistogram, LatencySnapshot, BUCKETS};
+use cminhash::server::protocol::Request;
+use cminhash::server::{BlockingClient, Server};
+use cminhash::util::json::Json;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn start_server_with_obs(obs: ObsSettings) -> (Server, Arc<Coordinator>) {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 512,
+        num_hashes: 64,
+        seed: 9,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        obs,
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (server, svc)
+}
+
+fn start_server() -> (Server, Arc<Coordinator>) {
+    start_server_with_obs(ObsSettings::default())
+}
+
+// ---- metrics correctness --------------------------------------------
+
+#[test]
+fn concurrent_records_sum_exactly() {
+    let h = Arc::new(LatencyHistogram::default());
+    let threads = 8usize;
+    let per_thread = 10_000u64;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..per_thread {
+                // deterministic spread over several buckets
+                h.record((t as u64 * per_thread + i) % 5_000);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = LatencySnapshot::from(&*h);
+    let n = threads as u64 * per_thread;
+    assert_eq!(snap.count, n, "no lost increments under contention");
+    let expected_sum: u64 = (0..threads as u64)
+        .flat_map(|t| (0..per_thread).map(move |i| (t * per_thread + i) % 5_000))
+        .sum();
+    assert_eq!(snap.sum_us, expected_sum, "sum_us must be exact, not sampled");
+    assert_eq!(snap.buckets.iter().sum::<u64>(), n, "buckets partition the count");
+}
+
+#[test]
+fn bucket_boundaries_are_exact() {
+    // us = 0 clamps to 1 -> bucket 0; us = 2^k lands exactly in bucket
+    // k (bucket i covers [2^i, 2^(i+1)) µs); beyond the table both
+    // land in the last bucket.
+    for k in 0..BUCKETS {
+        let h = LatencyHistogram::default();
+        h.record(1u64 << k);
+        let snap = LatencySnapshot::from(&h);
+        assert_eq!(snap.buckets[k], 1, "2^{k} must land in bucket {k}");
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 1);
+    }
+    let h = LatencyHistogram::default();
+    h.record(0);
+    assert_eq!(LatencySnapshot::from(&h).buckets[0], 1, "0 µs -> bucket 0");
+    let h = LatencyHistogram::default();
+    h.record(u64::MAX);
+    assert_eq!(
+        LatencySnapshot::from(&h).buckets[BUCKETS - 1],
+        1,
+        "overflow clamps to the last bucket"
+    );
+    // one observation just below a boundary stays in the lower bucket
+    let h = LatencyHistogram::default();
+    h.record((1u64 << 10) - 1);
+    assert_eq!(LatencySnapshot::from(&h).buckets[9], 1);
+}
+
+#[test]
+fn quantiles_never_exceed_the_observed_max() {
+    // Regression: a quantile read from a log2 bucket's upper edge used
+    // to exceed the largest recorded value (bucket [65536,131072)
+    // reported 131072 for a 100000 µs observation).
+    let h = LatencyHistogram::default();
+    h.record(100_000);
+    let snap = LatencySnapshot::from(&h);
+    assert_eq!(snap.max_us, 100_000);
+    assert!(
+        snap.p50_us <= snap.max_us && snap.p99_us <= snap.max_us,
+        "quantiles clamp to max: p50={} p99={} max={}",
+        snap.p50_us,
+        snap.p99_us,
+        snap.max_us
+    );
+}
+
+// ---- Prometheus ↔ JSON stats consistency ----------------------------
+
+/// Parse exposition text into `series{labels} -> value`, skipping
+/// comments.  Keys keep their label block verbatim.
+fn parse_prom(text: &str) -> HashMap<String, f64> {
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect(line);
+        out.insert(series.to_string(), value.parse::<f64>().expect(line));
+    }
+    out
+}
+
+#[test]
+fn prom_text_matches_json_stats_field_for_field() {
+    let (server, _svc) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+
+    // traffic touching every counter family
+    let a: Vec<u32> = (0..60).collect();
+    let b: Vec<u32> = (30..90).collect();
+    let ia = c.insert(512, a.clone()).unwrap();
+    let ib = c.insert(512, b.clone()).unwrap();
+    let _ = c.sketch(512, vec![1, 2, 3]).unwrap();
+    let _ = c.query(512, a.clone(), 5).unwrap();
+    match c.call(&Request::Estimate { a: ia, b: ib }).unwrap() {
+        cminhash::server::protocol::Response::Estimate { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    c.delete(ib).unwrap();
+
+    let json = c.call_raw(&Request::Stats).unwrap();
+    let prom = parse_prom(&c.metrics_text().unwrap());
+    let m = json.get("metrics").unwrap();
+    let num = |j: &Json, k: &str| j.get(k).unwrap().as_f64().unwrap();
+
+    // scalar counters mirror exactly
+    for (series, field) in [
+        ("cminhash_sketches_total", "sketches"),
+        ("cminhash_batches_total", "batches"),
+        ("cminhash_sparse_batches_total", "sparse_batches"),
+        ("cminhash_pad_rows_total", "pad_rows"),
+        ("cminhash_queries_total", "queries"),
+        ("cminhash_estimates_total", "estimates"),
+        ("cminhash_deletes_total", "deletes"),
+        ("cminhash_errors_total", "errors"),
+        ("cminhash_frame_errors_total", "frame_errors"),
+        ("cminhash_busy_rejections_total", "busy_rejections"),
+        ("cminhash_accept_errors_total", "accept_errors"),
+        ("cminhash_mean_batch_fill", "mean_batch_fill"),
+    ] {
+        assert_eq!(prom[series], num(m, field), "{series} vs metrics.{field}");
+    }
+
+    // latency histograms: count, sum, and every cumulative bucket
+    // (fsync_latency lives at the stats top level, not under metrics)
+    for (parent, series, field) in [
+        (m, "cminhash_sketch_latency_us", "sketch_latency"),
+        (m, "cminhash_batch_latency_us", "batch_latency"),
+        (m, "cminhash_query_latency_us", "query_latency"),
+        (m, "cminhash_estimate_latency_us", "estimate_latency"),
+        (&json, "cminhash_fsync_latency_us", "fsync_latency"),
+    ] {
+        let h = parent.get(field).unwrap();
+        assert_eq!(prom[&format!("{series}_count")], num(h, "count"), "{series}");
+        assert_eq!(prom[&format!("{series}_sum")], num(h, "sum_us"), "{series}");
+        let buckets = h.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), BUCKETS, "stats exports the raw bucket table");
+        let mut acc = 0.0;
+        for (i, bj) in buckets.iter().enumerate() {
+            acc += bj.as_f64().unwrap();
+            let le = 1u128 << (i + 1);
+            let key = format!("{series}_bucket{{le=\"{le}\"}}");
+            assert_eq!(prom[&key], acc, "{key}");
+        }
+        assert_eq!(prom[&format!("{series}_bucket{{le=\"+Inf\"}}")], num(h, "count"));
+    }
+
+    // store gauges + per-shard counters mirror exactly
+    assert_eq!(prom["cminhash_stored_items"], num(&json, "stored"));
+    assert_eq!(prom["cminhash_candidates_scored_total"], num(&json, "candidates"));
+    assert_eq!(prom["cminhash_band_buckets"], num(&json, "band_buckets"));
+    assert_eq!(prom["cminhash_band_max_bucket"], num(&json, "band_max_bucket"));
+    assert_eq!(prom["cminhash_persisted_bytes"], num(&json, "persisted_bytes"));
+    assert_eq!(
+        prom["cminhash_wal_appended_bytes_total"],
+        num(&json, "wal_appended_bytes")
+    );
+    assert_eq!(prom["cminhash_sketch_bytes"], num(&json, "sketch_bytes"));
+    let shards = json.get("shards").unwrap().as_arr().unwrap();
+    assert!(!shards.is_empty());
+    for (i, sj) in shards.iter().enumerate() {
+        let key = format!("cminhash_shard_items{{shard=\"{i}\"}}");
+        assert_eq!(prom[&key], sj.as_f64().unwrap(), "{key}");
+    }
+    let stored: f64 = shards.iter().map(|sj| sj.as_f64().unwrap()).sum();
+    assert_eq!(stored, num(&json, "stored"), "shards partition the store");
+    let shard_ops = json.get("shard_ops").unwrap().as_arr().unwrap();
+    assert!(!shard_ops.is_empty());
+    for (i, so) in shard_ops.iter().enumerate() {
+        for kind in ["insert", "delete", "query"] {
+            let key = format!("cminhash_shard_ops_total{{shard=\"{i}\",kind=\"{kind}\"}}");
+            let field = match kind {
+                "insert" => "inserts",
+                "delete" => "deletes",
+                _ => "queries",
+            };
+            assert_eq!(prom[&key], num(so, field), "{key}");
+        }
+    }
+    // shard insert counters must account for every insert (one was
+    // deleted but the insert still happened)
+    let ins: f64 = shard_ops.iter().map(|so| num(so, "inserts")).sum();
+    assert_eq!(ins, 2.0);
+    let del: f64 = shard_ops.iter().map(|so| num(so, "deletes")).sum();
+    assert_eq!(del, 1.0);
+
+    // per-op request counters: ops untouched by the two stats fetches
+    // themselves mirror exactly; the fetch ops only grow
+    let requests = json.get("requests").unwrap();
+    for op in ["insert", "sketch", "query", "estimate", "delete", "ping"] {
+        let key = format!("cminhash_requests_total{{op=\"{op}\"}}");
+        assert_eq!(prom[&key], num(requests, op), "{key}");
+    }
+    assert!(prom["cminhash_requests_total{op=\"stats\"}"] >= num(requests, "stats"));
+    assert!(prom["cminhash_requests_total{op=\"metrics\"}"] >= 1.0);
+
+    // identity + uptime are present and sane
+    assert!(prom.keys().any(|k| k.starts_with("cminhash_build_info{")
+        && k.contains("scheme=\"cmh\"")));
+    assert!(prom["cminhash_uptime_seconds"] >= 0.0);
+    assert!(num(m, "uptime_s") >= 0.0);
+}
+
+// ---- the trace op over both dialects --------------------------------
+
+#[test]
+fn trace_returns_per_stage_spans_on_both_dialects() {
+    let (server, _svc) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+
+    let a: Vec<u32> = (0..60).collect();
+    let ia = c.insert(512, a.clone()).unwrap();
+    let hits = c.query(512, a.clone(), 5).unwrap();
+    assert_eq!(hits[0].id, ia);
+
+    // JSON dialect
+    let traces = c.trace(16, false).unwrap();
+    assert!(!traces.is_empty(), "ring must hold the traffic just sent");
+    let q = traces
+        .iter()
+        .find(|t| t.op == cminhash::obs::OpKind::Query)
+        .expect("a query trace is in the ring");
+    assert_eq!(q.items, 1);
+    let stage_sum: u64 = q.stages_us.iter().sum();
+    assert!(
+        stage_sum <= q.total_us,
+        "stages are disjoint: sum {stage_sum} <= total {}",
+        q.total_us
+    );
+    assert!(traces.iter().any(|t| t.op == cminhash::obs::OpKind::Insert));
+    // newest first
+    for w in traces.windows(2) {
+        assert!(w[0].seq > w[1].seq);
+    }
+
+    // bin1 dialect sees the same ring (and its own ops get traced too)
+    let mut cb = BlockingClient::connect(&addr).unwrap();
+    cb.binary().unwrap();
+    cb.ping().unwrap();
+    let bin_traces = cb.trace(32, false).unwrap();
+    assert!(bin_traces.iter().any(|t| t.op == cminhash::obs::OpKind::Query));
+    assert!(bin_traces.iter().any(|t| t.op == cminhash::obs::OpKind::Ping));
+    // the metrics op works over bin1 as well
+    let text = cb.metrics_text().unwrap();
+    assert!(text.contains("cminhash_build_info"), "{text}");
+    assert!(text.contains("cminhash_requests_total{op=\"ping\"}"));
+}
+
+#[test]
+fn slow_traces_pin_past_ring_churn() {
+    // threshold 0: every request counts as slow.  Tiny ring (2 slots)
+    // churns fast, but pinned traces survive it.
+    let (server, _svc) = start_server_with_obs(ObsSettings {
+        trace_ring: 2,
+        slow_threshold_us: 0,
+        pinned: 8,
+    });
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    c.insert(512, (0..40).collect()).unwrap();
+    for _ in 0..6 {
+        c.ping().unwrap();
+    }
+    // the insert has long since churned out of the 2-slot ring...
+    let recent = c.trace(16, false).unwrap();
+    assert!(recent.len() <= 2);
+    // ...but is still pinned
+    let pinned = c.trace(16, true).unwrap();
+    assert!(pinned.iter().all(|t| t.slow));
+    assert!(
+        pinned.iter().any(|t| t.op == cminhash::obs::OpKind::Insert),
+        "slow insert must stay pinned past ring churn"
+    );
+}
+
+#[test]
+fn trace_ring_zero_disables_capture_but_not_counters() {
+    let (server, svc) = start_server_with_obs(ObsSettings {
+        trace_ring: 0,
+        slow_threshold_us: 10_000,
+        pinned: 8,
+    });
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    c.ping().unwrap();
+    c.ping().unwrap();
+    assert!(c.trace(16, false).unwrap().is_empty(), "tracing disabled");
+    let counts: HashMap<&str, u64> = svc.obs().op_counts().into_iter().collect();
+    assert_eq!(counts["ping"], 2, "per-op counters are not a knob");
+    assert_eq!(counts["trace"], 1);
+}
+
+#[test]
+fn estimate_latency_is_recorded_via_the_wire() {
+    let (server, _svc) = start_server();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    let ia = c.insert(512, (0..50).collect()).unwrap();
+    let ib = c.insert(512, (25..75).collect()).unwrap();
+    for _ in 0..3 {
+        match c.call(&Request::Estimate { a: ia, b: ib }).unwrap() {
+            cminhash::server::protocol::Response::Estimate { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    let json = c.call_raw(&Request::Stats).unwrap();
+    let est = json.get("metrics").unwrap().get("estimate_latency").unwrap();
+    assert_eq!(est.get("count").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(
+        json.get("metrics")
+            .unwrap()
+            .get("estimates")
+            .unwrap()
+            .as_u64()
+            .unwrap(),
+        3
+    );
+}

@@ -17,6 +17,12 @@ at b <= 8, pre-packed ``bin1`` ingest must beat JSON-lines ingest by
 at least 1.3x rows/s — if shipping ready-made bytes is not clearly
 faster than parse-and-sketch, the zero-copy path has regressed.
 
+And the observability plane's always-on-cheap contract from
+``BENCH_obs_overhead.json`` (emitted by the obs_overhead bench): query
+throughput with tracing enabled must stay >= 0.97x of the same stack
+with tracing disabled — instrumentation that taxes the hot path more
+than 3% is a regression, not a feature.
+
 Any other ``BENCH_*.json`` present is checked for being valid JSON
 with a ``bench`` tag (schema drift in an emitter fails fast here
 rather than in a downstream dashboard).
@@ -51,6 +57,12 @@ MEM_MARGIN = 0.9
 # sketch, so a healthy implementation clears this with a wide margin;
 # 1.3x is the regression floor, not the target.
 WIRE_SPEEDUP = 1.3
+# Tracing-enabled throughput must stay at least this fraction of the
+# tracing-disabled run.  The instrumented path adds two Instant reads
+# per stage plus one ring-slot write per request — well under 1% on a
+# healthy build; 0.97 leaves room for run-to-run jitter while still
+# catching an accidentally hot lock or allocation in the trace path.
+OBS_MARGIN = 0.97
 
 
 def fail(msgs):
@@ -131,11 +143,34 @@ def check_wire_format(path):
     return []
 
 
+def check_obs_overhead(path):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        qps_on = float(data["qps_on"])
+        qps_off = float(data["qps_off"])
+        ratio = float(data["ratio"])
+    except (OSError, KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed obs_overhead record ({e})"]
+    print(
+        f"check_bench: obs: query tracing-on {qps_on:.0f} q/s vs "
+        f"tracing-off {qps_off:.0f} q/s ({ratio:.4f}x, floor {OBS_MARGIN})"
+    )
+    if ratio < OBS_MARGIN:
+        return [
+            f"observability overhead: tracing-on query throughput "
+            f"{qps_on:.0f} q/s is {ratio:.4f}x the tracing-off "
+            f"{qps_off:.0f} q/s (need >= {OBS_MARGIN}x)"
+        ]
+    return []
+
+
 def main():
     root = sys.argv[1] if len(sys.argv) > 1 else "."
     bench_files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
     gate = os.path.join(root, "BENCH_bbit_query.json")
     wire = os.path.join(root, "BENCH_wire_format.json")
+    obs = os.path.join(root, "BENCH_obs_overhead.json")
 
     # every emitted bench file must at least be well-formed
     failures = []
@@ -155,10 +190,14 @@ def main():
     if os.path.exists(wire):
         failures.extend(check_wire_format(wire))
         ran_gate = True
+    if os.path.exists(obs):
+        failures.extend(check_obs_overhead(obs))
+        ran_gate = True
     if not ran_gate and not failures:
         print(
             "check_bench: no BENCH_bbit_query.json / BENCH_wire_format"
-            ".json found (benches not run); skipping the perf gates"
+            ".json / BENCH_obs_overhead.json found (benches not run); "
+            "skipping the perf gates"
         )
         return 0
 
