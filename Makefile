@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench doc clippy linkcheck checkbench verify artifacts figures clean
+.PHONY: all build test bench doc clippy staticlint lint linkcheck checkbench verify artifacts figures clean
 
 all: build
 
@@ -29,6 +29,18 @@ bench:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
+# Cross-layer static analysis (docs/LINTS.md): wire-registry parity,
+# persistence-format audit, lock discipline, metrics-surface parity,
+# config-knob drift.  Zero dependencies, no cargo needed.
+staticlint:
+	$(PYTHON) tools/staticlint.py .
+	$(PYTHON) tools/tests/test_staticlint.py
+
+# The pure-Python lint gate CI runs before any Rust job: staticlint and
+# its self-tests, the markdown link check, and the bench-gate check
+# (which skips cleanly when BENCH_*.json haven't been produced yet).
+lint: staticlint linkcheck checkbench
+
 # Offline markdown link check over README/DESIGN/docs/… so the docs
 # can't rot silently (local targets only; external URLs not fetched).
 linkcheck:
@@ -44,7 +56,7 @@ linkcheck:
 checkbench:
 	$(PYTHON) tools/check_bench.py .
 
-verify: build test clippy linkcheck checkbench
+verify: lint build test clippy
 
 # AOT-lower the L1/L2 pipelines to artifacts/ (HLO text + manifest) and
 # export the golden vectors for rust/tests/golden.rs.  Optional: the

@@ -66,6 +66,8 @@ impl Harness {
     }
 
     /// Time `f`, printing a criterion-style line.
+    // `last().unwrap()` follows the push above — non-empty by construction.
+    #[allow(clippy::disallowed_methods)]
     pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
         // Warmup + calibration: how many iters fit in target_time/samples?
         let t0 = Instant::now();
@@ -114,6 +116,8 @@ impl Harness {
     }
 
     /// Report a pre-measured quantity (e.g. one long end-to-end run).
+    // `last().unwrap()` follows the push above — non-empty by construction.
+    #[allow(clippy::disallowed_methods)]
     pub fn report(&mut self, name: &str, total: Duration, iters: u64) -> &Stats {
         let ns = total.as_nanos() as f64 / iters.max(1) as f64;
         let stats = Stats {
@@ -157,6 +161,7 @@ impl Harness {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

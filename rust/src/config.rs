@@ -378,6 +378,7 @@ impl ServeConfig {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

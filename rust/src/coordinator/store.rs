@@ -67,6 +67,7 @@ impl SketchStore {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

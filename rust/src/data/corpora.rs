@@ -64,6 +64,9 @@ impl CorpusKind {
 /// Text-like corpus: each document draws `len ~ U[min_len, max_len]`
 /// tokens from a Zipf(s) distribution over a `vocab`-sized vocabulary
 /// (binary bag-of-words).  Shared head tokens create realistic overlap.
+// Generated token ids are drawn modulo `vocab`, so `SparseVec::new`
+// cannot reject them.
+#[allow(clippy::disallowed_methods)]
 pub fn zipf_corpus(
     name: &str,
     n_docs: usize,
@@ -103,6 +106,8 @@ pub fn zipf_corpus(
 /// Image-like corpus: `side × side` binary images made of a few
 /// axis-aligned strokes/blobs — heavily *contiguous* nonzero structure
 /// in the flattened vector, the regime where C-MinHash-(0, π) suffers.
+// Stroke pixels are clamped to the `side × side` grid before flattening.
+#[allow(clippy::disallowed_methods)]
 pub fn image_corpus(
     name: &str,
     n_images: usize,
@@ -137,6 +142,8 @@ pub fn image_corpus(
 /// Corpus of near-duplicate families: `families` seed documents, each
 /// with `copies` mutated near-duplicates (used by the ANN example and
 /// index recall tests, mirroring MinHash's dedup application).
+// Mutations substitute ids below `dim`, so every index stays in range.
+#[allow(clippy::disallowed_methods)]
 pub fn near_duplicate_corpus(
     n_families: usize,
     copies: usize,
@@ -167,6 +174,7 @@ pub fn near_duplicate_corpus(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -139,6 +139,7 @@ impl BinaryDataset {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

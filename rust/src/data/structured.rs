@@ -32,6 +32,7 @@ pub fn structured_pair(d: usize, f: usize, a: usize, pattern: PairPattern) -> (S
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

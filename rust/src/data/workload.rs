@@ -85,6 +85,7 @@ impl Workload {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::data::zipf_corpus;

@@ -87,6 +87,7 @@ impl From<crate::runtime::xla::Error> for Error {
 
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -510,6 +510,7 @@ fn erase_posting(table: &mut HashMap<u64, Vec<u64>>, sig: u64, value: u64) {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::{CMinHasher, Sketcher};

@@ -36,6 +36,9 @@
 
 #![deny(missing_docs)]
 #![forbid(unsafe_code)]
+// Panicking std APIs are outlawed on library paths (see clippy.toml);
+// every deliberate exception carries an #[allow] naming its invariant.
+#![warn(clippy::disallowed_methods, clippy::disallowed_macros)]
 
 pub mod bench;
 pub mod config;

@@ -17,6 +17,9 @@
 //! through the crate's own [`cminhash::Error`] — the binary has zero
 //! external dependencies (no clap, no anyhow).
 
+// Same discipline as the library crate root (see clippy.toml).
+#![warn(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use cminhash::config::{EngineKind, ServeConfig};
 use cminhash::coordinator::Coordinator;
 use cminhash::data::{BinaryDataset, CorpusKind};
@@ -461,6 +464,9 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// `join().expect` surfaces a loadgen-worker panic instead of folding a
+// harness bug into a latency report.
+#[allow(clippy::disallowed_methods)]
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let requests = args.get_parsed::<usize>("requests")?.unwrap_or(1000);

@@ -360,6 +360,10 @@ pub struct Obs {
     ops: [AtomicU64; NUM_OPS],
 }
 
+// A poisoned ring/pinned mutex means a tracer panicked mid-publish;
+// crashing beats silently serving torn traces.  Every
+// `.lock().unwrap()` in this impl is that idiom (see clippy.toml).
+#[allow(clippy::disallowed_methods)]
 impl Obs {
     /// Build with an explicit ring size (`0` disables tracing — per-op
     /// counters still count), slow threshold, and pinned capacity.
@@ -452,6 +456,7 @@ impl Obs {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -198,6 +198,7 @@ impl Manifest {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

@@ -731,6 +731,7 @@ impl BinResponse {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use std::io::Cursor as IoCursor;

@@ -49,6 +49,9 @@ impl Server {
     /// Bind `addr` (may be port 0), spawn the
     /// `server.max_connections`-sized worker pool and the accept loop.
     /// Returns once the listener is live.
+    // The connection-queue mutex poisons only if a worker panicked
+    // holding it; the pool is then unrecoverable — crash loudly.
+    #[allow(clippy::disallowed_methods)]
     pub fn spawn(svc: Arc<Coordinator>, addr: &str) -> crate::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -878,6 +881,8 @@ impl BlockingClient {
     /// Convenience: insert a sparse vector.  In binary mode the row is
     /// sketched and packed locally, then shipped as a one-row
     /// `insert_packed` frame.
+    // `expect("checked")` follows the `self.bin.is_some()` test above it.
+    #[allow(clippy::disallowed_methods)]
     pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
         let vec = SparseVec::new(dim, indices)?;
         if self.bin.is_some() {
@@ -908,6 +913,8 @@ impl BlockingClient {
     /// Insert pre-validated vectors as one unit.  JSON mode sends
     /// `insert_batch` (the server sketches); binary mode sketches and
     /// packs every row locally and ships one `insert_packed` frame.
+    // `expect("checked")` follows the `self.bin.is_some()` test above it.
+    #[allow(clippy::disallowed_methods)]
     pub fn insert_batch_vecs(&mut self, vecs: Vec<SparseVec>) -> crate::Result<Vec<u64>> {
         if self.bin.is_some() {
             let bin = self.bin.as_ref().expect("checked");
@@ -955,6 +962,22 @@ impl BlockingClient {
         }
         match self.call(&Request::Delete { id })? {
             Response::Deleted { .. } => Ok(()),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: estimate Ĵ between two stored ids (either mode).
+    pub fn estimate(&mut self, a: u64, b: u64) -> crate::Result<f64> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Estimate(a, b))? {
+                frame::BinResponse::Estimate(jhat) => Ok(jhat),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Estimate { a, b })? {
+            Response::Estimate { jhat } => Ok(jhat),
             Response::Err { error } => Err(crate::Error::Protocol(error)),
             other => Self::unexpected(other),
         }
@@ -1196,6 +1219,7 @@ fn load_jsonl_with(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

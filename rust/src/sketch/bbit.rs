@@ -287,6 +287,7 @@ impl<S: Sketcher> BBitSketcher<S> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::{CMinHasher, SparseVec};

@@ -44,6 +44,8 @@ pub struct CMinHasher {
 
 impl CMinHasher {
     /// Seeded constructor (σ and π drawn on independent streams).
+    // `Perm::generate` always yields a valid permutation of 0..d.
+    #[allow(clippy::disallowed_methods)]
     pub fn new(d: usize, k: usize, seed: u64) -> Self {
         let sigma = Perm::generate(d, seed, Role::Sigma);
         let pi = Perm::generate(d, seed, Role::Pi);
@@ -109,6 +111,8 @@ pub struct ZeroPiHasher {
 impl ZeroPiHasher {
     /// Seeded constructor (same π stream as [`CMinHasher`] for the same
     /// seed, so ablations are paired).
+    // `Perm::generate` always yields a valid permutation of 0..d.
+    #[allow(clippy::disallowed_methods)]
     pub fn new(d: usize, k: usize, seed: u64) -> Self {
         let pi = Perm::generate(d, seed, Role::Pi);
         Self::from_perm(k, &pi).expect("generated perm is valid")
@@ -169,6 +173,7 @@ pub(crate) fn circulant_min(pi2: &[u32], d: usize, k: usize, nonzeros: &[u32]) -
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

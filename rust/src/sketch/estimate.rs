@@ -69,6 +69,7 @@ pub fn estimate_batch_mae(sketcher: &dyn Sketcher, rows: &[SparseVec]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::CMinHasher;

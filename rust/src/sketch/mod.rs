@@ -85,6 +85,7 @@ pub trait Sketcher: Send + Sync {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -52,6 +52,9 @@ fn mix(seed: u64, bin: u64, attempt: u64) -> u64 {
 /// any vector with at least one nonzero) it falls back to the nearest
 /// occupied bin to the right, so the function always terminates and
 /// stays deterministic per `(seed, empty-pattern)`.
+// The fallback scan runs only when at least one bin is occupied (the
+// all-empty case returned earlier), so `expect` cannot fire.
+#[allow(clippy::disallowed_methods)]
 fn densify(out: &mut [u32], sentinel: u32, seed: u64) {
     // Fast path: dense-enough vectors (f ≫ K, the common serving case)
     // leave no bin empty — keep the advertised O(f) sketch cost
@@ -307,6 +310,7 @@ pub(super) fn check_bins(d: usize, k: usize) -> crate::Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::{estimate, SparseVec};

@@ -163,6 +163,7 @@ impl fmt::Display for SketchScheme {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -98,6 +98,12 @@ pub struct PersistentIndex {
     wal_appended: AtomicU64,
 }
 
+// The persist-lock guards WAL order == apply order; a poisoned lock
+// means a writer panicked mid-mutation and the only safe move is to
+// crash and recover from WAL + snapshot.  Every `.lock().unwrap()`
+// (and the length-checked `pop().expect`) below is that idiom — see
+// clippy.toml and docs/LINTS.md.
+#[allow(clippy::disallowed_methods)]
 impl PersistentIndex {
     /// Open a store for sketches of length `k` produced by `scheme`.
     /// With `dir` set, an existing snapshot is loaded (refusing a
@@ -561,6 +567,7 @@ impl PersistentIndex {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

@@ -91,6 +91,12 @@ pub struct ShardedIndex {
     ops: Vec<ShardCounters>,
 }
 
+// Shard `RwLock`s poison only if an insert/query panicked holding the
+// guard — the shard may hold a half-applied batch, so crash and let
+// recovery rebuild.  The `.read()/.write().unwrap()` calls throughout
+// this impl are that idiom (see clippy.toml); `join().expect` likewise
+// surfaces worker panics rather than folding them into `Error`.
+#[allow(clippy::disallowed_methods)]
 impl ShardedIndex {
     /// Create a full-width index over sketches of length `k`,
     /// partitioned into `num_shards` (≥ 1) shards (equivalent to
@@ -512,6 +518,7 @@ impl ShardedIndex {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::{estimate, CMinHasher, Sketcher};

@@ -184,6 +184,10 @@ impl Snapshot {
     /// Accepts the current `CMHSNAP3` packed format, full-width
     /// `CMHSNAP2`, and legacy `CMHSNAP1` (no scheme field; decoded as
     /// `cmh` — see the module docs).
+    // Every `try_into().unwrap()` below converts a slice whose length
+    // was just checked against the framing — the fallible path is the
+    // explicit length/checksum validation, not the conversion.
+    #[allow(clippy::disallowed_methods)]
     pub fn load(path: &Path) -> crate::Result<SnapshotData> {
         let bytes = std::fs::read(path)?;
         if bytes.len() < 8 + 8 {
@@ -277,6 +281,7 @@ impl Snapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

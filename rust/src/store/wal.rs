@@ -335,6 +335,7 @@ impl Wal {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::util::testutil::TempDir;

@@ -48,6 +48,7 @@ pub fn choose(n: usize, k: usize) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -130,6 +130,9 @@ impl LocationVector {
     /// Materialize a concrete (v, w) pair with this location vector.
     /// “×” positions alternate between v-only and w-only (the split does
     /// not affect any collision statistic — only x drives collisions).
+    // Indices enumerate 0..d positions of this location vector, so
+    // `SparseVec::new` cannot reject them.
+    #[allow(clippy::disallowed_methods)]
     pub fn realize(&self) -> (SparseVec, SparseVec) {
         let d = self.d() as u32;
         let mut v = Vec::new();
@@ -180,6 +183,7 @@ impl LocationVector {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

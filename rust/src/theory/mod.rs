@@ -63,6 +63,7 @@ pub fn variance_ratio(d: usize, f: usize, a: usize, k: usize) -> Option<f64> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -217,6 +217,7 @@ pub fn e_tilde_mc(d: usize, f: usize, a: usize, samples: usize, seed: u64) -> f6
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -39,6 +39,7 @@ pub fn var_zero_pi(x: &LocationVector, k: usize) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
     use crate::sketch::{Perm, Sketcher, ZeroPiHasher};

@@ -36,6 +36,7 @@ pub fn fnv1a32_more(mut state: u32, bytes: &[u8]) -> u32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -109,6 +109,9 @@ impl<'a> Parser<'a> {
         }
     }
 
+    // The slice is all ASCII digits/sign/dot by the scan above, so
+    // `from_utf8` cannot fail.
+    #[allow(clippy::disallowed_methods)]
     fn number(&mut self) -> Result<Json, ParseError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
@@ -139,6 +142,9 @@ impl<'a> Parser<'a> {
         }
     }
 
+    // `chars().next().unwrap()` follows a successful non-empty utf-8
+    // validation of the same bytes.
+    #[allow(clippy::disallowed_methods)]
     fn string(&mut self) -> Result<String, ParseError> {
         self.eat(b'"')?;
         let mut out = String::new();
@@ -458,6 +464,7 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

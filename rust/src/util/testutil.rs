@@ -17,6 +17,8 @@ pub struct TempDir {
 
 impl TempDir {
     /// Create a unique directory under the system temp dir.
+    // Test-support code: formatting a counter into a path cannot fail.
+    #[allow(clippy::disallowed_methods)]
     pub fn new() -> std::io::Result<Self> {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
@@ -62,6 +64,9 @@ impl Drop for TempDir {
 /// assert_eq!(j, 12.0 / 36.0);
 /// assert_eq!(a.jaccard(&b), j);
 /// ```
+// Test-support code: the constructed index ranges are in `0..dim` by
+// the assertions above, so `SparseVec::new` cannot reject them.
+#[allow(clippy::disallowed_methods)]
 pub fn overlap_pair(
     dim: u32,
     a_len: u32,
@@ -97,6 +102,7 @@ pub fn check_with_seed(seed: u64, f: &impl Fn(&mut crate::util::rng::Rng)) {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
 mod tests {
     use super::*;
 

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Cross-layer static analysis gate (stdlib only, offline).
+
+Runs the five analyzers in ``tools/staticlint/`` over the repo:
+
+  wire         jsonl ops <-> bin1 opcodes <-> client <-> PROTOCOL.md
+  persistence  WAL tags / snapshot magics: encoder, decoder, refusal,
+               pinning test
+  locks        lock nesting graph: cycles, double-acquisition, I/O
+               under a guard (allowlisted where audited)
+  metrics      OpKind/counter/histogram parity across stats JSON,
+               prom, OBSERVABILITY.md
+  config       serve.json <-> ServeConfig <-> CLI flags <-> README
+
+Audited exceptions live in ``tools/staticlint/allowlist.json``; a
+stale entry (matching nothing) fails the gate so the allowlist cannot
+rot.  See ``docs/LINTS.md`` for the contract and how to extend the
+registries.
+
+Usage: python3 tools/staticlint.py [ROOT] [--json]
+
+Exit status: 0 = clean (allowlisted findings only), 1 = violations.
+``--json`` emits the machine-readable findings instead of text.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import staticlint  # noqa: E402  (the tools/staticlint/ package)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--json"]
+    as_json = "--json" in sys.argv[1:]
+    root = args[0] if args else "."
+
+    tree = staticlint.load_tree(root)
+    if not tree:
+        print(f"staticlint: FAIL: no analyzable files under {root!r}")
+        return 1
+    allow_path = os.path.join(
+        root, "tools", "staticlint", "allowlist.json"
+    )
+    try:
+        allowlist = staticlint.load_allowlist(allow_path)
+    except ValueError as e:
+        print(f"staticlint: FAIL: {e}")
+        return 1
+
+    findings, allowed, stale = staticlint.run(tree, allowlist)
+
+    if as_json:
+        print(json.dumps(
+            {
+                "findings": [f.to_dict() for f in findings],
+                "allowed": [f.to_dict() for f in allowed],
+                "stale_allowlist": stale,
+            },
+            indent=2,
+        ))
+        return 1 if findings or stale else 0
+
+    for f in findings:
+        print(f"staticlint: FAIL: {f.text()}")
+    for entry in stale:
+        print(
+            "staticlint: FAIL: stale allowlist entry matches nothing: "
+            f"{entry['analyzer']}/{entry['code']} at {entry['path']} "
+            f"(match: {entry['match']!r}) — remove it or fix the drift "
+            f"it was written for"
+        )
+    for f in allowed:
+        print(f"staticlint: allowed: {f.text()}")
+    if findings or stale:
+        print(
+            f"staticlint: {len(findings)} violation(s), "
+            f"{len(stale)} stale allowlist entr(y/ies), "
+            f"{len(allowed)} allowlisted"
+        )
+        return 1
+    print(
+        f"staticlint: clean ({len(tree)} files, "
+        f"{len(allowed)} allowlisted exception(s))"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

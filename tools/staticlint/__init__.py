@@ -1,0 +1,241 @@
+"""Cross-layer static analysis for the C-MinHash serving stack.
+
+Zero-dependency (stdlib only), offline, in the same spirit as
+``tools/check_bench.py`` and ``tools/linkcheck.py``: the container has
+no cargo, so these analyzers parse the Rust sources and docs as text
+and enforce the invariants that keep the five hand-synchronized
+registries aligned:
+
+* wire      — jsonl op strings <-> bin1 opcodes <-> BlockingClient
+              methods <-> docs/PROTOCOL.md tables
+* persistence — WAL record tags and snapshot magics each have exactly
+              one encoder, one decoder, a mismatch-refusal path, and a
+              test referencing them
+* locks     — lock acquisition sites, nesting graph, lock-order
+              cycles, double-acquisition, guards held across I/O
+              (allowlisted where deliberate)
+* metrics   — OpKind/Stage/counter/histogram surface parity across
+              stats JSON, the prom renderer, and docs/OBSERVABILITY.md
+* config    — serve.json keys <-> ServeConfig fields <-> CLI flags <->
+              README configuration table
+
+Every analyzer takes a *virtual tree* (``dict`` of repo-relative path
+-> file text) so the self-tests in ``tools/tests/test_staticlint.py``
+can seed deliberate violations into fixture snippets; the driver
+``tools/staticlint.py`` loads the real files.
+
+Findings are machine-readable (``Finding.to_dict``) and suppressible
+via ``tools/staticlint/allowlist.json`` for audited exceptions; a
+stale allowlist entry (matching nothing) is itself a failure so the
+allowlist cannot rot.
+"""
+
+import json
+import os
+import re
+
+ANALYZERS = ("wire", "persistence", "locks", "metrics", "config")
+
+# Mirrors tools/linkcheck.py: never descend into build output or VCS
+# internals when loading the real tree.
+SKIP_DIRS = {".git", "target", "results", "artifacts", "__pycache__", ".claude"}
+
+# File suffixes the analyzers can consume.  Everything else (binaries,
+# data files) is irrelevant to registry parity.
+LOAD_SUFFIXES = (".rs", ".md", ".json", ".toml")
+
+
+class Finding:
+    """One violation: where it is, which invariant, and why."""
+
+    def __init__(self, analyzer, code, path, line, message, function=""):
+        self.analyzer = analyzer
+        self.code = code
+        self.path = path
+        self.line = line
+        self.message = message
+        self.function = function
+
+    def to_dict(self):
+        d = {
+            "analyzer": self.analyzer,
+            "code": self.code,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+        }
+        if self.function:
+            d["function"] = self.function
+        return d
+
+    def text(self):
+        where = f"{self.path}:{self.line}" if self.line else self.path
+        fn = f" (fn {self.function})" if self.function else ""
+        return f"{where}: [{self.analyzer}/{self.code}] {self.message}{fn}"
+
+
+def load_tree(root):
+    """Load the repo's analyzable files as {relative path: text}."""
+    tree = {}
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if not name.endswith(LOAD_SUFFIXES):
+                continue
+            full = os.path.join(dirpath, name)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            try:
+                with open(full, encoding="utf-8") as f:
+                    tree[rel] = f.read()
+            except (OSError, UnicodeDecodeError):
+                # Unreadable files are not silently skippable: a
+                # registry we cannot read is a registry we cannot check.
+                tree[rel] = ""
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Rust-source text helpers shared by the analyzers.  These are
+# deliberately lexical (regex + brace counting) — good enough for this
+# codebase's rustfmt'd style, and they fail loudly (None) rather than
+# guessing when a shape is not found.
+# ---------------------------------------------------------------------------
+
+# Strip `// ...` line comments so commented-out code and doc examples
+# (which quote op names and JSON keys) never feed the extractors.  The
+# lookbehind keeps `https://` inside string literals intact.
+_COMMENT_RE = re.compile(r'(?<!:)//.*$', re.M)
+
+
+def strip_comments(text):
+    return _COMMENT_RE.sub("", text)
+
+
+def line_of(text, offset):
+    """1-based line number of a character offset."""
+    return text.count("\n", 0, offset) + 1
+
+
+def block_span(text, open_idx):
+    """(start, end) offsets of the ``{...}`` block whose opening brace
+    is at ``open_idx``; ``end`` points just past the closing brace.
+    Returns None when braces never balance."""
+    depth = 0
+    for i in range(open_idx, len(text)):
+        c = text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return (open_idx, i + 1)
+    return None
+
+
+def fn_body(text, name):
+    """Body text of ``fn <name>`` (first match), or None."""
+    m = re.search(r"\bfn\s+" + re.escape(name) + r"\b", text)
+    if not m:
+        return None
+    open_idx = text.find("{", m.end())
+    if open_idx < 0:
+        return None
+    span = block_span(text, open_idx)
+    return text[span[0] + 1 : span[1] - 1] if span else None
+
+
+def impl_body(text, type_name):
+    """Body text of the first ``impl <TypeName>`` block, or None."""
+    m = re.search(r"\bimpl\s+" + re.escape(type_name) + r"\b", text)
+    if not m:
+        return None
+    open_idx = text.find("{", m.end())
+    if open_idx < 0:
+        return None
+    span = block_span(text, open_idx)
+    return text[span[0] + 1 : span[1] - 1] if span else None
+
+
+def struct_body(text, name):
+    """Body text of ``struct <name> {...}``, or None."""
+    m = re.search(r"\bstruct\s+" + re.escape(name) + r"\b", text)
+    if not m:
+        return None
+    open_idx = text.find("{", m.end())
+    if open_idx < 0:
+        return None
+    span = block_span(text, open_idx)
+    return text[span[0] + 1 : span[1] - 1] if span else None
+
+
+def camel_to_snake(name):
+    return re.sub(r"(?<!^)(?=[A-Z])", "_", name).lower()
+
+
+# ---------------------------------------------------------------------------
+# Allowlist: audited exceptions, one JSON object per entry.
+# ---------------------------------------------------------------------------
+
+ALLOWLIST_FIELDS = ("analyzer", "code", "path", "match", "reason")
+
+
+def load_allowlist(path):
+    """Load and validate the allowlist; raises ValueError on a
+    malformed file (a broken allowlist must not silently allow)."""
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: allowlist must be a JSON array")
+    for i, entry in enumerate(data):
+        if not isinstance(entry, dict):
+            raise ValueError(f"{path}: entry {i} is not an object")
+        for field in ALLOWLIST_FIELDS:
+            if field not in entry or not isinstance(entry[field], str):
+                raise ValueError(
+                    f"{path}: entry {i} missing string field '{field}'"
+                )
+    return data
+
+
+def entry_matches(entry, finding):
+    return (
+        entry["analyzer"] == finding.analyzer
+        and entry["code"] == finding.code
+        and entry["path"] == finding.path
+        and (
+            entry["match"] in finding.message
+            or (finding.function and entry["match"] == finding.function)
+        )
+    )
+
+
+def run(tree, allowlist=()):
+    """Run every analyzer over the virtual tree.
+
+    Returns ``(findings, allowed, stale)``: unallowed findings, the
+    findings an allowlist entry suppressed, and allowlist entries that
+    matched nothing (stale — a failure in their own right).
+    """
+    from . import config_knobs, locks, metrics_surface, persistence, wire
+
+    raw = []
+    raw.extend(wire.analyze(tree))
+    raw.extend(persistence.analyze(tree))
+    raw.extend(locks.analyze(tree))
+    raw.extend(metrics_surface.analyze(tree))
+    raw.extend(config_knobs.analyze(tree))
+
+    findings, allowed = [], []
+    used = [False] * len(allowlist)
+    for f in raw:
+        hit = None
+        for i, entry in enumerate(allowlist):
+            if entry_matches(entry, f):
+                hit = entry
+                used[i] = True
+                break
+        (allowed if hit else findings).append(f)
+    stale = [e for e, u in zip(allowlist, used) if not u]
+    return findings, allowed, stale

@@ -1,0 +1,296 @@
+"""Config-knob drift: serve.json <-> ServeConfig <-> CLI flags <->
+the README configuration table.
+
+A serving knob exists in four places: the exemplar config
+(``configs/serve.json``), the parser (``ServeConfig::from_json`` in
+``rust/src/config.rs``), the struct fields themselves, and — for the
+operationally interesting subset — a ``serve`` CLI override flag in
+``rust/src/main.rs`` plus a row in the README's Configuration table.
+Knobs are named by dotted path (``sketch.bits``, ``store.shards``).
+
+FLAG_MAP / CONFIG_ONLY below are the audited registry of which knobs
+carry CLI flags; a knob in neither set fails the gate, which is the
+point — adding a knob forces a deliberate decision (flag + README row
++ exemplar entry) instead of a silent half-wiring.
+"""
+
+import json
+import re
+
+from . import Finding, fn_body, strip_comments, struct_body
+
+SERVE_JSON = "configs/serve.json"
+CONFIG_RS = "rust/src/config.rs"
+MAIN_RS = "rust/src/main.rs"
+README = "README.md"
+
+# knob -> serve CLI flag (without the leading --).
+FLAG_MAP = {
+    "addr": "addr",
+    "artifacts_dir": "artifacts",
+    "engine": "engine",
+    "dim": "dim",
+    "num_hashes": "num-hashes",
+    "seed": "seed",
+    "sketch.scheme": "scheme",
+    "sketch.bits": "bits",
+    "store.shards": "shards",
+    "store.persist_dir": "persist",
+    "server.max_connections": "max-conns",
+}
+
+# Knobs deliberately reachable only through a config file: batching and
+# banding geometry are artifact-coupled, the obs plane is a tuning
+# surface — none are one-off overrides an operator flips per run.
+CONFIG_ONLY = {
+    "batch.max_batch",
+    "batch.max_delay_us",
+    "batch.policy",
+    "index.bands",
+    "index.rows_per_band",
+    "obs.trace_ring",
+    "obs.slow_threshold_us",
+    "obs.pinned",
+}
+
+# serve-command flags that are not knob overrides.
+NON_KNOB_FLAGS = {"config"}
+
+
+def serve_json_knobs(tree, findings):
+    text = tree.get(SERVE_JSON)
+    if text is None:
+        return None
+    try:
+        data = json.loads(text)
+    except ValueError as e:
+        findings.append(Finding(
+            "config", "bad-exemplar", SERVE_JSON, 0,
+            f"configs/serve.json is not valid JSON: {e}",
+        ))
+        return None
+    knobs = set()
+    for key, value in data.items():
+        if key.startswith("_doc"):
+            continue
+        if isinstance(value, dict):
+            for sub in value:
+                if not sub.startswith("_doc"):
+                    knobs.add(f"{key}.{sub}")
+        else:
+            knobs.add(key)
+    return knobs
+
+
+def from_json_knobs(tree, findings):
+    text = tree.get(CONFIG_RS)
+    if text is None:
+        return None
+    clean = strip_comments(text)
+    body = fn_body(clean, "from_json")
+    if body is None:
+        findings.append(Finding(
+            "config", "registry-shape", CONFIG_RS, 0,
+            "ServeConfig::from_json not found",
+        ))
+        return None
+    matches = re.findall(
+        r"let Some\((\w+)\)\s*=\s*(\w+)\.get_opt\(\"(\w+)\"\)", body
+    )
+    receivers = {recv for _, recv, _ in matches}
+    # The root receiver is the fn's Json parameter.
+    root_m = re.search(r"fn from_json\((\w+)\s*:", clean)
+    root = root_m.group(1) if root_m else "j"
+    section_of = {}
+    knobs = set()
+    for var, recv, key in matches:
+        if recv == root and var in receivers:
+            section_of[var] = key  # a nested section binding
+    for var, recv, key in matches:
+        if recv == root:
+            if var not in section_of:
+                knobs.add(key)
+        elif recv in section_of:
+            knobs.add(f"{section_of[recv]}.{key}")
+        else:
+            findings.append(Finding(
+                "config", "registry-shape", CONFIG_RS, 0,
+                f"from_json reads '{key}' through unknown receiver "
+                f"'{recv}' — analyzer cannot attribute it to a section",
+            ))
+    return knobs
+
+
+def struct_knobs(tree, findings):
+    text = tree.get(CONFIG_RS)
+    if text is None:
+        return None
+    clean = strip_comments(text)
+    structs = {}
+    for name in re.findall(r"pub struct (\w+)", clean):
+        body = struct_body(clean, name)
+        if body is not None:
+            structs[name] = re.findall(r"pub (\w+)\s*:\s*([\w:<>]+)", body)
+    serve = structs.get("ServeConfig")
+    if serve is None:
+        findings.append(Finding(
+            "config", "registry-shape", CONFIG_RS, 0,
+            "struct ServeConfig not found",
+        ))
+        return None
+    knobs = set()
+    for field, ty in serve:
+        if ty in structs:
+            for sub, _ in structs[ty]:
+                knobs.add(f"{field}.{sub}")
+        else:
+            knobs.add(field)
+    return knobs
+
+
+def serve_flags(tree, findings):
+    text = tree.get(MAIN_RS)
+    if text is None:
+        return None
+    body = fn_body(strip_comments(text), "cmd_serve")
+    if body is None:
+        findings.append(Finding(
+            "config", "registry-shape", MAIN_RS, 0,
+            "fn cmd_serve not found",
+        ))
+        return None
+    flags = set(re.findall(r'args\s*\.\s*get\w*(?:::<[\w:<> ]+>)?\(\s*"([\w-]+)"', body))
+    return flags - NON_KNOB_FLAGS
+
+
+def readme_rows(tree):
+    """{knob: flag-or-None} from the README Configuration table."""
+    text = tree.get(README)
+    if text is None:
+        return None
+    m = re.search(r"^## Configuration$(.*?)(?=^## |\Z)", text, re.M | re.S)
+    if m is None:
+        return None
+    rows = {}
+    for line in m.group(1).splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) < 2 or not cells[0].startswith("`"):
+            continue
+        knob = cells[0].strip("`")
+        flag_m = re.match(r"`--([\w-]+)`", cells[1])
+        rows[knob] = flag_m.group(1) if flag_m else None
+    return rows
+
+
+def analyze(tree):
+    findings = []
+
+    exemplar = serve_json_knobs(tree, findings)
+    parsed = from_json_knobs(tree, findings)
+    fields = struct_knobs(tree, findings)
+    flags = serve_flags(tree, findings)
+    table = readme_rows(tree)
+    registry = set(FLAG_MAP) | CONFIG_ONLY
+
+    if parsed is not None and fields is not None:
+        for k in sorted(fields - parsed):
+            findings.append(Finding(
+                "config", "knob-drift", CONFIG_RS, 0,
+                f"ServeConfig field '{k}' is never read by from_json: "
+                f"config files cannot set it",
+            ))
+        for k in sorted(parsed - fields):
+            findings.append(Finding(
+                "config", "knob-drift", CONFIG_RS, 0,
+                f"from_json reads '{k}' but ServeConfig has no such "
+                f"field",
+            ))
+
+    knobs = parsed if parsed is not None else fields
+    if knobs is None:
+        return findings
+
+    if exemplar is not None:
+        for k in sorted(knobs - exemplar):
+            findings.append(Finding(
+                "config", "knob-drift", SERVE_JSON, 0,
+                f"knob '{k}' is missing from the exemplar "
+                f"configs/serve.json",
+            ))
+        for k in sorted(exemplar - knobs):
+            findings.append(Finding(
+                "config", "knob-drift", SERVE_JSON, 0,
+                f"configs/serve.json sets '{k}' which no ServeConfig "
+                f"parser reads (typo or removed knob)",
+            ))
+
+    for k in sorted(knobs - registry):
+        findings.append(Finding(
+            "config", "unclassified-knob", CONFIG_RS, 0,
+            f"knob '{k}' is in neither FLAG_MAP nor CONFIG_ONLY — "
+            f"decide its CLI/README story and extend "
+            f"tools/staticlint/config_knobs.py",
+        ))
+    for k in sorted(registry - knobs):
+        findings.append(Finding(
+            "config", "unclassified-knob", CONFIG_RS, 0,
+            f"analyzer registry lists knob '{k}' that ServeConfig no "
+            f"longer has — prune tools/staticlint/config_knobs.py",
+        ))
+
+    if flags is not None:
+        want_flags = {FLAG_MAP[k] for k in knobs & set(FLAG_MAP)}
+        for k in sorted(knobs & set(FLAG_MAP)):
+            if FLAG_MAP[k] not in flags:
+                findings.append(Finding(
+                    "config", "flag-drift", MAIN_RS, 0,
+                    f"knob '{k}' should have serve flag "
+                    f"'--{FLAG_MAP[k]}' but cmd_serve does not read it",
+                ))
+        for f in sorted(flags - want_flags):
+            findings.append(Finding(
+                "config", "flag-drift", MAIN_RS, 0,
+                f"cmd_serve reads flag '--{f}' that maps to no knob in "
+                f"FLAG_MAP",
+            ))
+        # Every knob flag must be advertised in the usage text.
+        main_text = tree.get(MAIN_RS, "")
+        for f in sorted(want_flags & flags):
+            if f"--{f}" not in main_text.replace(f'"{f}"', ""):
+                findings.append(Finding(
+                    "config", "flag-drift", MAIN_RS, 0,
+                    f"serve flag '--{f}' is not mentioned in the usage "
+                    f"text",
+                ))
+
+    if table is None:
+        findings.append(Finding(
+            "config", "doc-gap", README, 0,
+            "README has no '## Configuration' table",
+        ))
+    else:
+        for k in sorted(knobs - set(table)):
+            findings.append(Finding(
+                "config", "doc-gap", README, 0,
+                f"knob '{k}' has no row in the README Configuration "
+                f"table",
+            ))
+        for k in sorted(set(table) - knobs):
+            findings.append(Finding(
+                "config", "doc-gap", README, 0,
+                f"README Configuration table documents unknown knob "
+                f"'{k}'",
+            ))
+        for k in sorted(knobs & set(table)):
+            want = FLAG_MAP.get(k)
+            got = table[k]
+            if want != got:
+                findings.append(Finding(
+                    "config", "doc-gap", README, 0,
+                    f"README row for '{k}' lists flag "
+                    f"{'`--' + got + '`' if got else 'none'} but the "
+                    f"registry says "
+                    f"{'`--' + want + '`' if want else 'config-only'}",
+                ))
+
+    return findings

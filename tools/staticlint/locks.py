@@ -1,0 +1,252 @@
+"""Lock-discipline analyzer: acquisition sites, nesting graph,
+cycles, double-acquisition, and guards held across I/O.
+
+Extraction is lexical but precise for this codebase's idiom: a *guard
+acquisition* is ``.lock()`` / ``.read()`` / ``.write()`` with **empty
+parens** — ``io::Read::read`` and ``io::Write::write`` always take a
+buffer argument, so the empty-paren form is exactly the
+``Mutex``/``RwLock`` surface.  Sites are grouped into *lock classes*
+(CLASS_RULES below); a guard bound with ``let`` is live to the end of
+its enclosing block, a temporary guard to the end of its statement.
+
+Three properties are enforced over the class graph:
+
+* no lock-order cycles (class A held while taking B, elsewhere B held
+  while taking A);
+* no same-class nesting (double-acquisition: self-deadlock for a
+  Mutex, writer-starvation deadlock bait for an RwLock);
+* no I/O (fsync, WAL append, snapshot write, socket writes) under a
+  guard — except sites listed in ``allowlist.json`` with an audit
+  reason.  The WAL append-under-persist-lock family is the known
+  deliberate case: the store's memory/log coherence contract (rollback
+  on append failure) requires the ordering, and
+  ``rust/tests/lock_discipline.rs`` pins that it is safe under
+  contention, not just tolerated.
+
+Calls that *transitively* acquire locks are not name-resolved (too
+many false positives); instead IMPLIED_ACQUISITIONS curates the one
+cross-module pattern that matters: ``self.index.*`` calls inside
+``store/mod.rs`` take shard locks, giving the persist -> shard nesting
+edge.  Extend that table when adding a new cross-module lock path.
+"""
+
+import re
+
+from . import Finding, line_of, strip_comments
+
+LOCK_RE = re.compile(r"([\w\.\[\]]*)\.(?:lock|read|write)\(\)")
+
+# (path suffix, receiver regex or None (any), class name).  First match
+# wins; files with no rule fall back to a per-receiver class so new
+# locks are still tracked without editing this table.
+CLASS_RULES = [
+    ("rust/src/store/mod.rs", None, "store.persist"),
+    ("rust/src/store/sharded.rs", None, "store.shard"),
+    ("rust/src/obs/mod.rs", re.compile(r"pinned"), "obs.pinned"),
+    ("rust/src/obs/mod.rs", None, "obs.ring"),
+    ("rust/src/server/mod.rs", re.compile(r"rx"), "server.connrx"),
+]
+
+# (path suffix, pattern, class acquired transitively).
+IMPLIED_ACQUISITIONS = [
+    ("rust/src/store/mod.rs", re.compile(r"self\.index\.\w+\("), "store.shard"),
+]
+
+# I/O reachable while a guard is live.  Patterns are call-shaped so
+# identifiers alone (e.g. a field named `flush`) cannot match.
+IO_PATTERNS = [
+    (re.compile(r"\bwal_append\("), "WAL append"),
+    (re.compile(r"\.wal\.append\("), "WAL append"),
+    (re.compile(r"\.wal\.reset\("), "WAL truncate"),
+    (re.compile(r"\.wal\.sync\("), "WAL fsync"),
+    (re.compile(r"Snapshot::write"), "snapshot write"),
+    (re.compile(r"\bsync_all\("), "fsync"),
+    (re.compile(r"\bsync_data\("), "fsync"),
+    (re.compile(r"\.write_all\("), "stream write"),
+    (re.compile(r"\.flush\("), "stream flush"),
+    (re.compile(r"\bTcpStream\b"), "socket"),
+]
+
+
+def lock_class(path, receiver):
+    for suffix, recv_re, cls in CLASS_RULES:
+        if path.endswith(suffix) and (recv_re is None or recv_re.search(receiver)):
+            return cls
+    return f"{path}:{receiver or '<chain>'}"
+
+
+def fn_spans(text):
+    """[(name, body_start, body_end)] for every fn with a body."""
+    spans = []
+    for m in re.finditer(r"\bfn\s+(\w+)", text):
+        open_idx = text.find("{", m.end())
+        if open_idx < 0:
+            continue
+        semi = text.find(";", m.end())
+        if 0 <= semi < open_idx:
+            continue  # bodyless trait/extern declaration
+        depth = 0
+        end = None
+        for i in range(open_idx, len(text)):
+            c = text[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        if end is not None:
+            spans.append((m.group(1), open_idx, end))
+    return spans
+
+
+def enclosing_fn(spans, offset):
+    best = None
+    for name, s, e in spans:
+        if s <= offset < e and (best is None or s > best[1]):
+            best = (name, s, e)
+    return best
+
+
+def block_end_from(text, offset):
+    """Offset just past the ``}`` closing the innermost block
+    containing ``offset``; end of text if unbalanced."""
+    depth = 0
+    for i in range(offset, len(text)):
+        c = text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            if depth == 0:
+                return i
+            depth -= 1
+    return len(text)
+
+
+def is_let_bound(text, offset):
+    """True when the statement containing ``offset`` binds with let."""
+    start = max(
+        text.rfind(";", 0, offset),
+        text.rfind("{", 0, offset),
+        text.rfind("}", 0, offset),
+    )
+    return re.search(r"\blet\b", text[start + 1 : offset]) is not None
+
+
+class Site:
+    def __init__(self, path, offset, line, receiver, cls, fn, end):
+        self.path = path
+        self.offset = offset
+        self.line = line
+        self.receiver = receiver
+        self.cls = cls
+        self.fn = fn
+        self.end = end  # guard live until this offset
+
+
+def extract_sites(path, text):
+    """Guard acquisition sites with live intervals, test code excluded."""
+    clean = strip_comments(text)
+    cut = clean.find("#[cfg(test)]")
+    if cut >= 0:
+        clean = clean[:cut]
+    spans = fn_spans(clean)
+    sites = []
+    for m in LOCK_RE.finditer(clean):
+        fn = enclosing_fn(spans, m.start())
+        if is_let_bound(clean, m.start()):
+            end = block_end_from(clean, m.end())
+        else:
+            semi = clean.find(";", m.end())
+            end = semi if semi >= 0 else block_end_from(clean, m.end())
+        sites.append(Site(
+            path, m.start(), line_of(clean, m.start()), m.group(1),
+            lock_class(path, m.group(1)), fn[0] if fn else "<top>", end,
+        ))
+    return clean, sites
+
+
+def analyze(tree):
+    findings = []
+    edges = {}  # (outer class, inner class) -> example Finding location
+
+    for path in sorted(tree):
+        if not (path.startswith("rust/src/") and path.endswith(".rs")):
+            continue
+        clean, sites = extract_sites(path, tree[path])
+        for g in sites:
+            # Direct nested acquisitions while g is live.
+            inner = [
+                s for s in sites
+                if g.offset < s.offset < g.end and s.fn == g.fn
+            ]
+            held = clean[g.offset : g.end]
+            # Curated transitive acquisitions.
+            implied = [
+                (m.start() + g.offset, cls)
+                for suffix, pat, cls in IMPLIED_ACQUISITIONS
+                if path.endswith(suffix)
+                for m in pat.finditer(held)
+            ]
+            for s in inner:
+                if s.cls == g.cls:
+                    findings.append(Finding(
+                        "locks", "double-acquire", path, s.line,
+                        f"lock class '{g.cls}' acquired again while a "
+                        f"guard from line {g.line} is still live",
+                        function=g.fn,
+                    ))
+                else:
+                    edges.setdefault((g.cls, s.cls), (path, s.line, g.fn))
+            for off, cls in implied:
+                if cls == g.cls:
+                    findings.append(Finding(
+                        "locks", "double-acquire", path, line_of(clean, off),
+                        f"lock class '{g.cls}' transitively re-acquired "
+                        f"while a guard from line {g.line} is still live",
+                        function=g.fn,
+                    ))
+                else:
+                    edges.setdefault((g.cls, cls), (path, line_of(clean, off), g.fn))
+            # I/O while the guard is live.
+            labels = sorted({
+                label for pat, label in IO_PATTERNS if pat.search(held)
+            })
+            if labels:
+                findings.append(Finding(
+                    "locks", "io-under-lock", path, g.line,
+                    f"guard of lock class '{g.cls}' held across I/O: "
+                    + ", ".join(labels),
+                    function=g.fn,
+                ))
+
+    # Lock-order cycles over the class graph.
+    adj = {}
+    for (a, b), _ in edges.items():
+        adj.setdefault(a, set()).add(b)
+    state = {}  # 0 visiting, 1 done
+    reported = set()
+
+    def dfs(node, stack):
+        state[node] = 0
+        for nxt in sorted(adj.get(node, ())):
+            if state.get(nxt) == 0:
+                cycle = tuple(stack[stack.index(nxt):] + [nxt])
+                if frozenset(cycle) not in reported:
+                    reported.add(frozenset(cycle))
+                    path, line, fn = edges[(node, nxt)]
+                    findings.append(Finding(
+                        "locks", "lock-cycle", path, line,
+                        "lock-order cycle: " + " -> ".join(cycle),
+                        function=fn,
+                    ))
+            elif nxt not in state:
+                dfs(nxt, stack + [nxt])
+        state[node] = 1
+
+    for node in sorted(adj):
+        if node not in state:
+            dfs(node, [node])
+
+    return findings

@@ -1,0 +1,257 @@
+"""Metrics-surface parity: every OpKind, Stage, counter, and
+histogram must appear in the stats JSON serializer, the prom
+renderer, and docs/OBSERVABILITY.md.
+
+The observability plane (PR 7) has four coupled surfaces:
+
+* the ``OpKind``/``Stage`` registries in ``rust/src/obs/mod.rs``
+  (enum variants, ``ALL`` arrays, ``name()`` strings, ``NUM_*``
+  constants — all hand-synchronized);
+* the ``Metrics``/``MetricsSnapshot`` structs and their
+  ``to_json`` keys in ``rust/src/metrics.rs``;
+* the Prometheus renderer in ``rust/src/obs/prom.rs`` (every counter
+  as ``cminhash_<name>_total``, every histogram as
+  ``cminhash_<name>_us``, plus the store-stats series);
+* the human registry: the stage table and the metrics reference table
+  in ``docs/OBSERVABILITY.md``.
+
+A counter added to ``Metrics`` but absent from ``to_json``, prom, or
+the docs is a silent observability gap; this analyzer makes it a CI
+failure instead.
+"""
+
+import re
+
+from . import Finding, fn_body, impl_body, strip_comments, struct_body
+
+OBS_RS = "rust/src/obs/mod.rs"
+METRICS_RS = "rust/src/metrics.rs"
+PROM_RS = "rust/src/obs/prom.rs"
+PROTOCOL_RS = "rust/src/server/protocol.rs"
+STORE_RS = "rust/src/store/mod.rs"
+OBSERVABILITY_MD = "docs/OBSERVABILITY.md"
+
+# StoreStats field -> the prom series that must carry it.  `bits`
+# rides in the build_info labels rather than its own series.
+STORE_PROM = {
+    "stored": "cminhash_stored_items",
+    "shards": "cminhash_shard_items",
+    "persisted_bytes": "cminhash_persisted_bytes",
+    "sketch_bytes": "cminhash_sketch_bytes",
+    "wal_appended_bytes": "cminhash_wal_appended_bytes_total",
+    "fsync": "cminhash_fsync_latency_us",
+    "shard_ops": "cminhash_shard_ops_total",
+    "band_buckets": "cminhash_band_buckets",
+    "band_max_bucket": "cminhash_band_max_bucket",
+    "candidates": "cminhash_candidates_scored_total",
+    "bits": "cminhash_build_info",
+}
+
+# StoreStats field -> its stats-JSON key when the names differ.
+STORE_JSON_ALIAS = {"fsync": "fsync_latency"}
+
+
+def check_enum(findings, text, enum, num_const):
+    """ALL array, name() arms, and NUM_* must agree for one enum."""
+    imp = impl_body(text, enum)
+    if imp is None:
+        findings.append(Finding(
+            "metrics", "registry-shape", OBS_RS, 0,
+            f"impl {enum} not found; registry unchecked",
+        ))
+        return None
+    name_arms = dict(re.findall(enum + r'::(\w+)\s*=>\s*"([a-z_]+)"', imp))
+    all_m = re.search(r"const ALL\s*:\s*\[[^\]]*\]\s*=\s*\[(.*?)\]", imp, re.S)
+    all_variants = (
+        re.findall(enum + r"::(\w+)", all_m.group(1)) if all_m else []
+    )
+    if not name_arms or not all_variants:
+        findings.append(Finding(
+            "metrics", "registry-shape", OBS_RS, 0,
+            f"{enum}: could not extract name() arms or the ALL array",
+        ))
+        return None
+    for v in sorted(set(all_variants) - set(name_arms)):
+        findings.append(Finding(
+            "metrics", "registry-drift", OBS_RS, 0,
+            f"{enum}::{v} is in ALL but has no name() arm",
+        ))
+    for v in sorted(set(name_arms) - set(all_variants)):
+        findings.append(Finding(
+            "metrics", "registry-drift", OBS_RS, 0,
+            f"{enum}::{v} has a name() arm but is missing from ALL",
+        ))
+    if len(all_variants) != len(set(all_variants)):
+        findings.append(Finding(
+            "metrics", "registry-drift", OBS_RS, 0,
+            f"{enum}::ALL lists a variant twice",
+        ))
+    num = re.search(r"const " + num_const + r"\s*:\s*usize\s*=\s*(\d+)", text)
+    if num and int(num.group(1)) != len(all_variants):
+        findings.append(Finding(
+            "metrics", "registry-drift", OBS_RS, 0,
+            f"{num_const} = {num.group(1)} but {enum}::ALL has "
+            f"{len(all_variants)} variants",
+        ))
+    return name_arms
+
+
+def analyze(tree):
+    findings = []
+
+    obs = tree.get(OBS_RS)
+    stage_names = opkind_names = None
+    if obs is not None:
+        clean = strip_comments(obs)
+        opkind_arms = check_enum(findings, clean, "OpKind", "NUM_OPS")
+        stage_arms = check_enum(findings, clean, "Stage", "NUM_STAGES")
+        opkind_names = set(opkind_arms.values()) if opkind_arms else None
+        stage_names = set(stage_arms.values()) if stage_arms else None
+
+    # -- Metrics struct vs snapshot JSON vs prom ---------------------------
+    met = tree.get(METRICS_RS)
+    prom = tree.get(PROM_RS)
+    counters = histograms = None
+    if met is not None:
+        clean = strip_comments(met)
+        body = struct_body(clean, "Metrics")
+        if body is None:
+            findings.append(Finding(
+                "metrics", "registry-shape", METRICS_RS, 0,
+                "struct Metrics not found",
+            ))
+        else:
+            counters = re.findall(r"pub (\w+): AtomicU64", body)
+            histograms = re.findall(r"pub (\w+): LatencyHistogram", body)
+            snap_impl = impl_body(clean, "MetricsSnapshot")
+            keys = set()
+            if snap_impl is not None:
+                tj = fn_body(snap_impl, "to_json")
+                if tj is not None:
+                    keys = set(re.findall(r'"(\w+)"', tj))
+            if not keys:
+                findings.append(Finding(
+                    "metrics", "registry-shape", METRICS_RS, 0,
+                    "MetricsSnapshot::to_json not found or empty",
+                ))
+            for name in counters + histograms:
+                if keys and name not in keys:
+                    findings.append(Finding(
+                        "metrics", "json-gap", METRICS_RS, 0,
+                        f"Metrics field '{name}' is missing from "
+                        f"MetricsSnapshot::to_json: invisible to the "
+                        f"stats op",
+                    ))
+        # LatencySnapshot fields must all serialize too.
+        lat = struct_body(clean, "LatencySnapshot")
+        lat_impl = impl_body(clean, "LatencySnapshot")
+        if lat is not None and lat_impl is not None:
+            tj = fn_body(lat_impl, "to_json") or ""
+            lkeys = set(re.findall(r'"(\w+)"', tj))
+            for name in re.findall(r"pub (\w+):", lat):
+                if name not in lkeys:
+                    findings.append(Finding(
+                        "metrics", "json-gap", METRICS_RS, 0,
+                        f"LatencySnapshot field '{name}' is missing "
+                        f"from its to_json",
+                    ))
+
+    if prom is not None and counters is not None:
+        for name in counters:
+            series = f"cminhash_{name}_total"
+            if series not in prom:
+                findings.append(Finding(
+                    "metrics", "prom-gap", PROM_RS, 0,
+                    f"counter '{name}' has no '{series}' series in the "
+                    f"prom renderer",
+                ))
+        for name in histograms:
+            series = f"cminhash_{name}_us"
+            if series not in prom:
+                findings.append(Finding(
+                    "metrics", "prom-gap", PROM_RS, 0,
+                    f"histogram '{name}' has no '{series}' series in "
+                    f"the prom renderer",
+                ))
+        if opkind_names is not None and "cminhash_requests_total" not in prom:
+            findings.append(Finding(
+                "metrics", "prom-gap", PROM_RS, 0,
+                "no per-op cminhash_requests_total series in the prom "
+                "renderer",
+            ))
+
+    # -- StoreStats vs stats JSON vs prom ----------------------------------
+    store = tree.get(STORE_RS)
+    proto = tree.get(PROTOCOL_RS)
+    if store is not None:
+        body = struct_body(strip_comments(store), "StoreStats")
+        if body is None:
+            findings.append(Finding(
+                "metrics", "registry-shape", STORE_RS, 0,
+                "struct StoreStats not found",
+            ))
+        else:
+            fields = re.findall(r"pub (\w+):", body)
+            if proto is not None:
+                seg = None
+                m = re.search(r"Response::Stats\b", strip_comments(proto))
+                if m:
+                    nxt = re.search(
+                        r"Response::\w+", strip_comments(proto)[m.end():]
+                    )
+                    end = m.end() + (nxt.start() if nxt else 0)
+                    seg = strip_comments(proto)[m.start():end]
+                keys = set(re.findall(r'"(\w+)"', seg)) if seg else set()
+                if not keys:
+                    findings.append(Finding(
+                        "metrics", "registry-shape", PROTOCOL_RS, 0,
+                        "Response::Stats serializer arm not found",
+                    ))
+                for f in fields:
+                    key = STORE_JSON_ALIAS.get(f, f)
+                    if keys and key not in keys:
+                        findings.append(Finding(
+                            "metrics", "json-gap", PROTOCOL_RS, 0,
+                            f"StoreStats field '{f}' (key '{key}') is "
+                            f"missing from the Response::Stats "
+                            f"serializer",
+                        ))
+            if prom is not None:
+                for f in fields:
+                    series = STORE_PROM.get(f)
+                    if series is None:
+                        findings.append(Finding(
+                            "metrics", "prom-gap", PROM_RS, 0,
+                            f"StoreStats field '{f}' has no entry in the "
+                            f"analyzer's STORE_PROM map — extend "
+                            f"tools/staticlint/metrics_surface.py when "
+                            f"adding store stats",
+                        ))
+                    elif series not in prom:
+                        findings.append(Finding(
+                            "metrics", "prom-gap", PROM_RS, 0,
+                            f"StoreStats field '{f}' has no '{series}' "
+                            f"series in the prom renderer",
+                        ))
+
+    # -- docs/OBSERVABILITY.md ---------------------------------------------
+    doc = tree.get(OBSERVABILITY_MD)
+    if doc is not None:
+        doc_cells = set(re.findall(r"`([\w.]+)`", doc))
+        if stage_names:
+            for s in sorted(stage_names - doc_cells):
+                findings.append(Finding(
+                    "metrics", "doc-gap", OBSERVABILITY_MD, 0,
+                    f"pipeline stage '{s}' is missing from the "
+                    f"OBSERVABILITY.md stage table",
+                ))
+        if prom is not None:
+            for series in sorted(set(re.findall(r'"(cminhash_\w+)"', prom))):
+                if series not in doc_cells:
+                    findings.append(Finding(
+                        "metrics", "doc-gap", OBSERVABILITY_MD, 0,
+                        f"prom series '{series}' is missing from the "
+                        f"OBSERVABILITY.md metrics reference",
+                    ))
+
+    return findings

@@ -1,0 +1,163 @@
+"""Persistence-format audit: WAL record tags and snapshot magics.
+
+A byte format drifts in one of three ways: an encoder without a
+decoder (unreadable data), a decoder without the corresponding format
+actually being written (dead compatibility code that silently rots),
+or a tag nobody's tests pin (a format change ships without tripping
+anything).  This analyzer demands, for every WAL record tag and every
+snapshot magic:
+
+* exactly one encoder site and exactly one decoder site (the WAL), or
+  a writer/reader classification (snapshot: the newest magics are
+  written, legacy magics are load-only);
+* a mismatch-refusal path — unknown tags and unknown magics must be
+  rejected, not skipped;
+* at least one test referencing the tag/magic (rust/tests/ or a
+  ``#[cfg(test)]`` module), so the byte layout is pinned.
+"""
+
+import re
+
+from . import Finding, fn_body, strip_comments
+
+WAL_RS = "rust/src/store/wal.rs"
+SNAPSHOT_RS = "rust/src/store/snapshot.rs"
+
+
+def test_text(tree):
+    """All test code in the tree: integration tests plus everything
+    after a ``#[cfg(test)]`` marker in library files."""
+    chunks = []
+    for path, text in tree.items():
+        if path.startswith("rust/tests/"):
+            chunks.append(text)
+        elif path.endswith(".rs"):
+            idx = text.find("#[cfg(test)]")
+            if idx >= 0:
+                chunks.append(text[idx:])
+    return "\n".join(chunks)
+
+
+def analyze(tree):
+    findings = []
+    tests = test_text(tree)
+
+    # -- WAL record tags ----------------------------------------------------
+    wal = tree.get(WAL_RS)
+    if wal is not None:
+        clean = strip_comments(wal)
+        tags = re.findall(r"const (TAG_\w+): u8 = (\d+)", clean)
+        by_value = {}
+        for name, value in tags:
+            by_value.setdefault(value, []).append(name)
+        for value, names in sorted(by_value.items()):
+            if len(names) > 1:
+                findings.append(Finding(
+                    "persistence", "tag-collision", WAL_RS, 0,
+                    f"WAL tags {names} share byte value {value}",
+                ))
+        if not tags:
+            findings.append(Finding(
+                "persistence", "no-tags", WAL_RS, 0,
+                "no TAG_* constants found; the WAL analyzer has nothing "
+                "to audit (extraction regression?)",
+            ))
+        encode = fn_body(clean, "encode")
+        decode = fn_body(clean, "decode_payload")
+        for name, _ in tags:
+            for label, body, fname in (
+                ("encoder", encode, "encode"),
+                ("decoder", decode, "decode_payload"),
+            ):
+                if body is None:
+                    findings.append(Finding(
+                        "persistence", f"no-{label}", WAL_RS, 0,
+                        f"fn {fname} not found; cannot audit {name}",
+                    ))
+                    continue
+                n = len(re.findall(r"\b" + name + r"\b", body))
+                if n == 0:
+                    findings.append(Finding(
+                        "persistence", f"no-{label}", WAL_RS, 0,
+                        f"WAL tag {name} has no {label} site in {fname}",
+                    ))
+                elif n > 1:
+                    findings.append(Finding(
+                        "persistence", f"dup-{label}", WAL_RS, 0,
+                        f"WAL tag {name} appears {n} times in {fname}; "
+                        f"exactly one {label} site expected",
+                    ))
+        if decode is not None and not re.search(r"_\s*=>", decode):
+            findings.append(Finding(
+                "persistence", "no-refusal", WAL_RS, 0,
+                "decode_payload has no catch-all arm: an unknown WAL "
+                "tag must be refused, not fall through",
+            ))
+        # Every record variant must be pinned by a test (roundtrip or
+        # golden) referencing it by name.
+        for variant in set(re.findall(r"enum WalRecord.*?\{(.*?)\n\}", clean, re.S)):
+            for vname in re.findall(r"^\s{4}(\w+)\s*[{(]", variant, re.M):
+                if not re.search(r"\bWalRecord::" + vname + r"\b", tests):
+                    findings.append(Finding(
+                        "persistence", "untested-format", WAL_RS, 0,
+                        f"WalRecord::{vname} is referenced by no test: "
+                        f"its byte layout is unpinned",
+                    ))
+
+    # -- snapshot magics ----------------------------------------------------
+    snap = tree.get(SNAPSHOT_RS)
+    if snap is not None:
+        clean = strip_comments(snap)
+        magics = re.findall(r'const (MAGIC_\w+): &\[u8; \d+\] = b"(\w+)"', clean)
+        if not magics:
+            findings.append(Finding(
+                "persistence", "no-tags", SNAPSHOT_RS, 0,
+                "no MAGIC_* constants found; the snapshot analyzer has "
+                "nothing to audit (extraction regression?)",
+            ))
+        header = fn_body(clean, "header")
+        load = fn_body(clean, "load")
+        writers = set()
+        if header is not None:
+            writers = {
+                name for name, _ in magics
+                if re.search(r"\b" + name + r"\b", header)
+            }
+        if not writers:
+            findings.append(Finding(
+                "persistence", "no-encoder", SNAPSHOT_RS, 0,
+                "no snapshot magic is referenced by fn header: nothing "
+                "can be written",
+            ))
+        if load is None:
+            findings.append(Finding(
+                "persistence", "no-decoder", SNAPSHOT_RS, 0,
+                "fn load not found; cannot audit snapshot magics",
+            ))
+        else:
+            for name, literal in magics:
+                if not re.search(r"\b" + name + r"\b", load):
+                    findings.append(Finding(
+                        "persistence", "no-decoder", SNAPSHOT_RS, 0,
+                        f"snapshot magic {name} (b\"{literal}\") is not "
+                        f"accepted by fn load: "
+                        + ("files written with it are unreadable"
+                           if name in writers
+                           else "dead legacy constant"),
+                    ))
+            if not re.search(r"(?i)(bad|invalid|unknown)[^;]{0,40}magic", load):
+                findings.append(Finding(
+                    "persistence", "no-refusal", SNAPSHOT_RS, 0,
+                    "fn load has no unknown-magic refusal path: a "
+                    "foreign or torn header must error, not parse",
+                ))
+        for name, literal in magics:
+            if literal not in tests and not re.search(r"\b" + name + r"\b", tests):
+                findings.append(Finding(
+                    "persistence", "untested-format", SNAPSHOT_RS, 0,
+                    f"snapshot magic {name} (b\"{literal}\") is "
+                    f"referenced by no test: the header bytes are "
+                    f"unpinned",
+                ))
+
+    return findings

@@ -1,0 +1,260 @@
+"""Wire-registry parity: jsonl ops <-> OpKind <-> bin1 opcodes <->
+BlockingClient methods <-> docs/PROTOCOL.md tables.
+
+The wire surface lives in four places that drift independently:
+
+* ``rust/src/server/protocol.rs`` — the jsonl op strings accepted by
+  ``Request::from_json``;
+* ``rust/src/obs/mod.rs`` — ``OpKind``, the canonical op registry the
+  observability plane indexes by;
+* ``rust/src/server/frame.rs`` — the ``bin1`` opcode constants, plus
+  the ``bin_op_kind`` dispatch and ``BlockingClient`` conveniences in
+  ``rust/src/server/mod.rs``;
+* ``docs/PROTOCOL.md`` — the human registry: per-op headings and the
+  two opcode tables.
+
+Every one of these must agree on names, codes, and dialect coverage.
+"""
+
+import re
+
+from . import Finding, camel_to_snake, fn_body, impl_body, strip_comments
+
+PROTOCOL_RS = "rust/src/server/protocol.rs"
+FRAME_RS = "rust/src/server/frame.rs"
+SERVER_RS = "rust/src/server/mod.rs"
+OBS_RS = "rust/src/obs/mod.rs"
+PROTOCOL_MD = "docs/PROTOCOL.md"
+
+# Ops that exist only on the binary dialect by design: packed ingest
+# ships raw sketch words, which jsonl (a parse-and-sketch dialect)
+# cannot express.  Extending this set is an audited decision.
+BINARY_ONLY = {"insert_packed"}
+
+# The typed BlockingClient convenience expected for each bin1 op.
+# `metrics` returns the raw exposition string, hence the _text name.
+CLIENT_METHOD = {
+    "ping": "ping",
+    "sketch": "sketch",
+    "sketch_batch": "sketch_batch",
+    "insert_packed": "insert_packed",
+    "query_batch": "query_batch",
+    "delete": "delete",
+    "estimate": "estimate",
+    "trace": "trace",
+    "metrics": "metrics_text",
+}
+
+
+def jsonl_ops(tree):
+    """Op strings accepted by Request::from_json, with line numbers."""
+    text = tree.get(PROTOCOL_RS)
+    if text is None:
+        return None
+    body = fn_body(strip_comments(text), "from_json")
+    if body is None:
+        return None
+    return set(re.findall(r'"([a-z_]+)"\s*=>', body))
+
+
+def opkind_names(tree):
+    text = tree.get(OBS_RS)
+    if text is None:
+        return None
+    return set(re.findall(r'OpKind::\w+\s*=>\s*"([a-z_]+)"', strip_comments(text)))
+
+
+def frame_consts(tree):
+    """(requests, responses) as {lower_name: code} dicts, or None."""
+    text = tree.get(FRAME_RS)
+    if text is None:
+        return None
+    pairs = re.findall(
+        r"pub const (\w+): u8 = (0x[0-9A-Fa-f]{2})", strip_comments(text)
+    )
+    requests, responses = {}, {}
+    for name, code in pairs:
+        if name.startswith("R_"):
+            responses[name[2:].lower()] = int(code, 16)
+        else:
+            requests[name.lower()] = int(code, 16)
+    return requests, responses
+
+
+def analyze(tree):
+    findings = []
+
+    jsonl = jsonl_ops(tree)
+    opkinds = opkind_names(tree)
+    consts = frame_consts(tree)
+
+    # -- jsonl <-> OpKind ---------------------------------------------------
+    if jsonl is not None and opkinds is not None:
+        for op in sorted(opkinds - jsonl - BINARY_ONLY):
+            findings.append(Finding(
+                "wire", "missing-jsonl-op", PROTOCOL_RS, 0,
+                f"OpKind '{op}' has no jsonl from_json arm (and is not "
+                f"in the audited binary-only set)",
+            ))
+        for op in sorted(jsonl - opkinds):
+            findings.append(Finding(
+                "wire", "missing-opkind", OBS_RS, 0,
+                f"jsonl op '{op}' has no OpKind registry entry",
+            ))
+
+    # -- bin1 opcode block integrity ---------------------------------------
+    if consts is not None:
+        requests, responses = consts
+        codes = sorted(requests.values())
+        if codes != list(range(1, len(codes) + 1)):
+            findings.append(Finding(
+                "wire", "opcode-gap", FRAME_RS, 0,
+                f"bin1 request opcodes are not contiguous from 0x01: "
+                f"{[hex(c) for c in codes]}",
+            ))
+        rcodes = sorted(responses.values())
+        if rcodes != list(range(0x80, 0x80 + len(rcodes))):
+            findings.append(Finding(
+                "wire", "opcode-gap", FRAME_RS, 0,
+                f"bin1 response opcodes are not contiguous from 0x80: "
+                f"{[hex(c) for c in rcodes]}",
+            ))
+        # Every request op pairs with a success response, plus the one
+        # shared error frame — so the response block is requests + 1.
+        if len(responses) != len(requests) + 1:
+            findings.append(Finding(
+                "wire", "unpaired-opcode", FRAME_RS, 0,
+                f"{len(requests)} request opcodes but {len(responses)} "
+                f"response opcodes (want requests + 1 for R_ERR): a "
+                f"request op is missing its response frame or vice versa",
+            ))
+        if opkinds is not None:
+            for op in sorted(set(requests) - opkinds):
+                findings.append(Finding(
+                    "wire", "missing-opkind", OBS_RS, 0,
+                    f"bin1 op '{op}' has no OpKind registry entry",
+                ))
+
+    # -- bin1 dispatch coverage in the server ------------------------------
+    server = tree.get(SERVER_RS)
+    if server is not None and consts is not None:
+        requests, _ = consts
+        body = fn_body(strip_comments(server), "bin_op_kind")
+        if body is None:
+            findings.append(Finding(
+                "wire", "missing-dispatch", SERVER_RS, 0,
+                "fn bin_op_kind not found: bin1 requests cannot be "
+                "attributed to an OpKind",
+            ))
+        else:
+            names = ["BinRequest"]
+            alias = re.search(r"\bBinRequest as (\w+)\s*;", body)
+            if alias:
+                names.append(alias.group(1))
+            arms = {
+                camel_to_snake(v)
+                for v in re.findall(
+                    r"\b(?:" + "|".join(names) + r")::(\w+)", body
+                )
+            }
+            for op in sorted(set(requests) - arms):
+                findings.append(Finding(
+                    "wire", "missing-dispatch", SERVER_RS, 0,
+                    f"bin1 op '{op}' has no bin_op_kind arm",
+                    function="bin_op_kind",
+                ))
+            for op in sorted(arms - set(requests)):
+                findings.append(Finding(
+                    "wire", "missing-dispatch", FRAME_RS, 0,
+                    f"bin_op_kind handles '{op}' but frame.rs defines "
+                    f"no such request opcode",
+                    function="bin_op_kind",
+                ))
+
+    # -- BlockingClient dialect coverage -----------------------------------
+    if server is not None and consts is not None:
+        requests, _ = consts
+        client = impl_body(strip_comments(server), "BlockingClient")
+        if client is None:
+            findings.append(Finding(
+                "wire", "client-gap", SERVER_RS, 0,
+                "impl BlockingClient not found",
+            ))
+        else:
+            methods = set(re.findall(r"pub fn (\w+)", client))
+            for op in sorted(requests):
+                want = CLIENT_METHOD.get(op)
+                if want is None:
+                    findings.append(Finding(
+                        "wire", "client-gap", SERVER_RS, 0,
+                        f"bin1 op '{op}' has no entry in the analyzer's "
+                        f"CLIENT_METHOD map — extend "
+                        f"tools/staticlint/wire.py when adding ops",
+                    ))
+                elif want not in methods:
+                    findings.append(Finding(
+                        "wire", "client-gap", SERVER_RS, 0,
+                        f"bin1 op '{op}' has no BlockingClient::{want} "
+                        f"convenience: the op is unreachable from typed "
+                        f"client code",
+                    ))
+
+    # -- docs/PROTOCOL.md tables and headings ------------------------------
+    doc = tree.get(PROTOCOL_MD)
+    if doc is not None and consts is not None:
+        requests, responses = consts
+        doc_rows = re.findall(r"\|\s*`0x([0-9A-Fa-f]{2})`\s*\|\s*`?([a-z_ ]+?)`?\s*\|", doc)
+        doc_req = {}
+        doc_resp_codes = set()
+        for code_hex, name in doc_rows:
+            code = int(code_hex, 16)
+            if code < 0x80:
+                doc_req[name] = code
+            else:
+                doc_resp_codes.add(code)
+        for op, code in sorted(requests.items()):
+            if op not in doc_req:
+                findings.append(Finding(
+                    "wire", "doc-table", PROTOCOL_MD, 0,
+                    f"bin1 request op '{op}' (0x{code:02x}) missing from "
+                    f"the PROTOCOL.md request opcode table",
+                ))
+            elif doc_req[op] != code:
+                findings.append(Finding(
+                    "wire", "doc-table", PROTOCOL_MD, 0,
+                    f"PROTOCOL.md lists '{op}' as 0x{doc_req[op]:02x} but "
+                    f"frame.rs defines 0x{code:02x}",
+                ))
+        for op in sorted(set(doc_req) - set(requests)):
+            findings.append(Finding(
+                "wire", "doc-table", PROTOCOL_MD, 0,
+                f"PROTOCOL.md documents request op '{op}' "
+                f"(0x{doc_req[op]:02x}) that frame.rs does not define",
+            ))
+        for code in sorted(set(responses.values()) - doc_resp_codes):
+            findings.append(Finding(
+                "wire", "doc-table", PROTOCOL_MD, 0,
+                f"bin1 response opcode 0x{code:02x} missing from the "
+                f"PROTOCOL.md response table",
+            ))
+        for code in sorted(doc_resp_codes - set(responses.values())):
+            findings.append(Finding(
+                "wire", "doc-table", PROTOCOL_MD, 0,
+                f"PROTOCOL.md documents response opcode 0x{code:02x} "
+                f"that frame.rs does not define",
+            ))
+
+    if doc is not None and jsonl is not None:
+        # An op is documented if it has a `### \`op\`` heading or
+        # appears in a fenced request example (the batch ops share one
+        # section of worked examples rather than per-op headings).
+        documented = set(re.findall(r"^###\s+`(\w+)`", doc, re.M))
+        documented |= set(re.findall(r'"op"\s*:\s*"(\w+)"', doc))
+        for op in sorted(jsonl - documented):
+            findings.append(Finding(
+                "wire", "undocumented-op", PROTOCOL_MD, 0,
+                f"jsonl op '{op}' has neither a heading nor a worked "
+                f"example in PROTOCOL.md",
+            ))
+
+    return findings
