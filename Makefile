@@ -48,12 +48,15 @@ linkcheck:
 
 # Offline gate over emitted BENCH_*.json: the packed b-bit plane must
 # beat unpacked query throughput at b <= 8 and shrink memory ~32/b x,
-# pre-packed bin1 ingest must beat JSON-lines ingest by >= 1.3x, and
-# the tracing-enabled hot path must hold >= 0.97x of the tracing-off
-# throughput (obs_overhead).  Skips cleanly when benches haven't run
-# (run `make bench` first to arm them); CI always runs the benches
-# before this gate.
+# pre-packed bin1 ingest must beat JSON-lines ingest by >= 1.3x, the
+# tracing-enabled hot path must hold >= 0.97x of the tracing-off
+# throughput (obs_overhead), and 2-node cluster ingest must hold
+# >= 1.6x the single-node rate (cluster_scale).  An absent bench file
+# skips cleanly (run `make bench` first to arm the gates); a present
+# but malformed one hard-fails — its own self-tests pin that split.
+# CI always runs the benches before this gate.
 checkbench:
+	$(PYTHON) tools/tests/test_check_bench.py
 	$(PYTHON) tools/check_bench.py .
 
 verify: lint build test clippy

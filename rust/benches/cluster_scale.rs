@@ -1,0 +1,176 @@
+//! Cluster ingest/query scaling: the same row budget driven through
+//! 1-, 2- and 4-node clusters of in-process servers, all on one
+//! machine.  Each node is a full single-node stack (own coordinator,
+//! own batch pump, own store), so adding nodes adds sketch-compute
+//! threads — the scaling claim gated by `check_bench.py` is that two
+//! nodes ingest at least 1.6x the single-node rate.  Emits
+//! `BENCH_cluster_scale.json`.
+
+use cminhash::bench::Harness;
+use cminhash::config::{
+    BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig, SketchSettings,
+};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::{ClusterClient, ClusterConfig, ClusterNode, Server};
+use cminhash::sketch::SketchScheme;
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn rand_rows(dim: u32, nnz: usize, n: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            idx
+        })
+        .collect()
+}
+
+fn start_node(dim: usize, k: usize) -> (Arc<Coordinator>, Server) {
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        artifacts_dir: Path::new("artifacts").to_path_buf(),
+        dim,
+        num_hashes: k,
+        seed: 42,
+        sketch: SketchSettings {
+            scheme: SketchScheme::Cmh,
+            bits: 32,
+        },
+        batch: BatchConfig {
+            max_batch: 64,
+            max_delay_us: 1_000,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 32,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg).expect("rust engine always starts");
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+/// Spin up `n` nodes and describe them as a cluster topology.
+fn start_cluster(n: usize, dim: usize, k: usize) -> (Vec<(Arc<Coordinator>, Server)>, ClusterConfig) {
+    let nodes: Vec<(Arc<Coordinator>, Server)> =
+        (0..n).map(|_| start_node(dim, k)).collect();
+    let cfg = ClusterConfig {
+        timeout_ms: 30_000,
+        nodes: nodes
+            .iter()
+            .enumerate()
+            .map(|(i, (_, s))| ClusterNode {
+                id: format!("node-{i}"),
+                addr: s.addr().to_string(),
+            })
+            .collect(),
+    };
+    (nodes, cfg)
+}
+
+/// Closed-loop cluster ingest: `conns` client threads, each with its
+/// own [`ClusterClient`], splitting the row budget into 256-row chunks
+/// that rendezvous routing fans across the nodes.  Returns rows/s.
+fn ingest(cfg: &ClusterConfig, dim: u32, rows: usize, conns: usize) -> f64 {
+    let per_conn = rows / conns;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..conns {
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = ClusterClient::connect(cfg).unwrap();
+            let rows = rand_rows(dim, 64, per_conn, 31 * c as u64 + 1);
+            for chunk in rows.chunks(256) {
+                let out = client.insert_batch(dim, chunk.to_vec()).unwrap();
+                assert!(!out.degraded, "no node may fail during the bench");
+                assert_eq!(out.inserted as usize, chunk.len());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    (conns * per_conn) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Fan-out query throughput over the loaded cluster (single client —
+/// queries hit every node, so the cluster-side cost is what varies).
+fn query(cfg: &ClusterConfig, dim: u32, n: usize) -> f64 {
+    let mut client = ClusterClient::connect(cfg.clone()).unwrap();
+    let rows = rand_rows(dim, 64, n, 9_000);
+    let t0 = Instant::now();
+    for chunk in rows.chunks(64) {
+        let out = client.query_batch(dim, chunk.to_vec(), 10).unwrap();
+        assert!(!out.degraded);
+        assert_eq!(out.results.len(), chunk.len());
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
+    let mut h = Harness::new("cluster_scale");
+    let (dim, k) = (4096usize, 256usize);
+    let rows = if fast { 4096 } else { 16384 };
+    let conns = 4usize;
+
+    let mut records = Vec::new();
+    let mut single_node = 0.0f64;
+    for n in [1usize, 2, 4] {
+        // Keep every node's server+pump alive for the whole measurement.
+        let (nodes, cfg) = start_cluster(n, dim, k);
+        let _ = ingest(&cfg, dim as u32, 512, conns); // warmup
+        let t0 = Instant::now();
+        let rps = ingest(&cfg, dim as u32, rows, conns);
+        h.report(
+            &format!("cluster ingest {n} node(s) x{rows} ({conns} conns)"),
+            t0.elapsed(),
+            rows as u64,
+        );
+        let qn = rows.min(2048);
+        let qps = query(&cfg, dim as u32, qn);
+        if n == 1 {
+            single_node = rps;
+        }
+        println!(
+            "  -> {n} node(s): ingest {rps:.0} rows/s ({:.2}x single), \
+             fan-out query {qps:.0} rows/s",
+            rps / single_node.max(1e-9)
+        );
+        // Spread check: rendezvous routing must use every node.
+        for (i, (svc, _)) in nodes.iter().enumerate() {
+            let (_, store) = svc.stats();
+            assert!(
+                store.stored > 0,
+                "node {i} of {n} received no rows — routing is broken"
+            );
+        }
+        records.push(Json::obj(vec![
+            ("nodes", Json::Num(n as f64)),
+            ("ingest_rows_per_s", Json::Num(rps)),
+            ("query_rows_per_s", Json::Num(qps)),
+            ("speedup_vs_single", Json::Num(rps / single_node.max(1e-9))),
+        ]));
+    }
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("cluster_scale")),
+        ("dim", Json::Num(dim as f64)),
+        ("k", Json::Num(k as f64)),
+        ("rows", Json::Num(rows as f64)),
+        ("conns", Json::Num(conns as f64)),
+        ("nodes", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_cluster_scale.json", record.to_string()).unwrap();
+    println!("wrote BENCH_cluster_scale.json");
+    h.write_csv().unwrap();
+}

@@ -434,6 +434,21 @@ impl Coordinator {
         self.store.compact()
     }
 
+    /// Export this node's durable image (snapshot bytes + WAL tail)
+    /// for a joining cluster peer — the server half of the `replicate`
+    /// wire op.  Errors without a persist directory.
+    pub fn replicate_export(&self) -> crate::Result<(Vec<u8>, Vec<u8>)> {
+        self.store.replicate_export()
+    }
+
+    /// Bootstrap this (fresh, empty) node from a peer's replicate
+    /// image: both streams are validated end to end before anything is
+    /// installed, and on a durable node the resulting directory is
+    /// byte-identical to the peer's export.  Returns resident items.
+    pub fn replicate_apply(&self, snapshot: &[u8], wal: &[u8]) -> crate::Result<u64> {
+        self.store.replicate_apply(snapshot, wal)
+    }
+
     /// Metrics + store occupancy/durability snapshot.
     pub fn stats(&self) -> (MetricsSnapshot, StoreStats) {
         (self.metrics.snapshot(), self.store.stats())

@@ -44,10 +44,12 @@ USAGE:
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
                    [--shards N] [--persist DIR] [--max-conns N]
   cminhash load    FILE.jsonl [--addr A] [--batch N] [--binary]
+                   [--cluster CLUSTER.json]
                    (bulk-ingest: one {\"dim\":D,\"indices\":[...]} object
                    per line, streamed through insert_batch; --binary
                    negotiates bin1 framing and ships client-sketched
-                   packed rows instead)
+                   packed rows instead; --cluster routes each row to
+                   its rendezvous owner across the listed nodes)
   cminhash compact [--config FILE.json] [--dir DIR] [--num-hashes K]
                    [--scheme S] [--bits B] [--shards N]
                    (offline only — use the `save` wire op to compact
@@ -59,6 +61,11 @@ USAGE:
                    [--num-hashes K] [--seed S] [--scheme S] [--bits B]
   cminhash loadgen [--addr A] [--requests N] [--dim D] [--nnz F] [--conns C]
                    [--binary]   (drive sketch ops over bin1 frames)
+                   [--cluster CLUSTER.json] [--batch N] [--topk K]
+                   (cluster mode: ingest N synthetic rows through
+                   rendezvous-routed insert_batch, then fan-out
+                   queries; reports rows/s, query latency, degraded
+                   nodes and the node_errors counter)
   cminhash stats   [--addr A] [--prom]
                    (one stats snapshot: JSON by default, --prom prints
                    the Prometheus text exposition)
@@ -267,15 +274,29 @@ fn cmd_load(args: &Args, positional: Option<String>) -> Result<()> {
         return Err(usage_err("--batch must be > 0"));
     }
     let binary = args.has("binary");
-    println!(
-        "loading {} into {addr} ({batch} rows per {})",
-        file.display(),
-        if binary {
-            "insert_packed frame (bin1)"
-        } else {
-            "insert_batch"
-        }
-    );
+    let cluster = match args.get("cluster") {
+        Some(p) => Some(cminhash::server::ClusterConfig::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    if binary && cluster.is_some() {
+        return Err(usage_err("--binary and --cluster are mutually exclusive"));
+    }
+    match &cluster {
+        Some(cfg) => println!(
+            "loading {} across {} cluster nodes ({batch} rows per chunk)",
+            file.display(),
+            cfg.nodes.len()
+        ),
+        None => println!(
+            "loading {} into {addr} ({batch} rows per {})",
+            file.display(),
+            if binary {
+                "insert_packed frame (bin1)"
+            } else {
+                "insert_batch"
+            }
+        ),
+    }
     // Print a progress line roughly every 8 batches so multi-million
     // row ingests show a heartbeat without drowning the terminal.
     let mut last_printed = 0u64;
@@ -290,7 +311,9 @@ fn cmd_load(args: &Args, positional: Option<String>) -> Result<()> {
             );
         }
     };
-    let report = if binary {
+    let report = if let Some(cfg) = cluster {
+        cminhash::server::load_jsonl_cluster(cfg, &file, batch, progress)?
+    } else if binary {
         cminhash::server::load_jsonl_binary(&addr, &file, batch, progress)?
     } else {
         cminhash::server::load_jsonl(&addr, &file, batch, progress)?
@@ -464,10 +487,96 @@ fn cmd_sketch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Cluster loadgen: synthesize `--requests` rows, ingest them through
+/// rendezvous-routed `insert_batch` chunks, then issue fan-out queries
+/// and report merged-query latency plus degradation (skipped nodes and
+/// the client's `node_errors` counter).
+fn cmd_loadgen_cluster(args: &Args, cfg_path: &str) -> Result<()> {
+    let cfg = cminhash::server::ClusterConfig::load(std::path::Path::new(cfg_path))?;
+    let requests = args.get_parsed::<usize>("requests")?.unwrap_or(1000);
+    let dim = args.get_parsed::<u32>("dim")?.unwrap_or(4096);
+    let nnz = args.get_parsed::<u32>("nnz")?.unwrap_or(64);
+    let batch = args.get_parsed::<usize>("batch")?.unwrap_or(256).max(1);
+    let topk = args.get_parsed::<usize>("topk")?.unwrap_or(10);
+    let nodes = cfg.nodes.len();
+    let mut client = cminhash::server::ClusterClient::connect(cfg)?;
+    let mut rng = Rng::seed_from_u64(7);
+    let mut row = || -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..nnz).map(|_| rng.range_u32(0, dim)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx
+    };
+    let mut inserted = 0u64;
+    let mut failed: Vec<String> = Vec::new();
+    let t0 = Instant::now();
+    let mut sent = 0usize;
+    while sent < requests {
+        let n = batch.min(requests - sent);
+        let rows: Vec<Vec<u32>> = (0..n).map(|_| row()).collect();
+        let out = client.insert_batch(dim, rows)?;
+        inserted += out.inserted;
+        for id in out.failed_nodes {
+            if !failed.contains(&id) {
+                failed.push(id);
+            }
+        }
+        sent += n;
+    }
+    let ingest_secs = t0.elapsed().as_secs_f64();
+    let queries = (requests / 10).clamp(1, 200);
+    let mut lats = Vec::with_capacity(queries);
+    let t1 = Instant::now();
+    for _ in 0..queries {
+        let t = Instant::now();
+        let (_, degraded, failed_now) = client.query(dim, row(), topk)?;
+        lats.push(t.elapsed().as_secs_f64() * 1e3);
+        if degraded {
+            for id in failed_now {
+                if !failed.contains(&id) {
+                    failed.push(id);
+                }
+            }
+        }
+    }
+    let query_secs = t1.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let q = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    let node_errors = client
+        .metrics()
+        .node_errors
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "cluster of {nodes}: inserted {inserted}/{requests} rows in {ingest_secs:.2}s \
+         -> {:.0} rows/s",
+        inserted as f64 / ingest_secs.max(1e-9),
+    );
+    println!(
+        "{queries} fan-out queries in {query_secs:.2}s; latency ms p50={:.2} \
+         p99={:.2} max={:.2}",
+        q(0.50),
+        q(0.99),
+        lats[lats.len() - 1],
+    );
+    if failed.is_empty() && node_errors == 0 {
+        println!("no degraded merges (node_errors=0)");
+    } else {
+        println!(
+            "DEGRADED: nodes [{}] failed at least once (node_errors={node_errors})",
+            failed.join(", ")
+        );
+    }
+    Ok(())
+}
+
 // `join().expect` surfaces a loadgen-worker panic instead of folding a
 // harness bug into a latency report.
 #[allow(clippy::disallowed_methods)]
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    if let Some(p) = args.get("cluster") {
+        let p = p.to_string();
+        return cmd_loadgen_cluster(args, &p);
+    }
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let requests = args.get_parsed::<usize>("requests")?.unwrap_or(1000);
     let dim = args.get_parsed::<u32>("dim")?.unwrap_or(4096);

@@ -164,6 +164,10 @@ pub struct Metrics {
     pub busy_rejections: AtomicU64,
     /// Transient accept() failures survived by the accept loop.
     pub accept_errors: AtomicU64,
+    /// Cluster fan-out sub-requests that failed and were skipped —
+    /// each one a degraded partial merge (counted by the cluster
+    /// client, which owns its own registry).
+    pub node_errors: AtomicU64,
     /// When this metrics registry was created (service start).
     started: Instant,
 }
@@ -186,6 +190,7 @@ impl Default for Metrics {
             frame_errors: AtomicU64::new(0),
             busy_rejections: AtomicU64::new(0),
             accept_errors: AtomicU64::new(0),
+            node_errors: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -224,6 +229,8 @@ pub struct MetricsSnapshot {
     pub busy_rejections: u64,
     /// Accept failures survived.
     pub accept_errors: u64,
+    /// Cluster sub-requests skipped (degraded merges).
+    pub node_errors: u64,
     /// Mean rows per executed batch.
     pub mean_batch_fill: f64,
     /// Seconds since service start.
@@ -272,6 +279,7 @@ impl MetricsSnapshot {
             ("frame_errors", Json::Num(self.frame_errors as f64)),
             ("busy_rejections", Json::Num(self.busy_rejections as f64)),
             ("accept_errors", Json::Num(self.accept_errors as f64)),
+            ("node_errors", Json::Num(self.node_errors as f64)),
             ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
             ("uptime_s", Json::Num(self.uptime_s)),
         ])
@@ -299,6 +307,7 @@ impl Metrics {
             frame_errors: self.frame_errors.load(Ordering::Relaxed),
             busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
+            node_errors: self.node_errors.load(Ordering::Relaxed),
             mean_batch_fill: if batches == 0 {
                 0.0
             } else {

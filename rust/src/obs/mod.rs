@@ -86,7 +86,7 @@ impl Stage {
 }
 
 /// Number of request kinds ([`OpKind`] variants).
-pub const NUM_OPS: usize = 16;
+pub const NUM_OPS: usize = 17;
 
 /// Every request kind the wire protocols can carry — the label set for
 /// the per-op request counters and the `op` field of a trace.
@@ -124,6 +124,8 @@ pub enum OpKind {
     Trace = 14,
     /// `metrics`
     Metrics = 15,
+    /// `replicate`
+    Replicate = 16,
 }
 
 impl OpKind {
@@ -145,6 +147,7 @@ impl OpKind {
         OpKind::Stats,
         OpKind::Trace,
         OpKind::Metrics,
+        OpKind::Replicate,
     ];
 
     /// Stable wire/display name (matches the JSON protocol op strings).
@@ -166,6 +169,7 @@ impl OpKind {
             OpKind::Stats => "stats",
             OpKind::Trace => "trace",
             OpKind::Metrics => "metrics",
+            OpKind::Replicate => "replicate",
         }
     }
 

@@ -155,6 +155,12 @@ pub fn render(
         "Transient accept() failures survived.",
         m.accept_errors,
     );
+    counter(
+        &mut out,
+        "cminhash_node_errors_total",
+        "Cluster fan-out sub-requests skipped (degraded merges).",
+        m.node_errors,
+    );
     gauge(
         &mut out,
         "cminhash_mean_batch_fill",

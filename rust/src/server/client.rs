@@ -1,0 +1,1266 @@
+//! Client-side half of the wire protocol: the blocking single-node
+//! client used by examples, benches and tests, the JSONL bulk loader,
+//! and the **cluster client** that spreads a corpus over several
+//! independent server processes.
+//!
+//! Cluster model: every node is a complete single-node server (own
+//! store, own id space, own durability directory); nothing on the
+//! server side knows it is part of a cluster.  The client owns all
+//! cluster semantics:
+//!
+//! - **Routing** — each inserted row is assigned to exactly one node
+//!   by rendezvous (highest-random-weight) hashing: the row's content
+//!   key is mixed with every node's id key through the same SplitMix64
+//!   finalizer the sharded store uses, and the node with the maximal
+//!   mix wins.  Rendezvous hashing means adding a node only moves the
+//!   keys that node wins — there is no modulo reshuffle — and routing
+//!   is a pure function of (node ids, row content), so any client
+//!   instance with the same `cluster.json` routes identically.
+//! - **Fan-out queries** — queries go to every node (each holds a
+//!   disjoint slice of the corpus) and the per-node top-k lists are
+//!   merged per row under the same total order
+//!   [`crate::index::sort_neighbors`] uses, extended with the node id
+//!   as the final tiebreak — so an N=1 cluster reproduces a direct
+//!   single-node query exactly.
+//! - **Degraded merges** — a node that fails a sub-request (dead,
+//!   stalled past the read timeout, or answering garbage) is skipped:
+//!   the merge covers the nodes that answered, the outcome is flagged
+//!   [`degraded`](ClusterQuery::degraded) with the failed node ids
+//!   listed, and each skipped sub-request increments the client-owned
+//!   `node_errors` counter.  Only when **every** node fails does a
+//!   cluster call return an error.
+//!
+//! A stalled node is detected with a socket read timeout; once a
+//! timeout fires mid-response the stream position is untrustworthy, so
+//! the client drops that connection and redials on the node's next use.
+
+use super::frame;
+use super::protocol::{self, Request, Response, WireNeighbor};
+use crate::metrics::Metrics;
+use crate::sketch::SparseVec;
+use crate::store::mix64;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Everything a binary-mode client needs to sketch locally: a hasher
+/// rebuilt from the server's advertised scheme/dim/K/seed (schemes are
+/// deterministic, so lanes match the server bit-for-bit — the same
+/// guarantee offline sketching jobs rely on) plus the packing
+/// geometry.
+struct BinInfo {
+    hasher: Arc<dyn crate::sketch::Sketcher>,
+    dim: u32,
+    k: usize,
+    bits: u8,
+}
+
+impl BinInfo {
+    /// Sketch + mask + pack one vector exactly as the server would
+    /// have on a JSON insert.
+    fn pack(&self, v: &SparseVec) -> crate::Result<Vec<u64>> {
+        if v.dim() != self.dim {
+            return Err(crate::Error::ShapeMismatch {
+                what: "vector dim",
+                expected: self.dim as usize,
+                got: v.dim() as usize,
+            });
+        }
+        if v.nnz() == 0 {
+            return Err(crate::Error::Invalid("empty vector".into()));
+        }
+        let full = self.hasher.sketch_sparse(v.indices());
+        let mut out = vec![0u64; crate::sketch::packed_words(self.k, self.bits)];
+        crate::sketch::pack_row(&full, self.bits, &mut out);
+        Ok(out)
+    }
+}
+
+/// A minimal blocking client for examples/benches/tests.  Speaks JSON
+/// lines by default; [`BlockingClient::binary`] negotiates `bin1` and
+/// reroutes the conveniences through binary frames — inserts are
+/// sketched **client-side** with the hasher the server advertised and
+/// shipped as packed rows (the zero-copy ingest path).
+pub struct BlockingClient {
+    reader: BufReader<TcpStream>,
+    bin: Option<BinInfo>,
+}
+
+impl BlockingClient {
+    /// Connect to a running server (JSON-lines mode).
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(BlockingClient {
+            reader: BufReader::new(stream),
+            bin: None,
+        })
+    }
+
+    /// Set (or clear) the socket read timeout.  The cluster client
+    /// uses this to detect stalled peers: a node that accepts the
+    /// connection but never answers surfaces as a timed-out read
+    /// instead of hanging the whole fan-out forever.  After a timeout
+    /// fires mid-response the stream position is no longer
+    /// trustworthy — drop the client and reconnect.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> crate::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Negotiate `bin1` framing on this connection and build the local
+    /// hasher from the parameters the server advertised.  Errors if
+    /// the server declines (it stays on JSON and the connection
+    /// remains usable) or if negotiation already happened.
+    pub fn binary(&mut self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return Err(crate::Error::Invalid(
+                "connection is already in binary mode".into(),
+            ));
+        }
+        let hello = Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("proto", Json::str(frame::PROTO_NAME)),
+        ]);
+        let mut line = hello.to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        let j = Json::parse(&resp)?;
+        if !j.get("ok")?.as_bool()? {
+            return Err(crate::Error::Protocol(j.get("error")?.as_str()?.to_string()));
+        }
+        let proto = j.get("proto")?.as_str()?;
+        if proto != frame::PROTO_NAME {
+            return Err(crate::Error::Protocol(format!(
+                "server declined binary mode (answered proto {proto:?})"
+            )));
+        }
+        let scheme = crate::sketch::SketchScheme::parse(j.get("scheme")?.as_str()?)?;
+        let dim = j.get("dim")?.as_u32()?;
+        let k = j.get("k")?.as_usize()?;
+        let seed = j.get("seed")?.as_u64()?;
+        let bits = u8::try_from(j.get("bits")?.as_u32()?)
+            .map_err(|_| crate::Error::Protocol("advertised bits out of range".into()))?;
+        crate::sketch::check_sketch_bits(bits)?;
+        let hasher = scheme.build(dim as usize, k, seed)?;
+        self.bin = Some(BinInfo {
+            hasher,
+            dim,
+            k,
+            bits,
+        });
+        Ok(())
+    }
+
+    /// True once [`BlockingClient::binary`] has negotiated `bin1`.
+    pub fn is_binary(&self) -> bool {
+        self.bin.is_some()
+    }
+
+    /// Guard for the raw JSON entry points after a `bin1` switch.
+    fn reject_json_mode(&self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return Err(crate::Error::Invalid(
+                "connection negotiated bin1; raw JSON ops are unavailable (open \
+                 a second JSON connection for save/stats)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Send one request and read one response (JSON mode only).
+    pub fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        self.reject_json_mode()?;
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        Response::from_json(&Json::parse(&resp)?)
+    }
+
+    /// Send one request and return the raw JSON response line
+    /// (used for `stats`; JSON mode only).
+    pub fn call_raw(&mut self, req: &Request) -> crate::Result<Json> {
+        self.reject_json_mode()?;
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.reader.get_mut().write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(crate::Error::Shutdown);
+        }
+        Ok(Json::parse(&resp)?)
+    }
+
+    /// Send one binary request frame and read one response frame.
+    fn bin_call(&mut self, req: &frame::BinRequest) -> crate::Result<frame::BinResponse> {
+        debug_assert!(self.bin.is_some());
+        let (op, payload) = req.encode();
+        frame::FrameWriter::new(self.reader.get_mut())
+            .write_frame(op, &payload)
+            .map_err(crate::Error::from)?;
+        match frame::FrameReader::new(&mut self.reader)
+            .read_frame()
+            .map_err(crate::Error::from)?
+        {
+            None => Err(crate::Error::Shutdown),
+            Some((op, payload)) => {
+                frame::BinResponse::decode(op, &payload).map_err(crate::Error::from)
+            }
+        }
+    }
+
+    fn vecs(dim: u32, rows: Vec<Vec<u32>>) -> crate::Result<Vec<SparseVec>> {
+        rows.into_iter().map(|r| SparseVec::new(dim, r)).collect()
+    }
+
+    fn unexpected<T>(resp: impl std::fmt::Debug) -> crate::Result<T> {
+        Err(crate::Error::Protocol(format!(
+            "unexpected response {resp:?}"
+        )))
+    }
+
+    /// Convenience: liveness check (either mode).
+    pub fn ping(&mut self) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Ping)? {
+                frame::BinResponse::Pong => Ok(()),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: sketch a sparse vector.
+    pub fn sketch(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<Vec<u32>> {
+        let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Sketch(vec))? {
+                frame::BinResponse::Sketch(lanes) => Ok(lanes),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Sketch { vec })? {
+            Response::Sketch { sketch } => Ok(sketch),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: sketch many vectors in one round-trip.
+    pub fn sketch_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+    ) -> crate::Result<Vec<Vec<u32>>> {
+        let vecs = Self::vecs(dim, rows)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::SketchBatch(vecs))? {
+                frame::BinResponse::SketchBatch(sketches) => Ok(sketches),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::SketchBatch { vecs })? {
+            Response::SketchBatch { sketches } => Ok(sketches),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: insert a sparse vector.  In binary mode the row is
+    /// sketched and packed locally, then shipped as a one-row
+    /// `insert_packed` frame.
+    // `expect("checked")` follows the `self.bin.is_some()` test above it.
+    #[allow(clippy::disallowed_methods)]
+    pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
+        let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            let row = self.bin.as_ref().expect("checked").pack(&vec)?;
+            let mut ids = self.insert_packed(vec![row])?;
+            return match ids.pop() {
+                Some(id) if ids.is_empty() => Ok(id),
+                _ => Self::unexpected("insert_packed id count != 1"),
+            };
+        }
+        match self.call(&Request::Insert { vec })? {
+            Response::Insert { id, .. } => Ok(id),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: insert many vectors as one unit; returns the
+    /// assigned (consecutive) ids in row order.
+    pub fn insert_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+    ) -> crate::Result<Vec<u64>> {
+        self.insert_batch_vecs(Self::vecs(dim, rows)?)
+    }
+
+    /// Insert pre-validated vectors as one unit.  JSON mode sends
+    /// `insert_batch` (the server sketches); binary mode sketches and
+    /// packs every row locally and ships one `insert_packed` frame.
+    // `expect("checked")` follows the `self.bin.is_some()` test above it.
+    #[allow(clippy::disallowed_methods)]
+    pub fn insert_batch_vecs(&mut self, vecs: Vec<SparseVec>) -> crate::Result<Vec<u64>> {
+        if self.bin.is_some() {
+            let bin = self.bin.as_ref().expect("checked");
+            let rows = vecs
+                .iter()
+                .map(|v| bin.pack(v))
+                .collect::<crate::Result<Vec<_>>>()?;
+            return self.insert_packed(rows);
+        }
+        match self.call(&Request::InsertBatch { vecs })? {
+            Response::InsertBatch { ids } => Ok(ids),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Ship pre-packed sketch rows ([`crate::sketch::pack_row`] output
+    /// at the server's K and b, e.g. from an offline sketching job)
+    /// down the zero-copy ingest path.  Binary mode only.
+    pub fn insert_packed(&mut self, rows: Vec<Vec<u64>>) -> crate::Result<Vec<u64>> {
+        if self.bin.is_none() {
+            return Err(crate::Error::Invalid(
+                "insert_packed requires binary mode (call binary() first)".into(),
+            ));
+        }
+        let words_per_row = rows.first().map_or(0, Vec::len);
+        match self.bin_call(&frame::BinRequest::InsertPacked {
+            words_per_row,
+            rows,
+        })? {
+            frame::BinResponse::Ids(ids) => Ok(ids),
+            frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: delete a stored id.
+    pub fn delete(&mut self, id: u64) -> crate::Result<()> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Delete(id))? {
+                frame::BinResponse::Deleted(_) => Ok(()),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Delete { id })? {
+            Response::Deleted { .. } => Ok(()),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: estimate Ĵ between two stored ids (either mode).
+    pub fn estimate(&mut self, a: u64, b: u64) -> crate::Result<f64> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Estimate(a, b))? {
+                frame::BinResponse::Estimate(jhat) => Ok(jhat),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Estimate { a, b })? {
+            Response::Estimate { jhat } => Ok(jhat),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: top-k query (a one-row `query_batch` in binary
+    /// mode — binary keeps the batch surface only).
+    pub fn query(
+        &mut self,
+        dim: u32,
+        indices: Vec<u32>,
+        topk: usize,
+    ) -> crate::Result<Vec<WireNeighbor>> {
+        let vec = SparseVec::new(dim, indices)?;
+        if self.bin.is_some() {
+            let mut results = match self.bin_call(&frame::BinRequest::QueryBatch {
+                vecs: vec![vec],
+                topk,
+            })? {
+                frame::BinResponse::Results(results) => results,
+                frame::BinResponse::Err(error) => {
+                    return Err(crate::Error::Protocol(error))
+                }
+                other => return Self::unexpected(other),
+            };
+            return match results.pop() {
+                Some(ns) if results.is_empty() => Ok(ns),
+                _ => Self::unexpected("query result row count != 1"),
+            };
+        }
+        match self.call(&Request::Query { vec, topk })? {
+            Response::Query { neighbors } => Ok(neighbors),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: fetch up to `n` recent request traces, newest
+    /// first — or the pinned slow-trace FIFO when `pinned` is true
+    /// (either mode).
+    pub fn trace(
+        &mut self,
+        n: usize,
+        pinned: bool,
+    ) -> crate::Result<Vec<crate::obs::Trace>> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Trace { n, pinned })? {
+                frame::BinResponse::Trace(traces) => Ok(traces),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Trace { n, pinned })? {
+            Response::Trace { traces } => Ok(traces),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: fetch the server's Prometheus text exposition
+    /// (either mode).
+    pub fn metrics_text(&mut self) -> crate::Result<String> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Metrics)? {
+                frame::BinResponse::Metrics(text) => Ok(text),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: fetch the server's durable image — raw snapshot
+    /// bytes plus the WAL tail written since that snapshot — so a
+    /// fresh node can bootstrap from this one (either mode).  Errors
+    /// if the server runs without persistence.
+    pub fn replicate(&mut self) -> crate::Result<(Vec<u8>, Vec<u8>)> {
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::Replicate)? {
+                frame::BinResponse::Replicate { snapshot, wal } => Ok((snapshot, wal)),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::Replicate)? {
+            Response::Replicate { snapshot, wal } => Ok((snapshot, wal)),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+
+    /// Convenience: top-k queries for many vectors in one round-trip;
+    /// one neighbor list per row, in row order.
+    pub fn query_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+        topk: usize,
+    ) -> crate::Result<Vec<Vec<WireNeighbor>>> {
+        let vecs = Self::vecs(dim, rows)?;
+        if self.bin.is_some() {
+            return match self.bin_call(&frame::BinRequest::QueryBatch { vecs, topk })? {
+                frame::BinResponse::Results(results) => Ok(results),
+                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
+                other => Self::unexpected(other),
+            };
+        }
+        match self.call(&Request::QueryBatch { vecs, topk })? {
+            Response::QueryBatch { results } => Ok(results),
+            Response::Err { error } => Err(crate::Error::Protocol(error)),
+            other => Self::unexpected(other),
+        }
+    }
+}
+
+/// One member of a cluster: a stable id (the routing identity — it,
+/// not the address, is what rendezvous hashing keys on, so a node can
+/// move ports without reshuffling the corpus) and its `host:port`.
+#[derive(Clone, Debug)]
+pub struct ClusterNode {
+    /// Stable routing identity; must be unique within the cluster.
+    pub id: String,
+    /// The node's `host:port` listen address.
+    pub addr: String,
+}
+
+/// Cluster topology + client behavior, loaded from `configs/
+/// cluster.json`: `{"timeout_ms": 2000, "nodes": [{"id": "a",
+/// "addr": "127.0.0.1:7878"}, ...]}`.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Socket read timeout per sub-request in milliseconds; a node
+    /// that stays silent this long is treated as failed for the
+    /// current call.  `0` disables the timeout (a stalled node then
+    /// blocks its call forever — only sensible in controlled tests).
+    pub timeout_ms: u64,
+    /// The member nodes.  One node is a valid (if pointless) cluster
+    /// and behaves exactly like a direct single-node client.
+    pub nodes: Vec<ClusterNode>,
+}
+
+impl ClusterConfig {
+    /// Default per-sub-request read timeout when the file omits
+    /// `timeout_ms`.
+    pub const DEFAULT_TIMEOUT_MS: u64 = 2_000;
+
+    /// Parse and validate a topology document.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let timeout_ms = match j.get_opt("timeout_ms") {
+            Some(t) => t.as_u64()?,
+            None => Self::DEFAULT_TIMEOUT_MS,
+        };
+        let mut nodes = Vec::new();
+        for n in j.get("nodes")?.as_arr()? {
+            let id = n.get("id")?.as_str()?.to_string();
+            let addr = n.get("addr")?.as_str()?.to_string();
+            if id.is_empty() {
+                return Err(crate::Error::Invalid(
+                    "cluster node id must be non-empty".into(),
+                ));
+            }
+            nodes.push(ClusterNode { id, addr });
+        }
+        if nodes.is_empty() {
+            return Err(crate::Error::Invalid(
+                "cluster config needs at least one node".into(),
+            ));
+        }
+        for i in 1..nodes.len() {
+            if nodes[..i].iter().any(|n| n.id == nodes[i].id) {
+                return Err(crate::Error::Invalid(format!(
+                    "duplicate cluster node id {:?}",
+                    nodes[i].id
+                )));
+            }
+        }
+        Ok(ClusterConfig { timeout_ms, nodes })
+    }
+
+    /// Load and validate a topology file.
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?).map_err(|e| {
+            crate::Error::Invalid(format!("{}: {e}", path.display()))
+        })
+    }
+}
+
+/// A neighbor from a cluster query.  Ids are only unique **per node**
+/// (every node runs its own id assigner), so a cluster result carries
+/// the answering node's id alongside.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterNeighbor {
+    /// Id of the node holding this row.
+    pub node: String,
+    /// The row's id within that node.
+    pub id: u64,
+    /// Estimated Jaccard similarity.
+    pub score: f64,
+}
+
+/// Outcome of a cluster query fan-out.
+#[derive(Clone, Debug)]
+pub struct ClusterQuery {
+    /// Merged neighbor lists, one per query row, each under the
+    /// cluster total order (score desc, id asc, node id asc).
+    pub results: Vec<Vec<ClusterNeighbor>>,
+    /// True when at least one node failed and the merge is partial.
+    pub degraded: bool,
+    /// Ids of the nodes that failed this call, in topology order.
+    pub failed_nodes: Vec<String>,
+}
+
+/// Outcome of a cluster batched insert.
+#[derive(Clone, Debug)]
+pub struct ClusterInsert {
+    /// Per input row (in order): the owning node's id and the id it
+    /// assigned, or `None` when the owner was down and the row was
+    /// skipped.
+    pub ids: Vec<Option<(String, u64)>>,
+    /// Rows actually inserted (`ids` entries that are `Some`).
+    pub inserted: u64,
+    /// True when at least one owning node failed and rows were skipped.
+    pub degraded: bool,
+    /// Ids of the nodes that failed this call, in topology order.
+    pub failed_nodes: Vec<String>,
+}
+
+/// FNV-1a 64-bit over a byte stream — the content hash rendezvous
+/// routing feeds into [`mix64`].
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content key of one vector: dim plus every index, order-sensitive
+/// (SparseVec indices are validated strictly increasing, so equal sets
+/// hash equal).
+fn row_key(v: &SparseVec) -> u64 {
+    let mut bytes = Vec::with_capacity(4 + v.indices().len() * 4);
+    bytes.extend_from_slice(&v.dim().to_le_bytes());
+    for &i in v.indices() {
+        bytes.extend_from_slice(&i.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// Rendezvous (highest-random-weight) choice: every node scores
+/// `mix64(node_key ^ key)` and the highest score wins, with the lower
+/// node index breaking (astronomically unlikely) ties.
+fn rendezvous(node_keys: &[u64], key: u64) -> usize {
+    let mut best = 0usize;
+    let mut best_score = 0u64;
+    for (i, &nk) in node_keys.iter().enumerate() {
+        let score = mix64(nk ^ key);
+        if i == 0 || score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
+/// Sort one merged result row under the cluster total order: the
+/// [`crate::index::sort_neighbors`] order (score desc, id asc)
+/// extended with the node id as the final tiebreak, so merged output
+/// is deterministic no matter which node answered first.
+fn sort_cluster_neighbors(xs: &mut [ClusterNeighbor]) {
+    xs.sort_by(|x, y| {
+        y.score
+            .total_cmp(&x.score)
+            .then(x.id.cmp(&y.id))
+            .then(x.node.cmp(&y.node))
+    });
+}
+
+/// Client-side cluster coordinator: routes inserts by rendezvous
+/// hashing, fans queries out to every node, merges deterministically,
+/// and degrades gracefully when members die (see the module docs).
+/// Connections are dialed lazily per node and redialed after any
+/// failure; the client owns its own [`Metrics`] registry, whose
+/// `node_errors` counter tallies skipped sub-requests.
+pub struct ClusterClient {
+    nodes: Vec<ClusterNode>,
+    node_keys: Vec<u64>,
+    conns: Vec<Option<BlockingClient>>,
+    timeout: Option<Duration>,
+    metrics: Arc<Metrics>,
+}
+
+impl ClusterClient {
+    /// Build a client over a validated topology.  No sockets are
+    /// opened yet — each node is dialed on first use, so a dead member
+    /// costs its own sub-requests only.
+    pub fn connect(cfg: ClusterConfig) -> crate::Result<Self> {
+        let node_keys = cfg
+            .nodes
+            .iter()
+            .map(|n| fnv1a64(n.id.as_bytes()))
+            .collect();
+        let conns = cfg.nodes.iter().map(|_| None).collect();
+        Ok(ClusterClient {
+            nodes: cfg.nodes,
+            node_keys,
+            conns,
+            timeout: (cfg.timeout_ms > 0).then(|| Duration::from_millis(cfg.timeout_ms)),
+            metrics: Arc::new(Metrics::default()),
+        })
+    }
+
+    /// Number of member nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The id of node `i` (topology order).
+    pub fn node_id(&self, i: usize) -> &str {
+        &self.nodes[i].id
+    }
+
+    /// The client-owned metrics registry (`node_errors` lives here).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Which node owns a row with these contents.
+    pub fn route(&self, dim: u32, indices: &[u32]) -> crate::Result<usize> {
+        let v = SparseVec::new(dim, indices.to_vec())?;
+        Ok(rendezvous(&self.node_keys, row_key(&v)))
+    }
+
+    /// Lazily dial node `i` (with the read timeout applied).
+    fn conn(&mut self, i: usize) -> crate::Result<&mut BlockingClient> {
+        if self.conns[i].is_none() {
+            let mut c = BlockingClient::connect(&self.nodes[i].addr)?;
+            c.set_read_timeout(self.timeout)?;
+            self.conns[i] = Some(c);
+        }
+        // just ensured above; the ok_or_else can never fire
+        self.conns[i].as_mut().ok_or(crate::Error::Shutdown)
+    }
+
+    /// Run one sub-request against node `i`.  Any failure (dial,
+    /// timeout, I/O, protocol) drops that node's connection — a
+    /// timed-out stream is at an unknown position — and bumps
+    /// `node_errors`; the caller decides whether the whole call
+    /// degrades or fails.
+    fn try_node<T>(
+        &mut self,
+        i: usize,
+        f: impl FnOnce(&mut BlockingClient) -> crate::Result<T>,
+    ) -> crate::Result<T> {
+        let r = match self.conn(i) {
+            Ok(c) => f(c),
+            Err(e) => Err(e),
+        };
+        if r.is_err() {
+            self.conns[i] = None;
+            Metrics::inc(&self.metrics.node_errors);
+        }
+        r
+    }
+
+    /// Insert a batch of rows, each routed to its rendezvous owner and
+    /// shipped in one per-node `insert_batch` sub-request.  Rows owned
+    /// by a failed node are skipped (their `ids` slots stay `None`)
+    /// and the outcome is flagged degraded; the call only errors when
+    /// the input itself is invalid or **every** involved node failed.
+    pub fn insert_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+    ) -> crate::Result<ClusterInsert> {
+        let vecs: Vec<SparseVec> = rows
+            .into_iter()
+            .map(|r| SparseVec::new(dim, r))
+            .collect::<crate::Result<_>>()?;
+        let n = self.nodes.len();
+        let mut per_node: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+        for (slot, v) in vecs.iter().enumerate() {
+            per_node[rendezvous(&self.node_keys, row_key(v))].push(slot);
+        }
+        let mut vecs: Vec<Option<SparseVec>> = vecs.into_iter().map(Some).collect();
+        let mut out = ClusterInsert {
+            ids: (0..vecs.len()).map(|_| None).collect(),
+            inserted: 0,
+            degraded: false,
+            failed_nodes: Vec::new(),
+        };
+        let mut answered = 0usize;
+        let mut involved = 0usize;
+        for (node, slots) in per_node.iter().enumerate() {
+            if slots.is_empty() {
+                continue;
+            }
+            involved += 1;
+            let batch: Vec<SparseVec> =
+                slots.iter().filter_map(|&s| vecs[s].take()).collect();
+            match self.try_node(node, |c| c.insert_batch_vecs(batch)) {
+                Ok(ids) if ids.len() == slots.len() => {
+                    answered += 1;
+                    for (&slot, id) in slots.iter().zip(ids) {
+                        out.ids[slot] = Some((self.nodes[node].id.clone(), id));
+                        out.inserted += 1;
+                    }
+                }
+                Ok(_) => {
+                    // wrong id count is a node fault, not an input fault
+                    self.conns[node] = None;
+                    Metrics::inc(&self.metrics.node_errors);
+                    out.degraded = true;
+                    out.failed_nodes.push(self.nodes[node].id.clone());
+                }
+                Err(_) => {
+                    out.degraded = true;
+                    out.failed_nodes.push(self.nodes[node].id.clone());
+                }
+            }
+        }
+        if involved > 0 && answered == 0 {
+            return Err(crate::Error::Protocol(format!(
+                "all {involved} involved cluster nodes failed the insert"
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Top-k queries for a batch of rows: every node answers for its
+    /// slice of the corpus, and the per-row partial lists are merged
+    /// under the cluster total order.  A failed node is skipped and
+    /// the outcome flagged degraded; only all nodes failing is an
+    /// error.
+    pub fn query_batch(
+        &mut self,
+        dim: u32,
+        rows: Vec<Vec<u32>>,
+        topk: usize,
+    ) -> crate::Result<ClusterQuery> {
+        // validate input once up front — input faults are the
+        // caller's, never a degraded merge
+        let _ = BlockingClient::vecs(dim, rows.clone())?;
+        let nrows = rows.len();
+        let mut out = ClusterQuery {
+            results: (0..nrows).map(|_| Vec::new()).collect(),
+            degraded: false,
+            failed_nodes: Vec::new(),
+        };
+        let mut answered = 0usize;
+        for node in 0..self.nodes.len() {
+            let rows = rows.clone();
+            match self.try_node(node, |c| c.query_batch(dim, rows, topk)) {
+                Ok(results) if results.len() == nrows => {
+                    answered += 1;
+                    for (row, ns) in results.into_iter().enumerate() {
+                        out.results[row].extend(ns.into_iter().map(|n| {
+                            ClusterNeighbor {
+                                node: self.nodes[node].id.clone(),
+                                id: n.id,
+                                score: n.score,
+                            }
+                        }));
+                    }
+                }
+                Ok(_) => {
+                    self.conns[node] = None;
+                    Metrics::inc(&self.metrics.node_errors);
+                    out.degraded = true;
+                    out.failed_nodes.push(self.nodes[node].id.clone());
+                }
+                Err(_) => {
+                    out.degraded = true;
+                    out.failed_nodes.push(self.nodes[node].id.clone());
+                }
+            }
+        }
+        if answered == 0 {
+            return Err(crate::Error::Protocol(format!(
+                "all {} cluster nodes failed the query",
+                self.nodes.len()
+            )));
+        }
+        for merged in &mut out.results {
+            sort_cluster_neighbors(merged);
+            merged.truncate(topk);
+        }
+        Ok(out)
+    }
+
+    /// Top-k query for one row (a one-row [`ClusterClient::query_batch`]).
+    pub fn query(
+        &mut self,
+        dim: u32,
+        indices: Vec<u32>,
+        topk: usize,
+    ) -> crate::Result<(Vec<ClusterNeighbor>, bool, Vec<String>)> {
+        let mut q = self.query_batch(dim, vec![indices], topk)?;
+        match q.results.pop() {
+            Some(ns) if q.results.is_empty() => Ok((ns, q.degraded, q.failed_nodes)),
+            _ => Err(crate::Error::Protocol(
+                "cluster query returned wrong row count".into(),
+            )),
+        }
+    }
+
+    /// Fetch node `i`'s durable image (snapshot + WAL tail) for
+    /// bootstrapping a fresh member.  A replicate fault is a hard
+    /// error — there is nothing to degrade to — but still counts in
+    /// `node_errors` and drops the connection like any other failure.
+    pub fn replicate_from(&mut self, i: usize) -> crate::Result<(Vec<u8>, Vec<u8>)> {
+        self.try_node(i, BlockingClient::replicate)
+    }
+}
+
+/// Cumulative progress of a [`load_jsonl`] bulk ingest.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    /// Vector rows inserted so far.
+    pub rows: u64,
+    /// `insert_batch` round-trips issued so far.
+    pub batches: u64,
+    /// Wall-clock seconds elapsed.
+    pub secs: f64,
+}
+
+impl LoadReport {
+    /// Ingest throughput in rows per second (0 before the clock moves).
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.rows as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Stream a JSONL vector file — one `{"dim":D,"indices":[...]}` object
+/// per line, blank lines skipped — into a running server through
+/// `insert_batch` round-trips of up to `batch_size` rows.  `progress`
+/// is called after every round-trip with cumulative counts (the CLI
+/// prints a throughput line from it).  Ingest is sequential over one
+/// connection; a bad line or a rejected batch aborts with an error
+/// naming the offending line.
+pub fn load_jsonl(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    load_jsonl_with(addr, path, batch_size, false, progress)
+}
+
+/// Same as [`load_jsonl`], but negotiates `bin1` first: every batch is
+/// sketched and packed **client-side** and shipped as one
+/// `insert_packed` frame, so the server's ingest work per row is a
+/// checksum verification plus a copy into the packed arena.  Results
+/// are identical to the JSON path — the client's hasher is rebuilt
+/// from the parameters the server advertised at negotiation.
+pub fn load_jsonl_binary(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    load_jsonl_with(addr, path, batch_size, true, progress)
+}
+
+fn load_jsonl_with(
+    addr: &str,
+    path: &std::path::Path,
+    batch_size: usize,
+    binary: bool,
+    mut progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    if batch_size == 0 {
+        return Err(crate::Error::Invalid("batch size must be > 0".into()));
+    }
+    if batch_size > protocol::MAX_WIRE_BATCH {
+        return Err(crate::Error::Invalid(format!(
+            "batch size {batch_size} exceeds the wire cap of {} rows per \
+             request",
+            protocol::MAX_WIRE_BATCH
+        )));
+    }
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut client = BlockingClient::connect(addr)?;
+    if binary {
+        client.binary()?;
+    }
+    let t0 = Instant::now();
+    let mut report = LoadReport {
+        rows: 0,
+        batches: 0,
+        secs: 0.0,
+    };
+    let mut pending: Vec<SparseVec> = Vec::with_capacity(batch_size);
+    let mut first_line = 0usize; // 1-based line number of pending[0]
+    let mut flush = |pending: &mut Vec<SparseVec>,
+                     report: &mut LoadReport,
+                     client: &mut BlockingClient,
+                     first_line: usize|
+     -> crate::Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let n = pending.len();
+        let ids = client
+            .insert_batch_vecs(std::mem::take(pending))
+            .map_err(|e| {
+                crate::Error::Protocol(format!(
+                    "batch starting at line {first_line} rejected: {e}"
+                ))
+            })?;
+        if ids.len() != n {
+            return Err(crate::Error::Protocol(format!(
+                "insert returned {} ids for {n} rows",
+                ids.len()
+            )));
+        }
+        report.rows += n as u64;
+        report.batches += 1;
+        report.secs = t0.elapsed().as_secs_f64();
+        Ok(())
+    };
+    for (idx, line) in reader.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(&line)
+            .map_err(crate::Error::from)
+            .and_then(|j| SparseVec::from_json(&j))
+            .map_err(|e| {
+                crate::Error::Invalid(format!("{}:{lineno}: {e}", path.display()))
+            })?;
+        if pending.is_empty() {
+            first_line = lineno;
+        }
+        pending.push(parsed);
+        if pending.len() == batch_size {
+            flush(&mut pending, &mut report, &mut client, first_line)?;
+            progress(&report);
+        }
+    }
+    if !pending.is_empty() {
+        flush(&mut pending, &mut report, &mut client, first_line)?;
+        progress(&report);
+    }
+    report.secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Stream a JSONL vector file into a **cluster**: rows are read in
+/// `batch_size` chunks and each chunk goes through
+/// [`ClusterClient::insert_batch`], which splits it into per-node
+/// sub-batches by rendezvous routing.  Rows skipped by degraded
+/// inserts are *not* counted in the report's `rows`; `progress` sees
+/// cumulative inserted counts.  Errors only on bad input or when a
+/// whole chunk finds every involved node dead.
+pub fn load_jsonl_cluster(
+    cfg: ClusterConfig,
+    path: &std::path::Path,
+    batch_size: usize,
+    mut progress: impl FnMut(&LoadReport),
+) -> crate::Result<LoadReport> {
+    if batch_size == 0 {
+        return Err(crate::Error::Invalid("batch size must be > 0".into()));
+    }
+    if batch_size > protocol::MAX_WIRE_BATCH {
+        return Err(crate::Error::Invalid(format!(
+            "batch size {batch_size} exceeds the wire cap of {} rows per \
+             request",
+            protocol::MAX_WIRE_BATCH
+        )));
+    }
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut client = ClusterClient::connect(cfg)?;
+    let t0 = Instant::now();
+    let mut report = LoadReport {
+        rows: 0,
+        batches: 0,
+        secs: 0.0,
+    };
+    let mut pending: Vec<Vec<u32>> = Vec::with_capacity(batch_size);
+    let mut dim: u32 = 0;
+    let mut first_line = 0usize;
+    let mut flush = |pending: &mut Vec<Vec<u32>>,
+                     report: &mut LoadReport,
+                     client: &mut ClusterClient,
+                     dim: u32,
+                     first_line: usize|
+     -> crate::Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let out = client
+            .insert_batch(dim, std::mem::take(pending))
+            .map_err(|e| {
+                crate::Error::Protocol(format!(
+                    "batch starting at line {first_line} rejected: {e}"
+                ))
+            })?;
+        report.rows += out.inserted;
+        report.batches += 1;
+        report.secs = t0.elapsed().as_secs_f64();
+        Ok(())
+    };
+    for (idx, line) in reader.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(&line)
+            .map_err(crate::Error::from)
+            .and_then(|j| SparseVec::from_json(&j))
+            .map_err(|e| {
+                crate::Error::Invalid(format!("{}:{lineno}: {e}", path.display()))
+            })?;
+        if pending.is_empty() {
+            first_line = lineno;
+            dim = parsed.dim();
+        }
+        pending.push(parsed.indices().to_vec());
+        if pending.len() == batch_size {
+            flush(&mut pending, &mut report, &mut client, dim, first_line)?;
+            progress(&report);
+        }
+    }
+    if !pending.is_empty() {
+        flush(&mut pending, &mut report, &mut client, dim, first_line)?;
+        progress(&report);
+    }
+    report.secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests assert freely
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_report_throughput() {
+        let r = LoadReport {
+            rows: 100,
+            batches: 2,
+            secs: 4.0,
+        };
+        assert_eq!(r.rows_per_sec(), 25.0);
+        let r = LoadReport {
+            rows: 0,
+            batches: 0,
+            secs: 0.0,
+        };
+        assert_eq!(r.rows_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn cluster_config_parses_and_validates() {
+        let j = Json::parse(
+            r#"{"timeout_ms": 250, "nodes": [
+                {"id": "a", "addr": "127.0.0.1:7878"},
+                {"id": "b", "addr": "127.0.0.1:7879"}]}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.timeout_ms, 250);
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.nodes[1].id, "b");
+
+        // timeout defaults when omitted
+        let j = Json::parse(r#"{"nodes": [{"id": "a", "addr": "x:1"}]}"#).unwrap();
+        assert_eq!(
+            ClusterConfig::from_json(&j).unwrap().timeout_ms,
+            ClusterConfig::DEFAULT_TIMEOUT_MS
+        );
+
+        // rejected: empty node list, duplicate ids, empty id
+        for bad in [
+            r#"{"nodes": []}"#,
+            r#"{"nodes": [{"id": "a", "addr": "x:1"}, {"id": "a", "addr": "x:2"}]}"#,
+            r#"{"nodes": [{"id": "", "addr": "x:1"}]}"#,
+        ] {
+            assert!(
+                ClusterConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn rendezvous_routing_is_deterministic_and_covers_all_nodes() {
+        let node_keys: Vec<u64> =
+            ["a", "b", "c", "d"].iter().map(|s| fnv1a64(s.as_bytes())).collect();
+        let mut owned = vec![0u32; node_keys.len()];
+        for key in 0..4096u64 {
+            let first = rendezvous(&node_keys, mix64(key));
+            // pure function of (node keys, row key)
+            assert_eq!(rendezvous(&node_keys, mix64(key)), first);
+            owned[first] += 1;
+        }
+        // 4096 keys over 4 nodes: every node owns a meaningful share
+        for (i, &n) in owned.iter().enumerate() {
+            assert!(n > 512, "node {i} owns only {n} of 4096 keys");
+        }
+    }
+
+    #[test]
+    fn rendezvous_only_moves_keys_the_new_node_wins() {
+        // growing the topology must never move a key between two
+        // pre-existing nodes — that is the point of rendezvous hashing
+        let three: Vec<u64> =
+            ["a", "b", "c"].iter().map(|s| fnv1a64(s.as_bytes())).collect();
+        let four: Vec<u64> =
+            ["a", "b", "c", "d"].iter().map(|s| fnv1a64(s.as_bytes())).collect();
+        let mut moved_to_new = 0u32;
+        for key in 0..2048u64 {
+            let before = rendezvous(&three, mix64(key));
+            let after = rendezvous(&four, mix64(key));
+            if before != after {
+                assert_eq!(after, 3, "key moved between pre-existing nodes");
+                moved_to_new += 1;
+            }
+        }
+        // the new node won roughly a quarter of the keyspace
+        assert!(moved_to_new > 256, "new node won only {moved_to_new} keys");
+    }
+
+    #[test]
+    fn row_key_depends_on_content() {
+        let v1 = SparseVec::new(64, vec![1, 5, 9]).unwrap();
+        let v2 = SparseVec::new(64, vec![1, 5, 9]).unwrap();
+        let v3 = SparseVec::new(64, vec![1, 5, 10]).unwrap();
+        let v4 = SparseVec::new(128, vec![1, 5, 9]).unwrap();
+        assert_eq!(row_key(&v1), row_key(&v2));
+        assert_ne!(row_key(&v1), row_key(&v3));
+        assert_ne!(row_key(&v1), row_key(&v4), "dim is part of the key");
+    }
+
+    #[test]
+    fn cluster_merge_order_is_total_and_deterministic() {
+        let n = |node: &str, id: u64, score: f64| ClusterNeighbor {
+            node: node.into(),
+            id,
+            score,
+        };
+        let mut xs = vec![
+            n("b", 7, 0.5),
+            n("a", 7, 0.5),  // same score+id: node id breaks the tie
+            n("a", 3, 0.5),  // same score: lower id first
+            n("c", 99, 0.9), // higher score first
+            n("a", 1, 0.1),
+        ];
+        sort_cluster_neighbors(&mut xs);
+        assert_eq!(
+            xs,
+            vec![
+                n("c", 99, 0.9),
+                n("a", 3, 0.5),
+                n("a", 7, 0.5),
+                n("b", 7, 0.5),
+                n("a", 1, 0.1),
+            ]
+        );
+    }
+}

@@ -72,6 +72,9 @@ pub mod op {
     pub const TRACE: u8 = 0x08;
     /// Fetch the Prometheus text exposition.
     pub const METRICS: u8 = 0x09;
+    /// Export the node's durable image (snapshot + WAL tail) for a
+    /// joining cluster peer; empty payload.
+    pub const REPLICATE: u8 = 0x0A;
     /// Failure reply; payload is the UTF-8 error message.
     pub const R_ERR: u8 = 0x80;
     /// Ping reply; empty payload.
@@ -92,6 +95,9 @@ pub mod op {
     pub const R_TRACE: u8 = 0x88;
     /// Metrics reply: UTF-8 Prometheus exposition text.
     pub const R_METRICS: u8 = 0x89;
+    /// Replicate reply: `snap_len:u64 | snapshot bytes | WAL bytes`
+    /// (the WAL stream is the remainder of the payload).
+    pub const R_REPLICATE: u8 = 0x8A;
 }
 
 /// Everything that can go wrong reading, writing, or decoding a frame.
@@ -437,6 +443,8 @@ pub enum BinRequest {
     },
     /// Fetch the Prometheus text exposition.
     Metrics,
+    /// Export the node's durable image for a joining cluster peer.
+    Replicate,
 }
 
 impl BinRequest {
@@ -493,6 +501,7 @@ impl BinRequest {
                 op::TRACE
             }
             BinRequest::Metrics => op::METRICS,
+            BinRequest::Replicate => op::REPLICATE,
         };
         (op, p)
     }
@@ -541,6 +550,7 @@ impl BinRequest {
                 pinned: c.u8()? != 0,
             },
             op::METRICS => BinRequest::Metrics,
+            op::REPLICATE => BinRequest::Replicate,
             other => return Err(FrameError::UnknownOp(other)),
         };
         c.finish()?;
@@ -574,6 +584,13 @@ pub enum BinResponse {
     Trace(Vec<crate::obs::Trace>),
     /// Metrics result: the UTF-8 Prometheus exposition text.
     Metrics(String),
+    /// Replicate result: the node's durable image for a joining peer.
+    Replicate {
+        /// Raw snapshot bytes (a complete `CMHSNAP*` image).
+        snapshot: Vec<u8>,
+        /// Raw WAL-tail bytes (a whole, well-formed record sequence).
+        wal: Vec<u8>,
+    },
 }
 
 impl BinResponse {
@@ -640,6 +657,12 @@ impl BinResponse {
             BinResponse::Metrics(text) => {
                 p.extend_from_slice(text.as_bytes());
                 op::R_METRICS
+            }
+            BinResponse::Replicate { snapshot, wal } => {
+                put_u64(&mut p, snapshot.len() as u64);
+                p.extend_from_slice(snapshot);
+                p.extend_from_slice(wal);
+                op::R_REPLICATE
             }
         };
         (op, p)
@@ -723,6 +746,23 @@ impl BinResponse {
                 String::from_utf8(c.rest().to_vec())
                     .map_err(|_| FrameError::Malformed("metrics text is not UTF-8".into()))?,
             ),
+            op::R_REPLICATE => {
+                // snap_len must fit the payload it was declared in; a
+                // count past the frame's own end is corruption, not a
+                // bigger allocation.
+                let declared = c.u64()?;
+                let snap_len = usize::try_from(declared).map_err(|_| {
+                    FrameError::Malformed(format!(
+                        "replicate snapshot length {declared} overflows"
+                    ))
+                })?;
+                c.need(snap_len)?;
+                let rest = c.rest();
+                BinResponse::Replicate {
+                    snapshot: rest[..snap_len].to_vec(),
+                    wal: rest[snap_len..].to_vec(),
+                }
+            }
             other => return Err(FrameError::UnknownOp(other)),
         };
         c.finish()?;
@@ -775,6 +815,7 @@ mod tests {
                 pinned: false,
             },
             BinRequest::Metrics,
+            BinRequest::Replicate,
         ] {
             assert_eq!(roundtrip_req(req.clone()), req);
         }
@@ -814,9 +855,33 @@ mod tests {
             ]),
             BinResponse::Trace(vec![]),
             BinResponse::Metrics("# TYPE cminhash_requests_total counter\n".into()),
+            BinResponse::Replicate {
+                snapshot: vec![0x43, 0x4D, 0x48, 0x00, 0xFF],
+                wal: vec![1, 2, 3],
+            },
+            BinResponse::Replicate {
+                snapshot: vec![],
+                wal: vec![],
+            },
         ] {
             assert_eq!(roundtrip_resp(resp.clone()), resp);
         }
+    }
+
+    #[test]
+    fn replicate_replies_with_oversized_snap_len_are_malformed() {
+        // snap_len claims more bytes than the payload carries
+        let mut p = Vec::new();
+        put_u64(&mut p, 100);
+        p.extend_from_slice(&[0u8; 10]);
+        match BinResponse::decode(op::R_REPLICATE, &p) {
+            Err(FrameError::Malformed(msg)) => assert!(msg.contains("ends early"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // and a u64 that can't even fit in usize on any target
+        let mut p = Vec::new();
+        put_u64(&mut p, u64::MAX);
+        assert!(BinResponse::decode(op::R_REPLICATE, &p).is_err());
     }
 
     #[test]

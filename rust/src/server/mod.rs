@@ -1,6 +1,7 @@
 //! TCP server speaking the JSON-line protocol over a **bounded worker
-//! pool**, plus a small blocking client used by examples, benches and
-//! tests, and a JSONL bulk loader streaming through `insert_batch`.
+//! pool**.  The client-side half — the blocking single-node client,
+//! the JSONL bulk loaders, and the cluster client that spreads a
+//! corpus over several of these servers — lives in [`client`].
 //!
 //! Every connection starts on JSON lines; a client may send one
 //! `{"op":"hello","proto":"bin1"}` line to switch the rest of the
@@ -26,13 +27,18 @@
 //! listening; only a listener-is-gone class error (`EBADF`/`EINVAL`)
 //! stops it.
 
+pub mod client;
 pub mod frame;
 pub mod protocol;
+
+pub use client::{
+    load_jsonl, load_jsonl_binary, load_jsonl_cluster, BlockingClient, ClusterClient,
+    ClusterConfig, ClusterInsert, ClusterNeighbor, ClusterNode, ClusterQuery, LoadReport,
+};
 
 use crate::coordinator::Coordinator;
 use crate::metrics::Metrics;
 use crate::obs::{add_stage_us, stage, OpKind, RequestGuard, Stage};
-use crate::sketch::SparseVec;
 use crate::util::json::Json;
 use protocol::{Request, Response, WireNeighbor};
 use std::io::{BufRead, BufReader, Write};
@@ -309,6 +315,7 @@ fn op_kind(req: &Request) -> OpKind {
         Request::Stats => OpKind::Stats,
         Request::Trace { .. } => OpKind::Trace,
         Request::Metrics => OpKind::Metrics,
+        Request::Replicate => OpKind::Replicate,
     }
 }
 
@@ -550,6 +557,10 @@ fn dispatch(svc: &Arc<Coordinator>, req: Request) -> Response {
                     ),
                 }
             }
+            Request::Replicate => {
+                let (snapshot, wal) = svc.replicate_export()?;
+                Response::Replicate { snapshot, wal }
+            }
         })
     })();
     match result {
@@ -576,6 +587,7 @@ fn bin_of(resp: Response) -> frame::BinResponse {
         Response::QueryBatch { results } => B::Results(results),
         Response::Trace { traces } => B::Trace(traces),
         Response::Metrics { text } => B::Metrics(text),
+        Response::Replicate { snapshot, wal } => B::Replicate { snapshot, wal },
         // the remaining variants have no binary request that produces
         // them; reaching this arm is a server-side dispatch bug
         other => B::Err(format!("unexpected internal response {other:?}")),
@@ -595,6 +607,7 @@ fn bin_op_kind(req: &frame::BinRequest) -> OpKind {
         B::Estimate(..) => OpKind::Estimate,
         B::Trace { .. } => OpKind::Trace,
         B::Metrics => OpKind::Metrics,
+        B::Replicate => OpKind::Replicate,
     }
 }
 
@@ -637,6 +650,7 @@ fn dispatch_binary(svc: &Arc<Coordinator>, req: frame::BinRequest) -> frame::Bin
         B::Estimate(a, b) => bin_of(dispatch(svc, Request::Estimate { a, b })),
         B::Trace { n, pinned } => bin_of(dispatch(svc, Request::Trace { n, pinned })),
         B::Metrics => bin_of(dispatch(svc, Request::Metrics)),
+        B::Replicate => bin_of(dispatch(svc, Request::Replicate)),
         B::InsertPacked { rows, .. } => match svc.insert_packed_many(rows) {
             Ok(ids) => frame::BinResponse::Ids(ids),
             Err(e) => {
@@ -645,577 +659,6 @@ fn dispatch_binary(svc: &Arc<Coordinator>, req: frame::BinRequest) -> frame::Bin
             }
         },
     }
-}
-
-/// Everything a binary-mode client needs to sketch locally: a hasher
-/// rebuilt from the server's advertised scheme/dim/K/seed (schemes are
-/// deterministic, so lanes match the server bit-for-bit — the same
-/// guarantee offline sketching jobs rely on) plus the packing
-/// geometry.
-struct BinInfo {
-    hasher: Arc<dyn crate::sketch::Sketcher>,
-    dim: u32,
-    k: usize,
-    bits: u8,
-}
-
-impl BinInfo {
-    /// Sketch + mask + pack one vector exactly as the server would
-    /// have on a JSON insert.
-    fn pack(&self, v: &SparseVec) -> crate::Result<Vec<u64>> {
-        if v.dim() != self.dim {
-            return Err(crate::Error::ShapeMismatch {
-                what: "vector dim",
-                expected: self.dim as usize,
-                got: v.dim() as usize,
-            });
-        }
-        if v.nnz() == 0 {
-            return Err(crate::Error::Invalid("empty vector".into()));
-        }
-        let full = self.hasher.sketch_sparse(v.indices());
-        let mut out = vec![0u64; crate::sketch::packed_words(self.k, self.bits)];
-        crate::sketch::pack_row(&full, self.bits, &mut out);
-        Ok(out)
-    }
-}
-
-/// A minimal blocking client for examples/benches/tests.  Speaks JSON
-/// lines by default; [`BlockingClient::binary`] negotiates `bin1` and
-/// reroutes the conveniences through binary frames — inserts are
-/// sketched **client-side** with the hasher the server advertised and
-/// shipped as packed rows (the zero-copy ingest path).
-pub struct BlockingClient {
-    reader: BufReader<TcpStream>,
-    bin: Option<BinInfo>,
-}
-
-impl BlockingClient {
-    /// Connect to a running server (JSON-lines mode).
-    pub fn connect(addr: &str) -> crate::Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(BlockingClient {
-            reader: BufReader::new(stream),
-            bin: None,
-        })
-    }
-
-    /// Negotiate `bin1` framing on this connection and build the local
-    /// hasher from the parameters the server advertised.  Errors if
-    /// the server declines (it stays on JSON and the connection
-    /// remains usable) or if negotiation already happened.
-    pub fn binary(&mut self) -> crate::Result<()> {
-        if self.bin.is_some() {
-            return Err(crate::Error::Invalid(
-                "connection is already in binary mode".into(),
-            ));
-        }
-        let hello = Json::obj(vec![
-            ("op", Json::str("hello")),
-            ("proto", Json::str(frame::PROTO_NAME)),
-        ]);
-        let mut line = hello.to_string();
-        line.push('\n');
-        self.reader.get_mut().write_all(line.as_bytes())?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        if resp.is_empty() {
-            return Err(crate::Error::Shutdown);
-        }
-        let j = Json::parse(&resp)?;
-        if !j.get("ok")?.as_bool()? {
-            return Err(crate::Error::Protocol(j.get("error")?.as_str()?.to_string()));
-        }
-        let proto = j.get("proto")?.as_str()?;
-        if proto != frame::PROTO_NAME {
-            return Err(crate::Error::Protocol(format!(
-                "server declined binary mode (answered proto {proto:?})"
-            )));
-        }
-        let scheme = crate::sketch::SketchScheme::parse(j.get("scheme")?.as_str()?)?;
-        let dim = j.get("dim")?.as_u32()?;
-        let k = j.get("k")?.as_usize()?;
-        let seed = j.get("seed")?.as_u64()?;
-        let bits = u8::try_from(j.get("bits")?.as_u32()?)
-            .map_err(|_| crate::Error::Protocol("advertised bits out of range".into()))?;
-        crate::sketch::check_sketch_bits(bits)?;
-        let hasher = scheme.build(dim as usize, k, seed)?;
-        self.bin = Some(BinInfo {
-            hasher,
-            dim,
-            k,
-            bits,
-        });
-        Ok(())
-    }
-
-    /// True once [`BlockingClient::binary`] has negotiated `bin1`.
-    pub fn is_binary(&self) -> bool {
-        self.bin.is_some()
-    }
-
-    /// Guard for the raw JSON entry points after a `bin1` switch.
-    fn reject_json_mode(&self) -> crate::Result<()> {
-        if self.bin.is_some() {
-            return Err(crate::Error::Invalid(
-                "connection negotiated bin1; raw JSON ops are unavailable (open \
-                 a second JSON connection for save/stats)"
-                    .into(),
-            ));
-        }
-        Ok(())
-    }
-
-    /// Send one request and read one response (JSON mode only).
-    pub fn call(&mut self, req: &Request) -> crate::Result<Response> {
-        self.reject_json_mode()?;
-        let mut line = req.to_json().to_string();
-        line.push('\n');
-        self.reader.get_mut().write_all(line.as_bytes())?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        if resp.is_empty() {
-            return Err(crate::Error::Shutdown);
-        }
-        Response::from_json(&Json::parse(&resp)?)
-    }
-
-    /// Send one request and return the raw JSON response line
-    /// (used for `stats`; JSON mode only).
-    pub fn call_raw(&mut self, req: &Request) -> crate::Result<Json> {
-        self.reject_json_mode()?;
-        let mut line = req.to_json().to_string();
-        line.push('\n');
-        self.reader.get_mut().write_all(line.as_bytes())?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        if resp.is_empty() {
-            return Err(crate::Error::Shutdown);
-        }
-        Ok(Json::parse(&resp)?)
-    }
-
-    /// Send one binary request frame and read one response frame.
-    fn bin_call(&mut self, req: &frame::BinRequest) -> crate::Result<frame::BinResponse> {
-        debug_assert!(self.bin.is_some());
-        let (op, payload) = req.encode();
-        frame::FrameWriter::new(self.reader.get_mut())
-            .write_frame(op, &payload)
-            .map_err(crate::Error::from)?;
-        match frame::FrameReader::new(&mut self.reader)
-            .read_frame()
-            .map_err(crate::Error::from)?
-        {
-            None => Err(crate::Error::Shutdown),
-            Some((op, payload)) => {
-                frame::BinResponse::decode(op, &payload).map_err(crate::Error::from)
-            }
-        }
-    }
-
-    fn vecs(dim: u32, rows: Vec<Vec<u32>>) -> crate::Result<Vec<SparseVec>> {
-        rows.into_iter().map(|r| SparseVec::new(dim, r)).collect()
-    }
-
-    fn unexpected<T>(resp: impl std::fmt::Debug) -> crate::Result<T> {
-        Err(crate::Error::Protocol(format!(
-            "unexpected response {resp:?}"
-        )))
-    }
-
-    /// Convenience: liveness check (either mode).
-    pub fn ping(&mut self) -> crate::Result<()> {
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Ping)? {
-                frame::BinResponse::Pong => Ok(()),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Ping)? {
-            Response::Pong => Ok(()),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: sketch a sparse vector.
-    pub fn sketch(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<Vec<u32>> {
-        let vec = SparseVec::new(dim, indices)?;
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Sketch(vec))? {
-                frame::BinResponse::Sketch(lanes) => Ok(lanes),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Sketch { vec })? {
-            Response::Sketch { sketch } => Ok(sketch),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: sketch many vectors in one round-trip.
-    pub fn sketch_batch(
-        &mut self,
-        dim: u32,
-        rows: Vec<Vec<u32>>,
-    ) -> crate::Result<Vec<Vec<u32>>> {
-        let vecs = Self::vecs(dim, rows)?;
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::SketchBatch(vecs))? {
-                frame::BinResponse::SketchBatch(sketches) => Ok(sketches),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::SketchBatch { vecs })? {
-            Response::SketchBatch { sketches } => Ok(sketches),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: insert a sparse vector.  In binary mode the row is
-    /// sketched and packed locally, then shipped as a one-row
-    /// `insert_packed` frame.
-    // `expect("checked")` follows the `self.bin.is_some()` test above it.
-    #[allow(clippy::disallowed_methods)]
-    pub fn insert(&mut self, dim: u32, indices: Vec<u32>) -> crate::Result<u64> {
-        let vec = SparseVec::new(dim, indices)?;
-        if self.bin.is_some() {
-            let row = self.bin.as_ref().expect("checked").pack(&vec)?;
-            let mut ids = self.insert_packed(vec![row])?;
-            return match ids.pop() {
-                Some(id) if ids.is_empty() => Ok(id),
-                _ => Self::unexpected("insert_packed id count != 1"),
-            };
-        }
-        match self.call(&Request::Insert { vec })? {
-            Response::Insert { id, .. } => Ok(id),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: insert many vectors as one unit; returns the
-    /// assigned (consecutive) ids in row order.
-    pub fn insert_batch(
-        &mut self,
-        dim: u32,
-        rows: Vec<Vec<u32>>,
-    ) -> crate::Result<Vec<u64>> {
-        self.insert_batch_vecs(Self::vecs(dim, rows)?)
-    }
-
-    /// Insert pre-validated vectors as one unit.  JSON mode sends
-    /// `insert_batch` (the server sketches); binary mode sketches and
-    /// packs every row locally and ships one `insert_packed` frame.
-    // `expect("checked")` follows the `self.bin.is_some()` test above it.
-    #[allow(clippy::disallowed_methods)]
-    pub fn insert_batch_vecs(&mut self, vecs: Vec<SparseVec>) -> crate::Result<Vec<u64>> {
-        if self.bin.is_some() {
-            let bin = self.bin.as_ref().expect("checked");
-            let rows = vecs
-                .iter()
-                .map(|v| bin.pack(v))
-                .collect::<crate::Result<Vec<_>>>()?;
-            return self.insert_packed(rows);
-        }
-        match self.call(&Request::InsertBatch { vecs })? {
-            Response::InsertBatch { ids } => Ok(ids),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Ship pre-packed sketch rows ([`crate::sketch::pack_row`] output
-    /// at the server's K and b, e.g. from an offline sketching job)
-    /// down the zero-copy ingest path.  Binary mode only.
-    pub fn insert_packed(&mut self, rows: Vec<Vec<u64>>) -> crate::Result<Vec<u64>> {
-        if self.bin.is_none() {
-            return Err(crate::Error::Invalid(
-                "insert_packed requires binary mode (call binary() first)".into(),
-            ));
-        }
-        let words_per_row = rows.first().map_or(0, Vec::len);
-        match self.bin_call(&frame::BinRequest::InsertPacked {
-            words_per_row,
-            rows,
-        })? {
-            frame::BinResponse::Ids(ids) => Ok(ids),
-            frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: delete a stored id.
-    pub fn delete(&mut self, id: u64) -> crate::Result<()> {
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Delete(id))? {
-                frame::BinResponse::Deleted(_) => Ok(()),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Delete { id })? {
-            Response::Deleted { .. } => Ok(()),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: estimate Ĵ between two stored ids (either mode).
-    pub fn estimate(&mut self, a: u64, b: u64) -> crate::Result<f64> {
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Estimate(a, b))? {
-                frame::BinResponse::Estimate(jhat) => Ok(jhat),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Estimate { a, b })? {
-            Response::Estimate { jhat } => Ok(jhat),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: top-k query (a one-row `query_batch` in binary
-    /// mode — binary keeps the batch surface only).
-    pub fn query(
-        &mut self,
-        dim: u32,
-        indices: Vec<u32>,
-        topk: usize,
-    ) -> crate::Result<Vec<WireNeighbor>> {
-        let vec = SparseVec::new(dim, indices)?;
-        if self.bin.is_some() {
-            let mut results = match self.bin_call(&frame::BinRequest::QueryBatch {
-                vecs: vec![vec],
-                topk,
-            })? {
-                frame::BinResponse::Results(results) => results,
-                frame::BinResponse::Err(error) => {
-                    return Err(crate::Error::Protocol(error))
-                }
-                other => return Self::unexpected(other),
-            };
-            return match results.pop() {
-                Some(ns) if results.is_empty() => Ok(ns),
-                _ => Self::unexpected("query result row count != 1"),
-            };
-        }
-        match self.call(&Request::Query { vec, topk })? {
-            Response::Query { neighbors } => Ok(neighbors),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: fetch up to `n` recent request traces, newest
-    /// first — or the pinned slow-trace FIFO when `pinned` is true
-    /// (either mode).
-    pub fn trace(
-        &mut self,
-        n: usize,
-        pinned: bool,
-    ) -> crate::Result<Vec<crate::obs::Trace>> {
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Trace { n, pinned })? {
-                frame::BinResponse::Trace(traces) => Ok(traces),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Trace { n, pinned })? {
-            Response::Trace { traces } => Ok(traces),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: fetch the server's Prometheus text exposition
-    /// (either mode).
-    pub fn metrics_text(&mut self) -> crate::Result<String> {
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::Metrics)? {
-                frame::BinResponse::Metrics(text) => Ok(text),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::Metrics)? {
-            Response::Metrics { text } => Ok(text),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-
-    /// Convenience: top-k queries for many vectors in one round-trip;
-    /// one neighbor list per row, in row order.
-    pub fn query_batch(
-        &mut self,
-        dim: u32,
-        rows: Vec<Vec<u32>>,
-        topk: usize,
-    ) -> crate::Result<Vec<Vec<WireNeighbor>>> {
-        let vecs = Self::vecs(dim, rows)?;
-        if self.bin.is_some() {
-            return match self.bin_call(&frame::BinRequest::QueryBatch { vecs, topk })? {
-                frame::BinResponse::Results(results) => Ok(results),
-                frame::BinResponse::Err(error) => Err(crate::Error::Protocol(error)),
-                other => Self::unexpected(other),
-            };
-        }
-        match self.call(&Request::QueryBatch { vecs, topk })? {
-            Response::QueryBatch { results } => Ok(results),
-            Response::Err { error } => Err(crate::Error::Protocol(error)),
-            other => Self::unexpected(other),
-        }
-    }
-}
-
-/// Cumulative progress of a [`load_jsonl`] bulk ingest.
-#[derive(Clone, Copy, Debug)]
-pub struct LoadReport {
-    /// Vector rows inserted so far.
-    pub rows: u64,
-    /// `insert_batch` round-trips issued so far.
-    pub batches: u64,
-    /// Wall-clock seconds elapsed.
-    pub secs: f64,
-}
-
-impl LoadReport {
-    /// Ingest throughput in rows per second (0 before the clock moves).
-    pub fn rows_per_sec(&self) -> f64 {
-        if self.secs > 0.0 {
-            self.rows as f64 / self.secs
-        } else {
-            0.0
-        }
-    }
-}
-
-/// Stream a JSONL vector file — one `{"dim":D,"indices":[...]}` object
-/// per line, blank lines skipped — into a running server through
-/// `insert_batch` round-trips of up to `batch_size` rows.  `progress`
-/// is called after every round-trip with cumulative counts (the CLI
-/// prints a throughput line from it).  Ingest is sequential over one
-/// connection; a bad line or a rejected batch aborts with an error
-/// naming the offending line.
-pub fn load_jsonl(
-    addr: &str,
-    path: &std::path::Path,
-    batch_size: usize,
-    progress: impl FnMut(&LoadReport),
-) -> crate::Result<LoadReport> {
-    load_jsonl_with(addr, path, batch_size, false, progress)
-}
-
-/// Same as [`load_jsonl`], but negotiates `bin1` first: every batch is
-/// sketched and packed **client-side** and shipped as one
-/// `insert_packed` frame, so the server's ingest work per row is a
-/// checksum verification plus a copy into the packed arena.  Results
-/// are identical to the JSON path — the client's hasher is rebuilt
-/// from the parameters the server advertised at negotiation.
-pub fn load_jsonl_binary(
-    addr: &str,
-    path: &std::path::Path,
-    batch_size: usize,
-    progress: impl FnMut(&LoadReport),
-) -> crate::Result<LoadReport> {
-    load_jsonl_with(addr, path, batch_size, true, progress)
-}
-
-fn load_jsonl_with(
-    addr: &str,
-    path: &std::path::Path,
-    batch_size: usize,
-    binary: bool,
-    mut progress: impl FnMut(&LoadReport),
-) -> crate::Result<LoadReport> {
-    if batch_size == 0 {
-        return Err(crate::Error::Invalid("batch size must be > 0".into()));
-    }
-    if batch_size > protocol::MAX_WIRE_BATCH {
-        return Err(crate::Error::Invalid(format!(
-            "batch size {batch_size} exceeds the wire cap of {} rows per \
-             request",
-            protocol::MAX_WIRE_BATCH
-        )));
-    }
-    let file = std::fs::File::open(path)?;
-    let reader = BufReader::new(file);
-    let mut client = BlockingClient::connect(addr)?;
-    if binary {
-        client.binary()?;
-    }
-    let t0 = Instant::now();
-    let mut report = LoadReport {
-        rows: 0,
-        batches: 0,
-        secs: 0.0,
-    };
-    let mut pending: Vec<SparseVec> = Vec::with_capacity(batch_size);
-    let mut first_line = 0usize; // 1-based line number of pending[0]
-    let mut flush = |pending: &mut Vec<SparseVec>,
-                     report: &mut LoadReport,
-                     client: &mut BlockingClient,
-                     first_line: usize|
-     -> crate::Result<()> {
-        if pending.is_empty() {
-            return Ok(());
-        }
-        let n = pending.len();
-        let ids = client
-            .insert_batch_vecs(std::mem::take(pending))
-            .map_err(|e| {
-                crate::Error::Protocol(format!(
-                    "batch starting at line {first_line} rejected: {e}"
-                ))
-            })?;
-        if ids.len() != n {
-            return Err(crate::Error::Protocol(format!(
-                "insert returned {} ids for {n} rows",
-                ids.len()
-            )));
-        }
-        report.rows += n as u64;
-        report.batches += 1;
-        report.secs = t0.elapsed().as_secs_f64();
-        Ok(())
-    };
-    for (idx, line) in reader.lines().enumerate() {
-        let lineno = idx + 1;
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let parsed = Json::parse(&line)
-            .map_err(crate::Error::from)
-            .and_then(|j| SparseVec::from_json(&j))
-            .map_err(|e| {
-                crate::Error::Invalid(format!("{}:{lineno}: {e}", path.display()))
-            })?;
-        if pending.is_empty() {
-            first_line = lineno;
-        }
-        pending.push(parsed);
-        if pending.len() == batch_size {
-            flush(&mut pending, &mut report, &mut client, first_line)?;
-            progress(&report);
-        }
-    }
-    if !pending.is_empty() {
-        flush(&mut pending, &mut report, &mut client, first_line)?;
-        progress(&report);
-    }
-    report.secs = t0.elapsed().as_secs_f64();
-    Ok(report)
 }
 
 #[cfg(test)]
@@ -1270,19 +713,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn load_report_throughput() {
-        let r = LoadReport {
-            rows: 100,
-            batches: 2,
-            secs: 4.0,
-        };
-        assert_eq!(r.rows_per_sec(), 25.0);
-        let r = LoadReport {
-            rows: 0,
-            batches: 0,
-            secs: 0.0,
-        };
-        assert_eq!(r.rows_per_sec(), 0.0);
-    }
 }

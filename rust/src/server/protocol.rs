@@ -134,6 +134,9 @@ pub enum Request {
     },
     /// Prometheus text exposition of the full metrics surface.
     Metrics,
+    /// Export this node's durable image (snapshot + WAL tail) so a
+    /// fresh cluster peer can bootstrap from it.
+    Replicate,
 }
 
 /// Upper bound on rows per batch op.  One request line must not be
@@ -217,6 +220,7 @@ impl Request {
                 },
             },
             "metrics" => Request::Metrics,
+            "replicate" => Request::Replicate,
             other => {
                 return Err(crate::Error::Protocol(format!("unknown op {other:?}")))
             }
@@ -280,8 +284,50 @@ impl Request {
                 ("pinned", Json::Bool(*pinned)),
             ]),
             Request::Metrics => Json::obj(vec![("op", Json::str("metrics"))]),
+            Request::Replicate => Json::obj(vec![("op", Json::str("replicate"))]),
         }
     }
+}
+
+/// Hex alphabet for the replicate byte streams on the JSON wire.
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase-hex encode a replicate byte stream (JSON is a text
+/// protocol; the binary wire ships these bytes raw instead).
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[usize::from(b >> 4)] as char);
+        s.push(HEX[usize::from(b & 0xf)] as char);
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; a stray digit or odd length is a
+/// protocol error (the stream's own CRCs are checked later, at apply).
+fn hex_decode(s: &str) -> crate::Result<Vec<u8>> {
+    fn nib(c: u8) -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    }
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(crate::Error::Protocol(
+            "odd-length hex stream in replicate response".into(),
+        ));
+    }
+    b.chunks_exact(2)
+        .map(|p| match (nib(p[0]), nib(p[1])) {
+            (Some(h), Some(l)) => Ok((h << 4) | l),
+            _ => Err(crate::Error::Protocol(
+                "bad hex digit in replicate response".into(),
+            )),
+        })
+        .collect()
 }
 
 /// One scored neighbor on the wire.
@@ -376,6 +422,13 @@ pub enum Response {
     Metrics {
         /// The rendered exposition (text format 0.0.4).
         text: String,
+    },
+    /// Replicate result: the node's durable image for a joining peer.
+    Replicate {
+        /// Raw snapshot bytes (a complete `CMHSNAP*` image).
+        snapshot: Vec<u8>,
+        /// Raw WAL-tail bytes (a whole, well-formed record sequence).
+        wal: Vec<u8>,
     },
 }
 
@@ -539,6 +592,11 @@ impl Response {
                 ("ok", Json::Bool(true)),
                 ("text", Json::str(text)),
             ]),
+            Response::Replicate { snapshot, wal } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("snapshot_hex", Json::Str(hex_encode(snapshot))),
+                ("wal_hex", Json::Str(hex_encode(wal))),
+            ]),
         }
     }
 
@@ -558,6 +616,12 @@ impl Response {
         if j.get_opt("saved").is_some() {
             return Ok(Response::Saved {
                 persisted_bytes: j.get("persisted_bytes")?.as_u64()?,
+            });
+        }
+        if let Some(s) = j.get_opt("snapshot_hex") {
+            return Ok(Response::Replicate {
+                snapshot: hex_decode(s.as_str()?)?,
+                wal: hex_decode(j.get("wal_hex")?.as_str()?)?,
             });
         }
         if let Some(ids) = j.get_opt("ids") {
@@ -674,6 +738,7 @@ mod tests {
             r#"{"op":"trace"}"#,
             r#"{"op":"trace","n":5,"pinned":true}"#,
             r#"{"op":"metrics"}"#,
+            r#"{"op":"replicate"}"#,
         ] {
             Request::from_json(&Json::parse(line).unwrap())
                 .unwrap_or_else(|e| panic!("{line}: {e}"));
@@ -898,6 +963,44 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn replicate_roundtrips_and_rejects_bad_hex() {
+        // request
+        let line = Request::Replicate.to_json().to_string();
+        assert!(matches!(
+            Request::from_json(&Json::parse(&line).unwrap()).unwrap(),
+            Request::Replicate
+        ));
+        // response: arbitrary byte streams survive the hex round-trip
+        let r = Response::Replicate {
+            snapshot: vec![0x00, 0xff, 0x41, 0x9a],
+            wal: vec![],
+        };
+        match Response::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+            .unwrap()
+        {
+            Response::Replicate { snapshot, wal } => {
+                assert_eq!(snapshot, vec![0x00, 0xff, 0x41, 0x9a]);
+                assert!(wal.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        // odd length and stray digits are protocol errors
+        for bad in [
+            r#"{"ok":true,"snapshot_hex":"abc","wal_hex":""}"#,
+            r#"{"ok":true,"snapshot_hex":"zz","wal_hex":""}"#,
+            r#"{"ok":true,"snapshot_hex":"","wal_hex":"0g"}"#,
+        ] {
+            assert!(
+                Response::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+        // a replicate response must carry both streams
+        let half = r#"{"ok":true,"snapshot_hex":""}"#;
+        assert!(Response::from_json(&Json::parse(half).unwrap()).is_err());
     }
 
     #[test]

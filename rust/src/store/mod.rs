@@ -22,6 +22,7 @@ mod sharded;
 mod snapshot;
 mod wal;
 
+pub(crate) use sharded::mix64;
 pub use sharded::{resolve_shards, ShardOps, ShardedIndex};
 pub use snapshot::{Snapshot, SnapshotData};
 pub use wal::{Wal, WalRecord};
@@ -30,10 +31,16 @@ use crate::index::{IndexConfig, Neighbor};
 use crate::metrics::{LatencyHistogram, LatencySnapshot};
 use crate::obs::{stage, Stage};
 use crate::sketch::SketchScheme;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Distinguishes concurrent [`PersistentIndex::replicate_apply`]
+/// validation scratch files within one process (tests run in
+/// parallel; in-memory stores validate under the shared temp dir).
+static APPLY_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot file name inside the persist directory.
 pub const SNAPSHOT_FILE: &str = "snapshot.bin";
@@ -500,6 +507,171 @@ impl PersistentIndex {
         Ok(bytes)
     }
 
+    /// Export this store's durable image for a joining replica: the
+    /// raw snapshot bytes plus the raw WAL-tail bytes, read under the
+    /// persist lock so the pair is one consistent cut — no mutation
+    /// can land between the two reads.  Replication ships on-disk
+    /// bytes verbatim, so this errors without a persist directory: an
+    /// in-memory node has no durable image to offer.
+    pub fn replicate_export(&self) -> crate::Result<(Vec<u8>, Vec<u8>)> {
+        let Some(m) = &self.persist else {
+            return Err(crate::Error::Invalid(
+                "no persist_dir configured; nothing to replicate from".into(),
+            ));
+        };
+        let st = m.lock().unwrap();
+        let snapshot = std::fs::read(st.dir.join(SNAPSHOT_FILE))?;
+        let wal = std::fs::read(st.dir.join(WAL_FILE))?;
+        Ok((snapshot, wal))
+    }
+
+    /// Join from a peer's [`PersistentIndex::replicate_export`] image:
+    /// validate both streams fully, then install them.  The receiving
+    /// store must be empty (a joining node is fresh by contract — this
+    /// is a bootstrap, not a merge), and **nothing is mutated until
+    /// both streams have been validated end to end**: the snapshot
+    /// must pass [`Snapshot::load`] (magic, checksum, exact framing)
+    /// and carry this store's K/scheme/bits stamp, and the WAL bytes
+    /// must decode as a *whole* image ([`Wal::decode_all`] — a torn
+    /// tail that local recovery would forgive is a transport fault
+    /// here) with every record matching this store's shape.
+    ///
+    /// On a durable store the peer's snapshot bytes are installed
+    /// verbatim (temp file + fsync + rename, like compaction) and the
+    /// WAL records are re-encoded through the ordinary append path —
+    /// the codec is deterministic, so the resulting on-disk pair is
+    /// byte-identical to the peer's export.  An in-memory store
+    /// installs the decoded state only (validation still runs the
+    /// snapshot bytes through a scratch file so there is exactly one
+    /// snapshot decoder).  Returns the number of resident items.
+    pub fn replicate_apply(&self, snapshot: &[u8], wal: &[u8]) -> crate::Result<u64> {
+        if !self.index.is_empty() || self.index.next_id() != 0 {
+            return Err(crate::Error::Invalid(
+                "replicate_apply needs a fresh store: this node already \
+                 holds data — joining from a peer is a bootstrap, not a \
+                 merge"
+                    .into(),
+            ));
+        }
+        let k = self.index.num_hashes();
+        let bits = self.index.bits();
+        // Validate the snapshot stream through the one snapshot
+        // decoder (a scratch file feeds `Snapshot::load`); refuse a
+        // peer whose stamp disagrees with this store's configuration.
+        let scratch_dir = match &self.persist {
+            Some(m) => m.lock().unwrap().dir.clone(),
+            None => std::env::temp_dir(),
+        };
+        let scratch = scratch_dir.join(format!(
+            "replicate-{}-{}.tmp",
+            std::process::id(),
+            APPLY_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&scratch, snapshot)?;
+        let loaded = Snapshot::load(&scratch);
+        let _ = std::fs::remove_file(&scratch);
+        let data = loaded.map_err(|e| {
+            crate::Error::Invalid(format!("replicate: bad snapshot stream: {e}"))
+        })?;
+        if data.k != k || data.scheme != self.scheme || data.bits != bits {
+            return Err(crate::Error::Invalid(format!(
+                "replicate: peer image is (K={}, scheme={}, bits={}) but \
+                 this node is configured for (K={k}, scheme={}, bits={bits})",
+                data.k, data.scheme, data.bits, self.scheme
+            )));
+        }
+        // Validate the WAL stream: whole-image decode, then shape.
+        let records = Wal::decode_all(wal).ok_or_else(|| {
+            crate::Error::Invalid(
+                "replicate: bad WAL stream: torn, corrupt, or trailing \
+                 garbage"
+                    .into(),
+            )
+        })?;
+        for rec in &records {
+            let (rec_bits, lens): (u8, Vec<usize>) = match rec {
+                WalRecord::Insert { sketch, .. } => (32, vec![sketch.len()]),
+                WalRecord::InsertBatch { items } => {
+                    (32, items.iter().map(|(_, s)| s.len()).collect())
+                }
+                WalRecord::InsertPacked { bits: b, items } => {
+                    (*b, items.iter().map(|(_, s)| s.len()).collect())
+                }
+                WalRecord::Delete { .. } => continue,
+            };
+            if rec_bits != 32 && rec_bits != bits {
+                return Err(crate::Error::Invalid(format!(
+                    "replicate: WAL stream holds packed rows at \
+                     bits={rec_bits} but this node is configured for \
+                     bits={bits}"
+                )));
+            }
+            if let Some(bad) = lens.iter().find(|&&l| l != k) {
+                return Err(crate::Error::Invalid(format!(
+                    "replicate: WAL stream holds a sketch of length {bad}, \
+                     expected K={k}"
+                )));
+            }
+        }
+        // Both streams verified — install.  Memory first (replaying
+        // exactly like recovery: inserts upsert, deletes tolerate
+        // missing ids), then disk under the persist lock.
+        for (id, sketch) in &data.items {
+            self.index.insert_with_id(*id, sketch)?;
+        }
+        self.index.reserve_ids(data.next_id);
+        for rec in &records {
+            match rec {
+                WalRecord::Insert { id, sketch } => {
+                    let _ = self.index.delete(*id);
+                    self.index.insert_with_id(*id, sketch)?;
+                }
+                WalRecord::InsertBatch { items }
+                | WalRecord::InsertPacked { items, .. } => {
+                    for (id, sketch) in items {
+                        let _ = self.index.delete(*id);
+                        self.index.insert_with_id(*id, sketch)?;
+                    }
+                }
+                WalRecord::Delete { id } => {
+                    let _ = self.index.delete(*id);
+                }
+            }
+        }
+        if let Some(m) = &self.persist {
+            let mut st = m.lock().unwrap();
+            let durable_start = Instant::now();
+            // The peer's snapshot bytes land verbatim through the same
+            // atomic temp+fsync+rename dance as compaction.
+            let snap_path = st.dir.join(SNAPSHOT_FILE);
+            let tmp = snap_path.with_extension("tmp");
+            {
+                let mut f = std::fs::File::create(&tmp)?;
+                f.write_all(snapshot)?;
+                f.sync_all()?;
+            }
+            std::fs::rename(&tmp, &snap_path)?;
+            #[cfg(unix)]
+            if let Some(parent) =
+                snap_path.parent().filter(|p| !p.as_os_str().is_empty())
+            {
+                std::fs::File::open(parent)?.sync_all()?;
+            }
+            st.snapshot_bytes = snapshot.len() as u64;
+            // Re-encoding the validated records through the ordinary
+            // append path reproduces the peer's WAL byte-for-byte —
+            // the codec is deterministic.
+            st.wal.reset()?;
+            for rec in &records {
+                self.wal_append(&mut st, rec)?;
+            }
+            st.wal.sync()?;
+            self.fsync_us
+                .record(durable_start.elapsed().as_micros() as u64);
+        }
+        Ok(self.index.len() as u64)
+    }
+
     /// Top-k neighbors of a query sketch.
     pub fn query(&self, sketch: &[u32], topk: usize) -> crate::Result<Vec<Neighbor>> {
         self.index.query(sketch, topk)
@@ -796,6 +968,90 @@ mod tests {
         let hits = store.query(&sk(2), 1).unwrap();
         assert_eq!(hits[0].id, b);
         assert_eq!(hits[0].score, 1.0);
+    }
+
+    #[test]
+    fn replicate_roundtrip_is_byte_identical() {
+        let src = TempDir::new().unwrap();
+        let dst = TempDir::new().unwrap();
+        let a =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(src.path()))
+                .unwrap();
+        for s in 0..4u32 {
+            a.insert(sk(s)).unwrap();
+        }
+        a.delete(1).unwrap();
+        a.compact().unwrap();
+        a.insert_many(&[sk(10), sk(11)]).unwrap(); // WAL tail
+        a.delete(2).unwrap();
+        let (snap, wal) = a.replicate_export().unwrap();
+        assert!(!wal.is_empty(), "tail records live in the WAL");
+        // a fresh durable node (different shard count — items are
+        // id-sorted, so layout doesn't matter) joins byte-identical
+        let b =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 4, Some(dst.path()))
+                .unwrap();
+        let n = b.replicate_apply(&snap, &wal).unwrap();
+        assert_eq!(n as usize, a.len());
+        assert_eq!(b.sharded().items(), a.sharded().items());
+        assert_eq!(std::fs::read(dst.path().join(SNAPSHOT_FILE)).unwrap(), snap);
+        assert_eq!(std::fs::read(dst.path().join(WAL_FILE)).unwrap(), wal);
+        // fresh ids continue past everything the peer ever allocated
+        assert_eq!(b.insert(sk(99)).unwrap(), a.insert(sk(99)).unwrap());
+        // ...and the joined node recovers like any durable store
+        drop(b);
+        let b2 =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 4, Some(dst.path()))
+                .unwrap();
+        assert_eq!(b2.len(), a.len());
+    }
+
+    #[test]
+    fn replicate_apply_validates_before_touching_anything() {
+        let src = TempDir::new().unwrap();
+        let a =
+            PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, Some(src.path()))
+                .unwrap();
+        a.insert(sk(1)).unwrap();
+        a.compact().unwrap();
+        a.insert(sk(2)).unwrap();
+        let (snap, wal) = a.replicate_export().unwrap();
+        // in-memory joiners work too (the snapshot stream is validated
+        // through a scratch file, so there is exactly one decoder)
+        let mem = PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, None).unwrap();
+        assert_eq!(mem.replicate_apply(&snap, &wal).unwrap(), 2);
+        assert_eq!(mem.sharded().items(), a.sharded().items());
+        // a non-fresh store refuses the bootstrap
+        assert!(mem.replicate_apply(&snap, &wal).is_err());
+        // in-memory nodes have no durable image to export
+        assert!(mem.replicate_export().is_err());
+        // torn snapshot / corrupt WAL record / trailing garbage: one
+        // clean error each, the joining store left untouched
+        let fresh =
+            || PersistentIndex::open(8, SketchScheme::Cmh, cfg(), 2, None).unwrap();
+        let torn = &snap[..snap.len() - 3];
+        let mut bad_wal = wal.clone();
+        bad_wal[9] ^= 0xff;
+        let mut trailing = wal.clone();
+        trailing.push(0);
+        for (s, w) in [
+            (torn, &wal[..]),
+            (&snap[..], &bad_wal[..]),
+            (&snap[..], &trailing[..]),
+        ] {
+            let store = fresh();
+            assert!(store.replicate_apply(s, w).is_err());
+            assert!(store.is_empty(), "failed apply must not install anything");
+            assert_eq!(store.sharded().next_id(), 0, "no id may be burned");
+        }
+        // a mismatched stamp is refused, naming both configurations
+        let other = PersistentIndex::open(8, SketchScheme::Oph, cfg(), 2, None).unwrap();
+        match other.replicate_apply(&snap, &wal) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("cmh") && msg.contains("oph"), "{msg}");
+            }
+            res => panic!("expected Invalid, got {res:?}"),
+        }
     }
 
     #[test]

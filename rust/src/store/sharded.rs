@@ -16,9 +16,11 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 /// SplitMix64 finalizer — decorrelates shard choice from id assignment
-/// order so sequential ids spread evenly across shards.
+/// order so sequential ids spread evenly across shards.  Also the hash
+/// behind the cluster client's rendezvous node routing, which needs
+/// the same property one level up (spread keys evenly over nodes).
 #[inline]
-fn mix64(mut x: u64) -> u64 {
+pub(crate) fn mix64(mut x: u64) -> u64 {
     x ^= x >> 30;
     x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x ^= x >> 27;

@@ -271,6 +271,20 @@ pub struct Wal {
 }
 
 impl Wal {
+    /// Decode a complete WAL image: every byte must belong to a valid
+    /// record.  Returns `None` on a torn tail, a corrupt checksum, or
+    /// trailing garbage — the replication path uses this to refuse a
+    /// peer's WAL stream unless it is wholly intact, unlike recovery
+    /// ([`Wal::open`]), which keeps the valid prefix of its *own* log
+    /// because a torn tail there is the expected signature of a crash
+    /// mid-append rather than a transport fault.
+    pub fn decode_all(bytes: &[u8]) -> Option<Vec<WalRecord>> {
+        let (recs, consumed) = scan(bytes);
+        (consumed == bytes.len()).then_some(recs)
+    }
+}
+
+impl Wal {
     /// Open `path` (creating it if absent), replay the valid record
     /// prefix, truncate any torn tail, and return the log positioned
     /// for append together with the replayed records (oldest first).
@@ -528,6 +542,32 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let (_, recs) = Wal::open(&path).unwrap();
         assert_eq!(recs, vec![WalRecord::Delete { id: 5 }], "bad width rejected");
+    }
+
+    #[test]
+    fn decode_all_accepts_only_whole_images() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("wal.log");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for r in sample() {
+                wal.append(&r).unwrap();
+            }
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(Wal::decode_all(&bytes).unwrap(), sample());
+        assert_eq!(Wal::decode_all(&[]).unwrap(), vec![]);
+        // a torn tail is a valid *prefix* for recovery but not a valid
+        // whole image for replication
+        assert!(Wal::decode_all(&bytes[..bytes.len() - 1]).is_none());
+        // a flipped payload byte fails the record CRC
+        let mut flipped = bytes.clone();
+        flipped[9] ^= 0xff;
+        assert!(Wal::decode_all(&flipped).is_none());
+        // trailing garbage after the last record is refused
+        let mut trailing = bytes.clone();
+        trailing.extend_from_slice(&[0u8; 3]);
+        assert!(Wal::decode_all(&trailing).is_none());
     }
 
     #[test]

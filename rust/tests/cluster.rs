@@ -1,0 +1,479 @@
+//! Deterministic fault-injection suite for the cluster plane.
+//!
+//! Every test spins up real in-process servers on ephemeral ports and
+//! drives them through [`ClusterClient`]; faulty members are simulated
+//! with bare [`TcpListener`] threads that accept a connection and then
+//! misbehave on cue — close mid-query (dead node), go silent past the
+//! read timeout (stalled node), or truncate a replicate response
+//! mid-stream.  Nothing here sleeps to "wait for" anything except the
+//! stall itself; all routing, merging and degradation outcomes are
+//! pure functions of (node ids, row contents), so each assertion is
+//! exact, not probabilistic.
+
+use cminhash::config::{
+    BatchConfig, BatchPolicy, EngineKind, IndexSettings, ServeConfig,
+};
+use cminhash::coordinator::Coordinator;
+use cminhash::server::protocol::{Request, Response};
+use cminhash::server::{BlockingClient, ClusterClient, ClusterConfig, ClusterNode, Server};
+use cminhash::store::{SNAPSHOT_FILE, WAL_FILE};
+use cminhash::util::rng::Rng;
+use cminhash::util::testutil::TempDir;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 256;
+const K: usize = 64;
+
+/// All nodes share one seed so their hashers agree lane for lane —
+/// a row inserted on any node scores identically everywhere, which is
+/// what makes the single-node reference comparisons exact.
+fn cfg(persist: Option<PathBuf>) -> ServeConfig {
+    let mut c = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM,
+        num_hashes: K,
+        seed: 5,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    c.store.shards = 2;
+    c.store.persist_dir = persist;
+    c
+}
+
+fn node(persist: Option<PathBuf>) -> (Arc<Coordinator>, Server) {
+    let svc = Coordinator::start(cfg(persist)).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+fn topology(members: &[(&str, String)], timeout_ms: u64) -> ClusterConfig {
+    ClusterConfig {
+        timeout_ms,
+        nodes: members
+            .iter()
+            .map(|(id, addr)| ClusterNode {
+                id: (*id).to_string(),
+                addr: addr.clone(),
+            })
+            .collect(),
+    }
+}
+
+fn rows(n: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> =
+                (0..24).map(|_| rng.range_u32(0, DIM as u32)).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            idx
+        })
+        .collect()
+}
+
+/// A member that dies mid-query: accepts each connection, reads the
+/// request line (so the client's write succeeds and the kill lands
+/// after the query was sent), then closes without answering.  Loops
+/// forever so redials find the same corpse.
+fn dead_node() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let mut line = String::new();
+            let _ = BufReader::new(stream).read_line(&mut line);
+            // stream drops here: EOF mid-query on the client side
+        }
+    });
+    addr
+}
+
+/// A member that stalls: accepts, reads the request line, then holds
+/// the socket silently for `hold` — long past any test timeout — so
+/// the client's read-timeout path is what fires, not EOF.
+fn stalled_node(hold: Duration) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let mut line = String::new();
+            let _ = BufReader::new(&stream).read_line(&mut line);
+            std::thread::sleep(hold);
+        }
+    });
+    addr
+}
+
+/// A peer that tears the replicate transfer: accepts, reads the
+/// request line, writes the first `cut` bytes of `response_line` (no
+/// newline ever arrives), then closes — a peer crash mid-snapshot
+/// stream as the joiner sees it.
+fn torn_replicate_peer(response_line: String, cut: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            let _ = reader.read_line(&mut line);
+            let _ = reader
+                .get_mut()
+                .write_all(&response_line.as_bytes()[..cut]);
+        }
+    });
+    addr
+}
+
+#[test]
+fn one_node_cluster_matches_single_node_exactly() {
+    let (_svc_ref, srv_ref) = node(None);
+    let (_svc_solo, srv_solo) = node(None);
+
+    let corpus = rows(60, 11);
+    let mut direct = BlockingClient::connect(&srv_ref.addr().to_string()).unwrap();
+    let direct_ids = direct
+        .insert_batch(DIM as u32, corpus.clone())
+        .unwrap();
+
+    let topo = topology(&[("solo", srv_solo.addr().to_string())], 2_000);
+    let mut cluster = ClusterClient::connect(topo).unwrap();
+    let out = cluster.insert_batch(DIM as u32, corpus.clone()).unwrap();
+    assert!(!out.degraded);
+    assert!(out.failed_nodes.is_empty());
+    assert_eq!(out.inserted, 60);
+    // One node owns everything, batches preserve slot order, and both
+    // stores started from id 0 — so the assigned ids line up exactly.
+    for (slot, got) in out.ids.iter().enumerate() {
+        let (node_id, row_id) = got.as_ref().unwrap();
+        assert_eq!(node_id, "solo");
+        assert_eq!(*row_id, direct_ids[slot], "slot {slot}");
+    }
+
+    // Every query answer is identical: same ids, same scores, same
+    // order — the cluster total order degenerates to sort_neighbors.
+    for probe in rows(10, 77) {
+        let reference = direct
+            .query_batch(DIM as u32, vec![probe.clone()], 8)
+            .unwrap()
+            .remove(0);
+        let (merged, degraded, failed) =
+            cluster.query(DIM as u32, probe, 8).unwrap();
+        assert!(!degraded);
+        assert!(failed.is_empty());
+        assert_eq!(merged.len(), reference.len());
+        for (m, r) in merged.iter().zip(&reference) {
+            assert_eq!(m.node, "solo");
+            assert_eq!(m.id, r.id);
+            assert_eq!(m.score, r.score, "scores must be bit-identical");
+        }
+    }
+    assert_eq!(cluster.metrics().node_errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn fan_out_merge_matches_single_node_reference() {
+    let members: Vec<(Arc<Coordinator>, Server)> =
+        (0..3).map(|_| node(None)).collect();
+    let (svc_ref, srv_ref) = node(None);
+
+    let topo = topology(
+        &[
+            ("n0", members[0].1.addr().to_string()),
+            ("n1", members[1].1.addr().to_string()),
+            ("n2", members[2].1.addr().to_string()),
+        ],
+        2_000,
+    );
+    let mut cluster = ClusterClient::connect(topo).unwrap();
+
+    let corpus = rows(300, 21);
+    let out = cluster.insert_batch(DIM as u32, corpus.clone()).unwrap();
+    assert!(!out.degraded);
+    assert_eq!(out.inserted, 300);
+    // The reported owner must agree with the router's own answer.
+    for (slot, got) in out.ids.iter().enumerate() {
+        let owner = cluster.route(DIM as u32, &corpus[slot]).unwrap();
+        assert_eq!(got.as_ref().unwrap().0, cluster.node_id(owner));
+    }
+    // Rendezvous routing must actually spread the corpus.
+    let mut total = 0usize;
+    for (i, (svc, _)) in members.iter().enumerate() {
+        let (_, store) = svc.stats();
+        assert!(store.stored > 0, "node {i} received no rows");
+        total += store.stored;
+    }
+    assert_eq!(total, 300, "every row has exactly one owner");
+
+    // Same corpus on one reference node (same seed = same scores).
+    let mut direct = BlockingClient::connect(&srv_ref.addr().to_string()).unwrap();
+    direct.insert_batch(DIM as u32, corpus).unwrap();
+    let (_, store) = svc_ref.stats();
+    assert_eq!(store.stored, 300);
+
+    // Per-node top-k lists always cover the global top-k, so the
+    // merged score sequence equals the single-node score sequence.
+    for probe in rows(20, 99) {
+        let reference = direct
+            .query_batch(DIM as u32, vec![probe.clone()], 10)
+            .unwrap()
+            .remove(0);
+        let (merged, degraded, _) =
+            cluster.query(DIM as u32, probe.clone(), 10).unwrap();
+        assert!(!degraded);
+        let merged_scores: Vec<f64> = merged.iter().map(|n| n.score).collect();
+        let ref_scores: Vec<f64> = reference.iter().map(|n| n.score).collect();
+        assert_eq!(merged_scores, ref_scores);
+        // And the merge itself is deterministic: ask again, get the
+        // exact same list (nodes, ids and all).
+        let (again, _, _) = cluster.query(DIM as u32, probe, 10).unwrap();
+        assert_eq!(again, merged);
+    }
+    assert_eq!(cluster.metrics().node_errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn dead_node_mid_query_degrades_and_survivors_answer() {
+    let (_svc0, srv0) = node(None);
+    let (_svc1, srv1) = node(None);
+    let ghost = dead_node();
+
+    let live_topo = topology(
+        &[
+            ("n0", srv0.addr().to_string()),
+            ("n1", srv1.addr().to_string()),
+        ],
+        2_000,
+    );
+    let full_topo = topology(
+        &[
+            ("n0", srv0.addr().to_string()),
+            ("n1", srv1.addr().to_string()),
+            ("ghost", ghost),
+        ],
+        2_000,
+    );
+
+    let corpus = rows(200, 42);
+    let mut cluster = ClusterClient::connect(full_topo).unwrap();
+    let out = cluster.insert_batch(DIM as u32, corpus.clone()).unwrap();
+    assert!(out.degraded, "ghost owns part of a 200-row corpus");
+    assert_eq!(out.failed_nodes, vec!["ghost".to_string()]);
+    assert!(out.inserted > 0, "live nodes must still ingest their rows");
+    assert!((out.inserted as usize) < 200, "ghost's rows were skipped");
+    // Exactly the ghost-routed slots are unfilled.
+    for (slot, got) in out.ids.iter().enumerate() {
+        let owner = cluster.route(DIM as u32, &corpus[slot]).unwrap();
+        if cluster.node_id(owner) == "ghost" {
+            assert!(got.is_none(), "slot {slot} owned by the dead node");
+        } else {
+            assert_eq!(got.as_ref().unwrap().0, cluster.node_id(owner));
+        }
+    }
+    let errs_after_insert = cluster.metrics().node_errors.load(Ordering::Relaxed);
+    assert!(errs_after_insert >= 1);
+
+    // A parallel 2-node cluster over only the live members is the
+    // ground truth for what a degraded merge must return.
+    let mut live = ClusterClient::connect(live_topo).unwrap();
+    for probe in rows(10, 7) {
+        let (merged, degraded, failed) =
+            cluster.query(DIM as u32, probe.clone(), 10).unwrap();
+        assert!(degraded);
+        assert_eq!(failed, vec!["ghost".to_string()]);
+        assert!(merged.iter().all(|n| n.node == "n0" || n.node == "n1"));
+        let (expect, live_degraded, _) =
+            live.query(DIM as u32, probe, 10).unwrap();
+        assert!(!live_degraded);
+        assert_eq!(merged, expect, "merge must cover exactly the survivors");
+    }
+    // Each degraded fan-out redialed the corpse and failed again.
+    assert!(
+        cluster.metrics().node_errors.load(Ordering::Relaxed)
+            >= errs_after_insert + 10
+    );
+}
+
+#[test]
+fn stalled_node_times_out_and_cluster_stays_responsive() {
+    let (_svc0, srv0) = node(None);
+    let (_svc1, srv1) = node(None);
+    let stall = stalled_node(Duration::from_secs(20));
+
+    let live_topo = topology(
+        &[
+            ("n0", srv0.addr().to_string()),
+            ("n1", srv1.addr().to_string()),
+        ],
+        2_000,
+    );
+    // Load through the live pair first so the stalled member's only
+    // role is to stall queries.
+    let mut live = ClusterClient::connect(live_topo).unwrap();
+    let out = live.insert_batch(DIM as u32, rows(120, 63)).unwrap();
+    assert!(!out.degraded);
+    assert_eq!(out.inserted, 120);
+
+    let full_topo = topology(
+        &[
+            ("n0", srv0.addr().to_string()),
+            ("n1", srv1.addr().to_string()),
+            ("stall", stall),
+        ],
+        250,
+    );
+    let mut cluster = ClusterClient::connect(full_topo).unwrap();
+    let t0 = Instant::now();
+    let (merged, degraded, failed) = cluster
+        .query(DIM as u32, rows(1, 8)[0].clone(), 10)
+        .unwrap();
+    let elapsed = t0.elapsed();
+    assert!(degraded);
+    assert_eq!(failed, vec!["stall".to_string()]);
+    assert!(!merged.is_empty());
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "stall must cost one read timeout (~250ms), not the 20s hold; \
+         took {elapsed:?}"
+    );
+    let (expect, _, _) = live
+        .query(DIM as u32, rows(1, 8)[0].clone(), 10)
+        .unwrap();
+    assert_eq!(merged, expect);
+
+    // The timed-out connection was dropped; the next call redials,
+    // times out again, and degrades again — no wedged state.
+    let (_, degraded, failed) = cluster
+        .query(DIM as u32, rows(1, 9)[0].clone(), 10)
+        .unwrap();
+    assert!(degraded);
+    assert_eq!(failed, vec!["stall".to_string()]);
+    assert_eq!(cluster.metrics().node_errors.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn replicate_rejoin_is_byte_identical() {
+    let dir_a = TempDir::new().unwrap();
+    let dir_b = TempDir::new().unwrap();
+
+    // Seed node A with a snapshot AND a live WAL tail: insert, save
+    // (compaction), insert more, delete one — so the export exercises
+    // both streams, not just the snapshot.
+    let (svc_a, srv_a) = node(Some(dir_a.path().to_path_buf()));
+    let mut client = BlockingClient::connect(&srv_a.addr().to_string()).unwrap();
+    let ids = client.insert_batch(DIM as u32, rows(40, 3)).unwrap();
+    match client.call(&Request::Save).unwrap() {
+        Response::Saved { persisted_bytes } => assert!(persisted_bytes > 0),
+        other => panic!("unexpected save response {other:?}"),
+    }
+    client.insert_batch(DIM as u32, rows(15, 4)).unwrap();
+    client.delete(ids[0]).unwrap();
+    let (_, stats_a) = svc_a.stats();
+    assert_eq!(stats_a.stored, 54);
+
+    // Export over the wire in both modes — the bytes must agree.
+    let (snap, wal) = client.replicate().unwrap();
+    assert!(snap.starts_with(b"CMHSNAP"), "snapshot ships verbatim");
+    assert!(!wal.is_empty(), "the post-save tail must be in the image");
+    let mut bin = BlockingClient::connect(&srv_a.addr().to_string()).unwrap();
+    bin.binary().unwrap();
+    assert_eq!(bin.replicate().unwrap(), (snap.clone(), wal.clone()));
+
+    // ClusterClient path reaches the same image.
+    let topo = topology(&[("a", srv_a.addr().to_string())], 2_000);
+    let mut cc = ClusterClient::connect(topo).unwrap();
+    assert_eq!(cc.replicate_from(0).unwrap(), (snap.clone(), wal.clone()));
+
+    // A fresh durable node joins from the image; its on-disk pair must
+    // be byte-identical to the peer's export, and its answers equal.
+    {
+        let (svc_b, _srv_b) = node(Some(dir_b.path().to_path_buf()));
+        assert_eq!(svc_b.replicate_apply(&snap, &wal).unwrap(), 54);
+        assert_eq!(std::fs::read(dir_b.path().join(SNAPSHOT_FILE)).unwrap(), snap);
+        assert_eq!(std::fs::read(dir_b.path().join(WAL_FILE)).unwrap(), wal);
+        assert_eq!(svc_b.replicate_export().unwrap(), (snap.clone(), wal.clone()));
+        for probe in rows(8, 70) {
+            let v = cminhash::sketch::SparseVec::new(DIM as u32, probe).unwrap();
+            let a = svc_a.query(v.clone(), 10).unwrap();
+            let b = svc_b.query(v, 10).unwrap();
+            assert_eq!(a, b, "joined node must answer like its peer");
+        }
+        // A second apply must refuse: joining is a bootstrap, not a merge.
+        assert!(svc_b.replicate_apply(&snap, &wal).is_err());
+    }
+
+    // The joined image is durable: a restart from B's directory
+    // recovers the same corpus.
+    let recovered = Coordinator::start(cfg(Some(dir_b.path().to_path_buf()))).unwrap();
+    let (_, stats_b) = recovered.stats();
+    assert_eq!(stats_b.stored, 54);
+}
+
+#[test]
+fn replicate_killed_mid_transfer_leaves_joiner_untouched() {
+    let dir_a = TempDir::new().unwrap();
+    let (svc_a, srv_a) = node(Some(dir_a.path().to_path_buf()));
+    let mut client = BlockingClient::connect(&srv_a.addr().to_string()).unwrap();
+    client.insert_batch(DIM as u32, rows(30, 5)).unwrap();
+    match client.call(&Request::Save).unwrap() {
+        Response::Saved { .. } => {}
+        other => panic!("unexpected save response {other:?}"),
+    }
+    client.insert_batch(DIM as u32, rows(10, 6)).unwrap();
+
+    // Build the exact line a healthy peer would send, then a peer that
+    // dies after shipping half of it.
+    let (snap, wal) = svc_a.replicate_export().unwrap();
+    let line = {
+        let mut l = Response::Replicate {
+            snapshot: snap.clone(),
+            wal: wal.clone(),
+        }
+        .to_json()
+        .to_string();
+        l.push('\n');
+        l
+    };
+    let torn = torn_replicate_peer(line.clone(), line.len() / 2);
+
+    let dir_b = TempDir::new().unwrap();
+    let (svc_b, _srv_b) = node(Some(dir_b.path().to_path_buf()));
+
+    // Direct fetch from the torn peer: one clean error, nothing applied.
+    let mut join = BlockingClient::connect(&torn).unwrap();
+    join.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(join.replicate().is_err(), "half a response line cannot parse");
+
+    // Via the cluster client the fault lands in node_errors too.
+    let topo = topology(
+        &[("torn", torn), ("a", srv_a.addr().to_string())],
+        5_000,
+    );
+    let mut cc = ClusterClient::connect(topo).unwrap();
+    assert!(cc.replicate_from(0).is_err());
+    assert_eq!(cc.metrics().node_errors.load(Ordering::Relaxed), 1);
+
+    // The joiner is still fresh: empty store, and the retry against
+    // the healthy peer succeeds from the same state.
+    let (_, stats_b) = svc_b.stats();
+    assert_eq!(stats_b.stored, 0, "a torn transfer must not leak state");
+    let (snap2, wal2) = cc.replicate_from(1).unwrap();
+    assert_eq!((snap2.clone(), wal2.clone()), (snap, wal));
+    assert_eq!(svc_b.replicate_apply(&snap2, &wal2).unwrap(), 40);
+    assert_eq!(cc.metrics().node_errors.load(Ordering::Relaxed), 1);
+}

@@ -445,3 +445,226 @@ fn hostile_frame_headers_end_in_error_frames_or_a_clean_close() {
     let (snap, _) = svc.stats();
     assert!(snap.frame_errors > 0, "binary fuzz never hit the frame path");
 }
+
+// ===================================================== replicate stream
+
+/// A durable server with a non-trivial image: a compacted snapshot
+/// plus a live WAL tail — the seed every replicate mutation starts
+/// from.
+fn start_durable_server(dir: &std::path::Path) -> (Server, Arc<Coordinator>) {
+    let mut cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM as usize,
+        num_hashes: 64,
+        seed: 5,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    cfg.store.persist_dir = Some(dir.to_path_buf());
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    let rows: Vec<Vec<u32>> = (0..30u32).map(|i| vec![i, i + 7, i + 31]).collect();
+    c.insert_batch(DIM, rows).unwrap();
+    c.call(&cminhash::server::protocol::Request::Save).unwrap();
+    let tail: Vec<Vec<u32>> = (0..10u32).map(|i| vec![i + 2, i + 50]).collect();
+    c.insert_batch(DIM, tail).unwrap();
+    (server, svc)
+}
+
+/// Seeded mutations of a real replicate image — torn snapshot streams
+/// and corrupted WAL-tail records — must each fail `replicate_apply`
+/// with one clean typed error and leave the receiving store untouched:
+/// still empty, and still able to join from the pristine image.
+#[test]
+fn mutated_replicate_images_fail_cleanly_and_leave_the_joiner_untouched() {
+    let dir = cminhash::util::testutil::TempDir::new().unwrap();
+    let (server, svc) = start_durable_server(dir.path());
+    let (_, stats) = svc.stats();
+    assert_eq!(stats.stored, 40);
+
+    // Fetch the image over the wire, binary mode — the exact frame a
+    // joining peer would receive.
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    c.binary().unwrap();
+    let (snap, wal) = c.replicate().unwrap();
+    assert!(snap.starts_with(b"CMHSNAP"));
+    assert!(!wal.is_empty(), "the post-save tail must be in the image");
+
+    // The joiner: a fresh in-memory node of the same shape.  It is
+    // shared across every trial on purpose — any mutation that leaked
+    // state would wedge all later trials (apply requires a fresh
+    // store) and the final pristine join.
+    let joiner = Coordinator::start(ServeConfig {
+        engine: EngineKind::Rust,
+        dim: DIM as usize,
+        num_hashes: 64,
+        seed: 5,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay_us: 300,
+            policy: BatchPolicy::Eager,
+        },
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+
+    let untouched = |trial: &str| {
+        let (_, st) = joiner.stats();
+        assert_eq!(st.stored, 0, "{trial}: a failed apply must not leak state");
+    };
+    let expect_clean = |r: cminhash::Result<u64>, trial: String| {
+        match r {
+            Err(cminhash::Error::Invalid(msg)) => {
+                assert!(msg.contains("replicate"), "{trial}: {msg}")
+            }
+            other => panic!("{trial}: wanted a typed replicate error, got {other:?}"),
+        }
+        untouched(&trial);
+    };
+
+    let mut rng = Rng::seed_from_u64(0xcafe);
+    // torn snapshot stream: cut anywhere strictly inside the image
+    for trial in 0..60u64 {
+        let cut = rng.range_usize(1, snap.len());
+        expect_clean(
+            joiner.replicate_apply(&snap[..cut], &wal),
+            format!("torn snapshot at {cut} (trial {trial})"),
+        );
+    }
+    // corrupted snapshot byte: the image checksum must catch any flip
+    for trial in 0..40u64 {
+        let mut bad = snap.clone();
+        let at = rng.range_usize(0, bad.len());
+        bad[at] ^= (rng.range_u32(1, 256)) as u8;
+        expect_clean(
+            joiner.replicate_apply(&bad, &wal),
+            format!("snapshot flip at {at} (trial {trial})"),
+        );
+    }
+    // corrupted WAL-tail record: per-record CRCs must catch any flip
+    for trial in 0..60u64 {
+        let mut bad = wal.clone();
+        let at = rng.range_usize(0, bad.len());
+        bad[at] ^= (rng.range_u32(1, 256)) as u8;
+        expect_clean(
+            joiner.replicate_apply(&snap, &bad),
+            format!("WAL flip at {at} (trial {trial})"),
+        );
+    }
+
+    // The joiner survived every mutation fresh: the pristine image
+    // still applies, proving no trial half-installed anything.
+    assert_eq!(joiner.replicate_apply(&snap, &wal).unwrap(), 40);
+}
+
+/// Frame-layer mutations of a real `R_REPLICATE` wire image: an
+/// oversized declared snapshot length (both "past the payload end" and
+/// "overflows usize") and a torn payload must each decode to one
+/// `Malformed` error, and the connection that produced the image must
+/// stay usable.
+#[test]
+fn oversized_replicate_lengths_are_malformed_at_the_frame_layer() {
+    use cminhash::server::frame::FrameError;
+
+    let dir = cminhash::util::testutil::TempDir::new().unwrap();
+    let (server, _svc) = start_durable_server(dir.path());
+    let (mut writer, mut reader) = bin_conn(&server);
+
+    // A real replicate exchange, at the raw frame level.
+    let (o, p) = BinRequest::Replicate.encode();
+    FrameWriter::new(&mut writer).write_frame(o, &p).unwrap();
+    let (op_byte, payload) = read_bin(&mut reader).expect("replicate died");
+    assert_eq!(op_byte, op::R_REPLICATE);
+    let snap_len = match BinResponse::decode(op_byte, &payload).unwrap() {
+        BinResponse::Replicate { snapshot, wal } => {
+            assert!(snapshot.starts_with(b"CMHSNAP"));
+            assert!(!wal.is_empty());
+            snapshot.len()
+        }
+        other => panic!("unexpected replicate decode: {other:?}"),
+    };
+
+    // snap_len declared one byte past the payload's actual end
+    let mut oversized = payload.clone();
+    let declared = (payload.len() - 8 + 1) as u64;
+    oversized[..8].copy_from_slice(&declared.to_le_bytes());
+    match BinResponse::decode(op::R_REPLICATE, &oversized) {
+        Err(FrameError::Malformed(msg)) => {
+            assert!(msg.contains("ends early"), "{msg}")
+        }
+        other => panic!("oversized snap_len decoded as {other:?}"),
+    }
+
+    // snap_len = u64::MAX must refuse before any allocation
+    let mut huge = payload.clone();
+    huge[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(matches!(
+        BinResponse::decode(op::R_REPLICATE, &huge),
+        Err(FrameError::Malformed(_))
+    ));
+
+    // torn payload: any cut before the declared snapshot stream ends
+    // (inside the length prefix or inside the snapshot bytes) must
+    // refuse — a shorter cut tears the u64, a longer one leaves fewer
+    // snapshot bytes than declared.  Cuts past `8 + snap_len` are NOT
+    // torn (the WAL tail is just "the rest"), so stay strictly below.
+    let mut rng = Rng::seed_from_u64(0xd0d0);
+    for trial in 0..40u64 {
+        let cut = rng.range_usize(0, 8 + snap_len);
+        match BinResponse::decode(op::R_REPLICATE, &payload[..cut]) {
+            Err(FrameError::Malformed(_)) | Err(FrameError::Truncated) => {}
+            other => panic!("trial {trial} (cut {cut}): decoded as {other:?}"),
+        }
+    }
+
+    // a REPLICATE request with a non-empty payload is a protocol
+    // error the server answers, not a dropped connection
+    let mut frame = Vec::new();
+    FrameWriter::new(&mut frame)
+        .write_frame(op::REPLICATE, &[0xAA, 0xBB])
+        .unwrap();
+    writer.write_all(&frame).unwrap();
+    let (op_byte, _) = read_bin(&mut reader).expect("connection died");
+    assert_eq!(op_byte, op::R_ERR);
+
+    // and the stream is still in sync
+    let (o, p) = BinRequest::Ping.encode();
+    FrameWriter::new(&mut writer).write_frame(o, &p).unwrap();
+    let (op_byte, payload) = read_bin(&mut reader).unwrap();
+    assert!(matches!(
+        BinResponse::decode(op_byte, &payload).unwrap(),
+        BinResponse::Pong
+    ));
+}
+
+/// An in-memory node has no durable image to offer: `replicate` must
+/// answer a clean error in both wire modes and keep the connection.
+#[test]
+fn replicate_against_an_in_memory_node_errors_cleanly() {
+    let (server, _svc) = start_server();
+    let mut c = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    let err = c.replicate().unwrap_err();
+    assert!(err.to_string().contains("persist"), "{err}");
+    c.ping().unwrap();
+
+    let mut cb = BlockingClient::connect(&server.addr().to_string()).unwrap();
+    cb.binary().unwrap();
+    let err = cb.replicate().unwrap_err();
+    assert!(err.to_string().contains("persist"), "{err}");
+    cb.ping().unwrap();
+}

@@ -23,17 +23,29 @@ throughput with tracing enabled must stay >= 0.97x of the same stack
 with tracing disabled — instrumentation that taxes the hot path more
 than 3% is a regression, not a feature.
 
+And the cluster plane's scaling contract from
+``BENCH_cluster_scale.json`` (emitted by the cluster_scale bench): a
+2-node cluster must ingest at >= 1.6x the single-node rate on the same
+machine — each node is a full stack with its own batch pump, so if
+fan-out doesn't buy most of a second node's compute, the routing or
+merge path is eating it.
+
 Any other ``BENCH_*.json`` present is checked for being valid JSON
 with a ``bench`` tag (schema drift in an emitter fails fast here
 rather than in a downstream dashboard).
 
-When no ``BENCH_bbit_query.json`` / ``BENCH_wire_format.json`` exists
-(benches not run — e.g. a plain ``make verify`` before ``make bench``),
-the corresponding gate SKIPS with exit 0 so verify stays runnable from
-a fresh clone; CI runs the benches first and then this gate, making
-the skip path impossible there.
+An **absent** bench file means the bench was not run (e.g. a plain
+``make verify`` before ``make bench``) and its gate SKIPS so verify
+stays runnable from a fresh clone; CI runs the benches first and then
+this gate, making the skip path impossible there.  A **present but
+malformed** file is never a skip: a truncated or mis-typed emission is
+a broken emitter, and conflating it with "not run" would let a
+regressed bench vanish from the gate, so it is a hard FAIL.  The
+absent/malformed split lives in :func:`load_bench`; every gate takes
+the pre-parsed record and never touches the filesystem itself.
 
-Exit status: 0 = pass or skip, 1 = regression (one line per failure).
+Exit status: 0 = pass or skip, 1 = regression or malformed bench file
+(one ``check_bench: FAIL:`` line per failure, never a traceback).
 
 Usage: python3 tools/check_bench.py [ROOT]
 """
@@ -63,6 +75,12 @@ WIRE_SPEEDUP = 1.3
 # healthy build; 0.97 leaves room for run-to-run jitter while still
 # catching an accidentally hot lock or allocation in the trace path.
 OBS_MARGIN = 0.97
+# Two nodes must ingest at least this multiple of the single-node
+# rate.  Perfect scaling is 2.0; rendezvous routing + per-node
+# batching leave the fan-out path with no shared bottleneck, so a
+# healthy build lands well above 1.6 — the floor catches a merge or
+# routing path that serializes what should be parallel.
+CLUSTER_SPEEDUP = 1.6
 
 
 def fail(msgs):
@@ -71,30 +89,59 @@ def fail(msgs):
     return 1
 
 
-def check_bbit_query(path):
-    with open(path) as f:
-        data = json.load(f)
+def load_bench(path):
+    """Load one bench JSON file, separating absent from malformed.
+
+    Returns ``(data, error)``: an absent file is ``(None, None)`` —
+    the caller skips its gate; a present-but-unparsable or non-object
+    file is ``(None, message)`` — the caller hard-fails.  A parsed
+    dict is ``(data, None)``.
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return None, None
+    except (OSError, ValueError) as e:
+        return None, f"{path}: malformed bench JSON ({e})"
+    if not isinstance(data, dict):
+        return None, f"{path}: bench record is not a JSON object"
+    return data, None
+
+
+def check_bbit_query(path, data):
     rows = data.get("results", [])
     failures = []
     by_k = {}
-    for row in rows:
-        by_k.setdefault(int(row["k"]), []).append(row)
+    try:
+        for row in rows:
+            by_k.setdefault(int(row["k"]), []).append(row)
+    except (KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed bbit_query results row ({e})"]
     if not by_k:
         return [f"{path}: no results rows"]
     for k, krows in sorted(by_k.items()):
-        base = [r for r in krows if int(r["bits"]) == 32]
+        base = [r for r in krows if int(r.get("bits", 0)) == 32]
         if not base:
             failures.append(f"{path}: K={k} has no bits=32 baseline row")
             continue
         base = base[0]
-        base_qps = float(base["query_per_s"])
-        base_bytes = float(base["bytes_per_item"])
+        try:
+            base_qps = float(base["query_per_s"])
+            base_bytes = float(base["bytes_per_item"])
+        except (KeyError, TypeError, ValueError) as e:
+            failures.append(f"{path}: K={k} malformed baseline row ({e})")
+            continue
         for row in krows:
-            bits = int(row["bits"])
-            if bits == 32:
+            try:
+                bits = int(row["bits"])
+                if bits == 32:
+                    continue
+                qps = float(row["query_per_s"])
+                bpi = float(row["bytes_per_item"])
+            except (KeyError, TypeError, ValueError) as e:
+                failures.append(f"{path}: K={k} malformed row ({e})")
                 continue
-            qps = float(row["query_per_s"])
-            bpi = float(row["bytes_per_item"])
             if bits in PACKED_WIN_BITS and qps < QPS_MARGIN * base_qps:
                 failures.append(
                     f"K={k} bits={bits}: packed query throughput "
@@ -117,9 +164,7 @@ def check_bbit_query(path):
     return failures
 
 
-def check_wire_format(path):
-    with open(path) as f:
-        data = json.load(f)
+def check_wire_format(path, data):
     try:
         bits = int(data["bits"])
         json_ins = float(data["json_insert_rows_per_s"])
@@ -143,14 +188,12 @@ def check_wire_format(path):
     return []
 
 
-def check_obs_overhead(path):
+def check_obs_overhead(path, data):
     try:
-        with open(path) as f:
-            data = json.load(f)
         qps_on = float(data["qps_on"])
         qps_off = float(data["qps_off"])
         ratio = float(data["ratio"])
-    except (OSError, KeyError, TypeError, ValueError) as e:
+    except (KeyError, TypeError, ValueError) as e:
         return [f"{path}: malformed obs_overhead record ({e})"]
     print(
         f"check_bench: obs: query tracing-on {qps_on:.0f} q/s vs "
@@ -165,39 +208,74 @@ def check_obs_overhead(path):
     return []
 
 
+def check_cluster_scale(path, data):
+    by_nodes = {}
+    try:
+        for row in data["nodes"]:
+            by_nodes[int(row["nodes"])] = float(row["ingest_rows_per_s"])
+    except (KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed cluster_scale record ({e})"]
+    if 1 not in by_nodes or 2 not in by_nodes:
+        return [
+            f"{path}: cluster_scale record lacks the 1-node and 2-node "
+            f"rows the scaling gate compares (got {sorted(by_nodes)})"
+        ]
+    single, two = by_nodes[1], by_nodes[2]
+    ratio = two / single if single else 0.0
+    print(
+        f"check_bench: cluster: ingest 1 node {single:.0f} rows/s, "
+        f"2 nodes {two:.0f} rows/s ({ratio:.2f}x, floor {CLUSTER_SPEEDUP})"
+    )
+    for n in sorted(by_nodes):
+        if n > 2:
+            wider = by_nodes[n] / single if single else 0.0
+            print(
+                f"check_bench: cluster: {n} nodes {by_nodes[n]:.0f} rows/s "
+                f"({wider:.2f}x single, informational)"
+            )
+    if ratio < CLUSTER_SPEEDUP:
+        return [
+            f"cluster scaling: 2-node ingest {two:.0f} rows/s is only "
+            f"{ratio:.2f}x the single-node {single:.0f} rows/s "
+            f"(need >= {CLUSTER_SPEEDUP}x)"
+        ]
+    return []
+
+
+# Gated files by basename; anything else matching BENCH_*.json gets
+# only the generic well-formed + 'bench'-tag check.
+GATES = {
+    "BENCH_bbit_query.json": check_bbit_query,
+    "BENCH_wire_format.json": check_wire_format,
+    "BENCH_obs_overhead.json": check_obs_overhead,
+    "BENCH_cluster_scale.json": check_cluster_scale,
+}
+
+
 def main():
     root = sys.argv[1] if len(sys.argv) > 1 else "."
-    bench_files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
-    gate = os.path.join(root, "BENCH_bbit_query.json")
-    wire = os.path.join(root, "BENCH_wire_format.json")
-    obs = os.path.join(root, "BENCH_obs_overhead.json")
-
-    # every emitted bench file must at least be well-formed
     failures = []
-    for path in bench_files:
-        try:
-            with open(path) as f:
-                data = json.load(f)
-            if "bench" not in data:
-                failures.append(f"{path}: missing 'bench' tag")
-        except (OSError, ValueError) as e:
-            failures.append(f"{path}: unreadable ({e})")
-
     ran_gate = False
-    if os.path.exists(gate):
-        failures.extend(check_bbit_query(gate))
-        ran_gate = True
-    if os.path.exists(wire):
-        failures.extend(check_wire_format(wire))
-        ran_gate = True
-    if os.path.exists(obs):
-        failures.extend(check_obs_overhead(obs))
-        ran_gate = True
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        data, err = load_bench(path)
+        if err is not None:
+            failures.append(err)
+            continue
+        if data is None:
+            # Deleted between glob and open: same as never emitted.
+            continue
+        if "bench" not in data:
+            failures.append(f"{path}: missing 'bench' tag")
+            continue
+        gate = GATES.get(os.path.basename(path))
+        if gate is not None:
+            failures.extend(gate(path, data))
+            ran_gate = True
+
     if not ran_gate and not failures:
         print(
-            "check_bench: no BENCH_bbit_query.json / BENCH_wire_format"
-            ".json / BENCH_obs_overhead.json found (benches not run); "
-            "skipping the perf gates"
+            "check_bench: no gated BENCH_*.json found (benches not "
+            "run); skipping the perf gates"
         )
         return 0
 

@@ -8,8 +8,10 @@ The wire surface lives in four places that drift independently:
 * ``rust/src/obs/mod.rs`` — ``OpKind``, the canonical op registry the
   observability plane indexes by;
 * ``rust/src/server/frame.rs`` — the ``bin1`` opcode constants, plus
-  the ``bin_op_kind`` dispatch and ``BlockingClient`` conveniences in
-  ``rust/src/server/mod.rs``;
+  the ``bin_op_kind`` dispatch in ``rust/src/server/mod.rs`` and the
+  ``BlockingClient`` conveniences in ``rust/src/server/client.rs``
+  (the client moved there when the cluster plane landed; trees that
+  still keep it in ``mod.rs`` are accepted as a fallback);
 * ``docs/PROTOCOL.md`` — the human registry: per-op headings and the
   two opcode tables.
 
@@ -23,6 +25,7 @@ from . import Finding, camel_to_snake, fn_body, impl_body, strip_comments
 PROTOCOL_RS = "rust/src/server/protocol.rs"
 FRAME_RS = "rust/src/server/frame.rs"
 SERVER_RS = "rust/src/server/mod.rs"
+CLIENT_RS = "rust/src/server/client.rs"
 OBS_RS = "rust/src/obs/mod.rs"
 PROTOCOL_MD = "docs/PROTOCOL.md"
 
@@ -43,6 +46,7 @@ CLIENT_METHOD = {
     "estimate": "estimate",
     "trace": "trace",
     "metrics": "metrics_text",
+    "replicate": "replicate",
 }
 
 
@@ -172,12 +176,18 @@ def analyze(tree):
                 ))
 
     # -- BlockingClient dialect coverage -----------------------------------
-    if server is not None and consts is not None:
+    # The client lives in client.rs; older trees (and the minimal test
+    # fixtures) keep it in mod.rs, so fall back there.
+    client_text = tree.get(CLIENT_RS)
+    client_file = CLIENT_RS if client_text is not None else SERVER_RS
+    if client_text is None:
+        client_text = server
+    if client_text is not None and consts is not None:
         requests, _ = consts
-        client = impl_body(strip_comments(server), "BlockingClient")
+        client = impl_body(strip_comments(client_text), "BlockingClient")
         if client is None:
             findings.append(Finding(
-                "wire", "client-gap", SERVER_RS, 0,
+                "wire", "client-gap", client_file, 0,
                 "impl BlockingClient not found",
             ))
         else:
@@ -186,14 +196,14 @@ def analyze(tree):
                 want = CLIENT_METHOD.get(op)
                 if want is None:
                     findings.append(Finding(
-                        "wire", "client-gap", SERVER_RS, 0,
+                        "wire", "client-gap", client_file, 0,
                         f"bin1 op '{op}' has no entry in the analyzer's "
                         f"CLIENT_METHOD map — extend "
                         f"tools/staticlint/wire.py when adding ops",
                     ))
                 elif want not in methods:
                     findings.append(Finding(
-                        "wire", "client-gap", SERVER_RS, 0,
+                        "wire", "client-gap", client_file, 0,
                         f"bin1 op '{op}' has no BlockingClient::{want} "
                         f"convenience: the op is unreachable from typed "
                         f"client code",

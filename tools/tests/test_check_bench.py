@@ -1,0 +1,217 @@
+#!/usr/bin/env python3
+"""Self-tests for tools/check_bench: the absent-vs-malformed split and
+the cluster scaling gate.
+
+The gate's contract is asymmetric on purpose — an *absent* bench file
+means "bench not run" and skips with exit 0, while a *present but
+malformed* file means "broken emitter" and hard-fails with a clean
+``check_bench: FAIL:`` line (never a traceback).  These tests drive
+the script as a subprocess against throwaway directories so the whole
+surface — parsing, gating, exit codes, output discipline — is pinned,
+not just the helper functions.
+
+Run: python3 tools/tests/test_check_bench.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+)
+
+import check_bench  # noqa: E402
+
+SCRIPT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "check_bench.py"
+)
+
+
+def run_gate(root):
+    """Run check_bench.py against ``root``; return (exit, stdout, stderr)."""
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, root],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    return proc.returncode, proc.stdout, proc.stderr
+
+
+def cluster_record(single=10_000.0, two=18_000.0, four=30_000.0):
+    return {
+        "bench": "cluster_scale",
+        "dim": 4096,
+        "k": 256,
+        "rows": 16384,
+        "conns": 4,
+        "nodes": [
+            {
+                "nodes": n,
+                "ingest_rows_per_s": rps,
+                "query_rows_per_s": rps / 2.0,
+                "speedup_vs_single": rps / single if single else 0.0,
+            }
+            for n, rps in ((1, single), (2, two), (4, four))
+        ],
+    }
+
+
+class LoadBenchTests(unittest.TestCase):
+    """The helper itself: (data, error) tri-state."""
+
+    def test_absent_file_is_a_skip_not_an_error(self):
+        with tempfile.TemporaryDirectory() as d:
+            data, err = check_bench.load_bench(os.path.join(d, "nope.json"))
+        self.assertIsNone(data)
+        self.assertIsNone(err)
+
+    def test_malformed_json_is_an_error_not_a_skip(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "BENCH_x.json")
+            with open(path, "w") as f:
+                f.write('{"bench": "x", truncated')
+            data, err = check_bench.load_bench(path)
+        self.assertIsNone(data)
+        self.assertIsNotNone(err)
+        self.assertIn("malformed bench JSON", err)
+
+    def test_non_object_top_level_is_an_error(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "BENCH_x.json")
+            with open(path, "w") as f:
+                json.dump([1, 2, 3], f)
+            data, err = check_bench.load_bench(path)
+        self.assertIsNone(data)
+        self.assertIn("not a JSON object", err)
+
+    def test_valid_object_loads(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "BENCH_x.json")
+            with open(path, "w") as f:
+                json.dump({"bench": "x"}, f)
+            data, err = check_bench.load_bench(path)
+        self.assertIsNone(err)
+        self.assertEqual(data, {"bench": "x"})
+
+
+class GateProcessTests(unittest.TestCase):
+    """End-to-end runs of the script against seeded directories."""
+
+    def test_empty_root_skips_with_exit_zero(self):
+        with tempfile.TemporaryDirectory() as d:
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 0, out + err)
+        self.assertIn("skipping the perf gates", out)
+
+    def test_malformed_gated_file_hard_fails_without_traceback(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                f.write("{not json at all")
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("check_bench: FAIL:", out)
+        self.assertIn("malformed bench JSON", out)
+        self.assertNotIn("Traceback", err)
+
+    def test_malformed_ungated_bench_file_also_hard_fails(self):
+        # A BENCH_*.json outside the gated set still must parse: a
+        # truncated emission is a broken emitter wherever it came from.
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_future_thing.json"), "w") as f:
+                f.write("[[[")
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("malformed bench JSON", out)
+        self.assertNotIn("Traceback", err)
+
+    def test_missing_bench_tag_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_future_thing.json"), "w") as f:
+                json.dump({"results": []}, f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("missing 'bench' tag", out)
+
+    def test_wrong_shape_in_gated_record_fails_cleanly(self):
+        # Valid JSON, tagged, but the gate's fields are missing: must be
+        # a clean FAIL (broken emitter), not a traceback and not a pass.
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                json.dump({"bench": "cluster_scale", "nodes": "oops"}, f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("check_bench: FAIL:", out)
+        self.assertIn("malformed cluster_scale record", out)
+        self.assertNotIn("Traceback", err)
+
+    def test_cluster_gate_passes_at_healthy_scaling(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                json.dump(cluster_record(single=10_000, two=18_000), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 0, out + err)
+        self.assertIn("all bench gates passed", out)
+        self.assertIn("1.80x", out)
+
+    def test_cluster_gate_fails_below_the_floor(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                json.dump(cluster_record(single=10_000, two=14_000), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("check_bench: FAIL:", out)
+        self.assertIn("cluster scaling", out)
+        self.assertIn("1.40x", out)
+
+    def test_cluster_gate_requires_the_compared_rows(self):
+        rec = cluster_record()
+        rec["nodes"] = [r for r in rec["nodes"] if r["nodes"] != 2]
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                json.dump(rec, f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("lacks the 1-node and 2-node rows", out)
+
+    def test_one_malformed_file_does_not_mask_a_failing_gate(self):
+        # Both problems must be reported in one run: the malformed
+        # stray file AND the failing cluster ratio.
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_broken.json"), "w") as f:
+                f.write("><")
+            with open(os.path.join(d, "BENCH_cluster_scale.json"), "w") as f:
+                json.dump(cluster_record(single=10_000, two=12_000), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("malformed bench JSON", out)
+        self.assertIn("cluster scaling", out)
+
+
+class ClusterGateUnitTests(unittest.TestCase):
+    """Direct calls into check_cluster_scale for the ratio arithmetic."""
+
+    def test_exactly_at_the_floor_passes(self):
+        rec = cluster_record(single=10_000, two=16_000)
+        self.assertEqual(
+            check_bench.check_cluster_scale("p", rec), []
+        )
+
+    def test_zero_single_node_rate_fails(self):
+        rec = cluster_record(single=0.0, two=16_000)
+        failures = check_bench.check_cluster_scale("p", rec)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("cluster scaling", failures[0])
+
+    def test_floor_matches_the_bench_docstring(self):
+        # The 1.6x figure is quoted in rust/benches/cluster_scale.rs and
+        # docs; pin the constant so a silent relaxation shows up here.
+        self.assertEqual(check_bench.CLUSTER_SPEEDUP, 1.6)
+
+
+if __name__ == "__main__":
+    unittest.main()

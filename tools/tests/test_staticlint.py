@@ -153,6 +153,150 @@ class WireTests(unittest.TestCase):
 
 
 # ---------------------------------------------------------------------------
+# cluster/replicate wire fixtures — the same registry grown by the
+# replicate op, with BlockingClient living in client.rs (the real
+# tree's layout since the cluster plane landed).
+# ---------------------------------------------------------------------------
+
+CLUSTER_PROTOCOL = WIRE_PROTOCOL.replace(
+    '"delete" => Request::Delete { id },',
+    '"delete" => Request::Delete { id },\n'
+    '            "replicate" => Request::Replicate,',
+)
+
+CLUSTER_OBS = WIRE_OBS.replace(
+    'OpKind::Delete => "delete",',
+    'OpKind::Delete => "delete",\n'
+    '            OpKind::Replicate => "replicate",',
+)
+
+CLUSTER_FRAME = WIRE_FRAME.replace(
+    "    pub const R_ERR: u8 = 0x80;",
+    "    pub const REPLICATE: u8 = 0x03;\n"
+    "    pub const R_ERR: u8 = 0x80;",
+).replace(
+    "    pub const R_DELETED: u8 = 0x82;",
+    "    pub const R_DELETED: u8 = 0x82;\n"
+    "    pub const R_REPLICATE: u8 = 0x83;",
+)
+
+CLUSTER_SERVER = """
+fn bin_op_kind(req: &frame::BinRequest) -> OpKind {
+    use frame::BinRequest as B;
+    match req {
+        B::Ping => OpKind::Ping,
+        B::Delete(_) => OpKind::Delete,
+        B::Replicate => OpKind::Replicate,
+    }
+}
+"""
+
+CLUSTER_CLIENT = """
+impl BlockingClient {
+    pub fn ping(&mut self) -> crate::Result<()> { todo() }
+    pub fn delete(&mut self, id: u64) -> crate::Result<()> { todo() }
+    pub fn replicate(&mut self) -> crate::Result<(Vec<u8>, Vec<u8>)> { todo() }
+}
+impl ClusterClient {
+    pub fn replicate_from(&mut self, i: usize) -> crate::Result<(Vec<u8>, Vec<u8>)> { todo() }
+}
+"""
+
+CLUSTER_DOC = """
+### `ping` — liveness
+### `delete` — remove a stored id
+### `replicate` — export the durable image
+
+| op | request | payload |
+|---|---|---|
+| `0x01` | `ping` | empty |
+| `0x02` | `delete` | `id:u64` |
+| `0x03` | `replicate` | empty |
+
+| op | response | payload |
+|---|---|---|
+| `0x80` | error | UTF-8 message |
+| `0x81` | pong | empty |
+| `0x82` | deleted | `id:u64` |
+| `0x83` | replicate image | `snap_len:u64`, snapshot bytes, WAL bytes |
+"""
+
+
+def cluster_tree(**overrides):
+    tree = {
+        "rust/src/server/protocol.rs": CLUSTER_PROTOCOL,
+        "rust/src/obs/mod.rs": CLUSTER_OBS,
+        "rust/src/server/frame.rs": CLUSTER_FRAME,
+        "rust/src/server/mod.rs": CLUSTER_SERVER,
+        "rust/src/server/client.rs": CLUSTER_CLIENT,
+        "docs/PROTOCOL.md": CLUSTER_DOC,
+    }
+    tree.update(overrides)
+    return tree
+
+
+class ClusterWireTests(unittest.TestCase):
+    def test_clean_cluster_fixture(self):
+        # BlockingClient lives in client.rs, not mod.rs — the analyzer
+        # must find it there without a client-gap.
+        self.assertEqual(wire.analyze(cluster_tree()), [])
+
+    def test_missing_replicate_client_method_is_caught(self):
+        client = CLUSTER_CLIENT.replace(
+            "    pub fn replicate(&mut self) -> "
+            "crate::Result<(Vec<u8>, Vec<u8>)> { todo() }\n",
+            "",
+        )
+        found = wire.analyze(
+            cluster_tree(**{"rust/src/server/client.rs": client})
+        )
+        self.assertIn("client-gap", codes(found))
+        # ... and the finding points at client.rs, where the fix goes.
+        paths = {f.path for f in found if f.code == "client-gap"}
+        self.assertIn("rust/src/server/client.rs", paths)
+
+    def test_replicate_without_opkind_is_caught(self):
+        found = wire.analyze(cluster_tree(**{"rust/src/obs/mod.rs": WIRE_OBS}))
+        self.assertIn("missing-opkind", codes(found))
+
+    def test_opkind_without_jsonl_arm_is_caught(self):
+        # replicate is NOT in the audited binary-only set: an OpKind
+        # entry without a jsonl from_json arm is drift.
+        found = wire.analyze(
+            cluster_tree(**{"rust/src/server/protocol.rs": WIRE_PROTOCOL})
+        )
+        self.assertIn("missing-jsonl-op", codes(found))
+
+    def test_missing_replicate_dispatch_arm_is_caught(self):
+        server = CLUSTER_SERVER.replace(
+            "        B::Replicate => OpKind::Replicate,\n", ""
+        )
+        found = wire.analyze(cluster_tree(**{"rust/src/server/mod.rs": server}))
+        self.assertIn("missing-dispatch", codes(found))
+
+    def test_unpaired_replicate_opcode_is_caught(self):
+        frame = CLUSTER_FRAME.replace(
+            "    pub const R_REPLICATE: u8 = 0x83;\n", ""
+        )
+        found = wire.analyze(cluster_tree(**{"rust/src/server/frame.rs": frame}))
+        self.assertIn("unpaired-opcode", codes(found))
+
+    def test_missing_replicate_doc_rows_are_caught(self):
+        doc = CLUSTER_DOC.replace(
+            "| `0x03` | `replicate` | empty |\n", ""
+        ).replace(
+            "| `0x83` | replicate image | `snap_len:u64`, snapshot bytes, "
+            "WAL bytes |\n",
+            "",
+        )
+        found = wire.analyze(cluster_tree(**{"docs/PROTOCOL.md": doc}))
+        self.assertIn("doc-table", codes(found))
+        msgs = " ".join(f.message for f in found if f.code == "doc-table")
+        self.assertIn("replicate", msgs)
+        self.assertIn("0x83", msgs)
+
+
+# ---------------------------------------------------------------------------
 # persistence fixtures
 # ---------------------------------------------------------------------------
 
