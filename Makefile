@@ -48,10 +48,15 @@ linkcheck:
 
 # Offline gate over emitted BENCH_*.json: the packed b-bit plane must
 # beat unpacked query throughput at b <= 8 and shrink memory ~32/b x,
+# the bucket-at-a-time scoring kernel must beat the per-candidate
+# scalar loop by >= 1.2x at b <= 8 (bbit_query's batch_score_speedup),
 # pre-packed bin1 ingest must beat JSON-lines ingest by >= 1.3x, the
 # tracing-enabled hot path must hold >= 0.97x of the tracing-off
-# throughput (obs_overhead), and 2-node cluster ingest must hold
-# >= 1.6x the single-node rate (cluster_scale).  An absent bench file
+# throughput (obs_overhead), 2-node cluster ingest must hold
+# >= 1.6x the single-node rate (cluster_scale), the O(1)-memory iuh
+# hasher must stay within 1.5x of cmh ns/sketch (scheme_sweep), and
+# the shard-parallel snapshot loader must open >= 1.5x faster than the
+# serial replay (snapshot_load).  An absent bench file
 # skips cleanly (run `make bench` first to arm the gates); a present
 # but malformed one hard-fails — its own self-tests pin that split.
 # CI always runs the benches before this gate.

@@ -12,9 +12,11 @@
 //! the candidate sets stay comparable across widths and the sweep
 //! isolates the scoring kernel.
 
-use cminhash::bench::Harness;
+use cminhash::bench::{black_box, Harness};
 use cminhash::index::IndexConfig;
-use cminhash::sketch::SUPPORTED_BITS;
+use cminhash::sketch::{
+    bucket_collision_counts, collision_count, pack_row, packed_words, SUPPORTED_BITS,
+};
 use cminhash::store::ShardedIndex;
 use cminhash::util::json::Json;
 use cminhash::util::rng::Rng;
@@ -100,6 +102,71 @@ fn run(
     )
 }
 
+/// Kernel-level scalar-vs-batch comparison: one synthetic posting
+/// bucket scored by per-candidate [`collision_count`] calls vs one
+/// [`bucket_collision_counts`] sweep over the same arena.  Returns the
+/// speedup (scalar wall / batch wall, best-of-3 each); the offline
+/// gate requires ≥ 1.2× at b ≤ 8, where the packed query plane lives.
+fn batch_kernel_speedup(h: &mut Harness, bits: u8, k: usize, items: &[Vec<u32>]) -> f64 {
+    let wpr = packed_words(k, bits);
+    let n = items.len().min(4096);
+    let mut arena = vec![0u64; n * wpr];
+    for (i, it) in items.iter().take(n).enumerate() {
+        pack_row(it, bits, &mut arena[i * wpr..(i + 1) * wpr]);
+    }
+    let mut q = vec![0u64; wpr];
+    pack_row(&items[0], bits, &mut q);
+    let slots: Vec<u64> = (0..n as u64).collect();
+    const PASSES: usize = 20;
+
+    let mut scalar_wall = std::time::Duration::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..PASSES {
+            let mut acc = 0usize;
+            for &slot in &slots {
+                let s = slot as usize;
+                acc += collision_count(&q, &arena[s * wpr..(s + 1) * wpr], k, bits);
+            }
+            black_box(acc);
+        }
+        scalar_wall = scalar_wall.min(t0.elapsed());
+    }
+    h.report(
+        &format!("scalar bucket score {n} rows x {PASSES} (best of 3), K={k}, bits={bits}"),
+        scalar_wall,
+        (n * PASSES) as u64,
+    );
+
+    let mut batch_wall = std::time::Duration::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..PASSES {
+            let counts = bucket_collision_counts(&q, &arena, wpr, &slots, k, bits);
+            black_box(counts);
+        }
+        batch_wall = batch_wall.min(t0.elapsed());
+    }
+    h.report(
+        &format!("batch bucket score {n} rows x {PASSES} (best of 3), K={k}, bits={bits}"),
+        batch_wall,
+        (n * PASSES) as u64,
+    );
+
+    // equivalence spot check under bench shapes (the full matrix lives
+    // in the unit tests)
+    let counts = bucket_collision_counts(&q, &arena, wpr, &slots, k, bits);
+    for (i, &c) in counts.iter().enumerate() {
+        assert_eq!(
+            c,
+            collision_count(&q, &arena[i * wpr..(i + 1) * wpr], k, bits),
+            "kernel diverges from scalar at row {i}, K={k}, bits={bits}"
+        );
+    }
+
+    scalar_wall.as_secs_f64() / batch_wall.as_secs_f64()
+}
+
 fn main() {
     let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
     let n = if fast { 20_000 } else { 60_000 };
@@ -114,6 +181,7 @@ fn main() {
         // packed width is compared against
         for &bits in SUPPORTED_BITS.iter().rev() {
             let (ins, qry, bytes) = run(&mut h, bits, k, &items);
+            let speedup = batch_kernel_speedup(&mut h, bits, k, &items);
             if bits == 32 {
                 baseline_qps = qry;
             }
@@ -124,7 +192,8 @@ fn main() {
             };
             println!(
                 "  -> bits={bits:2}: {ins:9.0} inserts/s, {qry:8.0} queries/s \
-                 ({vs:.2}x vs unpacked), {bytes:4} B/item"
+                 ({vs:.2}x vs unpacked), {bytes:4} B/item, \
+                 batch kernel {speedup:.2}x vs scalar"
             );
             results.push(Json::obj(vec![
                 ("bits", Json::Num(f64::from(bits))),
@@ -132,6 +201,7 @@ fn main() {
                 ("insert_per_s", Json::Num(ins)),
                 ("query_per_s", Json::Num(qry)),
                 ("bytes_per_item", Json::Num(bytes as f64)),
+                ("batch_score_speedup", Json::Num(speedup)),
             ]));
         }
     }

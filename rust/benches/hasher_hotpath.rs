@@ -1,10 +1,11 @@
 //! Hot-path microbenchmarks: ns/sketch for the pure-Rust hashers
 //! across (D, f, K), permutation-memory footprint, the XLA artifact
 //! batch execution (when artifacts are present), and a **scheme
-//! sweep** — sketch throughput and estimate MSE vs K for all five
+//! sweep** — sketch throughput and estimate MSE vs K for all six
 //! [`SketchScheme`]s, emitted machine-readable as
-//! `BENCH_scheme_sweep.json`.  This is the §Perf baseline/after
-//! instrument.
+//! `BENCH_scheme_sweep.json` (gated by `tools/check_bench.py`: the
+//! O(1)-state `iuh` scheme must stay within 1.5× of `cmh` ns/sketch).
+//! This is the §Perf baseline/after instrument.
 
 use cminhash::bench::{black_box, Harness};
 use cminhash::runtime::{HostTensor, XlaEngine};

@@ -1,0 +1,129 @@
+//! Snapshot-load bench: the serial `insert_with_id` replay loop (the
+//! pre-bulk-loader recovery path) vs [`ShardedIndex::load_items`],
+//! which takes each shard's write lock once and rebuilds band postings
+//! shard-parallel above the fan-out threshold.  Emits
+//! `BENCH_snapshot_load.json`, gated by `tools/check_bench.py` in
+//! `make verify` / CI: the bulk loader must open ≥ 1.5× faster than
+//! the serial replay — no measured win, no merge.
+//!
+//! Both paths are also pinned against each other for state identity
+//! here (items, counters, fresh-id floor), mirroring the unit test in
+//! `store/sharded.rs` at bench scale.
+
+use cminhash::bench::Harness;
+use cminhash::index::IndexConfig;
+use cminhash::store::ShardedIndex;
+use cminhash::util::json::Json;
+use cminhash::util::rng::Rng;
+use std::time::Instant;
+
+const SHARDS: usize = 4;
+const K: usize = 64;
+
+/// Snapshot-shaped items: id-sorted rows with near-duplicate families
+/// so the rebuilt band postings carry realistic bucket fan-out.
+fn snapshot_items(n: usize) -> Vec<(u64, Vec<u32>)> {
+    let mut rng = Rng::seed_from_u64(11);
+    let bases: Vec<Vec<u32>> = (0..512)
+        .map(|_| (0..K).map(|_| rng.range_u32(0, 1 << 20)).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let mut sk = bases[i % bases.len()].clone();
+            for _ in 0..rng.range_usize(1, K / 4) {
+                let pos = rng.range_usize(0, K);
+                sk[pos] = rng.range_u32(0, 1 << 20);
+            }
+            (i as u64, sk)
+        })
+        .collect()
+}
+
+fn fresh_index() -> ShardedIndex {
+    let cfg = IndexConfig {
+        bands: 16,
+        rows_per_band: 4,
+    };
+    ShardedIndex::new(K, cfg, SHARDS).unwrap()
+}
+
+fn main() {
+    let fast = std::env::var("CMINHASH_BENCH_FAST").is_ok_and(|v| v == "1");
+    let n = if fast { 20_000 } else { 100_000 };
+    let mut h = Harness::new("snapshot_load");
+    println!("snapshot image: {n} items of K={K}, {SHARDS} shards");
+    let items = snapshot_items(n);
+
+    // Serial replay: one insert_with_id per row, exactly what
+    // `PersistentIndex::open` did before the bulk loader existed.
+    let mut serial_wall = std::time::Duration::MAX;
+    for _ in 0..3 {
+        let idx = fresh_index();
+        let t0 = Instant::now();
+        for (id, sk) in &items {
+            idx.insert_with_id(*id, sk).unwrap();
+        }
+        serial_wall = serial_wall.min(t0.elapsed());
+        assert_eq!(idx.len(), n);
+    }
+    h.report(
+        &format!("serial insert_with_id replay, {n} items (best of 3)"),
+        serial_wall,
+        n as u64,
+    );
+
+    // Bulk load: shard-grouped, one lock per shard, scoped thread per
+    // shard above the fan-out threshold.
+    let mut bulk_wall = std::time::Duration::MAX;
+    let mut bulk_state = None;
+    for _ in 0..3 {
+        let idx = fresh_index();
+        let t0 = Instant::now();
+        idx.load_items(&items).unwrap();
+        bulk_wall = bulk_wall.min(t0.elapsed());
+        assert_eq!(idx.len(), n);
+        bulk_state = Some(idx);
+    }
+    h.report(
+        &format!("parallel load_items, {n} items (best of 3)"),
+        bulk_wall,
+        n as u64,
+    );
+
+    // State identity at bench scale: same items, same counters, same
+    // fresh-id floor as the serial path.
+    let serial_idx = fresh_index();
+    for (id, sk) in &items {
+        serial_idx.insert_with_id(*id, sk).unwrap();
+    }
+    let bulk_idx = bulk_state.expect("three bulk passes ran");
+    assert_eq!(bulk_idx.items(), serial_idx.items(), "bulk load must be identical");
+    assert_eq!(bulk_idx.next_id(), serial_idx.next_id());
+    assert_eq!(bulk_idx.shard_ops(), serial_idx.shard_ops());
+
+    let serial_per_s = n as f64 / serial_wall.as_secs_f64();
+    let bulk_per_s = n as f64 / bulk_wall.as_secs_f64();
+    let speedup = serial_wall.as_secs_f64() / bulk_wall.as_secs_f64();
+    println!(
+        "  -> serial {serial_per_s:9.0} items/s, parallel {bulk_per_s:9.0} items/s \
+         ({speedup:.2}x)"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("snapshot_load")),
+        ("items", Json::Num(n as f64)),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("k", Json::Num(K as f64)),
+        (
+            "results",
+            Json::Arr(vec![Json::obj(vec![
+                ("serial_items_per_s", Json::Num(serial_per_s)),
+                ("parallel_items_per_s", Json::Num(bulk_per_s)),
+                ("speedup", Json::Num(speedup)),
+            ])]),
+        ),
+    ]);
+    std::fs::write("BENCH_snapshot_load.json", out.to_string()).unwrap();
+    println!("wrote BENCH_snapshot_load.json");
+    h.write_csv().unwrap();
+}

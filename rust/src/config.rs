@@ -83,7 +83,7 @@ impl Default for BatchConfig {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SketchSettings {
     /// The minwise-hashing scheme: `classic | cmh | zero-pi | oph |
-    /// coph` (see `docs/SCHEMES.md`).  Sketches from different schemes
+    /// coph | iuh` (see `docs/SCHEMES.md`).  Sketches from different schemes
     /// are not comparable, so the scheme is stamped into snapshots and
     /// reported by the `stats` wire op.
     pub scheme: SketchScheme,

@@ -20,8 +20,8 @@
 use crate::index::packed::PackedRows;
 use crate::obs::{stage, Stage};
 use crate::sketch::{
-    check_sketch_bits, collision_count, corrected_estimate, estimate, pack_row,
-    packed_words,
+    bucket_collision_counts, check_sketch_bits, corrected_estimate, estimate,
+    pack_row, packed_words,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -422,9 +422,21 @@ impl BandingIndex {
                 let _span = stage(Stage::Score);
                 postings
                     .into_iter()
-                    .map(|id| Neighbor {
-                        id,
-                        score: estimate(sketch, &map[&id]),
+                    .filter_map(|id| {
+                        // Total lookup: postings and the sketch map are
+                        // only ever mutated together under `&mut self`
+                        // (insert/remove erase both sides), so a
+                        // posting without a row cannot arise from this
+                        // module's API — but indexing `map[&id]` here
+                        // turned any future desync into a worker panic.
+                        // A dangling posting is skipped instead; the
+                        // invariant is pinned by
+                        // `dangling_posting_is_skipped_not_a_panic`.
+                        let row = map.get(&id)?;
+                        Some(Neighbor {
+                            id,
+                            score: estimate(sketch, row),
+                        })
                     })
                     .collect()
             }
@@ -436,15 +448,25 @@ impl BandingIndex {
                     self.collect_postings(self.packed_sigs(&q).into_iter())
                 };
                 let _span = stage(Stage::Score);
+                // Bucket-at-a-time scoring: `collect_postings` returns
+                // slots sorted ascending, so the kernel streams the
+                // candidate rows out of the arena in address order —
+                // one width check for the whole bucket, 4-wide unrolled
+                // words, no per-candidate slice plumbing.
+                let counts = bucket_collision_counts(
+                    &q,
+                    rows.arena(),
+                    rows.words_per_row(),
+                    &postings,
+                    self.k,
+                    self.bits,
+                );
                 postings
-                    .into_iter()
-                    .map(|slot| {
-                        let slot = slot as usize;
-                        let c = collision_count(&q, rows.row(slot), self.k, self.bits);
-                        Neighbor {
-                            id: rows.id_at(slot),
-                            score: corrected_estimate(c, self.k, self.bits),
-                        }
+                    .iter()
+                    .zip(counts)
+                    .map(|(&slot, c)| Neighbor {
+                        id: rows.id_at(slot as usize),
+                        score: corrected_estimate(c, self.k, self.bits),
                     })
                     .collect()
             }
@@ -708,6 +730,66 @@ mod tests {
         idx.remove(8);
         let (buckets, max) = idx.bucket_stats();
         assert_eq!((buckets, max), (4, 1), "postings shrink with deletes");
+    }
+
+    #[test]
+    fn dangling_posting_is_skipped_not_a_panic() {
+        // Regression for the `map[&id]` panic: a posting whose sketch
+        // row is gone (a desync no public path produces, simulated here
+        // through the private fields) must be skipped by scoring, not
+        // take the worker down.
+        let h = CMinHasher::new(1024, 64, 5);
+        let mut idx = BandingIndex::new(64, cfg()).unwrap();
+        let ska = h.sketch_sparse(&(100..200).collect::<Vec<_>>());
+        let skb = h.sketch_sparse(&(300..400).collect::<Vec<_>>());
+        idx.insert(1, &ska).unwrap();
+        idx.insert(2, &skb).unwrap();
+        match &mut idx.rows {
+            Rows::Full(map) => {
+                map.remove(&1);
+            }
+            Rows::Packed(_) => unreachable!("bits=32 stores full rows"),
+        }
+        let hits = idx.query(&ska, 5);
+        assert!(hits.iter().all(|n| n.id != 1), "dangling id must not score");
+        assert_eq!(idx.query(&skb, 1)[0].id, 2, "live items still served");
+    }
+
+    #[test]
+    fn remove_query_interleaving_never_dangles() {
+        // The invariant behind the total lookup: any interleaving of
+        // insert/remove/query through the public API keeps postings and
+        // rows in lockstep — removed ids never resurface, live ids keep
+        // scoring — in both storage modes.
+        let h = CMinHasher::new(1024, 64, 13);
+        for bits in [8u8, 32] {
+            let mut idx = BandingIndex::with_bits(64, cfg(), bits).unwrap();
+            let sks: Vec<Vec<u32>> = (0..20u32)
+                .map(|i| {
+                    h.sketch_sparse(&(i * 17..i * 17 + 60).collect::<Vec<_>>())
+                })
+                .collect();
+            for (i, sk) in sks.iter().enumerate() {
+                idx.insert(i as u64, sk).unwrap();
+            }
+            let mut removed = std::collections::HashSet::new();
+            for round in 0..20usize {
+                let victim = (round * 7 % 20) as u64;
+                if removed.insert(victim) {
+                    assert!(idx.remove(victim).is_some(), "bits={bits}");
+                }
+                for sk in &sks {
+                    for n in idx.query(sk, 20) {
+                        assert!(
+                            !removed.contains(&n.id),
+                            "bits={bits}: removed id {} resurfaced",
+                            n.id
+                        );
+                    }
+                }
+            }
+            assert_eq!(idx.len(), 20 - removed.len(), "bits={bits}");
+        }
     }
 
     #[test]

@@ -87,6 +87,15 @@ impl PackedRows {
         &self.words[slot * self.wpr..(slot + 1) * self.wpr]
     }
 
+    /// The whole arena — `capacity × words_per_row` words, row-major,
+    /// freed slots zeroed.  The batch scoring kernel
+    /// ([`crate::sketch::bucket_collision_counts`]) streams candidate
+    /// rows straight out of this slice in slot order, which is why the
+    /// layout keeps rows contiguous and never interleaves metadata.
+    pub fn arena(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Pack `full` (length K; values are masked to b bits) under `id`
     /// and return the slot.  The caller guarantees `id` is not already
     /// resident and the length matches K.

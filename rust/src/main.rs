@@ -39,7 +39,7 @@ cminhash — C-MinHash sketching & similarity-search service
 
 USAGE:
   cminhash serve   [--config FILE.json] [--addr A] [--engine xla|rust]
-                   [--scheme classic|cmh|zero-pi|oph|coph]
+                   [--scheme classic|cmh|zero-pi|oph|coph|iuh]
                    [--bits 1|2|4|8|16|32]
                    [--dim D] [--num-hashes K] [--artifacts DIR] [--seed S]
                    [--shards N] [--persist DIR] [--max-conns N]

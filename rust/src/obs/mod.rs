@@ -17,11 +17,13 @@
 //! underneath drop [`stage`] guards around their work (sketch, WAL
 //! append, shard routing, band lookup, scoring), and the server calls
 //! [`RequestGuard::finish`] after the response bytes are written.
-//! Stage spans are attributed through a thread-local sink, so they are
-//! exact on the inline paths; shard fan-out that crosses into scoped
-//! worker threads (large batches) executes outside the sink and its
-//! band/score time shows up in the request total but not in a stage —
-//! documented in `docs/OBSERVABILITY.md`.
+//! Stage spans are attributed through a thread-local sink.  Inline
+//! paths record directly; the scoped-thread shard fan-out (large
+//! indexes) arms each worker's own sink via [`capture_stages`] and
+//! folds the **slowest worker's** stage breakdown back into the
+//! request — the critical path the request actually waited on — so
+//! band/score time attributes on the threaded path too, and the stage
+//! sum stays ≤ the request total (see `docs/OBSERVABILITY.md`).
 //!
 //! Slow requests (total ≥ `obs.slow_threshold_us`) are additionally
 //! **pinned** into a small bounded deque so they survive ring churn
@@ -288,7 +290,9 @@ pub fn stage(st: Stage) -> StageGuard {
 
 /// Credit `us` microseconds to `st` directly — for spans measured
 /// before the request's op was known (wire decode happens before
-/// [`Obs::begin_at`] can run).  No-op when no request is active.
+/// [`Obs::begin_at`] can run), and for folding worker-side spans
+/// captured by [`capture_stages`] back into the request.  No-op when
+/// no request is active.
 pub fn add_stage_us(st: Stage, us: u64) {
     SINK.with(|s| {
         let mut s = s.borrow_mut();
@@ -296,6 +300,42 @@ pub fn add_stage_us(st: Stage, us: u64) {
             s.us[st as usize] += us;
         }
     });
+}
+
+/// True iff the current thread is inside a traced request (its span
+/// sink is armed).  Fan-out code checks this before paying for
+/// worker-side span capture.
+pub fn sink_active() -> bool {
+    SINK.with(|s| s.borrow().active)
+}
+
+/// Run `f` with *this thread's* sink armed and return `f`'s result
+/// together with the per-stage µs its [`stage`] guards recorded.
+///
+/// This is how scoped worker threads spawned inside a traced request
+/// attribute their work: a fresh worker's thread-local sink is
+/// inactive, so stage guards dropped on it would be inert — arming it
+/// here makes them record normally, and the caller decides how to fold
+/// the captured spans back into the request via [`add_stage_us`] (the
+/// shard fan-out credits the slowest worker's breakdown: the critical
+/// path the request actually waited on, which keeps the stage sum ≤
+/// the request total).  The sink is disarmed and zeroed on return, so
+/// nothing leaks into later work on the same thread.
+pub fn capture_stages<R>(f: impl FnOnce() -> R) -> (R, [u64; NUM_STAGES]) {
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.active = true;
+        s.us = [0; NUM_STAGES];
+    });
+    let r = f();
+    let us = SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.active = false;
+        let us = s.us;
+        s.us = [0; NUM_STAGES];
+        us
+    });
+    (r, us)
 }
 
 /// Tracks one in-flight request; created by [`Obs::begin_at`].  Call
@@ -578,6 +618,26 @@ mod tests {
             0,
             "sink was deactivated; stray spans don't leak forward"
         );
+    }
+
+    #[test]
+    fn capture_stages_records_worker_spans_without_leaking() {
+        let (val, us) = capture_stages(|| {
+            add_stage_us(Stage::Score, 7);
+            add_stage_us(Stage::BandLookup, 3);
+            42
+        });
+        assert_eq!(val, 42);
+        assert_eq!(us[Stage::Score as usize], 7);
+        assert_eq!(us[Stage::BandLookup as usize], 3);
+        assert!(!sink_active(), "sink disarmed after capture");
+        // nothing leaks into a later request on this thread
+        let obs = Obs::new(4, u64::MAX, 0);
+        let mut g = obs.begin_at(OpKind::Query, Instant::now());
+        assert!(sink_active(), "begin_at arms the sink");
+        g.finish(1);
+        assert_eq!(obs.recent(1)[0].stages_us, [0; NUM_STAGES]);
+        assert!(!sink_active());
     }
 
     #[test]

@@ -101,34 +101,112 @@ pub fn unpack_row(words: &[u64], k: usize, bits: u8) -> Vec<u32> {
 /// beyond K are zero in both rows by construction and are subtracted
 /// out.
 pub fn collision_count(a: &[u64], b: &[u64], k: usize, bits: u8) -> usize {
-    debug_assert_eq!(a.len(), b.len(), "packed rows differ in width");
-    debug_assert_eq!(a.len(), packed_words(k, bits));
+    // Checked (not debug_) invariants: a release-mode width mismatch
+    // would silently miscount — equal-looking scores for rows of
+    // different K or b.  The checks are O(1) per call against an O(wpr)
+    // loop, so they are free at the index boundary where widths of
+    // stored rows first meet query rows.
+    assert_eq!(a.len(), b.len(), "packed rows differ in width");
+    assert_eq!(
+        a.len(),
+        packed_words(k, bits),
+        "packed row width does not match K at this lane width"
+    );
     let bw = bits as usize;
-    debug_assert_eq!(64 % bw, 0, "kernel needs a word-aligned lane width");
+    assert_eq!(64 % bw, 0, "kernel needs a word-aligned lane width");
     let lanes_per_word = 64 / bw;
+    let lsb = u64::MAX / lane_mask(bits);
     let mut eq = 0usize;
-    if bits == 1 {
-        for (&x, &y) in a.iter().zip(b) {
-            eq += 64 - (x ^ y).count_ones() as usize;
-        }
-    } else {
-        // Low bit of every lane: e.g. 0x0101…01 for b = 8.
-        let lsb = u64::MAX / lane_mask(bits);
-        for (&x, &y) in a.iter().zip(b) {
-            let mut z = x ^ y;
-            // OR-fold each lane's bits down onto its low bit.  Total
-            // shift < b, so a neighboring lane's bits can never reach
-            // this lane's bit 0.
-            let mut sh = 1usize;
-            while sh < bw {
-                z |= z >> sh;
-                sh <<= 1;
-            }
-            eq += lanes_per_word - (z & lsb).count_ones() as usize;
-        }
+    for (&x, &y) in a.iter().zip(b) {
+        eq += word_equal_lanes(x, y, bw, lanes_per_word, lsb);
     }
     // Lanes past K are zero on both sides and always count as equal.
     eq - (a.len() * lanes_per_word - k)
+}
+
+/// Equal lanes in one aligned word pair: XOR, OR-fold each lane's bits
+/// down onto its low bit, mask to the lane-lsb comb, popcount the
+/// *differing* lanes and subtract.  At b = 1 the fold loop is empty and
+/// `lsb` is all-ones, so this degenerates to `64 − popcount(x ^ y)` —
+/// the 1-bit fast path needs no special case.
+#[inline(always)]
+fn word_equal_lanes(x: u64, y: u64, bw: usize, lanes_per_word: usize, lsb: u64) -> usize {
+    let mut z = x ^ y;
+    // Total shift < b, so a neighboring lane's bits can never reach
+    // this lane's bit 0.
+    let mut sh = 1usize;
+    while sh < bw {
+        z |= z >> sh;
+        sh <<= 1;
+    }
+    lanes_per_word - (z & lsb).count_ones() as usize
+}
+
+/// Score every candidate of one band bucket against the query row in a
+/// single pass: `counts[i]` = [`collision_count`]`(q, row(slots[i]))`.
+///
+/// This is the packed plane's batch query kernel.  Instead of one
+/// `collision_count` call per candidate (function-call and bounds-check
+/// overhead per row, no instruction-level parallelism across words),
+/// the bucket streams rows straight out of the arena — callers pass
+/// slots sorted ascending, so candidate rows are read in arena order
+/// and prefetch well — and the word loop is manually unrolled 4-wide so
+/// the four XOR/fold/popcount chains pipeline independently.
+///
+/// `arena` is the full [`crate::index::PackedRows`] word array (`wpr`
+/// words per row, row-major); `slots` are row indices into it.  The
+/// width invariants are checked once per call rather than once per
+/// candidate.
+pub fn bucket_collision_counts(
+    q: &[u64],
+    arena: &[u64],
+    wpr: usize,
+    slots: &[u64],
+    k: usize,
+    bits: u8,
+) -> Vec<usize> {
+    assert_eq!(q.len(), wpr, "packed rows differ in width");
+    assert_eq!(
+        wpr,
+        packed_words(k, bits),
+        "packed row width does not match K at this lane width"
+    );
+    let bw = bits as usize;
+    assert_eq!(64 % bw, 0, "kernel needs a word-aligned lane width");
+    if let Some(&max_slot) = slots.iter().max() {
+        assert!(
+            (max_slot as usize + 1) * wpr <= arena.len(),
+            "slot {max_slot} out of arena bounds"
+        );
+    }
+    let lanes_per_word = 64 / bw;
+    let lsb = u64::MAX / lane_mask(bits);
+    // Padding lanes beyond K are zero in the query and every stored
+    // row, so they always count as equal; subtract them per row.
+    let pad = wpr * lanes_per_word - k;
+    let mut out = Vec::with_capacity(slots.len());
+    for &slot in slots {
+        let base = slot as usize * wpr;
+        let row = &arena[base..base + wpr];
+        let mut e0 = 0usize;
+        let mut e1 = 0usize;
+        let mut e2 = 0usize;
+        let mut e3 = 0usize;
+        let mut qw = q.chunks_exact(4);
+        let mut rw = row.chunks_exact(4);
+        for (qs, rs) in (&mut qw).zip(&mut rw) {
+            e0 += word_equal_lanes(qs[0], rs[0], bw, lanes_per_word, lsb);
+            e1 += word_equal_lanes(qs[1], rs[1], bw, lanes_per_word, lsb);
+            e2 += word_equal_lanes(qs[2], rs[2], bw, lanes_per_word, lsb);
+            e3 += word_equal_lanes(qs[3], rs[3], bw, lanes_per_word, lsb);
+        }
+        let mut eq = e0 + e1 + e2 + e3;
+        for (&x, &y) in qw.remainder().iter().zip(rw.remainder()) {
+            eq += word_equal_lanes(x, y, bw, lanes_per_word, lsb);
+        }
+        out.push(eq - pad);
+    }
+    out
 }
 
 /// The collision-corrected Jaccard estimate for `collisions` equal
@@ -425,6 +503,135 @@ mod tests {
         let raw = a.collision_fraction(&b);
         assert!(raw > 0.3, "raw 1-bit collisions should be ~0.5, got {raw}");
         assert!(a.estimate(&b) < 0.15, "corrected estimate near 0");
+    }
+
+    /// Build a flat arena (like `PackedRows`) from full-width rows.
+    fn build_arena(rows: &[Vec<u32>], k: usize, bits: u8) -> (Vec<u64>, usize) {
+        let wpr = packed_words(k, bits);
+        let mut arena = vec![0u64; rows.len() * wpr];
+        for (slot, full) in rows.iter().enumerate() {
+            pack_row(full, bits, &mut arena[slot * wpr..(slot + 1) * wpr]);
+        }
+        (arena, wpr)
+    }
+
+    #[test]
+    fn batch_kernel_matches_scalar_collision_count() {
+        // The proof-by-test the batch scorer ships under: for every
+        // supported width, odd and even K (including K values whose
+        // lanes cross u64 word seams), the bucket kernel returns
+        // exactly what per-candidate collision_count returns.
+        let mut rng = Rng::seed_from_u64(21);
+        for bits in SUPPORTED_BITS {
+            for k in [1usize, 7, 16, 33, 63, 64, 65, 100, 129] {
+                let n = 9usize; // exercises the 4-way unroll remainder
+                let rows: Vec<Vec<u32>> = (0..n)
+                    .map(|_| (0..k).map(|_| rng.range_u32(0, 1 << 20)).collect())
+                    .collect();
+                let (arena, wpr) = build_arena(&rows, k, bits);
+                // query correlated with row 0 so collisions occur
+                let qfull: Vec<u32> = rows[0]
+                    .iter()
+                    .map(|&v| {
+                        if rng.bool_with(0.5) {
+                            v
+                        } else {
+                            rng.range_u32(0, 1 << 20)
+                        }
+                    })
+                    .collect();
+                let mut q = vec![0u64; wpr];
+                pack_row(&qfull, bits, &mut q);
+                let slots: Vec<u64> = (0..n as u64).collect();
+                let batch = bucket_collision_counts(&q, &arena, wpr, &slots, k, bits);
+                for (i, &slot) in slots.iter().enumerate() {
+                    let base = slot as usize * wpr;
+                    let scalar =
+                        collision_count(&q, &arena[base..base + wpr], k, bits);
+                    assert_eq!(batch[i], scalar, "bits={bits} k={k} slot={slot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_handles_empty_and_singleton_buckets() {
+        let k = 48usize;
+        let bits = 4u8;
+        let rows: Vec<Vec<u32>> = vec![(0..k as u32).collect()];
+        let (arena, wpr) = build_arena(&rows, k, bits);
+        let mut q = vec![0u64; wpr];
+        pack_row(&rows[0], bits, &mut q);
+        assert_eq!(
+            bucket_collision_counts(&q, &arena, wpr, &[], k, bits),
+            Vec::<usize>::new(),
+            "empty bucket scores nothing"
+        );
+        assert_eq!(
+            bucket_collision_counts(&q, &arena, wpr, &[0], k, bits),
+            vec![k],
+            "self-match collides on every lane"
+        );
+    }
+
+    #[test]
+    fn batch_kernel_scores_unsorted_and_repeated_slots() {
+        // The kernel must not assume slots are sorted or unique (the
+        // index sorts them for locality, but correctness is per slot).
+        let k = 16usize;
+        let bits = 8u8;
+        let rows: Vec<Vec<u32>> = (0..4)
+            .map(|r| (0..k as u32).map(|i| i * 3 + r).collect())
+            .collect();
+        let (arena, wpr) = build_arena(&rows, k, bits);
+        let mut q = vec![0u64; wpr];
+        pack_row(&rows[2], bits, &mut q);
+        let got = bucket_collision_counts(&q, &arena, wpr, &[3, 0, 2, 2], k, bits);
+        let want: Vec<usize> = [3u64, 0, 2, 2]
+            .iter()
+            .map(|&s| {
+                let b = s as usize * wpr;
+                collision_count(&q, &arena[b..b + wpr], k, bits)
+            })
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(got[2], k, "slot 2 is the query row itself");
+    }
+
+    #[test]
+    #[should_panic(expected = "packed rows differ in width")]
+    fn collision_count_rejects_width_mismatch() {
+        // The release-mode silent-miscount hazard: scoring a 2-word row
+        // against a 1-word row must fail loudly, not return a garbage
+        // count (these asserts were debug-only once).
+        let a = vec![0u64; 2];
+        let b = vec![0u64; 1];
+        collision_count(&a, &b, 8, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match K")]
+    fn collision_count_rejects_wrong_k_for_width() {
+        // Both rows agree with each other but not with K at this width.
+        let a = vec![0u64; 2];
+        let b = vec![0u64; 2];
+        collision_count(&a, &b, 8, 8); // K=8 at b=8 needs 1 word, not 2
+    }
+
+    #[test]
+    #[should_panic(expected = "packed rows differ in width")]
+    fn batch_kernel_rejects_width_mismatch() {
+        let arena = vec![0u64; 4];
+        let q = vec![0u64; 2];
+        bucket_collision_counts(&q, &arena, 1, &[0], 8, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of arena bounds")]
+    fn batch_kernel_rejects_out_of_bounds_slots() {
+        let arena = vec![0u64; 2]; // room for slots 0..2 at wpr=1
+        let q = vec![0u64; 1];
+        bucket_collision_counts(&q, &arena, 1, &[2], 8, 8);
     }
 
     #[test]

@@ -1,11 +1,12 @@
-//! Pure-Rust sketching: five pluggable minwise-hashing schemes plus
+//! Pure-Rust sketching: six pluggable minwise-hashing schemes plus
 //! estimators.
 //!
 //! The schemes — selected end to end via [`SketchScheme`] — are
 //! classical MinHash ([`ClassicMinHasher`]), the source paper's
 //! C-MinHash-(σ, π) ([`CMinHasher`]) and C-MinHash-(0, π)
 //! ([`ZeroPiHasher`]), One Permutation Hashing with optimal
-//! densification ([`OphHasher`]), and circulant OPH ([`CophHasher`]);
+//! densification ([`OphHasher`]), circulant OPH ([`CophHasher`]), and
+//! O(1)-state iterative universal hashing ([`IuhHasher`]);
 //! `docs/SCHEMES.md` compares them.
 //!
 //! These implementations are the CPU fallback engine of the server, the
@@ -25,6 +26,7 @@
 mod bbit;
 mod cminhash;
 mod estimate;
+mod iuh;
 mod minhash;
 mod oph;
 mod perm;
@@ -32,11 +34,12 @@ mod scheme;
 mod sparse;
 
 pub use bbit::{
-    check_sketch_bits, collision_count, corrected_estimate, pack_row, packed_words,
-    unpack_row, BBitSketch, BBitSketcher, SUPPORTED_BITS,
+    bucket_collision_counts, check_sketch_bits, collision_count, corrected_estimate,
+    pack_row, packed_words, unpack_row, BBitSketch, BBitSketcher, SUPPORTED_BITS,
 };
 pub use cminhash::{CMinHasher, ZeroPiHasher};
 pub use estimate::{estimate, estimate_batch_mae, mean_absolute_error, mean_squared_error};
+pub use iuh::IuhHasher;
 pub use minhash::ClassicMinHasher;
 pub use oph::{CophHasher, OphHasher};
 pub use perm::{Perm, Role};
@@ -108,6 +111,7 @@ mod tests {
             Box::new(ClassicMinHasher::new(32, 16, 1)),
             Box::new(OphHasher::new(32, 16, 1).unwrap()),
             Box::new(CophHasher::new(32, 16, 1).unwrap()),
+            Box::new(IuhHasher::new(32, 16, 1)),
         ] {
             let h = sk.sketch_sparse(&[]);
             assert!(h.iter().all(|&v| v == 32), "sentinel expected");

@@ -9,14 +9,15 @@
 //! (coordinator, snapshot codec, benches, docs tables).
 
 use super::{
-    CMinHasher, ClassicMinHasher, CophHasher, OphHasher, Sketcher, ZeroPiHasher,
+    CMinHasher, ClassicMinHasher, CophHasher, IuhHasher, OphHasher, Sketcher,
+    ZeroPiHasher,
 };
 use std::fmt;
 use std::sync::Arc;
 
 /// Which minwise-hashing scheme the service sketches with.
 ///
-/// All five produce length-K sketches over `0..D` (sentinel `D` for the
+/// All six produce length-K sketches over `0..D` (sentinel `D` for the
 /// all-zero vector) scored by the same collision estimator
 /// ([`super::estimate`]), but they differ in permutation memory and
 /// sketch cost — see `docs/SCHEMES.md` for the full comparison table.
@@ -49,19 +50,25 @@ pub enum SketchScheme {
     /// circulant length-D/K permutation (plus the σ scatter, so O(D)
     /// total like `oph`), **O(f)** per sketch.
     Coph,
+    /// Iterative universal hashing (arXiv:1401.6124): K keyed
+    /// bijections generated from **O(1)** state — no permutation
+    /// tables at all — each key derived from the previous by one
+    /// modular addition.  O(f·K) per sketch.
+    Iuh,
 }
 
 impl SketchScheme {
     /// Every scheme, in documentation/bench order.
-    pub const ALL: [SketchScheme; 5] = [
+    pub const ALL: [SketchScheme; 6] = [
         SketchScheme::Classic,
         SketchScheme::Cmh,
         SketchScheme::ZeroPi,
         SketchScheme::Oph,
         SketchScheme::Coph,
+        SketchScheme::Iuh,
     ];
 
-    /// Parse a scheme name: `classic | cmh | zero-pi | oph | coph`.
+    /// Parse a scheme name: `classic | cmh | zero-pi | oph | coph | iuh`.
     pub fn parse(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "classic" => SketchScheme::Classic,
@@ -69,10 +76,11 @@ impl SketchScheme {
             "zero-pi" => SketchScheme::ZeroPi,
             "oph" => SketchScheme::Oph,
             "coph" => SketchScheme::Coph,
+            "iuh" => SketchScheme::Iuh,
             other => {
                 return Err(crate::Error::Invalid(format!(
                     "unknown sketch scheme {other:?} \
-                     (classic|cmh|zero-pi|oph|coph)"
+                     (classic|cmh|zero-pi|oph|coph|iuh)"
                 )))
             }
         })
@@ -86,6 +94,7 @@ impl SketchScheme {
             SketchScheme::ZeroPi => "zero-pi",
             SketchScheme::Oph => "oph",
             SketchScheme::Coph => "coph",
+            SketchScheme::Iuh => "iuh",
         }
     }
 
@@ -98,6 +107,7 @@ impl SketchScheme {
             SketchScheme::ZeroPi => 3,
             SketchScheme::Oph => 4,
             SketchScheme::Coph => 5,
+            SketchScheme::Iuh => 6,
         }
     }
 
@@ -109,6 +119,7 @@ impl SketchScheme {
             3 => SketchScheme::ZeroPi,
             4 => SketchScheme::Oph,
             5 => SketchScheme::Coph,
+            6 => SketchScheme::Iuh,
             other => {
                 return Err(crate::Error::Invalid(format!(
                     "unknown sketch-scheme code {other} \
@@ -152,6 +163,7 @@ impl SketchScheme {
             SketchScheme::ZeroPi => Arc::new(ZeroPiHasher::new(d, k, seed)),
             SketchScheme::Oph => Arc::new(OphHasher::new(d, k, seed)?),
             SketchScheme::Coph => Arc::new(CophHasher::new(d, k, seed)?),
+            SketchScheme::Iuh => Arc::new(IuhHasher::new(d, k, seed)),
         })
     }
 }
@@ -182,7 +194,7 @@ mod tests {
     #[test]
     fn codes_are_unique_and_stable() {
         let codes: Vec<u32> = SketchScheme::ALL.iter().map(|s| s.code()).collect();
-        assert_eq!(codes, vec![1, 2, 3, 4, 5], "codes are an on-disk format");
+        assert_eq!(codes, vec![1, 2, 3, 4, 5, 6], "codes are an on-disk format");
     }
 
     #[test]

@@ -214,9 +214,10 @@ impl PersistentIndex {
                 )));
             }
             if data.k == k && data.scheme == scheme && data.bits == bits {
-                for (id, sketch) in &data.items {
-                    index.insert_with_id(*id, sketch)?;
-                }
+                // Bulk load: band postings rebuild shard-parallel above
+                // the fan-out threshold, with state identical to a
+                // serial insert_with_id replay.
+                index.load_items(&data.items)?;
                 index.reserve_ids(data.next_id);
                 snapshot_bytes = Some(std::fs::metadata(&snap_path)?.len());
             }
@@ -614,11 +615,10 @@ impl PersistentIndex {
             }
         }
         // Both streams verified — install.  Memory first (replaying
-        // exactly like recovery: inserts upsert, deletes tolerate
-        // missing ids), then disk under the persist lock.
-        for (id, sketch) in &data.items {
-            self.index.insert_with_id(*id, sketch)?;
-        }
+        // exactly like recovery: the snapshot bulk-loads shard-parallel
+        // on large images, WAL inserts upsert, deletes tolerate missing
+        // ids), then disk under the persist lock.
+        self.index.load_items(&data.items)?;
         self.index.reserve_ids(data.next_id);
         for rec in &records {
             match rec {

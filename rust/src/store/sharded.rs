@@ -10,7 +10,7 @@
 //! global top-k).
 
 use crate::index::{sort_neighbors, BandingIndex, IndexConfig, Neighbor};
-use crate::obs::{stage, Stage};
+use crate::obs::{add_stage_us, capture_stages, sink_active, stage, Stage, NUM_STAGES};
 use crate::sketch::{corrected_estimate, packed_words};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
@@ -295,6 +295,71 @@ impl ShardedIndex {
         Ok(())
     }
 
+    /// Bulk-load `(id, sketch)` rows under caller-chosen ids — the
+    /// snapshot-recovery fast path.  Semantically identical to calling
+    /// [`ShardedIndex::insert_with_id`] once per row in input order,
+    /// but each shard's write lock is taken exactly once, and above
+    /// the fan-out threshold every shard rebuilds its band postings on
+    /// its own scoped thread.  Rows are grouped by owning shard with
+    /// input order preserved, and a shard's state depends only on its
+    /// own insertion sequence, so the rebuilt index — postings, packed
+    /// arena layout, counters — is identical to a serial load.
+    ///
+    /// All lengths are validated before any row lands.  A mid-load
+    /// error (a duplicate id) can leave other shards already loaded;
+    /// callers on the recovery path treat any error as fatal and
+    /// discard the index, so no rollback is attempted.
+    pub fn load_items(&self, items: &[(u64, Vec<u32>)]) -> crate::Result<()> {
+        for (_, sk) in items {
+            self.check_len(sk)?;
+        }
+        let mut by_shard: Vec<Vec<(u64, &[u32])>> = vec![Vec::new(); self.shards.len()];
+        {
+            let _span = stage(Stage::ShardRoute);
+            for (id, sk) in items {
+                by_shard[self.shard_of(*id)].push((*id, sk.as_slice()));
+            }
+        }
+        let load_shard =
+            |shard: &RwLock<BandingIndex>, rows: &[(u64, &[u32])]| -> crate::Result<()> {
+                let mut guard = shard.write().unwrap();
+                for &(id, sk) in rows {
+                    guard.insert(id, sk)?;
+                }
+                Ok(())
+            };
+        if items.len() < PARALLEL_QUERY_MIN_ITEMS {
+            for (shard, rows) in self.shards.iter().zip(&by_shard) {
+                load_shard(shard, rows)?;
+            }
+        } else {
+            let results: Vec<crate::Result<()>> = std::thread::scope(|s| {
+                self.shards
+                    .iter()
+                    .zip(&by_shard)
+                    .map(|(shard, rows)| s.spawn(move || load_shard(shard, rows)))
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().expect("shard load thread panicked"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        }
+        for (counters, rows) in self.ops.iter().zip(&by_shard) {
+            if !rows.is_empty() {
+                counters.inserts.fetch_add(rows.len() as u64, Ordering::Relaxed);
+            }
+        }
+        self.resident.fetch_add(items.len(), Ordering::Relaxed);
+        if let Some(max_id) = items.iter().map(|(id, _)| *id).max() {
+            self.next_id
+                .fetch_max(max_id.saturating_add(1), Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
     /// Delete an id, returning its sketch; unknown ids are an error.
     pub fn delete(&self, id: u64) -> crate::Result<Vec<u32>> {
         let shard = self.shard_of(id);
@@ -419,6 +484,14 @@ impl ShardedIndex {
     /// inline — per-shard probe work is then comparable to the cost of
     /// spawning a thread, so fan-out would only add overhead — while
     /// large indexes run all shards on scoped threads in parallel.
+    ///
+    /// When the calling thread is inside a traced request, each worker
+    /// runs with its own span sink armed ([`capture_stages`]) and the
+    /// stage breakdown of the **slowest** worker — the critical path
+    /// the request actually waited on through the join — is credited
+    /// back to the request.  Crediting exactly one worker keeps the
+    /// stage sum ≤ the request's wall-clock total (summing all workers
+    /// could exceed it; per-stage maxima across workers could too).
     fn fan_out_with<R: Send>(&self, f: impl Fn(&BandingIndex) -> R + Sync) -> Vec<R> {
         if self.len() < PARALLEL_QUERY_MIN_ITEMS {
             return self
@@ -428,17 +501,41 @@ impl ShardedIndex {
                 .collect();
         }
         let f = &f;
-        std::thread::scope(|s| {
+        let traced = sink_active();
+        let results: Vec<(R, [u64; NUM_STAGES])> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .shards
                 .iter()
-                .map(|shard| s.spawn(move || f(&shard.read().unwrap())))
+                .map(|shard| {
+                    s.spawn(move || {
+                        let shard = shard.read().unwrap();
+                        if traced {
+                            capture_stages(|| f(&shard))
+                        } else {
+                            (f(&shard), [0u64; NUM_STAGES])
+                        }
+                    })
+                })
                 .collect();
             handles
                 .into_iter()
                 .map(|h| h.join().expect("shard query thread panicked"))
                 .collect()
-        })
+        });
+        if traced {
+            let slowest = results
+                .iter()
+                .map(|(_, us)| us)
+                .max_by_key(|us| us.iter().sum::<u64>());
+            if let Some(us) = slowest {
+                for (i, &v) in us.iter().enumerate() {
+                    if v > 0 {
+                        add_stage_us(Stage::ALL[i], v);
+                    }
+                }
+            }
+        }
+        results.into_iter().map(|(r, _)| r).collect()
     }
 
     /// Total number of indexed items (lock-free counter).
@@ -630,6 +727,91 @@ mod tests {
                 "parallel fan-out diverged for probe {probe_seed}"
             );
         }
+    }
+
+    #[test]
+    fn parallel_fan_out_credits_worker_stages() {
+        // Regression: queries that fan out across scoped worker threads
+        // used to lose their BandLookup/Score spans (the workers'
+        // thread-local sinks were never armed).  A traced request over
+        // a large index must now see nonzero band/score attribution
+        // while the stage sum stays within the request total.
+        use crate::obs::{Obs, OpKind};
+        use std::time::Instant;
+        let cfg = IndexConfig {
+            bands: 4,
+            rows_per_band: 2,
+        };
+        let n = PARALLEL_QUERY_MIN_ITEMS + 64;
+        let idx = ShardedIndex::new(8, cfg, 4).unwrap();
+        for i in 0..n as u32 {
+            let sk: Vec<u32> = (0..8u32).map(|j| (i / 16).wrapping_add(j) % 97).collect();
+            idx.insert(&sk).unwrap();
+        }
+        let probes: Vec<Vec<u32>> = (0..64u32)
+            .map(|p| (0..8u32).map(|j| (p / 4).wrapping_add(j) % 97).collect())
+            .collect();
+        let obs = Obs::new(8, u64::MAX, 0);
+        let mut g = obs.begin_at(OpKind::QueryBatch, Instant::now());
+        idx.query_many(&probes, 5).unwrap();
+        g.finish(probes.len() as u32);
+        let t = &obs.recent(1)[0];
+        let band = t.stages_us[Stage::BandLookup as usize];
+        let score = t.stages_us[Stage::Score as usize];
+        assert!(
+            band + score > 0,
+            "fanned-out band/score work must attribute to stages, got {:?}",
+            t.stages_us
+        );
+        assert!(
+            t.stages_us.iter().sum::<u64>() <= t.total_us,
+            "stage sum {} exceeds request total {}",
+            t.stages_us.iter().sum::<u64>(),
+            t.total_us
+        );
+    }
+
+    #[test]
+    fn load_items_matches_serial_insert_with_id() {
+        // The bulk loader must rebuild byte-identical state on both
+        // sides of the parallel threshold: same items, same counters,
+        // same fresh-id floor, same query results.
+        let cfg = IndexConfig {
+            bands: 4,
+            rows_per_band: 2,
+        };
+        for n in [64usize, PARALLEL_QUERY_MIN_ITEMS + 64] {
+            let items: Vec<(u64, Vec<u32>)> = (0..n as u32)
+                .map(|i| {
+                    let sk: Vec<u32> =
+                        (0..8u32).map(|j| (i / 16).wrapping_add(j) % 97).collect();
+                    // non-contiguous ids so next_id tracking is exercised
+                    (u64::from(i) * 3 + 1, sk)
+                })
+                .collect();
+            let bulk = ShardedIndex::new(8, cfg, 4).unwrap();
+            let serial = ShardedIndex::new(8, cfg, 4).unwrap();
+            bulk.load_items(&items).unwrap();
+            for (id, sk) in &items {
+                serial.insert_with_id(*id, sk).unwrap();
+            }
+            assert_eq!(bulk.items(), serial.items(), "n={n}");
+            assert_eq!(bulk.len(), serial.len(), "n={n}");
+            assert_eq!(bulk.next_id(), serial.next_id(), "n={n}");
+            assert_eq!(bulk.shard_ops(), serial.shard_ops(), "n={n}");
+            let probe: Vec<u32> = (0..8u32).map(|j| j % 97).collect();
+            assert_eq!(
+                bulk.query(&probe, 7).unwrap(),
+                serial.query(&probe, 7).unwrap(),
+                "n={n}"
+            );
+        }
+        // length validation rejects the whole batch up front
+        let idx = ShardedIndex::new(8, cfg, 4).unwrap();
+        assert!(idx
+            .load_items(&[(0, vec![0u32; 8]), (1, vec![0u32; 7])])
+            .is_err());
+        assert!(idx.is_empty(), "nothing lands when validation fails");
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! independent of any external crate's versioning.
 
 /// SplitMix64 step — used to expand a 64-bit seed into the 256-bit
-/// Xoshiro state (the reference seeding procedure).
+/// Xoshiro state (the reference seeding procedure), and by the `iuh`
+/// hasher to derive its O(1) key material from a seed.
 #[inline]
-fn splitmix64(state: &mut u64) -> u64 {
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

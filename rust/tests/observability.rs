@@ -5,6 +5,7 @@
 
 use cminhash::config::{
     BatchConfig, BatchPolicy, EngineKind, IndexSettings, ObsSettings, ServeConfig,
+    StoreSettings,
 };
 use cminhash::coordinator::Coordinator;
 use cminhash::metrics::{LatencyHistogram, LatencySnapshot, BUCKETS};
@@ -300,6 +301,70 @@ fn trace_returns_per_stage_spans_on_both_dialects() {
     let text = cb.metrics_text().unwrap();
     assert!(text.contains("cminhash_build_info"), "{text}");
     assert!(text.contains("cminhash_requests_total{op=\"ping\"}"));
+}
+
+#[test]
+fn fanned_out_queries_attribute_band_and_score_stages() {
+    // Regression: above the parallel fan-out threshold (8192 resident
+    // items) shard queries run on scoped worker threads, and their
+    // BandLookup/Score spans used to vanish — the workers'
+    // thread-local sinks were never armed, so the time showed up in
+    // the request total but in no stage.  The fan-out now arms each
+    // worker and credits the slowest worker's breakdown, so a traced
+    // query over a big index must show band/score attribution while
+    // the stage sum stays within the request total.
+    let cfg = ServeConfig {
+        engine: EngineKind::Rust,
+        dim: 4096,
+        num_hashes: 64,
+        seed: 9,
+        index: IndexSettings {
+            bands: 16,
+            rows_per_band: 4,
+        },
+        store: StoreSettings {
+            shards: 4,
+            persist_dir: None,
+        },
+        addr: "127.0.0.1:0".into(),
+        ..ServeConfig::default()
+    };
+    let svc = Coordinator::start(cfg).unwrap();
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let mut c = BlockingClient::connect(&addr).unwrap();
+    // near-duplicate corpus (groups of 16 identical docs, adjacent
+    // groups overlapping) -> fat candidate sets on every shard
+    let doc = |i: u32| -> Vec<u32> { ((i / 16) * 7..(i / 16) * 7 + 80).collect() };
+    let total = 8192 + 64u32;
+    let mut inserted = 0u32;
+    while inserted < total {
+        let n = (total - inserted).min(512);
+        let rows: Vec<Vec<u32>> = (inserted..inserted + n).map(doc).collect();
+        c.insert_batch(4096, rows).unwrap();
+        inserted += n;
+    }
+    // 64 probes in one request: per-worker band/score work is well
+    // above the µs resolution of the stage clocks, so the nonzero
+    // assertion below cannot flake on a fast machine.
+    let probes: Vec<Vec<u32>> = (0..64).map(|p| doc(p * 128)).collect();
+    let hits = c.query_batch(4096, probes, 5).unwrap();
+    assert_eq!(hits.len(), 64);
+    assert!(hits.iter().all(|ns| !ns.is_empty()));
+    let traces = c.trace(8, false).unwrap();
+    let q = traces
+        .iter()
+        .find(|t| t.op == cminhash::obs::OpKind::QueryBatch)
+        .expect("query_batch trace in the ring");
+    let band = q.stages_us[cminhash::obs::Stage::BandLookup as usize];
+    let score = q.stages_us[cminhash::obs::Stage::Score as usize];
+    assert!(
+        band + score > 0,
+        "fanned-out band/score work must attribute to stages, got {:?}",
+        q.stages_us
+    );
+    let sum: u64 = q.stages_us.iter().sum();
+    assert!(sum <= q.total_us, "stage sum {sum} <= total {}", q.total_us);
 }
 
 #[test]

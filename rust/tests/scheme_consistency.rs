@@ -175,3 +175,64 @@ fn snapshot_scheme_mismatch_fails_with_a_clean_error() {
     let (_, store) = svc.stats();
     assert_eq!(store.stored, 1);
 }
+
+#[test]
+fn iuh_is_unbiased_at_five_sigma() {
+    // Dedicated tighter gate for the O(1)-state scheme: its keyed
+    // bijections replace stored permutation tables outright, so any
+    // structural bias (a weak mix, a walk that favours low values)
+    // would show up here.  600 seeds put the standard error of the
+    // mean at 0.125/sqrt(600) ~ 0.0051; 0.026 is a 5-sigma gate.
+    let trials = 600u64;
+    for (v, w, truth) in pairs() {
+        let mut sum = 0.0;
+        for seed in 0..trials {
+            let h = SketchScheme::Iuh.build(DIM, K, seed).unwrap();
+            sum += estimate(
+                &h.sketch_sparse(v.indices()),
+                &h.sketch_sparse(w.indices()),
+            );
+        }
+        let mean = sum / trials as f64;
+        assert!(
+            (mean - truth).abs() < 0.026,
+            "iuh 5-sigma gate: mean {mean:.4} vs exact J {truth:.4}"
+        );
+    }
+}
+
+#[test]
+fn iuh_snapshot_stamp_roundtrips_and_mismatch_refuses() {
+    let dir = TempDir::new().unwrap();
+    // Persist under iuh; the snapshot carries scheme code 6.
+    {
+        let svc = Coordinator::start(cfg_for(
+            SketchScheme::Iuh,
+            Some(dir.path().to_path_buf()),
+        ))
+        .unwrap();
+        let v = SparseVec::new(DIM as u32, (0..24).collect()).unwrap();
+        svc.insert(v).unwrap();
+        assert!(svc.save().unwrap() > 0);
+    }
+    // A cmh server must refuse the iuh-stamped store, naming both.
+    match Coordinator::start(cfg_for(
+        SketchScheme::Cmh,
+        Some(dir.path().to_path_buf()),
+    )) {
+        Err(cminhash::Error::Invalid(msg)) => {
+            assert!(msg.contains("iuh"), "{msg}");
+            assert!(msg.contains("cmh"), "{msg}");
+        }
+        Err(other) => panic!("expected Invalid, got {other:?}"),
+        Ok(_) => panic!("scheme mismatch must refuse to open"),
+    }
+    // Reopening under iuh serves the persisted row.
+    let svc = Coordinator::start(cfg_for(
+        SketchScheme::Iuh,
+        Some(dir.path().to_path_buf()),
+    ))
+    .unwrap();
+    let (_, store) = svc.stats();
+    assert_eq!(store.stored, 1);
+}

@@ -9,7 +9,24 @@ emit and enforces the packed b-bit plane's perf contract from
   unpacked (bits = 32) baseline for b <= 8 — the popcount kernel must
   actually win where it claims to;
 * memory per item must shrink by at least (32/b) * 0.9 — packing that
-  doesn't pack is a bug.
+  doesn't pack is a bug;
+* at b <= 8, the bucket-at-a-time scoring kernel must beat the
+  per-candidate scalar loop by at least 1.2x (the bench's
+  ``batch_score_speedup`` field) — a batch kernel that doesn't batch
+  is dead weight.
+
+It also enforces the scheme registry's hot-loop contract from
+``BENCH_scheme_sweep.json`` (emitted by the hasher_hotpath bench): the
+O(1)-state ``iuh`` hasher must stay within 1.5x of ``cmh`` ns/sketch
+at every K — the point of iterative universal hashing is trading the
+O(D) permutation tables for *comparable* speed, so a slow ``iuh`` is a
+regression, and a sweep missing either scheme's rows is an emitter
+bug.
+
+And the recovery plane's contract from ``BENCH_snapshot_load.json``
+(emitted by the snapshot_load bench): the shard-parallel
+``load_items`` bulk loader must rebuild the index at >= 1.5x the
+serial ``insert_with_id`` replay rate — no measured win, no merge.
 
 It also enforces the binary wire format's contract from
 ``BENCH_wire_format.json`` (emitted by the serving_throughput bench):
@@ -81,6 +98,24 @@ OBS_MARGIN = 0.97
 # healthy build lands well above 1.6 — the floor catches a merge or
 # routing path that serializes what should be parallel.
 CLUSTER_SPEEDUP = 1.6
+# The bucket-at-a-time scoring kernel must beat the per-candidate
+# scalar collision_count loop by this factor at b <= 8.  The kernel
+# hoists the width asserts out of the candidate loop, streams the
+# arena sequentially, and unrolls 4-wide, so a healthy build clears
+# this easily; 1.2x is the floor that catches the kernel degrading
+# into a dressed-up scalar loop.
+BATCH_SCORE_SPEEDUP = 1.2
+# iuh ns/sketch must stay within this factor of cmh at every K.  The
+# iterative hasher trades cmh's O(D) permutation tables for O(1) state
+# and pays a few multiplies per slot for it — a healthy build sits
+# near parity, and drifting past 1.5x means the O(1)-memory story
+# costs more time than it saves space.
+IUH_VS_CMH = 1.5
+# The shard-parallel bulk loader must rebuild an index at >= this
+# multiple of the serial insert_with_id replay rate.  Shards rebuild
+# independently (one writer per shard, no shared state), so even two
+# cores clear 1.5x; below it the "parallel" loader is serializing.
+SNAPSHOT_LOAD_SPEEDUP = 1.5
 
 
 def fail(msgs):
@@ -139,6 +174,7 @@ def check_bbit_query(path, data):
                     continue
                 qps = float(row["query_per_s"])
                 bpi = float(row["bytes_per_item"])
+                kernel = float(row["batch_score_speedup"])
             except (KeyError, TypeError, ValueError) as e:
                 failures.append(f"{path}: K={k} malformed row ({e})")
                 continue
@@ -156,12 +192,77 @@ def check_bbit_query(path, data):
                     f"{got_ratio:.2f}x (need >= {want_ratio:.2f}x: "
                     f"{base_bytes:.0f} B -> {bpi:.0f} B)"
                 )
+            if bits in PACKED_WIN_BITS and kernel < BATCH_SCORE_SPEEDUP:
+                failures.append(
+                    f"K={k} bits={bits}: batch scoring kernel is only "
+                    f"{kernel:.2f}x the scalar loop "
+                    f"(need >= {BATCH_SCORE_SPEEDUP}x)"
+                )
             print(
                 f"check_bench: K={k} bits={bits}: {qps:.0f} q/s "
                 f"(unpacked {base_qps:.0f}), {bpi:.0f} B/item "
-                f"({got_ratio:.1f}x smaller)"
+                f"({got_ratio:.1f}x smaller), batch kernel {kernel:.2f}x"
             )
     return failures
+
+
+def check_scheme_sweep(path, data):
+    by_k = {}
+    try:
+        for row in data.get("results", []):
+            by_k.setdefault(int(row["k"]), {})[str(row["scheme"])] = float(
+                row["ns_per_sketch"]
+            )
+    except (KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed scheme_sweep results row ({e})"]
+    if not by_k:
+        return [f"{path}: no results rows"]
+    failures = []
+    for k, schemes in sorted(by_k.items()):
+        missing = [s for s in ("cmh", "iuh") if s not in schemes]
+        if missing:
+            failures.append(
+                f"{path}: K={k} sweep lacks scheme rows {missing} — the "
+                f"iuh-vs-cmh gate cannot run"
+            )
+            continue
+        cmh_ns, iuh_ns = schemes["cmh"], schemes["iuh"]
+        ratio = iuh_ns / cmh_ns if cmh_ns else float("inf")
+        print(
+            f"check_bench: scheme K={k}: iuh {iuh_ns:.0f} ns/sketch vs "
+            f"cmh {cmh_ns:.0f} ns/sketch ({ratio:.2f}x, ceiling "
+            f"{IUH_VS_CMH}x)"
+        )
+        if ratio > IUH_VS_CMH:
+            failures.append(
+                f"K={k}: iuh sketching {iuh_ns:.0f} ns is {ratio:.2f}x "
+                f"cmh's {cmh_ns:.0f} ns (need <= {IUH_VS_CMH}x)"
+            )
+    return failures
+
+
+def check_snapshot_load(path, data):
+    rows = data.get("results", [])
+    if not rows:
+        return [f"{path}: no results rows"]
+    try:
+        serial = float(rows[0]["serial_items_per_s"])
+        parallel = float(rows[0]["parallel_items_per_s"])
+        speedup = float(rows[0]["speedup"])
+    except (KeyError, TypeError, ValueError) as e:
+        return [f"{path}: malformed snapshot_load results row ({e})"]
+    print(
+        f"check_bench: snapshot load: serial {serial:.0f} items/s, "
+        f"parallel {parallel:.0f} items/s ({speedup:.2f}x, floor "
+        f"{SNAPSHOT_LOAD_SPEEDUP}x)"
+    )
+    if speedup < SNAPSHOT_LOAD_SPEEDUP:
+        return [
+            f"snapshot load: parallel open {parallel:.0f} items/s is only "
+            f"{speedup:.2f}x the serial replay {serial:.0f} items/s "
+            f"(need >= {SNAPSHOT_LOAD_SPEEDUP}x)"
+        ]
+    return []
 
 
 def check_wire_format(path, data):
@@ -249,6 +350,8 @@ GATES = {
     "BENCH_wire_format.json": check_wire_format,
     "BENCH_obs_overhead.json": check_obs_overhead,
     "BENCH_cluster_scale.json": check_cluster_scale,
+    "BENCH_scheme_sweep.json": check_scheme_sweep,
+    "BENCH_snapshot_load.json": check_snapshot_load,
 }
 
 

@@ -192,6 +192,187 @@ class GateProcessTests(unittest.TestCase):
         self.assertIn("cluster scaling", out)
 
 
+def bbit_record(kernel8=2.0, kernel1=3.0):
+    def row(bits, qps, bpi, kernel):
+        return {
+            "bits": bits,
+            "k": 128,
+            "insert_per_s": 500_000.0,
+            "query_per_s": qps,
+            "bytes_per_item": bpi,
+            "batch_score_speedup": kernel,
+        }
+
+    return {
+        "bench": "bbit_query",
+        "items": 20_000,
+        "queries": 2_000,
+        "results": [
+            row(32, 1_000.0, 512.0, 1.0),
+            row(8, 1_500.0, 128.0, kernel8),
+            row(1, 2_000.0, 16.0, kernel1),
+        ],
+    }
+
+
+def scheme_record(iuh_ns=900.0, cmh_ns=800.0, drop_iuh=False):
+    rows = []
+    for k in (16, 256):
+        for scheme, ns in (("cmh", cmh_ns), ("iuh", iuh_ns), ("oph", 500.0)):
+            if drop_iuh and scheme == "iuh":
+                continue
+            rows.append(
+                {
+                    "scheme": scheme,
+                    "k": k,
+                    "ns_per_sketch": ns,
+                    "estimate_mse": 0.01,
+                }
+            )
+    return {
+        "bench": "scheme_sweep",
+        "dim": 4096,
+        "nnz": 250,
+        "jaccard": 1 / 3,
+        "seeds": 8,
+        "results": rows,
+    }
+
+
+def snapshot_record(speedup=2.1):
+    serial = 400_000.0
+    return {
+        "bench": "snapshot_load",
+        "items": 20_000,
+        "shards": 4,
+        "k": 64,
+        "results": [
+            {
+                "serial_items_per_s": serial,
+                "parallel_items_per_s": serial * speedup,
+                "speedup": speedup,
+            }
+        ],
+    }
+
+
+class BatchKernelGateTests(unittest.TestCase):
+    """The batch_score_speedup column of the bbit_query gate."""
+
+    def test_healthy_kernel_passes(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_bbit_query.json"), "w") as f:
+                json.dump(bbit_record(), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 0, out + err)
+        self.assertIn("all bench gates passed", out)
+        self.assertIn("batch kernel 2.00x", out)
+
+    def test_kernel_below_floor_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_bbit_query.json"), "w") as f:
+                json.dump(bbit_record(kernel8=1.05), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("batch scoring kernel is only 1.05x", out)
+        self.assertNotIn("Traceback", err)
+
+    def test_missing_kernel_field_is_a_malformed_row(self):
+        # An emitter that stops reporting the kernel measurement is a
+        # broken emitter, not a silent pass.
+        rec = bbit_record()
+        del rec["results"][1]["batch_score_speedup"]
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_bbit_query.json"), "w") as f:
+                json.dump(rec, f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("malformed row", out)
+
+    def test_floor_is_pinned(self):
+        self.assertEqual(check_bench.BATCH_SCORE_SPEEDUP, 1.2)
+
+
+class SchemeSweepGateTests(unittest.TestCase):
+    """The iuh-vs-cmh ns/sketch ceiling."""
+
+    def test_parity_passes(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_scheme_sweep.json"), "w") as f:
+                json.dump(scheme_record(iuh_ns=900, cmh_ns=800), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 0, out + err)
+        self.assertIn("all bench gates passed", out)
+        self.assertIn("1.12x", out)
+
+    def test_slow_iuh_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_scheme_sweep.json"), "w") as f:
+                json.dump(scheme_record(iuh_ns=1600, cmh_ns=800), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("check_bench: FAIL:", out)
+        self.assertIn("iuh sketching", out)
+        self.assertIn("2.00x", out)
+
+    def test_missing_iuh_rows_fail(self):
+        # A sweep that silently dropped the scheme under test must not
+        # let the gate pass vacuously.
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_scheme_sweep.json"), "w") as f:
+                json.dump(scheme_record(drop_iuh=True), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("lacks scheme rows", out)
+        self.assertIn("iuh", out)
+
+    def test_unit_exactly_at_ceiling_passes(self):
+        rec = scheme_record(iuh_ns=1200, cmh_ns=800)
+        self.assertEqual(check_bench.check_scheme_sweep("p", rec), [])
+
+    def test_ceiling_is_pinned(self):
+        self.assertEqual(check_bench.IUH_VS_CMH, 1.5)
+
+
+class SnapshotLoadGateTests(unittest.TestCase):
+    """The parallel-vs-serial snapshot open floor."""
+
+    def test_healthy_speedup_passes(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_snapshot_load.json"), "w") as f:
+                json.dump(snapshot_record(speedup=2.1), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 0, out + err)
+        self.assertIn("all bench gates passed", out)
+        self.assertIn("2.10x", out)
+
+    def test_below_floor_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_snapshot_load.json"), "w") as f:
+                json.dump(snapshot_record(speedup=1.2), f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("check_bench: FAIL:", out)
+        self.assertIn("snapshot load", out)
+        self.assertIn("1.20x", out)
+
+    def test_wrong_shape_fails_cleanly(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_snapshot_load.json"), "w") as f:
+                json.dump({"bench": "snapshot_load", "results": [{}]}, f)
+            code, out, err = run_gate(d)
+        self.assertEqual(code, 1, out + err)
+        self.assertIn("malformed snapshot_load results row", out)
+        self.assertNotIn("Traceback", err)
+
+    def test_unit_exactly_at_the_floor_passes(self):
+        rec = snapshot_record(speedup=1.5)
+        self.assertEqual(check_bench.check_snapshot_load("p", rec), [])
+
+    def test_floor_is_pinned(self):
+        self.assertEqual(check_bench.SNAPSHOT_LOAD_SPEEDUP, 1.5)
+
+
 class ClusterGateUnitTests(unittest.TestCase):
     """Direct calls into check_cluster_scale for the ratio arithmetic."""
 
